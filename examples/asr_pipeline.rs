@@ -1,0 +1,115 @@
+//! End-to-end ASR driver — the full-system validation run recorded in
+//! EXPERIMENTS.md.
+//!
+//! Pipeline: SynthTIMIT workload → Layer-3 coordinator (3-stage PJRT
+//! pipeline, Fig 7) → classifier → PER; then the same workload through the
+//! bit-accurate 16-bit fixed-point engine to measure the §4.2 quantisation
+//! cost; then the analytical/simulated FPGA numbers for the same model so
+//! all metrics of the paper appear in one report.
+//!
+//! Run: `cargo run --release --example asr_pipeline`
+
+use clstm::coordinator::server::serve_workload;
+use clstm::data::per::phone_error_rate;
+use clstm::data::synth::{SynthConfig, SynthTimit};
+use clstm::dse::DesignPoint;
+use clstm::fpga_sim::simulate;
+use clstm::lstm::activations::ActivationMode;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::sequence::{StackF32, StackFx};
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::Q;
+use clstm::perfmodel::platform::Platform;
+use clstm::runtime::artifact::ArtifactDir;
+use clstm::runtime::client::Runtime;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== C-LSTM end-to-end ASR pipeline ===\n");
+    let art = ArtifactDir::open(Path::new("artifacts"))
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+
+    // ---------- Part 1: serve through the PJRT 3-stage pipeline ----------
+    let weights = LstmWeights::load(art.golden_weights.as_ref().unwrap())?;
+    let rt = Runtime::cpu()?;
+    println!("[1] serving 16 SynthTIMIT utterances through the 3-stage PJRT pipeline (tiny_fft4):");
+    let report = serve_workload(rt, &art, "tiny_fft4", &weights, 16, 4)?;
+    println!("    {}", report.metrics.summary());
+    println!("    workload PER (random-init weights): {:.1}%\n", report.per);
+
+    // ---------- Part 2: quantisation study on a trained-scale model ------
+    // Float vs bit-accurate fixed-point engines on the same utterances —
+    // the §4.2 "16-bit is accurate enough" claim, measured end to end.
+    println!("[2] float vs 16-bit fixed-point engines (PWL activations, Q3.12):");
+    let spec = LstmSpec {
+        hidden_dim: 64,
+        proj_dim: Some(32),
+        input_dim: 24,
+        num_classes: 12,
+        ..LstmSpec::tiny(4)
+    };
+    let w2 = LstmWeights::random(&spec, 77);
+    let synth = SynthTimit::new(SynthConfig {
+        n_phones: spec.num_classes,
+        base_dim: spec.input_dim / 3 - 1,
+        mean_frames: 60,
+        ..SynthConfig::tiny()
+    });
+    let utts = synth.batch(5, 12);
+    let frames: Vec<Vec<Vec<f32>>> = utts
+        .iter()
+        .map(|u| {
+            u.frames
+                .iter()
+                .map(|f| {
+                    let mut v = f.clone();
+                    v.resize(spec.input_dim, 0.0);
+                    v
+                })
+                .collect()
+        })
+        .collect();
+    let refs: Vec<Vec<usize>> = utts.iter().map(|u| u.phone_seq()).collect();
+    let float = StackF32::new(&w2, ActivationMode::Pwl);
+    let fxp = StackFx::new(&w2, Q::new(12));
+    let t0 = std::time::Instant::now();
+    let f_hyps: Vec<Vec<usize>> = frames.iter().map(|f| float.decode(f)).collect();
+    let t_float = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let x_hyps: Vec<Vec<usize>> = frames.iter().map(|f| fxp.decode(f)).collect();
+    let t_fxp = t0.elapsed();
+    let (mut agree, mut total) = (0usize, 0usize);
+    for (a, b) in f_hyps.iter().zip(&x_hyps) {
+        agree += a.iter().zip(b).filter(|(x, y)| x == y).count();
+        total += a.len();
+    }
+    println!(
+        "    PER float {:.2}%  |  PER fxp {:.2}%  (Δ {:+.2})",
+        phone_error_rate(&f_hyps, &refs),
+        phone_error_rate(&x_hyps, &refs),
+        phone_error_rate(&x_hyps, &refs) - phone_error_rate(&f_hyps, &refs)
+    );
+    println!(
+        "    framewise agreement {:.1}%  |  engine time: float {:.0}ms, fxp {:.0}ms\n",
+        100.0 * agree as f64 / total as f64,
+        t_float.as_secs_f64() * 1e3,
+        t_fxp.as_secs_f64() * 1e3
+    );
+
+    // ---------- Part 3: the FPGA-side numbers for the served model -------
+    println!("[3] synthesis-flow numbers for the Google LSTM (the Table 3 design):");
+    for k in [8usize, 16] {
+        let p = DesignPoint::evaluate(&LstmSpec::google(k), &Platform::ku060());
+        let sim = simulate(&p.schedule, 64);
+        println!(
+            "    FFT{k}: analytical {:>7.0} FPS / {:>5.1} µs latency  |  simulated II {} cycles ({} FPS)  |  {:.0} FPS/W",
+            p.perf.fps,
+            p.perf.latency_us,
+            sim.ii_cycles,
+            (200e6 / sim.ii_cycles as f64) as u64,
+            p.fps_per_watt
+        );
+    }
+    println!("\nasr_pipeline OK");
+    Ok(())
+}

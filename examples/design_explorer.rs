@@ -1,0 +1,77 @@
+//! Design-space exploration walkthrough: the §5 automatic synthesis flow
+//! from model spec to generated HLS code, across both platforms.
+//!
+//! Run: `cargo run --release --example design_explorer`
+
+use clstm::dse::{explore, pareto};
+use clstm::graph::builder::build_layer_graph;
+use clstm::hlscodegen::generate_design;
+use clstm::lstm::config::LstmSpec;
+use clstm::perfmodel::platform::Platform;
+use clstm::report::Table;
+use clstm::schedule::algorithm1::schedule;
+use clstm::schedule::replication::enumerate_replication;
+
+fn main() -> anyhow::Result<()> {
+    // Table 2 — the platforms.
+    let mut t2 = Table::new(
+        "Table 2 — FPGA platforms",
+        &["FPGA", "DSP", "BRAM", "LUT", "FF", "process"],
+    );
+    for p in [Platform::ku060(), Platform::adm7v3()] {
+        t2.row(vec![
+            p.name.to_string(),
+            p.dsp.to_string(),
+            p.bram36.to_string(),
+            p.lut.to_string(),
+            p.ff.to_string(),
+            format!("{}nm", p.process_nm),
+        ]);
+    }
+    t2.print();
+
+    // Sweep both models × both platforms.
+    for (label, base) in [("Google LSTM", LstmSpec::google(1)), ("Small LSTM", LstmSpec::small(1))] {
+        for plat in [Platform::ku060(), Platform::adm7v3()] {
+            let pts = explore(&base, &plat, &[2, 4, 8, 16]);
+            println!("\n{label} on {} (KU060-bounded budget):", plat.name);
+            println!(
+                "  {:>4} {:>11} {:>11} {:>8} {:>9} {:>7} {:>7}",
+                "k", "FPS", "latency µs", "power W", "FPS/W", "DSP%", "BRAM%"
+            );
+            for p in &pts {
+                println!(
+                    "  {:>4} {:>11.0} {:>11.2} {:>8.1} {:>9.0} {:>7.1} {:>7.1}",
+                    p.spec.k,
+                    p.perf.fps,
+                    p.perf.latency_us,
+                    p.power_w,
+                    p.fps_per_watt,
+                    p.utilisation.dsp,
+                    p.utilisation.bram
+                );
+            }
+            let front = pareto(&pts);
+            println!(
+                "  pareto (FPS vs power): {:?}",
+                front.iter().map(|p| p.spec.k).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    // Generate the HLS design for the headline configuration.
+    let spec = LstmSpec::google(8);
+    let plat = Platform::ku060();
+    let g = build_layer_graph(&spec, 0);
+    let s = enumerate_replication(schedule(&g, &plat.budget()), &plat.budget());
+    let src = generate_design(&s, "google_fft8");
+    let out = "target/google_fft8_generated.cpp";
+    std::fs::create_dir_all("target")?;
+    std::fs::write(out, &src)?;
+    println!(
+        "\ngenerated HLS C++ for google_fft8 ({} lines) -> {out}",
+        src.lines().count()
+    );
+    println!("schedule:\n{}", s.describe());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Serving demo on the Google-LSTM artifacts: sustained throughput of the
+//! 3-stage PJRT pipeline with batcher-managed admission and backpressure.
+//!
+//! Run: `cargo run --release --example serve [-- n_utts]`
+
+use clstm::coordinator::batcher::{Batcher, QueuedUtterance};
+use clstm::coordinator::metrics::Metrics;
+use clstm::coordinator::pipeline::ClstmPipeline;
+use clstm::data::synth::{SynthConfig, SynthTimit};
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::runtime::artifact::ArtifactDir;
+use clstm::runtime::client::Runtime;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let n_utts: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(6);
+    let art = ArtifactDir::open(Path::new("artifacts"))
+        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
+    let cfg = art
+        .config("google_fft8")
+        .expect("google_fft8 in manifest")
+        .clone();
+    // Random weights: this demo measures the serving path, not accuracy.
+    let spec = LstmSpec::google(8);
+    let weights = LstmWeights::random(&spec, 42);
+
+    let rt = Runtime::cpu()?;
+    println!(
+        "compiling google_fft8 stages on {} (1024 hidden, 672-wide fused input, k=8)...",
+        rt.platform()
+    );
+    let mut pipe = ClstmPipeline::build(rt, &art, &cfg, &weights)?;
+
+    let gen = SynthTimit::new(SynthConfig::google());
+    let mut batcher = Batcher::new(n_utts, 4);
+    for i in 0..n_utts {
+        let mut u = gen.utterance(3, i as u64);
+        u.frames.truncate(24); // short utterances: demo-sized
+        for f in u.frames.iter_mut() {
+            f.truncate(spec.input_dim);
+            f.resize(spec.input_dim, 0.0);
+        }
+        batcher.offer(QueuedUtterance {
+            id: i as u64,
+            frames: u.frames,
+        });
+    }
+
+    let mut total = Metrics::default();
+    while !batcher.is_empty() {
+        let wave = batcher.next_wave();
+        let frames: Vec<_> = wave.iter().map(|u| u.frames.clone()).collect();
+        println!("  wave of {} utterances ...", frames.len());
+        let (_outs, m) = pipe.run_utterances(&frames)?;
+        println!("    {}", m.summary());
+        total.frames += m.frames;
+        total.utterances += m.utterances;
+        total.wall += m.wall;
+        total.frame_latency_us.extend(m.frame_latency_us);
+    }
+    println!("\noverall: {}", total.summary());
+    println!(
+        "(for the FPGA-side throughput of this design — 195k FPS on KU060 — see `clstm table3`)"
+    );
+    Ok(())
+}

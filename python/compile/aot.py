@@ -1,0 +1,294 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Each model configuration exports four executables:
+
+- ``<cfg>_stage1.hlo.txt`` — the four fused gate circulant convolutions
+  (Fig 7 stage 1), weights as runtime inputs (packed spectra).
+- ``<cfg>_stage2.hlo.txt`` — the element-wise cluster (stage 2).
+- ``<cfg>_stage3.hlo.txt`` — the projection convolution (stage 3).
+- ``<cfg>_step.hlo.txt``  — the fused single step (validation/quickstart).
+
+plus ``manifest.json`` describing argument order/shapes, and a
+``golden_tiny`` bundle (CLSTMW1 weights + input + expected outputs) that the
+Rust integration tests replay.
+
+Interchange is **HLO text**, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that the Rust side's xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import circulant
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big constant
+    # tensors (the kernel's DFT matrices!) as "{...}", which the Rust side's
+    # HLO text parser silently reads back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+CONFIGS = {
+    "google_fft8": model.google(8),
+    "google_fft16": model.google(16),
+    "small_fft8": model.small(8),
+    "small_fft16": model.small(16),
+    "tiny_fft4": model.tiny(4),
+}
+
+
+def spectral_shapes(spec: model.Spec, l: int):
+    """Shapes of the stacked-gate and projection spectra for layer ``l``."""
+    k = spec.k
+    h = spec.pad(spec.hidden_dim)
+    fused = spec.fused_in_dim(l)
+    p, q, bins = h // k, fused // k, k // 2 + 1
+    gate = (4 * p, q, bins)
+    proj = None
+    if spec.proj_dim is not None:
+        proj = (spec.pad(spec.proj_dim) // k, h // k, bins)
+    return gate, proj
+
+
+def build_stage_fns(spec: model.Spec, batch: int):
+    """Stage and step functions over *explicit spectral-weight inputs* —
+    what the Rust coordinator feeds at runtime."""
+    k = spec.k
+    h = spec.hidden_dim
+    gate_shape, proj_shape = spectral_shapes(spec, 0)
+    use_peep = spec.peephole
+
+    def stage1(wre, wim, fused):
+        a = circulant.matvec_spectral(wre, wim, fused, k=k)
+        return (a.reshape(batch, 4, -1)[:, :, :h],)
+
+    def stage2(a, c_prev, bias, peep):
+        pi = peep[0] * c_prev if use_peep else 0.0
+        pf = peep[1] * c_prev if use_peep else 0.0
+        i = jax.nn.sigmoid(a[:, 0] + pi + bias[0])
+        f = jax.nn.sigmoid(a[:, 1] + pf + bias[1])
+        g = jnp.tanh(a[:, 2] + bias[2])
+        c = f * c_prev + g * i
+        po = peep[2] * c if use_peep else 0.0
+        o = jax.nn.sigmoid(a[:, 3] + po + bias[3])
+        return (o * jnp.tanh(c), c)
+
+    def stage3(pre, pim, m):
+        hp = spec.pad(spec.hidden_dim)
+        mp = jnp.pad(m, ((0, 0), (0, hp - m.shape[1])))
+        return (circulant.matvec_spectral(pre, pim, mp, k=k)[:, : spec.pad(spec.out_dim)],)
+
+    def stage3_identity(m):
+        return (jnp.pad(m, ((0, 0), (0, spec.pad(spec.out_dim) - m.shape[1]))),)
+
+    def step(wre, wim, bias, peep, pre, pim, x, y_prev, c_prev):
+        in_pad = spec.pad(spec.layer_input_dim(0))
+        xp = jnp.pad(x, ((0, 0), (0, in_pad - x.shape[1])))
+        fused = jnp.concatenate([xp, y_prev], axis=1)
+        (a,) = stage1(wre, wim, fused)
+        m, c = stage2(a, c_prev, bias, peep)
+        if proj_shape is not None:
+            (y,) = stage3(pre, pim, m)
+        else:
+            (y,) = stage3_identity(m)
+        return (y, c)
+
+    return stage1, stage2, stage3 if proj_shape is not None else stage3_identity, step
+
+
+def export_config(name: str, spec: model.Spec, batch: int, outdir: str) -> dict:
+    """Lower one configuration's stage/step functions; returns the manifest
+    entry."""
+    k = spec.k
+    h = spec.hidden_dim
+    gate_shape, proj_shape = spectral_shapes(spec, 0)
+    fused_in = spec.fused_in_dim(0)
+    out_pad = spec.pad(spec.out_dim)
+    in_dim = spec.layer_input_dim(0)
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+
+    stage1, stage2, stage3, step = build_stage_fns(spec, batch)
+
+    entry = {"k": k, "batch": batch, "hidden": h, "artifacts": {}}
+
+    def lower(fn, fname, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        return [list(a.shape) for a in args]
+
+    s1_args = [sds(gate_shape, f32), sds(gate_shape, f32), sds((batch, fused_in), f32)]
+    entry["artifacts"]["stage1"] = {
+        "file": f"{name}_stage1.hlo.txt",
+        "args": lower(stage1, f"{name}_stage1.hlo.txt", s1_args),
+        "outs": [[batch, 4, h]],
+    }
+
+    s2_args = [
+        sds((batch, 4, h), f32),
+        sds((batch, h), f32),
+        sds((4, h), f32),
+        sds((3, h), f32),
+    ]
+    entry["artifacts"]["stage2"] = {
+        "file": f"{name}_stage2.hlo.txt",
+        "args": lower(stage2, f"{name}_stage2.hlo.txt", s2_args),
+        "outs": [[batch, h], [batch, h]],
+    }
+
+    if proj_shape is not None:
+        s3_args = [sds(proj_shape, f32), sds(proj_shape, f32), sds((batch, h), f32)]
+    else:
+        s3_args = [sds((batch, h), f32)]
+    entry["artifacts"]["stage3"] = {
+        "file": f"{name}_stage3.hlo.txt",
+        "args": lower(stage3, f"{name}_stage3.hlo.txt", s3_args),
+        "outs": [[batch, out_pad]],
+    }
+
+    peep_shape = (3, h)
+    pr = proj_shape if proj_shape is not None else (1, 1, 1)
+    step_args = [
+        sds(gate_shape, f32),
+        sds(gate_shape, f32),
+        sds((4, h), f32),
+        sds(peep_shape, f32),
+        sds(pr, f32),
+        sds(pr, f32),
+        sds((batch, in_dim), f32),
+        sds((batch, out_pad), f32),
+        sds((batch, h), f32),
+    ]
+    entry["artifacts"]["step"] = {
+        "file": f"{name}_step.hlo.txt",
+        "args": lower(step, f"{name}_step.hlo.txt", step_args),
+        "outs": [[batch, out_pad], [batch, h]],
+    }
+    return entry
+
+
+# ------------------------------------------------------------ golden bundle
+
+
+def write_clstmw(path: str, spec: model.Spec, params: dict) -> None:
+    """Write weights in the Rust CLSTMW1 container format
+    (see ``rust/src/lstm/weights.rs``)."""
+    arrays = []
+    for l in range(spec.layers):
+        for d in range(spec.directions):
+            lp = params["layers"][l][d]
+            for gi, gname in enumerate("ifgo"):
+                arrays.append((f"l{l}.d{d}.w_{gname}", lp["w"][gi].ravel()))
+                arrays.append((f"l{l}.d{d}.b_{gname}", lp["b"][gi].ravel()))
+            if spec.peephole:
+                arrays.append((f"l{l}.d{d}.p_ic", lp["peep"][0].ravel()))
+                arrays.append((f"l{l}.d{d}.p_fc", lp["peep"][1].ravel()))
+                arrays.append((f"l{l}.d{d}.p_oc", lp["peep"][2].ravel()))
+            if spec.proj_dim is not None:
+                arrays.append((f"l{l}.d{d}.w_proj", lp["w_proj"].ravel()))
+    arrays.append(("cls.w", params["cls_w"].ravel()))
+    arrays.append(("cls.b", params["cls_b"].ravel()))
+
+    header = {
+        "format": "CLSTMW1",
+        "model": "small" if spec.name != "google" else "google",
+        "k": spec.k,
+        "input_dim": spec.input_dim,
+        "hidden_dim": spec.hidden_dim,
+        "proj_dim": spec.proj_dim,
+        "peephole": spec.peephole,
+        "layers": spec.layers,
+        "bidirectional": spec.bidirectional,
+        "num_classes": spec.num_classes,
+        "arrays": [{"name": n, "len": int(a.size)} for n, a in arrays],
+    }
+    hjson = json.dumps(header, sort_keys=True, separators=(",", ":")).encode()
+    with open(path, "wb") as f:
+        f.write(b"CLSTMW1\n")
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for _, a in arrays:
+            f.write(np.ascontiguousarray(a, dtype="<f4").tobytes())
+
+
+def export_golden(outdir: str) -> None:
+    """Tiny-model golden bundle: weights + inputs + expected outputs that
+    the Rust integration tests replay against both its own engine and the
+    compiled artifacts."""
+    spec = model.tiny(4)
+    params = model.init_params(spec, seed=123)
+    rng = np.random.default_rng(7)
+    t, b = 6, 1
+    xs = rng.normal(size=(t, b, spec.input_dim)).astype(np.float32)
+    logits = model.forward(spec, params, jnp.array(xs), use_kernel=True)
+
+    # Single-step golden through the step function (what quickstart runs).
+    lp = params["layers"][0][0]
+    out_pad = spec.pad(spec.out_dim)
+    y0 = np.zeros((b, out_pad), np.float32)
+    c0 = np.zeros((b, spec.hidden_dim), np.float32)
+    y1, c1 = model.lstm_step(
+        spec, lp, 0, jnp.array(xs[0]), jnp.array(y0), jnp.array(c0), use_kernel=True
+    )
+
+    write_clstmw(os.path.join(outdir, "golden_tiny.clstmw"), spec, params)
+    golden = {
+        "spec": {"name": "tiny", "k": spec.k},
+        "frames": xs.reshape(t, -1).tolist(),
+        "logits": np.asarray(logits).reshape(t, -1).tolist(),
+        "step_x": xs[0].ravel().tolist(),
+        "step_y": np.asarray(y1).ravel().tolist(),
+        "step_c": np.asarray(c1).ravel().tolist(),
+    }
+    with open(os.path.join(outdir, "golden_tiny.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="C-LSTM AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument(
+        "--configs",
+        default="tiny_fft4,google_fft8,google_fft16,small_fft8,small_fft16",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "clstm-artifacts-v1", "configs": {}}
+    for name in args.configs.split(","):
+        name = name.strip()
+        spec = CONFIGS[name]
+        print(f"[aot] lowering {name} (k={spec.k}) ...")
+        manifest["configs"][name] = export_config(name, spec, args.batch, args.out)
+
+    export_golden(args.out)
+    manifest["golden"] = {
+        "weights": "golden_tiny.clstmw",
+        "vectors": "golden_tiny.json",
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote manifest + {len(manifest['configs'])} configs to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""SynthTIMIT (Python mirror of ``rust/src/data/synth.rs``).
+
+The numpy implementation shares the generator *structure* (39-phone Markov
+chain, Gaussian-bump per-phone emission means, AR(1) frame smoothing,
+energy + Δ + ΔΔ channels) though not the bit-exact streams — training
+happens entirely in Python, inference-side evaluation entirely in Rust, and
+each side generates its own splits. See DESIGN.md §2 for the TIMIT
+substitution argument.
+"""
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class SynthConfig:
+    n_phones: int = 39
+    base_dim: int = 51
+    mean_frames: int = 120
+    self_loop: float = 0.857
+    noise: float = 0.45
+    seed: int = 0x7131
+
+    @property
+    def feature_dim(self) -> int:
+        return (self.base_dim + 1) * 3
+
+
+def google_cfg() -> SynthConfig:
+    return SynthConfig()
+
+
+def small_cfg() -> SynthConfig:
+    return SynthConfig(base_dim=12)
+
+
+def proxy_cfg() -> SynthConfig:
+    """Matches model.google_proxy's 156-dim input."""
+    return SynthConfig(base_dim=51)
+
+
+class SynthTimit:
+    def __init__(self, cfg: SynthConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        centres = (np.arange(cfg.n_phones) + 0.5) / cfg.n_phones
+        widths = 0.08 + 0.04 * rng.random(cfg.n_phones)
+        amps = 1.0 + 0.5 * rng.random(cfg.n_phones)
+        xs = np.arange(cfg.base_dim) / cfg.base_dim
+        self.means = (
+            amps[:, None]
+            * np.exp(-((xs[None, :] - centres[:, None]) ** 2) / (2 * widths[:, None] ** 2))
+            + 0.15 * rng.normal(size=(cfg.n_phones, cfg.base_dim))
+        )
+        self.trans = 0.05 + rng.random((cfg.n_phones, cfg.n_phones))
+        for row in self.trans:
+            for _ in range(4):
+                row[rng.integers(cfg.n_phones)] += 3.0
+        self.trans /= self.trans.sum(axis=1, keepdims=True)
+
+    def utterance(self, rng: np.random.Generator, frames: int | None = None):
+        cfg = self.cfg
+        n = frames or max(8, int(cfg.mean_frames * rng.uniform(0.6, 1.4)))
+        d = cfg.base_dim
+        labels = np.empty(n, dtype=np.int64)
+        phone = rng.integers(cfg.n_phones)
+        stat = np.zeros(d)
+        raw = np.empty((n, d + 1))
+        for t in range(n):
+            if rng.random() > cfg.self_loop:
+                phone = rng.choice(cfg.n_phones, p=self.trans[phone])
+            labels[t] = phone
+            target = self.means[phone] + cfg.noise * rng.normal(size=d)
+            stat = 0.6 * stat + 0.4 * target
+            raw[t, :d] = stat
+            raw[t, d] = np.sqrt(np.mean(stat**2))
+        d1 = np.empty_like(raw)
+        d1[1:-1] = (raw[2:] - raw[:-2]) / 2
+        d1[0] = (raw[1] - raw[0]) / 2
+        d1[-1] = (raw[-1] - raw[-2]) / 2
+        d2 = np.empty_like(d1)
+        d2[1:-1] = (d1[2:] - d1[:-2]) / 2
+        d2[0] = (d1[1] - d1[0]) / 2
+        d2[-1] = (d1[-1] - d1[-2]) / 2
+        feats = np.concatenate([raw, d1, d2], axis=1).astype(np.float32)
+        return feats, labels
+
+    def batch(self, seed: int, n_utts: int, frames: int):
+        """Fixed-length batch for jit-friendly training: (T, B, D), (T, B)."""
+        rng = np.random.default_rng(seed)
+        xs = np.empty((frames, n_utts, self.cfg.feature_dim), np.float32)
+        ys = np.empty((frames, n_utts), np.int64)
+        for b in range(n_utts):
+            f, l = self.utterance(rng, frames)
+            xs[:, b] = f
+            ys[:, b] = l
+        return xs, ys
+
+
+def collapse(labels):
+    out = []
+    for l in labels:
+        if not out or out[-1] != l:
+            out.append(int(l))
+    return out
+
+
+def edit_distance(a, b):
+    n, m = len(a), len(b)
+    if n == 0:
+        return m
+    prev = list(range(m + 1))
+    for i in range(1, n + 1):
+        cur = [i] + [0] * m
+        for j in range(1, m + 1):
+            cur[j] = min(
+                prev[j - 1] + (a[i - 1] != b[j - 1]),
+                prev[j] + 1,
+                cur[j - 1] + 1,
+            )
+        prev = cur
+    return prev[m]
+
+
+def phone_error_rate(hyp_frames, ref_frames):
+    """PER % over a corpus of framewise label arrays."""
+    errs = total = 0
+    for h, r in zip(hyp_frames, ref_frames):
+        rc = collapse(r)
+        errs += edit_distance(collapse(h), rc)
+        total += len(rc)
+    return 100.0 * errs / max(total, 1)

@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: spectral block-circulant mat-vec (Eq 6).
+
+FPGA -> TPU adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+butterfly-FFT datapath would waste the MXU, so the k-point DFT/IDFT of the
+tiny blocks (k in {2,...,16}) are expressed as **constant k x bins real
+matmuls** — systolic-array-friendly and fully fused with the
+frequency-domain multiply-accumulate. The precomputed spectral weights
+``F(w_ij)`` (packed to ``bins = k/2 + 1`` by conjugate symmetry, exactly the
+paper's BRAM layout) are the kernel's VMEM-resident operand; the grid runs
+over block-rows ``p`` so each program instance produces one output block-row
+from the shared input spectra — the Pallas analogue of one circulant-conv
+compute unit of §4.5.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowered this way the kernel becomes plain HLO that both the
+pytest suite and the Rust runtime run bit-identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _dft_matrices(k: int):
+    """Constant real DFT/IDFT matrices for the packed spectrum.
+
+    Forward:  X_re = x @ C^T, X_im = x @ S^T        (C, S: (bins, k))
+    Inverse:  y = re @ IC + im @ IS                 (IC, IS: (bins, k))
+    with the conjugate-symmetry weights (1 for bins 0 and k/2, 2 otherwise)
+    folded into IC/IS.
+    """
+    bins = k // 2 + 1
+    n = np.arange(k)
+    b = np.arange(bins)[:, None]
+    ang = 2.0 * np.pi * b * n[None, :] / k
+    C = np.cos(ang).astype(np.float32)            # (bins, k)
+    S = -np.sin(ang).astype(np.float32)           # rfft convention: e^{-i..}
+    alpha = np.full((bins, 1), 2.0, dtype=np.float32)
+    alpha[0] = 1.0
+    if k % 2 == 0:
+        alpha[-1] = 1.0
+    IC = (alpha * np.cos(ang) / k).astype(np.float32)   # (bins, k)
+    IS = (-alpha * np.sin(ang) / k).astype(np.float32)  # pairs with +im
+    return C, S, IC, IS
+
+
+def _kernel(wre_ref, wim_ref, xre_ref, xim_ref, ic_ref, is_ref, o_ref):
+    """One block-row: acc_j F(w_ij) * F(x_j), then IDFT-as-matmul."""
+    wre = wre_ref[...]          # (1, q, bins)
+    wim = wim_ref[...]
+    xre = xre_ref[...]          # (B, q, bins)
+    xim = xim_ref[...]
+    # Complex multiply + q-accumulate in frequency domain (Eq 6).
+    acc_re = jnp.einsum("zqb,nqb->nb", wre, xre) - jnp.einsum(
+        "zqb,nqb->nb", wim, xim
+    )
+    acc_im = jnp.einsum("zqb,nqb->nb", wre, xim) + jnp.einsum(
+        "zqb,nqb->nb", wim, xre
+    )
+    # One inverse transform per block-row (DFT-IDFT decoupling), as a
+    # constant matmul: (B, bins) @ (bins, k) -> (B, k).
+    o_ref[...] = (acc_re @ ic_ref[...] + acc_im @ is_ref[...])[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def matvec_spectral(wre, wim, x, *, k: int):
+    """Block-circulant mat-vec from precomputed packed spectra.
+
+    Args:
+      wre, wim: (p, q, bins) — packed ``F(w_ij)`` (see ``ref.spectral_weights``).
+      x: (B, q*k) input batch.
+      k: block size (static).
+    Returns:
+      (B, p*k).
+    """
+    p, q, bins = wre.shape
+    assert bins == k // 2 + 1, (bins, k)
+    b = x.shape[0]
+    xb = x.reshape(b, q, k)
+    C, S, IC, IS = _dft_matrices(k)
+    # Shared input DFTs, computed once (the 2q -> q DFT-call reduction of
+    # §4.1): MXU matmuls against the constant transform matrices.
+    xre = xb @ C.T              # (B, q, bins)
+    xim = xb @ S.T
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, q, bins), lambda i: (i, 0, 0)),   # F(w) row i
+            pl.BlockSpec((1, q, bins), lambda i: (i, 0, 0)),
+            pl.BlockSpec((b, q, bins), lambda i: (0, 0, 0)),   # shared F(x)
+            pl.BlockSpec((b, q, bins), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bins, k), lambda i: (0, 0)),         # IDFT matrices
+            pl.BlockSpec((bins, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, k), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p, k), jnp.float32),
+        interpret=True,
+    )(wre, wim, xre, xim, jnp.asarray(IC), jnp.asarray(IS))
+    return out.reshape(b, p * k)
+
+
+def matvec(w, x):
+    """Convenience: defining vectors (p, q, k) -> spectral -> kernel."""
+    k = w.shape[-1]
+    fw = jnp.fft.rfft(w, axis=-1)
+    return matvec_spectral(
+        fw.real.astype(jnp.float32), fw.imag.astype(jnp.float32), x, k=k
+    )
+
+
+def vmem_bytes(p: int, q: int, k: int, batch: int = 1) -> int:
+    """Estimated VMEM working set per grid step (the §Perf structure
+    metric): one weight block-row's packed spectra + the shared input
+    spectra + the output row, all f32."""
+    bins = k // 2 + 1
+    return 4 * (2 * q * bins + 2 * batch * q * bins + batch * k)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the block-circulant mat-vec (Eq 2/3/6).
+
+These are the correctness references the Pallas kernel (and, via golden
+vectors, the Rust engines) are tested against:
+
+- :func:`materialize_dense` / :func:`matvec_dense` — build the explicit
+  circulant blocks and do the dense mat-vec (the O(k^2) object the
+  compression avoids; convention W[r, c] = w[(r - c) mod k], matching
+  ``rust/src/circulant/block.rs``).
+- :func:`matvec_fft` — Eq 6 with ``jnp.fft``: spectra of the inputs computed
+  once, frequency-domain accumulate, one irfft per block-row.
+
+All functions take the defining vectors ``w`` with shape ``(p, q, k)`` and a
+batched input ``x`` with shape ``(B, q*k)``, returning ``(B, p*k)``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def materialize_dense(w):
+    """(p, q, k) defining vectors -> (p*k, q*k) dense matrix."""
+    p, q, k = w.shape
+    # W_block[r, c] = w[(r - c) mod k]
+    idx = (np.arange(k)[:, None] - np.arange(k)[None, :]) % k
+    blocks = w[:, :, idx]                     # (p, q, k, k)
+    dense = jnp.transpose(blocks, (0, 2, 1, 3)).reshape(p * k, q * k)
+    return dense
+
+
+def matvec_dense(w, x):
+    """Oracle: dense mat-vec through the materialised matrix."""
+    dense = materialize_dense(w)
+    return x @ dense.T
+
+
+def matvec_fft(w, x):
+    """Eq 6: a_i = irfft( sum_j rfft(w_ij) * rfft(x_j) )."""
+    p, q, k = w.shape
+    b = x.shape[0]
+    xb = x.reshape(b, q, k)
+    fx = jnp.fft.rfft(xb, axis=-1)            # (B, q, bins)
+    fw = jnp.fft.rfft(w, axis=-1)             # (p, q, bins)
+    # Accumulate over q in the frequency domain (DFT-IDFT decoupling).
+    acc = jnp.einsum("pqb,nqb->npb", fw, fx)  # (B, p, bins)
+    out = jnp.fft.irfft(acc, n=k, axis=-1)    # (B, p, k)
+    return out.reshape(b, p * k)
+
+
+def spectral_weights(w):
+    """Precompute packed rfft spectra of the defining vectors.
+
+    Returns (re, im), each (p, q, k//2 + 1) float32 — the layout the Pallas
+    kernel and the Rust ``SpectralWeights`` use.
+    """
+    fw = np.fft.rfft(np.asarray(w), axis=-1)
+    return (
+        np.ascontiguousarray(fw.real.astype(np.float32)),
+        np.ascontiguousarray(fw.imag.astype(np.float32)),
+    )

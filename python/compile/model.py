@@ -1,0 +1,237 @@
+"""Layer-2 JAX model: Google LSTM / Small LSTM with block-circulant weights.
+
+Mirrors the Rust engines exactly (same specs, gate order i/f/g/o, padding
+rules, fused ``W_{*(xr)}[x_t, y_{t-1}]`` mat-vecs, tanh cell candidate —
+see ``rust/src/lstm``): the Rust ``tests/`` golden-vector suite asserts the
+two implementations agree. Every mat-vec goes through the Layer-1 Pallas
+kernel (:mod:`compile.kernels.circulant`); with ``use_kernel=False`` the
+pure-jnp Eq 6 reference is used instead (for A/B testing and fast training).
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import circulant, ref
+
+
+@dataclass(frozen=True)
+class Spec:
+    """Mirror of ``rust/src/lstm/config.rs::LstmSpec``."""
+
+    name: str
+    input_dim: int
+    hidden_dim: int
+    proj_dim: Optional[int]
+    peephole: bool
+    layers: int
+    bidirectional: bool
+    k: int
+    num_classes: int = 39
+
+    def pad(self, dim: int) -> int:
+        return -(-dim // self.k) * self.k
+
+    @property
+    def out_dim(self) -> int:
+        return self.proj_dim if self.proj_dim is not None else self.hidden_dim
+
+    def layer_input_dim(self, l: int) -> int:
+        if l == 0:
+            return self.input_dim
+        return self.out_dim * (2 if self.bidirectional else 1)
+
+    def fused_in_dim(self, l: int) -> int:
+        return self.pad(self.layer_input_dim(l)) + self.pad(self.out_dim)
+
+    @property
+    def directions(self) -> int:
+        return 2 if self.bidirectional else 1
+
+
+def google(k: int, **kw) -> Spec:
+    return Spec("google", 153, 1024, 512, True, 2, False, k, **kw)
+
+
+def small(k: int, **kw) -> Spec:
+    return Spec("small", 39, 512, None, False, 2, True, k, **kw)
+
+
+def tiny(k: int, **kw) -> Spec:
+    """Test-scale config (matches ``LstmSpec::tiny`` in Rust)."""
+    return Spec("tiny", 16, 32, 16, True, 1, False, k, num_classes=8, **kw)
+
+
+def google_proxy(k: int, **kw) -> Spec:
+    """Scaled-down Google LSTM for the Table 1 training sweep (CPU-sized;
+    same structure — peepholes, projection, 2 layers — so the accuracy-vs-k
+    trend transfers; see DESIGN.md §2)."""
+    return Spec("google_proxy", 156, 256, 128, True, 2, False, k, **kw)
+
+
+# --------------------------------------------------------------- parameters
+
+
+def init_layer(rng: np.random.Generator, spec: Spec, l: int) -> dict:
+    """Defining-vector parameters of one direction of layer ``l``."""
+    h = spec.pad(spec.hidden_dim)
+    fused = spec.fused_in_dim(l)
+    k = spec.k
+    p, q = h // k, fused // k
+    std = float(np.sqrt(2.0 / (h + fused)))
+    params = {
+        "w": rng.normal(0.0, std, size=(4, p, q, k)).astype(np.float32),
+        "b": np.concatenate(
+            [
+                np.zeros((1, spec.hidden_dim), np.float32),
+                np.ones((1, spec.hidden_dim), np.float32),  # forget bias +1
+                np.zeros((2, spec.hidden_dim), np.float32),
+            ]
+        ),
+    }
+    if spec.peephole:
+        params["peep"] = (0.1 * rng.normal(size=(3, spec.hidden_dim))).astype(
+            np.float32
+        )
+    if spec.proj_dim is not None:
+        pp = spec.pad(spec.proj_dim) // k
+        params["w_proj"] = rng.normal(0.0, std, size=(pp, h // k, k)).astype(
+            np.float32
+        )
+    return params
+
+
+def init_params(spec: Spec, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    layers = [
+        [init_layer(rng, spec, l) for _ in range(spec.directions)]
+        for l in range(spec.layers)
+    ]
+    final = spec.out_dim * spec.directions
+    cls_std = float(np.sqrt(2.0 / (final + spec.num_classes)))
+    return {
+        "layers": layers,
+        "cls_w": rng.normal(0.0, cls_std, size=(spec.num_classes, final)).astype(
+            np.float32
+        ),
+        "cls_b": np.zeros((spec.num_classes,), np.float32),
+    }
+
+
+# ------------------------------------------------------------------- engine
+
+
+def _matvec(w, x, use_kernel: bool):
+    if use_kernel:
+        return circulant.matvec(w, x)
+    return ref.matvec_fft(w, x)
+
+
+def lstm_step(spec: Spec, lp: dict, l: int, x, y_prev, c_prev, use_kernel=True):
+    """One Eq 1a–1g step for one direction of layer ``l``.
+
+    Args:
+      x: (B, layer_input_dim) unpadded input.
+      y_prev: (B, out_pad), c_prev: (B, hidden).
+    Returns:
+      (y, c): ((B, out_pad), (B, hidden)).
+    """
+    h = spec.hidden_dim
+    in_pad = spec.pad(spec.layer_input_dim(l))
+    out_pad = spec.pad(spec.out_dim)
+    bsz = x.shape[0]
+    xp = jnp.pad(x, ((0, 0), (0, in_pad - x.shape[1])))
+    fused = jnp.concatenate([xp, y_prev], axis=1)          # (B, fused_in)
+
+    # The four gate mat-vecs through the Layer-1 kernel. Stacking the gates
+    # into one (4p, q, k) matrix shares the input DFTs across all four —
+    # the same trick the FPGA stage-1 uses.
+    w4 = lp["w"].reshape(-1, lp["w"].shape[2], spec.k)      # (4p, q, k)
+    a = _matvec(w4, fused, use_kernel).reshape(bsz, 4, -1)[:, :, :h]
+
+    peep = lp.get("peep")
+    pi = peep[0] * c_prev if peep is not None else 0.0
+    pf = peep[1] * c_prev if peep is not None else 0.0
+    i = jax.nn.sigmoid(a[:, 0] + pi + lp["b"][0])
+    f = jax.nn.sigmoid(a[:, 1] + pf + lp["b"][1])
+    g = jnp.tanh(a[:, 2] + lp["b"][2])
+    c = f * c_prev + g * i
+    po = peep[2] * c if peep is not None else 0.0
+    o = jax.nn.sigmoid(a[:, 3] + po + lp["b"][3])
+    m = o * jnp.tanh(c)
+
+    if spec.proj_dim is not None:
+        hp = spec.pad(h)
+        mp = jnp.pad(m, ((0, 0), (0, hp - h)))
+        y = _matvec(lp["w_proj"], mp, use_kernel)[:, :out_pad]
+    else:
+        y = jnp.pad(m, ((0, 0), (0, out_pad - m.shape[1])))
+    return y, c
+
+
+def run_direction(spec: Spec, lp: dict, l: int, xs, reverse=False, use_kernel=True):
+    """Scan one direction over a (T, B, D) sequence -> (T, B, out_dim)."""
+    out_pad = spec.pad(spec.out_dim)
+    bsz = xs.shape[1]
+
+    def step(carry, x):
+        y_prev, c_prev = carry
+        y, c = lstm_step(spec, lp, l, x, y_prev, c_prev, use_kernel)
+        return (y, c), y[:, : spec.out_dim]
+
+    init = (
+        jnp.zeros((bsz, out_pad), jnp.float32),
+        jnp.zeros((bsz, spec.hidden_dim), jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, init, xs, reverse=reverse)
+    return ys
+
+
+def forward(spec: Spec, params: dict, xs, use_kernel=True):
+    """Full stack: (T, B, input_dim) -> logits (T, B, num_classes)."""
+    inputs = xs
+    for l in range(spec.layers):
+        dirs = params["layers"][l]
+        outs = [run_direction(spec, dirs[0], l, inputs, False, use_kernel)]
+        if spec.bidirectional:
+            outs.append(run_direction(spec, dirs[1], l, inputs, True, use_kernel))
+        inputs = jnp.concatenate(outs, axis=-1)
+    return inputs @ params["cls_w"].T + params["cls_b"]
+
+
+# ------------------------------------------------- stage-split step (Fig 7)
+# The serving coordinator pipelines the paper's three coarse stages as
+# separate PJRT executables; these are the stage functions it AOT-compiles.
+
+
+def stage1_gates(spec: Spec, lp: dict, l: int, fused, use_kernel=True):
+    """Stage 1: the four fused gate convolutions. fused: (B, fused_in)."""
+    h = spec.hidden_dim
+    w4 = lp["w"].reshape(-1, lp["w"].shape[2], spec.k)
+    return _matvec(w4, fused, use_kernel).reshape(fused.shape[0], 4, -1)[:, :, :h]
+
+
+def stage2_elementwise(spec: Spec, lp: dict, a, c_prev):
+    """Stage 2: the element-wise cluster. a: (B, 4, h) -> (m, c)."""
+    peep = lp.get("peep")
+    pi = peep[0] * c_prev if peep is not None else 0.0
+    pf = peep[1] * c_prev if peep is not None else 0.0
+    i = jax.nn.sigmoid(a[:, 0] + pi + lp["b"][0])
+    f = jax.nn.sigmoid(a[:, 1] + pf + lp["b"][1])
+    g = jnp.tanh(a[:, 2] + lp["b"][2])
+    c = f * c_prev + g * i
+    po = peep[2] * c if peep is not None else 0.0
+    o = jax.nn.sigmoid(a[:, 3] + po + lp["b"][3])
+    return o * jnp.tanh(c), c
+
+
+def stage3_project(spec: Spec, lp: dict, m, use_kernel=True):
+    """Stage 3: the projection convolution. m: (B, h) -> (B, out_pad)."""
+    if spec.proj_dim is None:
+        return jnp.pad(m, ((0, 0), (0, spec.pad(spec.out_dim) - m.shape[1])))
+    hp = spec.pad(spec.hidden_dim)
+    mp = jnp.pad(m, ((0, 0), (0, hp - m.shape[1])))
+    return _matvec(lp["w_proj"], mp, use_kernel)[:, : spec.pad(spec.out_dim)]

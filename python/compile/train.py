@@ -1,0 +1,149 @@
+"""Table 1 reproduction: block-circulant LSTM training sweep over block
+sizes k in {1, 2, 4, 8, 16}.
+
+Trains the ``google_proxy`` model (same structure as the Google LSTM —
+peepholes, projection, two stacked layers — scaled to CPU size; DESIGN.md
+§2) on SynthTIMIT with framewise cross-entropy and hand-rolled Adam
+(optax is not available offline), evaluating PER on a held-out split.
+Gradients flow through the same Eq 6 FFT-domain ops as inference —
+autodiff realises exactly the Eq 4–5 backward functions (the derivative of
+a circulant convolution is a circulant correlation).
+
+Output: ``artifacts/table1.json`` with per-k parameters / complexity / PER,
+consumed by the Rust ``bench_table1`` harness and EXPERIMENTS.md.
+
+Run:  cd python && python -m compile.train --steps 400
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return {"m": z, "v": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def make_train_step(spec):
+    def loss_fn(params, xs, ys):
+        logits = model.forward(spec, params, xs, use_kernel=False)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, ys[..., None], axis=-1).mean()
+        return nll
+
+    @jax.jit
+    def step(params, opt, xs, ys):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xs, ys)
+        params, opt = adam_update(params, grads, opt)
+        return params, opt, loss
+
+    return step
+
+
+def evaluate_per(spec, params, gen, n_utts=16, frames=100, seed=9999):
+    xs, ys = gen.batch(seed, n_utts, frames)
+    logits = model.forward(spec, params, jnp.array(xs), use_kernel=False)
+    hyp = np.asarray(jnp.argmax(logits, axis=-1))  # (T, B)
+    return data.phone_error_rate(
+        [hyp[:, b] for b in range(n_utts)], [ys[:, b] for b in range(n_utts)]
+    )
+
+
+def train_one(k: int, steps: int, batch: int, frames: int, log_every: int = 50,
+              hidden: int = 256, proj: int = 128):
+    spec = model.Spec("google_proxy", 156, hidden, proj, True, 2, False, k)
+    gen = data.SynthTimit(data.proxy_cfg())
+    params = model.init_params(spec, seed=100 + k)
+    opt = adam_init(params)
+    step = make_train_step(spec)
+    t0 = time.time()
+    loss = float("nan")
+    for s in range(steps):
+        xs, ys = gen.batch(s, batch, frames)
+        params, opt, loss = step(params, opt, jnp.array(xs), jnp.array(ys))
+        if s % log_every == 0 or s == steps - 1:
+            print(
+                f"[train k={k}] step {s:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    per = evaluate_per(spec, params, gen)
+    n_params = count_params(params["layers"])
+    complexity = 1.0 if k == 1 else np.log2(k) / k
+    print(f"[train k={k}] done: PER {per:.2f}%  params {n_params/1e6:.3f}M")
+    return {
+        "k": k,
+        "params": n_params,
+        "complexity": complexity,
+        "per": per,
+        "final_loss": float(loss),
+        "steps": steps,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Table 1 training sweep")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=100)
+    ap.add_argument("--ks", default="1,2,4,8,16")
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--proj", type=int, default=128)
+    ap.add_argument("--out", default="../artifacts/table1.json")
+    args = ap.parse_args()
+
+    rows = []
+    for k in [int(x) for x in args.ks.split(",")]:
+        rows.append(
+            train_one(k, args.steps, args.batch, args.frames,
+                      hidden=args.hidden, proj=args.proj)
+        )
+
+    base = next((r for r in rows if r["k"] == 1), rows[0])
+    for r in rows:
+        r["per_degradation"] = r["per"] - base["per"]
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"rows": rows, "dataset": "SynthTIMIT(proxy)", "note": (
+            "PER absolute values are on SynthTIMIT with the google_proxy "
+            "scale, not TIMIT; the reproduction target is the trend vs k "
+            "(Table 1)")}, f, indent=2)
+    print(f"wrote {args.out}")
+    print(f"{'k':>4} {'params':>10} {'cmplx':>6} {'PER%':>7} {'ΔPER':>6}")
+    for r in rows:
+        print(
+            f"{r['k']:>4} {r['params']:>10} {r['complexity']:>6.2f} "
+            f"{r['per']:>7.2f} {r['per_degradation']:>6.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""SynthTIMIT (python side) and PER metric tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+def test_batch_shapes_and_determinism():
+    gen = data.SynthTimit(data.SynthConfig(n_phones=8, base_dim=5, mean_frames=30))
+    xs, ys = gen.batch(1, 3, 40)
+    assert xs.shape == (40, 3, 18)
+    assert ys.shape == (40, 3)
+    xs2, ys2 = gen.batch(1, 3, 40)
+    np.testing.assert_array_equal(ys, ys2)
+    np.testing.assert_array_equal(xs, xs2)
+    xs3, _ = gen.batch(2, 3, 40)
+    assert np.abs(xs - xs3).max() > 0
+
+
+def test_feature_dims_match_models():
+    assert data.google_cfg().feature_dim == 156
+    assert data.small_cfg().feature_dim == 39
+
+
+def test_per_perfect_and_garbage():
+    refs = [np.array([1, 1, 2, 2, 3])]
+    assert data.phone_error_rate(refs, refs) == 0.0
+    per = data.phone_error_rate([np.array([7, 7, 7, 7, 7])], refs)
+    assert per >= 200.0 / 3.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    a=st.lists(st.integers(min_value=0, max_value=4), max_size=12),
+    b=st.lists(st.integers(min_value=0, max_value=4), max_size=12),
+)
+def test_edit_distance_metric_axioms(a, b):
+    d = data.edit_distance
+    assert d(a, a) == 0
+    assert d(a, b) == d(b, a)
+    assert d(a, b) <= max(len(a), len(b))
+
+
+def test_collapse():
+    assert data.collapse([1, 1, 2, 2, 2, 1]) == [1, 2, 1]
+    assert data.collapse([]) == []
+
+
+def test_class_informative_features():
+    """Nearest-mean framewise classification beats chance — the PER trend
+    in Table 1 is only meaningful if the task is learnable."""
+    cfg = data.SynthConfig(n_phones=8, base_dim=5, mean_frames=40)
+    gen = data.SynthTimit(cfg)
+    xs, ys = gen.batch(3, 16, 40)
+    d = cfg.base_dim
+    feats = xs[..., :d].reshape(-1, d)
+    labels = ys.reshape(-1)
+    # Classes absent from the training split get a far-away sentinel mean.
+    means = np.stack(
+        [
+            feats[labels == c].mean(axis=0)
+            if np.any(labels == c)
+            else np.full(d, 1e6)
+            for c in range(cfg.n_phones)
+        ]
+    )
+    xt, yt = gen.batch(4, 4, 40)
+    ft = xt[..., :d].reshape(-1, d)
+    lt = yt.reshape(-1)
+    pred = np.argmin(
+        ((ft[:, None, :] - means[None, :, :]) ** 2).sum(-1), axis=1
+    )
+    acc = (pred == lt).mean()
+    assert acc > 3.0 / cfg.n_phones, acc

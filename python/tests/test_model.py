@@ -1,0 +1,141 @@
+"""L2 model tests: shapes, semantics, stage-split equivalence, gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-3)))
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    spec = model.tiny(4)
+    return spec, model.init_params(spec, 0)
+
+
+def test_forward_shapes(tiny):
+    spec, params = tiny
+    xs = jnp.zeros((7, 3, spec.input_dim), jnp.float32)
+    logits = model.forward(spec, params, xs, use_kernel=False)
+    assert logits.shape == (7, 3, spec.num_classes)
+
+
+def test_kernel_and_ref_paths_agree(tiny):
+    spec, params = tiny
+    rng = np.random.default_rng(1)
+    xs = jnp.array(rng.normal(size=(4, 2, spec.input_dim)).astype(np.float32))
+    a = model.forward(spec, params, xs, use_kernel=False)
+    b = model.forward(spec, params, xs, use_kernel=True)
+    assert rel_err(a, b) < 1e-3
+
+
+def test_stage_split_equals_fused_step(tiny):
+    """The three Fig 7 stage functions composed == the fused step — the
+    invariant the Rust pipeline relies on."""
+    spec, params = tiny
+    lp = params["layers"][0][0]
+    rng = np.random.default_rng(2)
+    b = 2
+    x = jnp.array(rng.normal(size=(b, spec.input_dim)).astype(np.float32))
+    y0 = jnp.array(rng.normal(size=(b, spec.pad(spec.out_dim))).astype(np.float32))
+    c0 = jnp.array(rng.normal(size=(b, spec.hidden_dim)).astype(np.float32))
+
+    in_pad = spec.pad(spec.layer_input_dim(0))
+    xp = jnp.pad(x, ((0, 0), (0, in_pad - x.shape[1])))
+    fused = jnp.concatenate([xp, y0], axis=1)
+    a = model.stage1_gates(spec, lp, 0, fused, use_kernel=False)
+    m, c = model.stage2_elementwise(spec, lp, a, c0)
+    y = model.stage3_project(spec, lp, m, use_kernel=False)
+
+    y2, c2 = model.lstm_step(spec, lp, 0, x, y0, c0, use_kernel=False)
+    assert rel_err(y, y2) < 1e-5
+    assert rel_err(c, c2) < 1e-5
+
+
+def test_k1_equals_dense_lstm():
+    """k=1 block-circulant is exactly a dense LSTM: replacing the circulant
+    matvec by the materialised dense matmul must give identical results."""
+    spec = model.tiny(1)
+    params = model.init_params(spec, 3)
+    lp = params["layers"][0][0]
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(1, spec.input_dim)).astype(np.float32))
+    y0 = jnp.zeros((1, spec.pad(spec.out_dim)), jnp.float32)
+    c0 = jnp.zeros((1, spec.hidden_dim)),
+    c0 = jnp.zeros((1, spec.hidden_dim), jnp.float32)
+    y, c = model.lstm_step(spec, lp, 0, x, y0, c0, use_kernel=False)
+
+    # Manual dense computation.
+    h = spec.hidden_dim
+    fused = jnp.concatenate([x, y0], axis=1)
+    w4 = lp["w"].reshape(-1, lp["w"].shape[2], 1)
+    dense = ref.materialize_dense(w4)
+    a = (fused @ dense.T).reshape(1, 4, -1)[:, :, :h]
+    i = jax.nn.sigmoid(a[:, 0] + lp["peep"][0] * c0 + lp["b"][0])
+    f = jax.nn.sigmoid(a[:, 1] + lp["peep"][1] * c0 + lp["b"][1])
+    g = jnp.tanh(a[:, 2] + lp["b"][2])
+    c_ref = f * c0 + g * i
+    o = jax.nn.sigmoid(a[:, 3] + lp["peep"][2] * c_ref + lp["b"][3])
+    m = o * jnp.tanh(c_ref)
+    y_ref = ref.matvec_dense(lp["w_proj"], m)[:, : spec.pad(spec.out_dim)]
+    assert rel_err(c, c_ref) < 1e-4
+    assert rel_err(y, y_ref) < 1e-4
+
+
+def test_bidirectional_shapes():
+    spec = model.Spec("s", 10, 16, None, False, 2, True, 2, num_classes=5)
+    params = model.init_params(spec, 5)
+    xs = jnp.zeros((6, 2, 10), jnp.float32)
+    logits = model.forward(spec, params, xs, use_kernel=False)
+    assert logits.shape == (6, 2, 5)
+
+
+def test_gradients_flow_through_circulant_structure(tiny):
+    """Eq 4–5: training updates the defining vectors; the gradient of the
+    FFT-domain op exists and is non-trivial."""
+    spec, params = tiny
+
+    def loss(p):
+        xs = jnp.ones((3, 1, spec.input_dim), jnp.float32)
+        return model.forward(spec, p, xs, use_kernel=False).sum()
+
+    g = jax.grad(loss)(params)
+    gw = g["layers"][0][0]["w"]
+    assert gw.shape == params["layers"][0][0]["w"].shape
+    assert float(jnp.abs(gw).max()) > 0.0
+
+
+def test_param_counts_match_rust_accounting():
+    """Mirror of rust lstm::config tests: Google-LSTM total parameters at
+    each block size track Table 1 (±5–8%)."""
+    for k, target, tol in [(1, 8.01e6, 0.02), (8, 1.05e6, 0.05), (16, 0.55e6, 0.08)]:
+        spec = model.google(k)
+        params = model.init_params(spec, 0)
+        n = sum(
+            int(np.prod(p.shape))
+            for p in jax.tree_util.tree_leaves(params["layers"])
+        )
+        assert abs(n - target) / target < tol, (k, n)
+
+
+def test_scan_matches_manual_unroll(tiny):
+    spec, params = tiny
+    lp = params["layers"][0][0]
+    rng = np.random.default_rng(6)
+    xs = jnp.array(rng.normal(size=(4, 1, spec.input_dim)).astype(np.float32))
+    scanned = model.run_direction(spec, lp, 0, xs, use_kernel=False)
+    y = jnp.zeros((1, spec.pad(spec.out_dim)), jnp.float32)
+    c = jnp.zeros((1, spec.hidden_dim), jnp.float32)
+    outs = []
+    for t in range(4):
+        y, c = model.lstm_step(spec, lp, 0, xs[t], y, c, use_kernel=False)
+        outs.append(y[:, : spec.out_dim])
+    manual = jnp.stack(outs)
+    assert rel_err(scanned, manual) < 1e-5

@@ -1,0 +1,56 @@
+//! Circulant-convolution benchmarks: the §4.1 optimization ladder measured
+//! on real hardware (this CPU) — direct time-domain vs Eq 3 vs the
+//! optimized Eq 6, float and bit-accurate fixed point, across block sizes.
+//! The *shape* to reproduce: Eq 6 ≫ Eq 3, and larger k → faster (Table 1's
+//! complexity column made empirical).
+
+use clstm::circulant::conv::{matvec_direct, matvec_eq3, matvec_eq6};
+use clstm::circulant::fxp_conv::FxConvPlan;
+use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+use clstm::circulant::BlockCirculant;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::util::bench::{black_box, Bench};
+use clstm::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let mut b = Bench::new("circulant");
+
+    // The Google-LSTM gate matrix at trimmed scale: 256×672.
+    let (rows, cols) = (256usize, 672usize);
+    let x: Vec<f32> = (0..cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+    for &k in &[2usize, 4, 8, 16] {
+        let m = BlockCirculant::random_init(rows, cols.div_ceil(k) * k, k, &mut rng);
+        let xk = {
+            let mut v = x.clone();
+            v.resize(m.cols, 0.0);
+            v
+        };
+        let spec = SpectralWeights::precompute(&m);
+        b.throughput((rows * cols) as u64);
+        b.bench(&format!("eq6_optimized/k{k}"), || {
+            black_box(matvec_eq6(&spec, &xk))
+        });
+        if k <= 8 {
+            b.bench(&format!("eq3_unoptimized/k{k}"), || {
+                black_box(matvec_eq3(&m, &xk))
+            });
+        }
+        if k <= 8 {
+            b.bench(&format!("direct_time_domain/k{k}"), || {
+                black_box(matvec_direct(&m, &xk))
+            });
+        }
+        // Bit-accurate fixed-point path (the FPGA datapath model).
+        let fxw = SpectralWeightsFx::quantize_auto(&spec);
+        let plan = FxConvPlan::new(fxw, Q::new(12), Rounding::Nearest);
+        let xq = Q::new(12).quantize_slice(&xk);
+        b.bench(&format!("fxp_eq6/k{k}"), || black_box(plan.matvec(&xq)));
+    }
+
+    // Dense baseline (k = 1): what the compression replaces.
+    let dense = BlockCirculant::random_init(rows, cols, 1, &mut rng);
+    b.throughput((rows * cols) as u64);
+    b.bench("dense_matvec/k1", || black_box(matvec_direct(&dense, &x)));
+}

@@ -1,0 +1,56 @@
+//! FFT microbenchmarks: the L3 hot-path transforms (float reference, packed
+//! real FFT, and the bit-accurate fixed-point datapath) across the paper's
+//! block sizes.
+
+use clstm::fft::fxp::{FxFftPlan, ShiftPolicy};
+use clstm::fft::radix2::plan;
+use clstm::fft::rfft::{irfft, rfft};
+use clstm::num::cplx::CplxFx;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::num::Cplx;
+use clstm::util::bench::{black_box, Bench};
+use clstm::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut b = Bench::new("fft");
+
+    for &n in &[8usize, 16, 64, 256] {
+        let signal: Vec<Cplx> = (0..n)
+            .map(|_| Cplx::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect();
+        let p = plan(n);
+        b.throughput(n as u64);
+        b.bench(&format!("forward_f64/{n}"), || {
+            let mut buf = signal.clone();
+            p.forward(&mut buf);
+            buf
+        });
+    }
+
+    for &n in &[8usize, 16] {
+        let real: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        b.throughput(n as u64);
+        b.bench(&format!("rfft_packed/{n}"), || black_box(rfft(&real)));
+        let spec = rfft(&real);
+        b.bench(&format!("irfft_packed/{n}"), || {
+            black_box(irfft(&spec, n))
+        });
+    }
+
+    // Fixed-point FFT: the quantised datapath of §4.2 with the paper's
+    // shift policy.
+    let q = Q::new(12);
+    for &n in &[8usize, 16] {
+        let fxplan = FxFftPlan::new(n, ShiftPolicy::DftDistributed, Rounding::Nearest);
+        let data: Vec<CplxFx> = (0..n)
+            .map(|_| CplxFx::new(q.from_f64(rng.uniform(-1.0, 1.0)), 0))
+            .collect();
+        b.throughput(n as u64);
+        b.bench(&format!("fxp_forward/{n}"), || {
+            let mut buf = data.clone();
+            fxplan.forward(&mut buf);
+            buf
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure regeneration: Fig 3 (op counts), Fig 4 (PWL error), Fig 5
+//! (operator complexity skew), Fig 6 (schedule), plus the §4.2 ablations
+//! (shift policies, rounding modes) as measured accuracy tables.
+
+use clstm::fft::fxp::{roundtrip_rms_eps, FxFftPlan, ShiftPolicy};
+use clstm::num::fxp::{Q, Rounding};
+use clstm::report::figures::{fig3, fig4, fig5, fig6};
+use clstm::util::prng::Xoshiro256;
+
+fn main() {
+    for k in [8usize, 16] {
+        fig3(k).print();
+        println!();
+    }
+    fig4().print();
+    println!();
+    fig5(8).print();
+    println!();
+    let (t, _dot) = fig6(8);
+    t.print();
+    let (t16, _) = fig6(16);
+    println!();
+    t16.print();
+
+    // §4.2 ablation: where the 1/k shifts live × rounding mode. The paper's
+    // design (distributed, moved into the DFT) must win or tie everywhere.
+    println!("\n§4.2 shift-policy ablation (FFT roundtrip RMS error, LSBs of Q3.12):");
+    println!(
+        "{:>22} {:>14} {:>14}",
+        "policy", "truncate", "round-nearest"
+    );
+    let q = Q::new(12);
+    let mut rng = Xoshiro256::seed_from_u64(6);
+    for (policy, name) in [
+        (ShiftPolicy::IdftAtEnd, "idft_at_end"),
+        (ShiftPolicy::IdftDistributed, "idft_distributed"),
+        (ShiftPolicy::DftDistributed, "dft_distributed*"),
+    ] {
+        let mut cells = Vec::new();
+        for rounding in [Rounding::Truncate, Rounding::Nearest] {
+            let plan = FxFftPlan::new(16, policy, rounding);
+            let mut rms = 0.0;
+            for _ in 0..400 {
+                let x: Vec<f64> = (0..16).map(|_| rng.uniform(-0.4, 0.4)).collect();
+                rms += roundtrip_rms_eps(&plan, q, &x);
+            }
+            cells.push(rms / 400.0);
+        }
+        println!("{name:>22} {:>14.3} {:>14.3}", cells[0], cells[1]);
+    }
+    println!("(* the paper's final design: shifts distributed into the DFT stages)");
+}

@@ -1,0 +1,77 @@
+//! LSTM step benchmarks: the float and bit-accurate fixed-point engines at
+//! test scale and at a Google-proxy scale, plus activation costs.
+
+use clstm::lstm::activations::{ActivationMode, PwlTable};
+use clstm::lstm::cell_f32::CellF32;
+use clstm::lstm::cell_fxp::CellFx;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::util::bench::{black_box, Bench};
+use clstm::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let mut b = Bench::new("lstm_step");
+
+    for (label, spec) in [
+        ("tiny_k4", LstmSpec::tiny(4)),
+        (
+            "proxy256_k8",
+            LstmSpec {
+                input_dim: 156,
+                hidden_dim: 256,
+                proj_dim: Some(128),
+                ..LstmSpec::google(8)
+            },
+        ),
+        (
+            "proxy256_k16",
+            LstmSpec {
+                input_dim: 156,
+                hidden_dim: 256,
+                proj_dim: Some(128),
+                ..LstmSpec::google(16)
+            },
+        ),
+    ] {
+        let w = LstmWeights::random(&spec, 9);
+        let x: Vec<f32> = (0..spec.input_dim)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect();
+
+        let cell = CellF32::new(&spec, 0, &w.layers[0][0], ActivationMode::Pwl);
+        b.throughput(spec.hidden_dim as u64);
+        b.bench(&format!("f32_engine/{label}"), || {
+            let mut st = cell.zero_state();
+            black_box(cell.step(&x, &mut st))
+        });
+
+        let fx = CellFx::new(&spec, 0, &w.layers[0][0], Q::new(12));
+        let xq = Q::new(12).quantize_slice(&x);
+        b.bench(&format!("fxp_engine/{label}"), || {
+            let mut st = fx.zero_state();
+            black_box(fx.step(&xq, &mut st))
+        });
+    }
+
+    // Activation primitives.
+    let q = Q::new(12);
+    let sig = PwlTable::sigmoid(q);
+    let xs: Vec<f32> = (0..1024).map(|_| rng.uniform(-6.0, 6.0) as f32).collect();
+    let xq: Vec<i16> = q.quantize_slice(&xs);
+    b.throughput(1024);
+    b.bench("activation/sigmoid_exact_1k", || {
+        xs.iter()
+            .map(|&v| clstm::lstm::activations::sigmoid(v))
+            .sum::<f32>()
+    });
+    b.bench("activation/sigmoid_pwl_f32_1k", || {
+        xs.iter().map(|&v| sig.eval(v)).sum::<f32>()
+    });
+    b.bench("activation/sigmoid_pwl_fxp_1k", || {
+        xq.iter()
+            .map(|&v| sig.eval_fx(v, Rounding::Nearest) as i32)
+            .sum::<i32>()
+    });
+}

@@ -1,0 +1,90 @@
+//! Serving-pipeline benchmarks: the L3 hot path end to end — PJRT step
+//! execution, the 3-stage threaded pipeline (throughput and stream-
+//! interleaving effect), and the discrete-event FPGA simulation rate.
+//! Skips PJRT parts gracefully when `make artifacts` has not run.
+
+use clstm::coordinator::pipeline::ClstmPipeline;
+use clstm::fpga_sim::simulate;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::perfmodel::platform::Platform;
+use clstm::runtime::artifact::{ArtifactDir, SpectralBundle};
+use clstm::runtime::client::Runtime;
+use clstm::util::bench::{black_box, Bench};
+use clstm::util::prng::Xoshiro256;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::new("pipeline");
+
+    // FPGA-side event simulation rate (always available).
+    let p = clstm::dse::DesignPoint::evaluate(&LstmSpec::google(8), &Platform::ku060());
+    b.throughput(256);
+    b.bench("event_sim_256frames/google_fft8", || {
+        black_box(simulate(&p.schedule, 256))
+    });
+
+    let Ok(art) = ArtifactDir::open(Path::new("artifacts")) else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
+        return;
+    };
+    let weights = LstmWeights::load(art.golden_weights.as_ref().unwrap()).unwrap();
+    let cfg = art.config("tiny_fft4").unwrap().clone();
+    let rt = Runtime::cpu().unwrap();
+
+    // Single-step PJRT execution (the per-frame floor).
+    let exe = rt.load_hlo_text(&art.path_of(&cfg.step)).unwrap();
+    let bundle = SpectralBundle::from_weights(&weights, 0, 0);
+    let spec = &weights.spec;
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let x: Vec<f32> = (0..spec.input_dim)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
+    let out_pad = spec.pad(spec.out_dim());
+    let (y0, c0) = (vec![0.0f32; out_pad], vec![0.0f32; spec.hidden_dim]);
+    let gd: Vec<i64> = bundle.gates_shape.iter().map(|&d| d as i64).collect();
+    let pd: Vec<i64> = bundle.proj_shape.iter().map(|&d| d as i64).collect();
+    let h = spec.hidden_dim as i64;
+    b.throughput(1);
+    b.bench("pjrt_fused_step/tiny", || {
+        black_box(
+            exe.run_f32(&[
+                (&bundle.gates_re, &gd),
+                (&bundle.gates_im, &gd),
+                (&bundle.bias, &[4, h]),
+                (&bundle.peep, &[3, h]),
+                (&bundle.proj_re, &pd),
+                (&bundle.proj_im, &pd),
+                (&x, &[1, spec.input_dim as i64]),
+                (&y0, &[1, out_pad as i64]),
+                (&c0, &[1, h]),
+            ])
+            .unwrap(),
+        )
+    });
+
+    // Pipeline throughput vs stream count: interleaving must raise FPS
+    // (the paper's frame-interleaving argument, §6.2).
+    let frames_per_utt = 16;
+    for streams in [1usize, 4] {
+        let mut pipe = ClstmPipeline::build(rt.clone(), &art, &cfg, &weights).unwrap();
+        let utts: Vec<Vec<Vec<f32>>> = (0..streams)
+            .map(|_| {
+                (0..frames_per_utt)
+                    .map(|_| {
+                        (0..spec.input_dim)
+                            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let (_, m) = pipe.run_utterances(&utts).unwrap();
+        println!(
+            "pipeline tiny_fft4, {streams} stream(s): {:.0} frames/s (wall {:.1} ms for {} frames)",
+            m.fps(),
+            m.wall.as_secs_f64() * 1e3,
+            m.frames
+        );
+    }
+}

@@ -1,0 +1,69 @@
+//! ESE-baseline benchmarks: pruned CSR sparse mat-vec vs the structured
+//! circulant mat-vec on the same dense matrix — the paper's central
+//! software claim (structured beats unstructured at equal compression)
+//! measured on this CPU, plus the load-imbalance penalty of §1.
+
+use clstm::circulant::compress::project_dense;
+use clstm::circulant::conv::matvec_eq6;
+use clstm::circulant::spectral::SpectralWeights;
+use clstm::ese::csr::CsrMatrix;
+use clstm::ese::prune::{magnitude_prune, pe_imbalance, prune_load_balanced};
+use clstm::util::bench::{black_box, Bench};
+use clstm::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let mut b = Bench::new("sparse_vs_circulant");
+
+    let (rows, cols) = (256usize, 672usize);
+    let dense: Vec<f32> = (0..rows * cols)
+        .map(|_| rng.normal() as f32 * 0.3)
+        .collect();
+    let x: Vec<f32> = (0..cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    b.throughput((rows * cols) as u64);
+
+    // ESE at 4.5:1 (its published ratio).
+    let mut pruned = dense.clone();
+    magnitude_prune(&mut pruned, 1.0 / 4.5);
+    let csr_45 = CsrMatrix::from_dense(&pruned, rows, cols);
+    b.bench("ese_csr/4.5to1", || black_box(csr_45.matvec(&x)));
+
+    // ESE pushed to the circulant ratios for an equal-compression duel.
+    for &k in &[8usize, 16] {
+        let mut p = dense.clone();
+        magnitude_prune(&mut p, 1.0 / k as f64);
+        let csr = CsrMatrix::from_dense(&p, rows, cols);
+        b.bench(&format!("ese_csr/{k}to1"), || black_box(csr.matvec(&x)));
+
+        let m = project_dense(&dense, rows, cols, k);
+        let spec = SpectralWeights::precompute(&m);
+        b.bench(&format!("circulant_eq6/{k}to1"), || {
+            black_box(matvec_eq6(&spec, &x))
+        });
+    }
+
+    // Load-balance study: the §1 "unbalanced computation" critique in
+    // numbers. (Printed, not timed — it is a property of the pruning.)
+    let mut skewed = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let scale = (rng.normal() * 0.5).exp() as f32;
+        for c in 0..cols {
+            skewed[r * cols + c] = rng.normal() as f32 * scale;
+        }
+    }
+    let mut global = skewed.clone();
+    magnitude_prune(&mut global, 1.0 / 4.5);
+    let mut balanced = skewed.clone();
+    prune_load_balanced(&mut balanced, rows, cols, 1.0 / 4.5, 32);
+    println!(
+        "\nPE load imbalance at 4.5:1 over 32 PEs: global prune {:.3}x, load-balanced {:.3}x, circulant 1.000x (structural)",
+        pe_imbalance(&global, rows, cols, 32),
+        pe_imbalance(&balanced, rows, cols, 32)
+    );
+    let csr_g = CsrMatrix::from_dense(&global, rows, cols);
+    println!(
+        "effective parallel cycles (32 PEs): global {}, balanced {}",
+        csr_g.parallel_cycles(32),
+        CsrMatrix::from_dense(&balanced, rows, cols).parallel_cycles(32)
+    );
+}

@@ -1,0 +1,55 @@
+//! Table 1 regeneration: prints the compression/complexity/PER rows (PER
+//! from the Python training sweep when available) and *measures* the
+//! complexity column empirically — per-k circulant mat-vec wall time on the
+//! paper's true layer-1 dimensions, normalized to dense.
+
+use clstm::circulant::conv::matvec_eq6;
+use clstm::circulant::spectral::SpectralWeights;
+use clstm::circulant::BlockCirculant;
+use clstm::lstm::config::LstmSpec;
+use clstm::report::tables::table1;
+use clstm::util::bench::{black_box, Bench};
+use clstm::util::prng::Xoshiro256;
+
+fn main() {
+    // The table itself (arithmetic + trained PER when present).
+    let json = std::fs::read_to_string("artifacts/table1.json").ok();
+    table1(json.as_deref()).print();
+    if json.is_none() {
+        println!("(PER column pending — run `make table1-per`)");
+    }
+
+    // Empirical complexity column: measured eq6 time per k on the true
+    // Google layer-1 gate matrix (1024 × 672-padded), normalized to k=1
+    // dense. Compare against the paper's 1 / 0.50 / 0.50 / 0.39 / 0.27.
+    println!("\nempirical complexity (measured circulant mat-vec time / dense time):");
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let mut b = Bench::new("table1_empirical");
+    let mut dense_ns = 0.0f64;
+    let mut lines = Vec::new();
+    for &k in &[1usize, 2, 4, 8, 16] {
+        let spec = LstmSpec::google(k);
+        let (rows, cols) = (spec.pad(spec.hidden_dim), spec.fused_in_dim(0));
+        let m = BlockCirculant::random_init(rows, cols, k, &mut rng);
+        let sp = SpectralWeights::precompute(&m);
+        let x: Vec<f32> = (0..cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let stats = if k == 1 {
+            // Dense baseline via the direct path (equivalent at k=1).
+            b.bench("k1_dense", || {
+                black_box(clstm::circulant::conv::matvec_direct(&m, &x))
+            })
+            .clone()
+        } else {
+            b.bench(&format!("k{k}_eq6"), || black_box(matvec_eq6(&sp, &x)))
+                .clone()
+        };
+        if k == 1 {
+            dense_ns = stats.mean_ns;
+        }
+        lines.push((k, spec.complexity_vs_dense(), stats.mean_ns / dense_ns));
+    }
+    println!("\n{:>4} {:>18} {:>18}", "k", "paper op-ratio", "measured time ratio");
+    for (k, paper, measured) in lines {
+        println!("{k:>4} {paper:>18.2} {measured:>18.2}");
+    }
+}

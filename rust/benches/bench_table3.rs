@@ -1,0 +1,53 @@
+//! Table 3 regeneration: the full C-LSTM vs ESE comparison through the
+//! analytical models (the same instrument the paper's KU060 column uses),
+//! cross-checked by the discrete-event simulator, plus timing of the
+//! synthesis flow itself (graph → Algorithm 1 → replication → models).
+
+use clstm::dse::DesignPoint;
+use clstm::fpga_sim::simulate;
+use clstm::lstm::config::LstmSpec;
+use clstm::perfmodel::platform::Platform;
+use clstm::report::tables::table3;
+use clstm::util::bench::{black_box, Bench};
+
+fn main() {
+    let (t, ratios) = table3();
+    t.print();
+    println!("\n§6.2/§6.3 headline ratios vs ESE:");
+    for r in &ratios {
+        println!("  {r}");
+    }
+
+    // Cross-check: analytical II vs discrete-event II for every design.
+    println!("\nanalytical-vs-simulated cross-check (Eq 8 vs event sim):");
+    for (label, spec) in [
+        ("google_fft8", LstmSpec::google(8)),
+        ("google_fft16", LstmSpec::google(16)),
+        ("small_fft8", LstmSpec::small(8)),
+        ("small_fft16", LstmSpec::small(16)),
+    ] {
+        let p = DesignPoint::evaluate(&spec, &Platform::ku060());
+        let sim = simulate(&p.schedule, 64);
+        let ok = sim.ii_cycles == p.perf.ii_cycles;
+        println!(
+            "  {label:<14} model {:>5} cycles  sim {:>5} cycles  {}",
+            p.perf.ii_cycles,
+            sim.ii_cycles,
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        assert!(ok, "{label}: simulator disagrees with Eq 8");
+    }
+
+    // The synthesis flow is itself a deliverable: measure its cost.
+    let mut b = Bench::new("table3_flow");
+    b.bench("full_synthesis_flow/google_fft8", || {
+        black_box(DesignPoint::evaluate(
+            &LstmSpec::google(8),
+            &Platform::ku060(),
+        ))
+    });
+    b.bench("event_simulation_64frames/google_fft8", || {
+        let p = DesignPoint::evaluate(&LstmSpec::google(8), &Platform::ku060());
+        black_box(simulate(&p.schedule, 64))
+    });
+}

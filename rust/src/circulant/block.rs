@@ -1,0 +1,203 @@
+//! The block-circulant weight representation (§3.1, Fig 2).
+//!
+//! An `m×n` weight matrix is partitioned into `p×q` blocks (`p = m/k`,
+//! `q = n/k`), each a `k×k` circulant matrix fully described by its
+//! *defining vector* `w_ij` (its first column). Storage drops from
+//! `m·n = p·q·k²` parameters to `p·q·k`.
+//!
+//! **Convention.** We use the circular-convolution convention
+//! `W[r][c] = w[(r − c) mod k]`, under which the block mat-vec is exactly
+//! `W_ij · x_j = w_ij ⊛ x_j` (circular convolution), i.e. Eq 3 of the paper
+//! holds verbatim: `W_ij x_j = IDFT(DFT(w_ij) ⊙ DFT(x_j))`. (Fig 2 of the
+//! paper draws rows as successive right-rotations of the first row, which is
+//! the transpose convention; the two differ only by which vector one calls
+//! "defining", and all downstream math is self-consistent either way.)
+
+use crate::util::prng::Xoshiro256;
+
+/// A block-circulant matrix: `rows × cols`, block size `k`.
+#[derive(Debug, Clone)]
+pub struct BlockCirculant {
+    pub rows: usize,
+    pub cols: usize,
+    pub k: usize,
+    /// `rows / k`.
+    pub p: usize,
+    /// `cols / k`.
+    pub q: usize,
+    /// Defining vectors, block-major: `w[(i*q + j)*k + d]` is element `d` of
+    /// the defining vector of block `(i, j)`.
+    pub w: Vec<f32>,
+}
+
+impl BlockCirculant {
+    /// Create from raw defining vectors (must be `p*q*k` long).
+    pub fn from_vectors(rows: usize, cols: usize, k: usize, w: Vec<f32>) -> Self {
+        assert!(k >= 1, "block size must be ≥ 1");
+        assert_eq!(rows % k, 0, "rows {rows} not divisible by block size {k}");
+        assert_eq!(cols % k, 0, "cols {cols} not divisible by block size {k}");
+        let p = rows / k;
+        let q = cols / k;
+        assert_eq!(w.len(), p * q * k, "defining-vector storage size");
+        Self { rows, cols, k, p, q, w }
+    }
+
+    /// Zero-initialised.
+    pub fn zeros(rows: usize, cols: usize, k: usize) -> Self {
+        let p = rows / k;
+        let q = cols / k;
+        Self::from_vectors(rows, cols, k, vec![0.0; p * q * k])
+    }
+
+    /// Glorot-style random init scaled for circulant structure: each block
+    /// contributes `k` effective fan-in per defining element, so we scale by
+    /// `sqrt(2 / (fan_in + fan_out))` like the Python training code.
+    pub fn random_init(rows: usize, cols: usize, k: usize, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::zeros(rows, cols, k);
+        let std = (2.0 / (rows + cols) as f64).sqrt();
+        for v in m.w.iter_mut() {
+            *v = rng.normal_with(0.0, std) as f32;
+        }
+        m
+    }
+
+    /// Defining vector of block `(i, j)`.
+    #[inline]
+    pub fn block(&self, i: usize, j: usize) -> &[f32] {
+        let off = (i * self.q + j) * self.k;
+        &self.w[off..off + self.k]
+    }
+
+    /// Mutable defining vector of block `(i, j)`.
+    #[inline]
+    pub fn block_mut(&mut self, i: usize, j: usize) -> &mut [f32] {
+        let off = (i * self.q + j) * self.k;
+        &mut self.w[off..off + self.k]
+    }
+
+    /// Number of stored parameters (`p·q·k`).
+    pub fn param_count(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Parameters of the equivalent dense matrix (`rows·cols`).
+    pub fn dense_param_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Compression ratio `k : 1`.
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_param_count() as f64 / self.param_count() as f64
+    }
+
+    /// Materialise the dense equivalent (test/oracle use only — this is the
+    /// `O(k²)` object the representation exists to avoid).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut dense = vec![0.0f32; self.rows * self.cols];
+        for i in 0..self.p {
+            for j in 0..self.q {
+                let w = self.block(i, j);
+                for r in 0..self.k {
+                    for c in 0..self.k {
+                        let val = w[(r + self.k - c) % self.k];
+                        dense[(i * self.k + r) * self.cols + (j * self.k + c)] = val;
+                    }
+                }
+            }
+        }
+        dense
+    }
+
+    /// Element access of the *virtual* dense matrix (row, col).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (i, br) = (r / self.k, r % self.k);
+        let (j, bc) = (c / self.k, c % self.k);
+        self.block(i, j)[(br + self.k - bc) % self.k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storage_and_ratio() {
+        let m = BlockCirculant::zeros(8, 4, 4);
+        assert_eq!((m.p, m.q), (2, 1));
+        assert_eq!(m.param_count(), 8); // the Fig 2 example: 32 → 8
+        assert_eq!(m.dense_param_count(), 32);
+        assert_eq!(m.compression_ratio(), 4.0);
+    }
+
+    #[test]
+    fn dense_blocks_are_circulant() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let m = BlockCirculant::random_init(8, 8, 4, &mut rng);
+        let d = m.to_dense();
+        let k = 4;
+        // Within each block, entry (r, c) depends only on (r - c) mod k.
+        for bi in 0..2 {
+            for bj in 0..2 {
+                for r in 0..k {
+                    for c in 0..k {
+                        let v = d[(bi * k + r) * 8 + bj * k + c];
+                        let v0 = d[(bi * k + (r + 1) % k) * 8 + bj * k + (c + 1) % k];
+                        // Wrap-around rows also circulant.
+                        if (r + 1) < k && (c + 1) < k {
+                            assert_eq!(v, v0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn get_matches_to_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let m = BlockCirculant::random_init(16, 8, 8, &mut rng);
+        let d = m.to_dense();
+        for r in 0..16 {
+            for c in 0..8 {
+                assert_eq!(m.get(r, c), d[r * 8 + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn k1_is_dense() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = BlockCirculant::random_init(4, 6, 1, &mut rng);
+        assert_eq!(m.param_count(), 24);
+        assert_eq!(m.compression_ratio(), 1.0);
+        let d = m.to_dense();
+        for r in 0..4 {
+            for c in 0..6 {
+                assert_eq!(d[r * 6 + c], m.block(r, c)[0]);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn rejects_indivisible_dims() {
+        BlockCirculant::zeros(10, 8, 4);
+    }
+
+    #[test]
+    fn first_column_is_defining_vector() {
+        // W[r][0] = w[r] under our convention.
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let m = BlockCirculant::from_vectors(4, 4, 4, w.clone());
+        let d = m.to_dense();
+        for r in 0..4 {
+            assert_eq!(d[r * 4], w[r]);
+        }
+        // And row 0 is the reversed rotation: W[0][c] = w[(−c) mod k].
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[1], 4.0);
+        assert_eq!(d[2], 3.0);
+        assert_eq!(d[3], 2.0);
+    }
+}

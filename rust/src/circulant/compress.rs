@@ -1,0 +1,195 @@
+//! Dense→block-circulant projection and compression accounting (§3.3).
+//!
+//! Training *from scratch* with circulant structure (the paper's flow, our
+//! `python/compile/train.py`) is the accuracy-preserving path; projecting a
+//! pre-trained dense matrix is the quick path used for engine testing and
+//! for initialising fine-tuning. The projection used here is the Frobenius
+//! least-squares one: each circulant block's defining element `d` is the
+//! mean of the dense entries on its circulant diagonal.
+//!
+//! [`CompressionStats`] produces the parameter/ratio columns of Table 1 and
+//! Table 3, including the ESE-style sparse-with-indices comparison the
+//! paper's footnote 1 discusses.
+
+use super::block::BlockCirculant;
+
+/// Least-squares projection of a dense `rows×cols` matrix (row-major) onto
+/// the block-circulant manifold with block size `k`.
+pub fn project_dense(dense: &[f32], rows: usize, cols: usize, k: usize) -> BlockCirculant {
+    assert_eq!(dense.len(), rows * cols);
+    let mut m = BlockCirculant::zeros(rows, cols, k);
+    let (p, q) = (m.p, m.q);
+    for i in 0..p {
+        for j in 0..q {
+            let blk = m.block_mut(i, j);
+            // Average along each circulant diagonal: entries (r, c) with
+            // (r − c) mod k == d.
+            for d in 0..k {
+                let mut acc = 0.0f64;
+                for c in 0..k {
+                    let r = (c + d) % k;
+                    acc += dense[(i * k + r) * cols + (j * k + c)] as f64;
+                }
+                blk[d] = (acc / k as f64) as f32;
+            }
+        }
+    }
+    m
+}
+
+/// Frobenius-norm relative error of the projection — how far a dense matrix
+/// is from the circulant manifold (0 for already-circulant matrices).
+pub fn projection_error(dense: &[f32], m: &BlockCirculant) -> f64 {
+    let approx = m.to_dense();
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in dense.iter().zip(&approx) {
+        num += ((a - b) as f64).powi(2);
+        den += (*a as f64).powi(2);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Parameter/storage accounting for a set of weight matrices, generating the
+/// compression columns of Tables 1 and 3.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressionStats {
+    /// Dense parameter count.
+    pub dense_params: usize,
+    /// Block-circulant parameter count (`Σ p·q·k`).
+    pub circulant_params: usize,
+    /// Block size.
+    pub k: usize,
+}
+
+impl CompressionStats {
+    pub fn for_matrix(rows: usize, cols: usize, k: usize) -> Self {
+        Self {
+            dense_params: rows * cols,
+            circulant_params: (rows / k) * (cols / k) * k,
+            k,
+        }
+    }
+
+    /// Sum stats over several matrices (must share `k`).
+    pub fn combine(stats: &[CompressionStats]) -> Self {
+        let k = stats.first().map(|s| s.k).unwrap_or(1);
+        Self {
+            dense_params: stats.iter().map(|s| s.dense_params).sum(),
+            circulant_params: stats.iter().map(|s| s.circulant_params).sum(),
+            k,
+        }
+    }
+
+    /// The `k : 1` matrix compression ratio (Table 3 row).
+    pub fn ratio(&self) -> f64 {
+        self.dense_params as f64 / self.circulant_params as f64
+    }
+
+    /// Storage bytes at 16-bit weights (time-domain defining vectors).
+    pub fn bytes_16bit(&self) -> usize {
+        self.circulant_params * 2
+    }
+
+    /// ESE-style sparse storage for the same dense matrix at a given
+    /// density: 16-bit weights + at-least-one index per kept weight
+    /// (footnote 1 of the paper: "there is at least one index per weight
+    /// after compression in ESE").
+    pub fn ese_sparse_bytes(&self, density: f64, index_bits: usize) -> usize {
+        let nnz = (self.dense_params as f64 * density).ceil() as usize;
+        nnz * 2 + (nnz * index_bits).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circulant::conv::matvec_direct;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::assert_allclose;
+
+    #[test]
+    fn projection_of_circulant_is_identity() {
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let m = BlockCirculant::random_init(16, 8, 8, &mut rng);
+        let dense = m.to_dense();
+        let proj = project_dense(&dense, 16, 8, 8);
+        assert_allclose(&proj.w, &m.w, 1e-6, 1e-6, "projection identity");
+        assert!(projection_error(&dense, &proj) < 1e-6);
+    }
+
+    #[test]
+    fn projection_is_least_squares_optimal() {
+        // Perturbing any defining element away from the projection must not
+        // reduce the Frobenius error.
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let dense: Vec<f32> = (0..64).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let proj = project_dense(&dense, 8, 8, 4);
+        let base = projection_error(&dense, &proj);
+        for idx in 0..proj.w.len() {
+            for delta in [0.05f32, -0.05] {
+                let mut tweaked = proj.clone();
+                tweaked.w[idx] += delta;
+                assert!(
+                    projection_error(&dense, &tweaked) >= base - 1e-9,
+                    "idx {idx} delta {delta}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn projection_preserves_matvec_on_average() {
+        // Sanity: projected matvec correlates with dense matvec.
+        let mut rng = Xoshiro256::seed_from_u64(43);
+        let dense: Vec<f32> = (0..32 * 32).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let proj = project_dense(&dense, 32, 32, 8);
+        let x: Vec<f32> = (0..32).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut dense_out = vec![0.0f32; 32];
+        for r in 0..32 {
+            for c in 0..32 {
+                dense_out[r] += dense[r * 32 + c] * x[c];
+            }
+        }
+        let circ_out = matvec_direct(&proj, &x);
+        let dot: f64 = dense_out
+            .iter()
+            .zip(&circ_out)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        assert!(dot > 0.0, "projected output should correlate positively");
+    }
+
+    #[test]
+    fn stats_ratios_match_paper_examples() {
+        // 1024×512 at k=8 → ratio 8; at k=16 → ratio 16.
+        assert_eq!(CompressionStats::for_matrix(1024, 512, 8).ratio(), 8.0);
+        assert_eq!(CompressionStats::for_matrix(1024, 512, 16).ratio(), 16.0);
+        // Fig 2 example: 8×4, k=4 → 32 params → 8.
+        let s = CompressionStats::for_matrix(8, 4, 4);
+        assert_eq!(s.circulant_params, 8);
+        assert_eq!(s.ratio(), 4.0);
+    }
+
+    #[test]
+    fn ese_sparse_storage_larger_than_circulant_at_same_compression() {
+        // ESE at 4.5:1 on the same matrix vs circulant at k=8.
+        let s = CompressionStats::for_matrix(1024, 1536, 8);
+        let ese = s.ese_sparse_bytes(1.0 / 4.5, 13);
+        // Circulant k=8 keeps 1/8 the params with no indices.
+        assert!(s.bytes_16bit() < ese, "{} !< {ese}", s.bytes_16bit());
+    }
+
+    #[test]
+    fn combine_sums() {
+        let a = CompressionStats::for_matrix(8, 8, 4);
+        let b = CompressionStats::for_matrix(16, 8, 4);
+        let c = CompressionStats::combine(&[a, b]);
+        assert_eq!(c.dense_params, 64 + 128);
+        assert_eq!(c.circulant_params, 16 + 32);
+    }
+}

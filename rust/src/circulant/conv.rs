@@ -1,0 +1,332 @@
+//! The circulant convolution operator `a = Wx` (Eq 2–3, Eq 6, Fig 3).
+//!
+//! Three float implementations with identical semantics and different cost
+//! structure — the progression the paper walks through in §4.1:
+//!
+//! 1. [`matvec_direct`] — time-domain `O(p·q·k²)` oracle.
+//! 2. [`matvec_eq3`] — Eq 3 as written: per block-row, per block,
+//!    `IDFT(F(w_ij) ⊙ F(x_j))`, i.e. `q` IDFT calls per block-row and the
+//!    DFT of every `x_j` recomputed `p` times.
+//! 3. [`matvec_eq6`] — the optimized operator: `x_j` spectra computed once,
+//!    weights pre-transformed offline ([`SpectralWeights`]), accumulation in
+//!    the frequency domain, **one** IDFT per block-row (DFT–IDFT
+//!    decoupling), all on conjugate-symmetry-packed spectra.
+//!
+//! [`OpCount`] computes the analytical operation counts of each variant —
+//! this regenerates Fig 3 (and the numbers quoted in §4.1: IDFT calls
+//! `q → 1`, DFT calls `2q → q`, ~half the ⊙ multiplies eliminated).
+
+use super::block::BlockCirculant;
+use super::spectral::SpectralWeights;
+use crate::fft::rfft::{irfft, rfft, spectral_mul_acc, spectrum_len};
+use crate::num::Cplx;
+
+/// Direct time-domain block-circulant mat-vec (the correctness oracle).
+pub fn matvec_direct(m: &BlockCirculant, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), m.cols);
+    let k = m.k;
+    let mut out = vec![0.0f32; m.rows];
+    for i in 0..m.p {
+        for j in 0..m.q {
+            let w = m.block(i, j);
+            let xj = &x[j * k..(j + 1) * k];
+            let oi = &mut out[i * k..(i + 1) * k];
+            // (w ⊛ x)[r] = Σ_c w[(r − c) mod k] · x[c]
+            for r in 0..k {
+                let mut acc = 0.0f32;
+                for c in 0..k {
+                    acc += w[(r + k - c) % k] * xj[c];
+                }
+                oi[r] += acc;
+            }
+        }
+    }
+    out
+}
+
+/// Eq 3 as written: `a_i = Σ_j IDFT(F(w_ij) ⊙ F(x_j))` with every DFT/IDFT
+/// executed inside the loops. Numerically identical to [`matvec_eq6`];
+/// kept as the cost baseline for the Fig 3 comparison and the ablation
+/// bench.
+pub fn matvec_eq3(m: &BlockCirculant, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), m.cols);
+    let k = m.k;
+    let bins = spectrum_len(k);
+    let mut out = vec![0.0f32; m.rows];
+    let mut wbuf = vec![0.0f64; k];
+    for i in 0..m.p {
+        for j in 0..m.q {
+            // DFT of the weight vector — recomputed at runtime (unoptimized).
+            for (d, &v) in m.block(i, j).iter().enumerate() {
+                wbuf[d] = v as f64;
+            }
+            let fw = rfft(&wbuf);
+            // DFT of x_j — recomputed for every block-row (unoptimized).
+            let xj: Vec<f64> = x[j * k..(j + 1) * k].iter().map(|&v| v as f64).collect();
+            let fx = rfft(&xj);
+            // ⊙ then immediate IDFT (no decoupling).
+            let mut prod = vec![Cplx::ZERO; bins];
+            spectral_mul_acc(&mut prod, &fw, &fx);
+            let time = irfft(&prod, k);
+            for (r, &v) in time.iter().enumerate() {
+                out[i * k + r] += v as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Reusable scratch for [`matvec_eq6_into`] (§Perf: the engines call one
+/// circulant conv per gate per frame; per-call allocation of the spectra
+/// and accumulator vectors dominated the profile).
+#[derive(Debug, Clone, Default)]
+pub struct Eq6Scratch {
+    /// Input spectra, `q` blocks × `bins`.
+    fx: Vec<Cplx>,
+    /// Frequency-domain accumulator.
+    acc: Vec<Cplx>,
+    /// Real-input buffer for the shared DFTs.
+    buf: Vec<f64>,
+}
+
+/// Allocation-free Eq 6 (same math as [`matvec_eq6`]; scratch reused).
+pub fn matvec_eq6_into(spec: &SpectralWeights, x: &[f32], out: &mut [f32], s: &mut Eq6Scratch) {
+    use crate::fft::radix2::plan;
+    let k = spec.k;
+    assert_eq!(x.len(), spec.q * k);
+    assert_eq!(out.len(), spec.p * k);
+    let bins = spectrum_len(k);
+    s.fx.resize(spec.q * bins, Cplx::ZERO);
+    s.acc.resize(k, Cplx::ZERO);
+    s.buf.resize(k, 0.0);
+    let p = plan(k);
+
+    // Stage A: DFT of each input block, once (packed by conjugate
+    // symmetry: we run the full k-point plan on the real data, then keep
+    // the low half — avoids the rfft wrapper's allocations).
+    let mut full = vec![Cplx::ZERO; k];
+    for j in 0..spec.q {
+        for (dst, &v) in full.iter_mut().zip(&x[j * k..(j + 1) * k]) {
+            *dst = Cplx::new(v as f64, 0.0);
+        }
+        p.forward(&mut full);
+        s.fx[j * bins..(j + 1) * bins].copy_from_slice(&full[..bins]);
+    }
+
+    // Stage B: frequency-domain MAC + one inverse transform per block-row.
+    for i in 0..spec.p {
+        for a in s.acc.iter_mut() {
+            *a = Cplx::ZERO;
+        }
+        for j in 0..spec.q {
+            let w = spec.block(i, j);
+            let xj = &s.fx[j * bins..(j + 1) * bins];
+            for b in 0..bins {
+                s.acc[b] += w[b] * xj[b];
+            }
+        }
+        // Reconstruct the redundant half, inverse in place.
+        for b in bins..k {
+            s.acc[b] = s.acc[k - b].conj();
+        }
+        p.inverse(&mut s.acc);
+        for r in 0..k {
+            out[i * k + r] = s.acc[r].re as f32;
+        }
+        s.acc.truncate(bins);
+        s.acc.resize(k, Cplx::ZERO);
+    }
+}
+
+/// The optimized operator (Eq 6): precomputed `F(w)`, per-`j` input DFTs
+/// computed once, frequency-domain accumulation, one IDFT per block-row.
+pub fn matvec_eq6(spec: &SpectralWeights, x: &[f32]) -> Vec<f32> {
+    let k = spec.k;
+    assert_eq!(x.len(), spec.q * k);
+    let bins = spectrum_len(k);
+    // Stage A: DFT of each input block, once.
+    let mut fx = Vec::with_capacity(spec.q);
+    let mut buf = vec![0.0f64; k];
+    for j in 0..spec.q {
+        for (d, &v) in x[j * k..(j + 1) * k].iter().enumerate() {
+            buf[d] = v as f64;
+        }
+        fx.push(rfft(&buf));
+    }
+    // Stage B: accumulate in frequency domain; one IDFT per block-row.
+    let mut out = vec![0.0f32; spec.p * k];
+    let mut acc = vec![Cplx::ZERO; bins];
+    for i in 0..spec.p {
+        for a in acc.iter_mut() {
+            *a = Cplx::ZERO;
+        }
+        for j in 0..spec.q {
+            spectral_mul_acc(&mut acc, spec.block(i, j), &fx[j]);
+        }
+        let time = irfft(&acc, k);
+        for (r, &v) in time.iter().enumerate() {
+            out[i * k + r] = v as f32;
+        }
+    }
+    out
+}
+
+/// Analytical operation counts for one circulant convolution `a = Wx`
+/// (`p×q` blocks of size `k`) — regenerates Fig 3 and the §4.1 claims.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCount {
+    /// Runtime DFT operator calls.
+    pub dft_calls: usize,
+    /// Runtime IDFT operator calls.
+    pub idft_calls: usize,
+    /// Real multiplications in the element-wise ⊙ stage.
+    pub ew_mults: usize,
+    /// Real additions in the ⊙ stage and the frequency-domain accumulation.
+    pub ew_adds: usize,
+}
+
+impl OpCount {
+    /// The original implementation (Fig 3b): Eq 3 with runtime weight DFTs,
+    /// per-(i,j) input DFTs, IDFT inside the sum, full (unpacked) spectra.
+    pub fn original(p: usize, q: usize, k: usize) -> Self {
+        OpCount {
+            // Per block-row: q weight DFTs + q input DFTs.
+            dft_calls: p * (2 * q),
+            idft_calls: p * q,
+            // Full complex ⊙: 4 real mults, 2 real adds per bin, k bins.
+            ew_mults: p * q * 4 * k,
+            ew_adds: p * q * (2 * k) + p * (q - 1) * k, // ⊙ adds + time-domain accumulation (k real adds per extra block)
+        }
+    }
+
+    /// The optimized implementation (Fig 3c): precomputed `F(w)` (no weight
+    /// DFTs), shared input DFTs (`q` total), DFT–IDFT decoupling (one IDFT
+    /// per block-row), conjugate-symmetry-packed ⊙ (~half the work).
+    pub fn optimized(p: usize, q: usize, k: usize) -> Self {
+        let bins = spectrum_len(k);
+        // Packed ⊙: interior bins need 4 mults/2 adds; the 2 real bins 1/0.
+        let mults_per_block = 4 * (bins - 2) + 2;
+        let adds_per_block = 2 * (bins - 2);
+        // Frequency-domain accumulation: 2 real adds per bin per extra j.
+        let acc_adds = p * (q - 1) * 2 * bins;
+        OpCount {
+            dft_calls: q,
+            idft_calls: p,
+            ew_mults: p * q * mults_per_block,
+            ew_adds: p * q * adds_per_block + acc_adds,
+        }
+    }
+
+    /// Total operator calls (DFT + IDFT) — the headline series of Fig 3.
+    pub fn transform_calls(&self) -> usize {
+        self.dft_calls + self.idft_calls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::{assert_allclose, forall, gen, no_shrink, Config};
+
+    fn rand_x(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn eq3_matches_direct() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &(m_, n_, k) in &[(8usize, 8usize, 4usize), (16, 8, 8), (32, 16, 16), (4, 4, 1)] {
+            let m = BlockCirculant::random_init(m_, n_, k, &mut rng);
+            let x = rand_x(&mut rng, n_);
+            let a = matvec_direct(&m, &x);
+            let b = matvec_eq3(&m, &x);
+            assert_allclose(&a, &b, 1e-4, 1e-4, "eq3 vs direct");
+        }
+    }
+
+    #[test]
+    fn eq6_matches_direct() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for &(m_, n_, k) in &[(8usize, 8usize, 4usize), (16, 8, 8), (32, 16, 16), (64, 128, 8)] {
+            let m = BlockCirculant::random_init(m_, n_, k, &mut rng);
+            let spec = SpectralWeights::precompute(&m);
+            let x = rand_x(&mut rng, n_);
+            let a = matvec_direct(&m, &x);
+            let b = matvec_eq6(&spec, &x);
+            assert_allclose(&a, &b, 1e-4, 1e-4, "eq6 vs direct");
+        }
+    }
+
+    #[test]
+    fn circulant_matvec_equals_dense_matvec() {
+        // The whole point of §3: Wx through the structure == Wx dense.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = BlockCirculant::random_init(24, 16, 8, &mut rng);
+        let dense = m.to_dense();
+        let x = rand_x(&mut rng, 16);
+        let mut expect = vec![0.0f32; 24];
+        for r in 0..24 {
+            for c in 0..16 {
+                expect[r] += dense[r * 16 + c] * x[c];
+            }
+        }
+        let got = matvec_direct(&m, &x);
+        assert_allclose(&got, &expect, 1e-4, 1e-4, "structure vs dense");
+    }
+
+    #[test]
+    fn property_eq6_equals_direct() {
+        forall(
+            Config::default().cases(48),
+            |rng| {
+                let k = gen::pow2(rng, 0, 4);
+                let p = gen::usize_in(rng, 1..=4);
+                let q = gen::usize_in(rng, 1..=4);
+                let m = BlockCirculant::random_init(p * k, q * k, k, rng);
+                let x = rand_x(rng, q * k);
+                (m, x)
+            },
+            no_shrink,
+            |(m, x)| {
+                let spec = SpectralWeights::precompute(m);
+                let a = matvec_direct(m, x);
+                let b = matvec_eq6(&spec, x);
+                for i in 0..a.len() {
+                    if (a[i] - b[i]).abs() > 1e-3 {
+                        return Err(format!("idx {i}: {} vs {}", a[i], b[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn op_counts_reproduce_section_4_1_claims() {
+        let (p, q, k) = (128, 64, 8);
+        let orig = OpCount::original(p, q, k);
+        let opt = OpCount::optimized(p, q, k);
+        // "the number of IDFT operator calls ... is reduced from q to 1"
+        // (per block-row): p·q → p.
+        assert_eq!(orig.idft_calls, p * q);
+        assert_eq!(opt.idft_calls, p);
+        // "reduces the number of [DFT] calls from 2qk to qk" per circulant
+        // convolution — in per-call terms, 2q per block-row → q shared total.
+        assert_eq!(orig.dft_calls, 2 * p * q);
+        assert_eq!(opt.dft_calls, q);
+        // "about half of the multiplications ... could be eliminated".
+        let ratio = opt.ew_mults as f64 / orig.ew_mults as f64;
+        assert!(
+            (0.40..=0.60).contains(&ratio),
+            "⊙ mult ratio {ratio} not ≈ half"
+        );
+    }
+
+    #[test]
+    fn op_count_k1_degenerates() {
+        let c = OpCount::optimized(4, 4, 1);
+        assert_eq!(c.idft_calls, 4);
+        assert!(c.ew_mults > 0);
+    }
+}

@@ -1,0 +1,290 @@
+//! Bit-accurate 16-bit fixed-point circulant convolution (§4.1 + §4.2).
+//!
+//! This is the exact datapath the generated FPGA design executes, modelled
+//! operation-for-operation:
+//!
+//! ```text
+//!  x_j  ──quantise──►  FFT (DftDistributed: 1-bit shift per stage)  ──┐
+//!                                                                     ⊙  (16-bit products,
+//!  F(w_ij)  (BRAM-resident, quantised offline) ───────────────────────┘   narrowing shift)
+//!                                                                     │
+//!                                 16-bit saturating Σ_j  (Eq 6)  ◄────┘
+//!                                                                     │
+//!                              IFFT (no shifts — scaling already done)┘
+//! ```
+//!
+//! With the forward transform computing `DFT(x)/k`, the unshifted inverse
+//! returns exactly `IDFT(F(w) ⊙ DFT(x))` — the circulant convolution — while
+//! every intermediate stays in 16 bits (§4.2's overflow argument).
+
+use super::spectral::SpectralWeightsFx;
+use crate::fft::fxp::{FxFftPlan, ShiftPolicy};
+use crate::num::cplx::CplxFx;
+use crate::num::fxp::{narrow, Q, Rounding};
+
+/// Reusable scratch buffers for [`FxConvPlan::matvec_into`].
+#[derive(Debug, Clone)]
+pub struct FxConvScratch {
+    /// Input spectra, `q` blocks of `k` bins each.
+    fx: Vec<CplxFx>,
+    /// Packed frequency-domain accumulator (k bins; only 0..=k/2 used).
+    acc: Vec<CplxFx>,
+    /// Inverse-transform working buffer.
+    time: Vec<CplxFx>,
+}
+
+impl FxConvScratch {
+    pub fn new(q: usize, k: usize) -> Self {
+        Self {
+            fx: vec![CplxFx::ZERO; q * k],
+            acc: vec![CplxFx::ZERO; k],
+            time: vec![CplxFx::ZERO; k],
+        }
+    }
+
+    /// Scratch sized for a plan.
+    pub fn for_plan(plan: &FxConvPlan) -> Self {
+        Self::new(plan.weights.q, plan.weights.k)
+    }
+}
+
+/// A ready-to-run fixed-point circulant convolution for one weight matrix.
+#[derive(Debug, Clone)]
+pub struct FxConvPlan {
+    /// Data (input/activation/output) Q-format.
+    pub q_data: Q,
+    /// Quantised spectral weights (carry their own format).
+    pub weights: SpectralWeightsFx,
+    pub fft: FxFftPlan,
+    pub rounding: Rounding,
+}
+
+impl FxConvPlan {
+    /// Build with the paper's final shift policy (shifts in the DFT).
+    pub fn new(weights: SpectralWeightsFx, q_data: Q, rounding: Rounding) -> Self {
+        let fft = FxFftPlan::new(weights.k, ShiftPolicy::DftDistributed, rounding);
+        Self {
+            q_data,
+            weights,
+            fft,
+            rounding,
+        }
+    }
+
+    /// Build with an explicit shift policy (for the §4.2 ablation).
+    pub fn with_policy(
+        weights: SpectralWeightsFx,
+        q_data: Q,
+        rounding: Rounding,
+        policy: ShiftPolicy,
+    ) -> Self {
+        let fft = FxFftPlan::new(weights.k, policy, rounding);
+        Self {
+            q_data,
+            weights,
+            fft,
+            rounding,
+        }
+    }
+
+    /// `a = Wx` over raw fixed-point input (length `q·k`), producing raw
+    /// fixed-point output (length `p·k`), every intermediate bit-accurate.
+    pub fn matvec(&self, x: &[i16]) -> Vec<i16> {
+        let p = self.weights.p;
+        let k = self.weights.k;
+        let mut out = vec![0i16; p * k];
+        let mut scratch = FxConvScratch::new(self.weights.q, k);
+        self.matvec_into(x, &mut out, &mut scratch);
+        out
+    }
+
+    /// Allocation-free hot path: all buffers live in `scratch` (§Perf —
+    /// the engine calls this once per gate per frame; per-call Vec churn
+    /// was the top profile entry before this split).
+    pub fn matvec_into(&self, x: &[i16], out: &mut [i16], scratch: &mut FxConvScratch) {
+        let k = self.weights.k;
+        let p = self.weights.p;
+        let q = self.weights.q;
+        assert_eq!(x.len(), q * k);
+        assert_eq!(out.len(), p * k);
+        debug_assert!(scratch.fx.len() == q * k && scratch.acc.len() == k);
+        let wfrac = self.weights.qfmt.frac;
+        let half = k / 2;
+
+        // Stage A: forward FFT of each input block (computes DFT/k under
+        // DftDistributed; unscaled otherwise — the IDFT schedule compensates).
+        for j in 0..q {
+            let buf = &mut scratch.fx[j * k..(j + 1) * k];
+            for (b, &v) in buf.iter_mut().zip(&x[j * k..(j + 1) * k]) {
+                *b = CplxFx::new(v, 0);
+            }
+            self.fft.forward(buf);
+        }
+
+        // Stage B: frequency-domain multiply-accumulate per block-row.
+        // Products are narrowed back to the data format (one DSP output
+        // shifter) and accumulated in saturating 16-bit adders. Only the
+        // packed bins 0..=k/2 are computed (conjugate symmetry): the
+        // inverse transform input is reconstructed from them — the same
+        // halving the FPGA datapath exploits (§4.1).
+        let acc = &mut scratch.acc;
+        let time = &mut scratch.time;
+        for i in 0..p {
+            acc.fill(CplxFx::ZERO);
+            for j in 0..q {
+                let w = self.weights.block(i, j);
+                let xj = &scratch.fx[j * k..(j + 1) * k];
+                for b in 0..=half {
+                    let (wide_re, wide_im) = xj[b].mul_wide(w[b]);
+                    let prod = CplxFx::new(
+                        narrow(wide_re, wfrac, self.rounding),
+                        narrow(wide_im, wfrac, self.rounding),
+                    );
+                    acc[b] = acc[b].add_sat(prod);
+                }
+            }
+            // Stage C: one inverse FFT per block-row (Eq 6 decoupling),
+            // upper bins mirrored from the packed accumulator.
+            time[..=half].copy_from_slice(&acc[..=half]);
+            for b in half + 1..k {
+                time[b] = acc[k - b].conj();
+            }
+            self.fft.inverse(time);
+            for r in 0..k {
+                out[i * k + r] = time[r].re;
+            }
+        }
+    }
+
+    /// Convenience: float in, float out (quantise → run → dequantise).
+    pub fn matvec_f32(&self, x: &[f32]) -> Vec<f32> {
+        let xq = self.q_data.quantize_slice(x);
+        self.q_data.dequantize_slice(&self.matvec(&xq))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circulant::block::BlockCirculant;
+    use crate::circulant::conv::matvec_direct;
+    use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::{forall, gen, no_shrink, Config};
+
+    const QD: Q = Q::new(12);
+
+    fn make_plan(
+        rows: usize,
+        cols: usize,
+        k: usize,
+        rng: &mut Xoshiro256,
+    ) -> (BlockCirculant, FxConvPlan) {
+        let mut m = BlockCirculant::random_init(rows, cols, k, rng);
+        // Keep trained-scale weights: small, like a converged LSTM.
+        for v in m.w.iter_mut() {
+            *v *= 0.5;
+        }
+        let spec = SpectralWeights::precompute(&m);
+        let fx = SpectralWeightsFx::quantize_auto(&spec);
+        let plan = FxConvPlan::new(fx, QD, Rounding::Nearest);
+        (m, plan)
+    }
+
+    #[test]
+    fn fxp_matches_float_within_lsb_budget() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        for &(rows, cols, k) in &[(16usize, 16usize, 8usize), (32, 16, 16), (8, 8, 4)] {
+            let (m, plan) = make_plan(rows, cols, k, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let float = matvec_direct(&m, &x);
+            let fxp = plan.matvec_f32(&x);
+            // Error budget: forward-FFT rounding (log2 k stages) + product
+            // rounding per j + output LSBs. Empirically well under 32 LSB
+            // for these sizes; the assert documents the contract.
+            let budget = 32.0 * QD.eps() as f32 * (cols as f32 / 16.0).max(1.0);
+            for i in 0..float.len() {
+                assert!(
+                    (float[i] - fxp[i]).abs() < budget,
+                    "({rows}x{cols} k={k}) idx {i}: float {} fxp {}",
+                    float[i],
+                    fxp[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        let (_, plan) = make_plan(16, 16, 8, &mut rng);
+        let x: Vec<i16> = (0..16).map(|i| (i as i16) * 100).collect();
+        assert_eq!(plan.matvec(&x), plan.matvec(&x));
+    }
+
+    #[test]
+    fn property_error_scales_with_input_magnitude() {
+        forall(
+            Config::default().cases(24),
+            |rng| {
+                let k = gen::pow2(rng, 2, 4);
+                let p = gen::usize_in(rng, 1..=3);
+                let q = gen::usize_in(rng, 1..=3);
+                let seed = rng.next_u64();
+                (k, p, q, seed)
+            },
+            no_shrink,
+            |&(k, p, q, seed)| {
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                let (m, plan) = make_plan(p * k, q * k, k, &mut rng);
+                let x: Vec<f32> =
+                    (0..q * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                let float = matvec_direct(&m, &x);
+                let fxp = plan.matvec_f32(&x);
+                let rms = {
+                    let se: f32 = float
+                        .iter()
+                        .zip(&fxp)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    (se / float.len() as f32).sqrt()
+                };
+                if rms < 64.0 * QD.eps() as f32 {
+                    Ok(())
+                } else {
+                    Err(format!("rms {rms} too large (k={k} p={p} q={q})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shift_policy_ablation_dft_distributed_avoids_overflow() {
+        // Large-magnitude inputs: the policy with forward shifts stays
+        // accurate; IdftAtEnd saturates in the forward transform and the
+        // error explodes. This is the §4.2 overflow argument as a test.
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let k = 16;
+        let mut m = BlockCirculant::random_init(k, k, k, &mut rng);
+        for v in m.w.iter_mut() {
+            *v *= 0.3;
+        }
+        let spec = SpectralWeights::precompute(&m);
+        let x: Vec<f32> = (0..k).map(|_| rng.uniform(-6.0, 6.0) as f32).collect();
+        let float = matvec_direct(&m, &x);
+
+        let rms = |policy| {
+            let fxw = SpectralWeightsFx::quantize_auto(&spec);
+            let plan = FxConvPlan::with_policy(fxw, QD, Rounding::Nearest, policy);
+            let got = plan.matvec_f32(&x);
+            let se: f32 = float.iter().zip(&got).map(|(a, b)| (a - b) * (a - b)).sum();
+            (se / float.len() as f32).sqrt()
+        };
+        let good = rms(ShiftPolicy::DftDistributed);
+        let bad = rms(ShiftPolicy::IdftAtEnd);
+        assert!(
+            good < bad,
+            "DftDistributed rms {good} should beat IdftAtEnd rms {bad} on hot inputs"
+        );
+    }
+}

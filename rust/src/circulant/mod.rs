@@ -1,0 +1,27 @@
+//! Block-circulant matrices and the circulant convolution operator (§3, §4.1).
+//!
+//! - [`block`] — the [`BlockCirculant`] weight representation: an `m×n`
+//!   matrix stored as `p×q` circulant blocks of size `k`, one length-`k`
+//!   vector per block (`O(k²) → O(k)` storage, Fig 2).
+//! - [`conv`] — the circulant convolution `a = Wx` in three forms: direct
+//!   time-domain (oracle), FFT-based per Eq 3 (IDFT inside the sum), and
+//!   the optimized Eq 6 form (DFT–IDFT decoupling + precomputed spectral
+//!   weights + conjugate-symmetry packing), with analytical op counts that
+//!   regenerate Fig 3.
+//! - [`spectral`] — precomputed packed spectra `F(w_ij)` in float and
+//!   16-bit fixed point (the "BRAM-resident" weights of §4.1).
+//! - [`fxp_conv`] — the full bit-accurate fixed-point circulant convolution
+//!   datapath (§4.2 shift policies, saturating 16-bit accumulation).
+//! - [`compress`] — dense→block-circulant projection and compression-ratio
+//!   accounting (Table 1 / Table 3 columns).
+
+pub mod block;
+pub mod compress;
+pub mod conv;
+pub mod fxp_conv;
+pub mod spectral;
+
+pub use block::BlockCirculant;
+pub use compress::{project_dense, CompressionStats};
+pub use conv::{matvec_direct, matvec_eq3, matvec_eq6, OpCount};
+pub use spectral::{SpectralWeights, SpectralWeightsFx};

@@ -1,0 +1,194 @@
+//! Precomputed spectral weights `F(w_ij)` (§4.1).
+//!
+//! After training, the defining vectors are fixed, so their DFTs are
+//! computed once and stored — on the FPGA in BRAM, here in a flat buffer.
+//! Conjugate symmetry of real-input DFTs lets us keep only `k/2 + 1` bins
+//! per block ("only negligible BRAM buffer overhead", §4.1).
+//!
+//! Two variants:
+//! - [`SpectralWeights`] — f64 bins, used by the float engine and as the
+//!   quantisation reference.
+//! - [`SpectralWeightsFx`] — 16-bit fixed-point bins with a per-matrix
+//!   Q-format chosen by range analysis, used by the bit-accurate engine.
+
+use super::block::BlockCirculant;
+use crate::fft::rfft::{rfft, spectrum_len};
+use crate::num::cplx::CplxFx;
+use crate::num::fxp::Q;
+use crate::num::Cplx;
+
+/// Packed spectra of all blocks of a [`BlockCirculant`], f64 precision.
+#[derive(Debug, Clone)]
+pub struct SpectralWeights {
+    pub p: usize,
+    pub q: usize,
+    pub k: usize,
+    /// `k/2 + 1` bins per block, block-major like the defining vectors.
+    pub bins: Vec<Cplx>,
+    bins_per_block: usize,
+}
+
+impl SpectralWeights {
+    /// Precompute from a block-circulant matrix.
+    pub fn precompute(m: &BlockCirculant) -> Self {
+        let bpb = spectrum_len(m.k);
+        let mut bins = Vec::with_capacity(m.p * m.q * bpb);
+        let mut scratch = vec![0.0f64; m.k];
+        for i in 0..m.p {
+            for j in 0..m.q {
+                for (d, &v) in m.block(i, j).iter().enumerate() {
+                    scratch[d] = v as f64;
+                }
+                bins.extend(rfft(&scratch));
+            }
+        }
+        Self {
+            p: m.p,
+            q: m.q,
+            k: m.k,
+            bins,
+            bins_per_block: bpb,
+        }
+    }
+
+    /// Packed spectrum of block `(i, j)`.
+    #[inline]
+    pub fn block(&self, i: usize, j: usize) -> &[Cplx] {
+        let off = (i * self.q + j) * self.bins_per_block;
+        &self.bins[off..off + self.bins_per_block]
+    }
+
+    /// Largest |re|/|im| over all bins — drives fixed-point format choice.
+    pub fn max_abs(&self) -> f64 {
+        self.bins
+            .iter()
+            .map(|c| c.re.abs().max(c.im.abs()))
+            .fold(0.0, f64::max)
+    }
+
+    /// Stored f64 count (for footprint accounting: 2 reals per bin, but bins
+    /// 0 and k/2 are purely real — we store them as complex for simplicity
+    /// and account for the ideal packing separately).
+    pub fn stored_reals_ideal(&self) -> usize {
+        // Per block: 2*(k/2+1) − 2 = k reals exactly (bins 0 and k/2 real).
+        self.p * self.q * self.k.max(1)
+    }
+}
+
+/// Fixed-point packed spectral weights.
+#[derive(Debug, Clone)]
+pub struct SpectralWeightsFx {
+    pub p: usize,
+    pub q: usize,
+    pub k: usize,
+    /// Q-format of the stored bins.
+    pub qfmt: Q,
+    pub bins: Vec<CplxFx>,
+    bins_per_block: usize,
+}
+
+impl SpectralWeightsFx {
+    /// Quantise from the f64 spectra with an explicit format.
+    pub fn quantize(spec: &SpectralWeights, qfmt: Q) -> Self {
+        let bins = spec
+            .bins
+            .iter()
+            .map(|c| CplxFx::new(qfmt.from_f64(c.re), qfmt.from_f64(c.im)))
+            .collect();
+        Self {
+            p: spec.p,
+            q: spec.q,
+            k: spec.k,
+            qfmt,
+            bins,
+            bins_per_block: spec.bins_per_block,
+        }
+    }
+
+    /// Choose the Q-format automatically: the most fractional bits that
+    /// still fit `max_abs` without saturation (one spare bit of headroom).
+    pub fn auto_format(spec: &SpectralWeights) -> Q {
+        let ma = spec.max_abs().max(1e-9);
+        // Need 2^(15 - frac) > ma  ⇒  frac < 15 − log2(ma).
+        let int_bits = ma.log2().ceil().max(0.0) as u32 + 1; // +1 headroom
+        Q::new(15u32.saturating_sub(int_bits).min(14))
+    }
+
+    /// Quantise with the automatic format.
+    pub fn quantize_auto(spec: &SpectralWeights) -> Self {
+        Self::quantize(spec, Self::auto_format(spec))
+    }
+
+    /// Packed spectrum of block `(i, j)`.
+    #[inline]
+    pub fn block(&self, i: usize, j: usize) -> &[CplxFx] {
+        let off = (i * self.q + j) * self.bins_per_block;
+        &self.bins[off..off + self.bins_per_block]
+    }
+
+    /// BRAM footprint in bytes under ideal packing (k reals × 2 bytes).
+    pub fn footprint_bytes(&self) -> usize {
+        self.p * self.q * self.k * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn spectra_match_per_block_rfft() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let m = BlockCirculant::random_init(16, 8, 8, &mut rng);
+        let s = SpectralWeights::precompute(&m);
+        assert_eq!(s.bins.len(), m.p * m.q * (8 / 2 + 1));
+        let w01: Vec<f64> = m.block(0, 0).iter().map(|&v| v as f64).collect();
+        let direct = rfft(&w01);
+        for (a, b) in s.block(0, 0).iter().zip(&direct) {
+            assert!((*a - *b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn quantisation_error_bounded_by_format() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let m = BlockCirculant::random_init(32, 32, 16, &mut rng);
+        let s = SpectralWeights::precompute(&m);
+        let fx = SpectralWeightsFx::quantize_auto(&s);
+        let q = fx.qfmt;
+        for (c, cf) in s.bins.iter().zip(&fx.bins) {
+            assert!((q.to_f64(cf.re) - c.re).abs() <= q.eps() / 2.0 + 1e-12);
+            assert!((q.to_f64(cf.im) - c.im).abs() <= q.eps() / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn auto_format_avoids_saturation() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        // Big blocks → spectra with magnitude ≈ Σ|w| up to ~k·max|w|.
+        let m = BlockCirculant::random_init(64, 64, 16, &mut rng);
+        let s = SpectralWeights::precompute(&m);
+        let fx = SpectralWeightsFx::quantize_auto(&s);
+        let q = fx.qfmt;
+        for cf in &fx.bins {
+            assert_ne!(cf.re, i16::MAX);
+            assert_ne!(cf.re, i16::MIN);
+        }
+        // And the format is not wastefully conservative: max|bin| uses at
+        // least a quarter of the representable range.
+        assert!(s.max_abs() >= q.max_val() / 8.0);
+    }
+
+    #[test]
+    fn footprint_is_linear_in_k_not_k_squared() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let m8 = BlockCirculant::random_init(1024, 512, 8, &mut rng);
+        let m16 = BlockCirculant::random_init(1024, 512, 16, &mut rng);
+        let f8 = SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m8));
+        let f16 = SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m16));
+        // Same dense matrix; k=16 stores half as many parameters → half the
+        // bytes of k=8.
+        assert_eq!(f8.footprint_bytes(), 2 * f16.footprint_bytes());
+    }
+}

@@ -1,0 +1,31 @@
+//! Figure subcommands.
+
+use anyhow::Result;
+use clstm::report::figures as rf;
+use clstm::util::cli::Cli;
+
+pub fn fig3(cli: &Cli) -> Result<()> {
+    rf::fig3(cli.get_usize("k")).print();
+    Ok(())
+}
+
+pub fn fig4(_cli: &Cli) -> Result<()> {
+    rf::fig4().print();
+    Ok(())
+}
+
+pub fn fig5(cli: &Cli) -> Result<()> {
+    rf::fig5(cli.get_usize("k")).print();
+    Ok(())
+}
+
+pub fn fig6(cli: &Cli) -> Result<()> {
+    let (t, dot) = rf::fig6(cli.get_usize("k"));
+    t.print();
+    let out = cli.get_str("out");
+    if !out.is_empty() {
+        std::fs::write(&out, dot)?;
+        println!("(wrote operator graph dot to {out})");
+    }
+    Ok(())
+}

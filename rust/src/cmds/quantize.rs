@@ -1,0 +1,109 @@
+//! `clstm quantize` — the §4.2 bit-accurate quantisation study: range
+//! analysis, Q-format recommendation, float-vs-fixed engine comparison, and
+//! the shift-policy ablation.
+
+use anyhow::Result;
+use clstm::data::per::phone_error_rate;
+use clstm::data::synth::{SynthConfig, SynthTimit};
+use clstm::lstm::activations::ActivationMode;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::sequence::{StackF32, StackFx};
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::Q;
+use clstm::quant::range::RangeTracker;
+use clstm::util::cli::Cli;
+
+pub fn quantize_cmd(cli: &Cli) -> Result<()> {
+    // Scaled model so the full study runs in seconds.
+    let k = cli.get_usize("k");
+    let spec = LstmSpec {
+        hidden_dim: 64,
+        proj_dim: Some(32),
+        input_dim: 24,
+        num_classes: 12,
+        ..LstmSpec::tiny(k.max(2))
+    };
+    let weights = LstmWeights::random(&spec, cli.get_u64("seed"));
+    let synth = SynthTimit::new(SynthConfig {
+        n_phones: spec.num_classes,
+        base_dim: spec.input_dim / 3 - 1,
+        mean_frames: 50,
+        ..SynthConfig::tiny()
+    });
+    let utts = synth.batch(1, 8);
+    let frames: Vec<Vec<Vec<f32>>> = utts
+        .iter()
+        .map(|u| {
+            u.frames
+                .iter()
+                .map(|f| {
+                    let mut v = f.clone();
+                    v.truncate(spec.input_dim);
+                    v.resize(spec.input_dim, 0.0);
+                    v
+                })
+                .collect()
+        })
+        .collect();
+
+    // Range analysis over the float engine's tensors.
+    let float = StackF32::new(&weights, ActivationMode::Pwl);
+    let mut tracker = RangeTracker::new();
+    for f in &frames {
+        for frame in f {
+            tracker.observe("input", frame);
+        }
+        for out in float.run(f) {
+            tracker.observe("output_y", &out);
+        }
+    }
+    let report = tracker.report(1);
+    println!("range analysis (§4.2):\n{}", report.to_table());
+    let q = report.datapath_format();
+    println!("selected datapath format: Q{}.{}", 15 - q.frac, q.frac);
+
+    // Accuracy: float vs bit-accurate 16-bit engine, end to end.
+    let refs: Vec<Vec<usize>> = utts.iter().map(|u| u.phone_seq()).collect();
+    let float_hyps: Vec<Vec<usize>> = frames.iter().map(|f| float.decode(f)).collect();
+    let fx = StackFx::new(&weights, q);
+    let fx_hyps: Vec<Vec<usize>> = frames.iter().map(|f| fx.decode(f)).collect();
+    let per_f = phone_error_rate(&float_hyps, &refs);
+    let per_x = phone_error_rate(&fx_hyps, &refs);
+    println!("\nPER float engine:      {per_f:.2}%");
+    println!("PER 16-bit fxp engine: {per_x:.2}%  (degradation {:+.2})", per_x - per_f);
+    println!("(paper §4.2: \"16-bit fixed point is accurate enough\")");
+
+    // Agreement between the engines framewise.
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (a, b) in float_hyps.iter().zip(&fx_hyps) {
+        agree += a.iter().zip(b).filter(|(x, y)| x == y).count();
+        total += a.len();
+    }
+    println!(
+        "framewise decision agreement: {:.2}%",
+        100.0 * agree as f64 / total as f64
+    );
+
+    // Shift-policy ablation (the Fig/§4.2 argument).
+    use clstm::fft::fxp::{roundtrip_rms_eps, FxFftPlan, ShiftPolicy};
+    use clstm::util::prng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let n = 16;
+    println!("\nFFT shift-policy ablation (n={n}, Q{}.{}, truncating shifts):", 15 - 12, 12);
+    for (policy, label) in [
+        (ShiftPolicy::IdftAtEnd, "shift log2(k) bits at IDFT end"),
+        (ShiftPolicy::IdftDistributed, "1 bit per IDFT stage"),
+        (ShiftPolicy::DftDistributed, "1 bit per DFT stage (paper)"),
+    ] {
+        let plan = FxFftPlan::new(n, policy, clstm::num::fxp::Rounding::Truncate);
+        let mut rms = 0.0;
+        let qd = Q::new(12);
+        for _ in 0..200 {
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform(-0.4, 0.4)).collect();
+            rms += roundtrip_rms_eps(&plan, qd, &x);
+        }
+        println!("  {label:<36} roundtrip rms {:.2} LSB", rms / 200.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! `clstm serve` — serve SynthTIMIT through the PJRT pipeline.
+
+use anyhow::{Context, Result};
+use clstm::coordinator::server::serve_workload;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::runtime::artifact::ArtifactDir;
+use clstm::runtime::client::Runtime;
+use clstm::util::cli::Cli;
+use std::path::Path;
+
+pub fn serve_cmd(cli: &Cli) -> Result<()> {
+    let art_dir = cli.get_str("artifacts");
+    let art = ArtifactDir::open(Path::new(&art_dir))
+        .with_context(|| format!("opening artifacts in {art_dir} (run `make artifacts`)"))?;
+
+    // Serve the tiny config by default (its golden weights ship with the
+    // artifacts); `--model google --k 8` serves google_fft8 with random
+    // weights (throughput demo).
+    let model = cli.get_str("model");
+    let k = cli.get_usize("k");
+    let (config_name, weights) = if model == "tiny" || cli.positional().len() < 2 {
+        let w = LstmWeights::load(
+            &art.golden_weights
+                .clone()
+                .context("golden weights missing from artifacts")?,
+        )?;
+        ("tiny_fft4".to_string(), w)
+    } else {
+        let spec = match model.as_str() {
+            "small" => LstmSpec::small(k),
+            _ => LstmSpec::google(k),
+        };
+        (
+            format!("{model}_fft{k}"),
+            LstmWeights::random(&spec, cli.get_u64("seed")),
+        )
+    };
+
+    let rt = Runtime::cpu()?;
+    println!(
+        "serving {} on PJRT ({}) with {} utterances / {} streams ...",
+        config_name,
+        rt.platform(),
+        cli.get_usize("utts"),
+        cli.get_usize("streams")
+    );
+    let report = serve_workload(
+        rt,
+        &art,
+        &config_name,
+        &weights,
+        cli.get_usize("utts"),
+        cli.get_usize("streams"),
+    )?;
+    println!("  {}", report.metrics.summary());
+    println!("  workload PER: {:.2}%", report.per);
+    Ok(())
+}

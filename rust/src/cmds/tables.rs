@@ -1,0 +1,146 @@
+//! Table/flow subcommands: table1, table3, schedule, dse, codegen, simulate.
+
+use anyhow::{Context, Result};
+use clstm::dse::explore;
+use clstm::fpga_sim::simulate;
+use clstm::graph::builder::build_layer_graph;
+use clstm::hlscodegen::generate_design;
+use clstm::lstm::config::LstmSpec;
+use clstm::perfmodel::platform::Platform;
+use clstm::report::tables as rt;
+use clstm::schedule::algorithm1::schedule;
+use clstm::schedule::replication::enumerate_replication;
+use clstm::util::cli::Cli;
+
+pub fn spec_from(cli: &Cli) -> LstmSpec {
+    let k = cli.get_usize("k");
+    match cli.get_str("model").as_str() {
+        "small" => LstmSpec::small(k),
+        "tiny" => LstmSpec::tiny(k),
+        _ => LstmSpec::google(k),
+    }
+}
+
+pub fn platform_from(cli: &Cli) -> Platform {
+    match cli.get_str("platform").as_str() {
+        "7v3" | "adm7v3" => Platform::adm7v3(),
+        _ => Platform::ku060(),
+    }
+}
+
+pub fn table1(cli: &Cli) -> Result<()> {
+    let path = std::path::Path::new(&cli.get_str("artifacts")).join("table1.json");
+    let json = std::fs::read_to_string(&path).ok();
+    rt::table1(json.as_deref()).print();
+    if json.is_none() {
+        println!(
+            "\n(PER column pending — run `make table1-per` to train the sweep; \
+             looked for {})",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+pub fn table3(_cli: &Cli) -> Result<()> {
+    let (t, ratios) = rt::table3();
+    t.print();
+    println!("\n§6.2/§6.3 headline ratios vs ESE (7V3, KU060-bounded):");
+    for r in ratios {
+        println!("  {r}");
+    }
+    Ok(())
+}
+
+pub fn schedule_cmd(cli: &Cli) -> Result<()> {
+    let spec = spec_from(cli);
+    let plat = platform_from(cli);
+    let g = build_layer_graph(&spec, 0);
+    let s = enumerate_replication(schedule(&g, &plat.budget()), &plat.budget());
+    println!(
+        "Algorithm 1 on {} (k={}) for {}:\n{}",
+        spec.kind.as_str(),
+        spec.k,
+        plat.name,
+        s.describe()
+    );
+    let res = s.resources();
+    let u = plat.utilisation(&res);
+    println!(
+        "resources: DSP {:.1}%  BRAM {:.1}%  LUT {:.1}%  FF {:.1}%",
+        u.dsp, u.bram, u.lut, u.ff
+    );
+    Ok(())
+}
+
+pub fn dse_cmd(cli: &Cli) -> Result<()> {
+    let plat = platform_from(cli);
+    let base = spec_from(cli);
+    let pts = explore(&base, &plat, &[2, 4, 8, 16]);
+    println!("design-space exploration ({}, {}):", base.kind.as_str(), plat.name);
+    println!(
+        "{:>4} {:>12} {:>12} {:>9} {:>8} {:>8}",
+        "k", "FPS", "latency µs", "power W", "FPS/W", "DSP%"
+    );
+    for p in &pts {
+        println!(
+            "{:>4} {:>12.0} {:>12.2} {:>9.1} {:>8.0} {:>8.1}",
+            p.spec.k,
+            p.perf.fps,
+            p.perf.latency_us,
+            p.power_w,
+            p.fps_per_watt,
+            p.utilisation.dsp
+        );
+    }
+    Ok(())
+}
+
+pub fn codegen_cmd(cli: &Cli) -> Result<()> {
+    let spec = spec_from(cli);
+    let plat = platform_from(cli);
+    let g = build_layer_graph(&spec, 0);
+    let s = enumerate_replication(schedule(&g, &plat.budget()), &plat.budget());
+    let name = format!("{}_fft{}", spec.kind.as_str(), spec.k);
+    let src = generate_design(&s, &name);
+    let out = cli.get_str("out");
+    if out.is_empty() {
+        println!("{src}");
+    } else {
+        std::fs::write(&out, &src).with_context(|| format!("writing {out}"))?;
+        println!("wrote {} bytes of HLS C++ to {out}", src.len());
+    }
+    Ok(())
+}
+
+pub fn simulate_cmd(cli: &Cli) -> Result<()> {
+    let spec = spec_from(cli);
+    let plat = platform_from(cli);
+    let g = build_layer_graph(&spec, 0);
+    let s = enumerate_replication(schedule(&g, &plat.budget()), &plat.budget());
+    let frames = 256;
+    let sim = simulate(&s, frames);
+    let clk_us = 1e6 / plat.freq_hz;
+    println!(
+        "discrete-event simulation, {} frames ({} k={}, {}):",
+        frames,
+        spec.kind.as_str(),
+        spec.k,
+        plat.name
+    );
+    println!(
+        "  steady II: {} cycles = {:.2} µs  ->  {:.0} FPS",
+        sim.ii_cycles,
+        sim.ii_cycles as f64 * clk_us,
+        plat.freq_hz / sim.ii_cycles as f64
+    );
+    println!(
+        "  fill latency: {:.2} µs; steady latency: {:.2} µs",
+        sim.latency[0] as f64 * clk_us,
+        sim.steady_latency_cycles() * clk_us
+    );
+    for (i, occ) in sim.occupancy.iter().enumerate() {
+        println!("  stage {} occupancy: {:.1}%", i + 1, occ * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Utterance admission and stream management.
+//!
+//! The pipeline keeps `max_streams` utterances interleaved; the batcher is
+//! the bounded waiting room in front of it: FIFO admission, backpressure
+//! when full (callers block/observe), and chunking of large workloads into
+//! pipeline-sized waves. This is deliberately simple — the paper's system
+//! serves a fixed batch of ASR streams — but it is the seam where a
+//! production deployment would plug arrival processes and SLAs.
+
+use std::collections::VecDeque;
+
+/// A queued utterance: opaque id + frames.
+#[derive(Debug, Clone)]
+pub struct QueuedUtterance {
+    pub id: u64,
+    pub frames: Vec<Vec<f32>>,
+}
+
+/// Bounded FIFO with admission statistics.
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<QueuedUtterance>,
+    pub capacity: usize,
+    pub max_streams: usize,
+    pub rejected: u64,
+    pub admitted: u64,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, max_streams: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            capacity,
+            max_streams: max_streams.max(1),
+            rejected: 0,
+            admitted: 0,
+        }
+    }
+
+    /// Try to enqueue; `false` (backpressure) when full.
+    pub fn offer(&mut self, utt: QueuedUtterance) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.admitted += 1;
+        self.queue.push_back(utt);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Drain the next wave of up to `max_streams` utterances.
+    pub fn next_wave(&mut self) -> Vec<QueuedUtterance> {
+        let take = self.max_streams.min(self.queue.len());
+        self.queue.drain(..take).collect()
+    }
+
+    /// Occupancy in [0, 1] — exported as a backpressure signal.
+    pub fn occupancy(&self) -> f64 {
+        self.queue.len() as f64 / self.capacity.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn utt(id: u64) -> QueuedUtterance {
+        QueuedUtterance {
+            id,
+            frames: vec![vec![0.0; 4]; 3],
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_waves() {
+        let mut b = Batcher::new(8, 3);
+        for i in 0..7 {
+            assert!(b.offer(utt(i)));
+        }
+        let w1 = b.next_wave();
+        assert_eq!(w1.iter().map(|u| u.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        let w2 = b.next_wave();
+        assert_eq!(w2.iter().map(|u| u.id).collect::<Vec<_>>(), vec![3, 4, 5]);
+        let w3 = b.next_wave();
+        assert_eq!(w3.len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let mut b = Batcher::new(2, 4);
+        assert!(b.offer(utt(0)));
+        assert!(b.offer(utt(1)));
+        assert!(!b.offer(utt(2)), "third must be rejected");
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.occupancy(), 1.0);
+        b.next_wave();
+        assert!(b.offer(utt(3)), "space frees after drain");
+    }
+
+    #[test]
+    fn occupancy_scales() {
+        let mut b = Batcher::new(4, 2);
+        assert_eq!(b.occupancy(), 0.0);
+        b.offer(utt(0));
+        assert_eq!(b.occupancy(), 0.25);
+    }
+}

@@ -1,0 +1,91 @@
+//! Latency and throughput accounting for the serving pipeline.
+
+use std::time::Duration;
+
+/// Collected per-run metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Per-frame end-to-end latency (dispatch → stage-3 completion), µs.
+    pub frame_latency_us: Vec<f64>,
+    /// Total wall time of the run.
+    pub wall: Duration,
+    /// Frames processed.
+    pub frames: usize,
+    /// Utterances processed.
+    pub utterances: usize,
+}
+
+impl Metrics {
+    /// Steady-state frames per second.
+    pub fn fps(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.wall.as_secs_f64()
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        if self.frame_latency_us.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.frame_latency_us.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
+        xs[idx]
+    }
+
+    pub fn latency_p50_us(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn latency_p95_us(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn latency_mean_us(&self) -> f64 {
+        if self.frame_latency_us.is_empty() {
+            return 0.0;
+        }
+        self.frame_latency_us.iter().sum::<f64>() / self.frame_latency_us.len() as f64
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} frames / {} utts in {:.3}s  ->  {:.0} FPS, frame latency p50 {:.0}µs p95 {:.0}µs",
+            self.frames,
+            self.utterances,
+            self.wall.as_secs_f64(),
+            self.fps(),
+            self.latency_p50_us(),
+            self.latency_p95_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_fps() {
+        let m = Metrics {
+            frame_latency_us: (1..=100).map(|i| i as f64).collect(),
+            wall: Duration::from_secs(2),
+            frames: 100,
+            utterances: 4,
+        };
+        assert_eq!(m.fps(), 50.0);
+        assert!((m.latency_p50_us() - 50.0).abs() <= 1.0);
+        assert!((m.latency_p95_us() - 95.0).abs() <= 1.0);
+        assert!((m.latency_mean_us() - 50.5).abs() < 1e-9);
+        assert!(m.summary().contains("FPS"));
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.fps(), 0.0);
+        assert_eq!(m.latency_p50_us(), 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The serving coordinator — Layer 3's runtime counterpart of Fig 7.
+//!
+//! The paper's accelerator is a 3-stage coarse-grained pipeline joined by
+//! double buffers, kept full by interleaving independent frames. This
+//! module is that architecture in software: three OS threads, one per
+//! stage, each owning its compiled PJRT executable and its share of the
+//! (spectral) weights; bounded two-slot channels as the double buffers;
+//! and a scheduler that interleaves multiple utterance *streams* so the
+//! recurrent dependency (frame `t+1` of a stream needs `y_t`, `c_t`) never
+//! stalls the pipeline — exactly the paper's "after three frames have been
+//! processed, the following frame could be processed at every one stage of
+//! latency".
+//!
+//! - [`pipeline`] — the 3-stage threaded pipeline over PJRT executables.
+//! - [`batcher`] — utterance admission, stream slots, backpressure.
+//! - [`metrics`] — latency/throughput accounting.
+//! - [`server`] — the end-to-end ASR serving loop (workload in, PER +
+//!   throughput out).
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use metrics::Metrics;
+pub use pipeline::ClstmPipeline;
+pub use server::{serve_workload, ServeReport};

@@ -1,0 +1,257 @@
+//! The 3-stage threaded pipeline over PJRT executables (Fig 7 in software).
+//!
+//! Stage threads own their executable and weights; bounded `sync_channel(2)`
+//! hops model the double buffers. The scheduler interleaves utterance
+//! streams: a stream has at most one frame in flight (its recurrence), but
+//! with ≥3 streams admitted the pipeline is always full — the software
+//! realisation of the paper's frame-interleaving argument (§6.2).
+
+use crate::coordinator::metrics::Metrics;
+use crate::lstm::config::LstmSpec;
+use crate::lstm::weights::LstmWeights;
+use crate::runtime::artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
+use crate::runtime::client::Runtime;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A frame travelling through the pipeline.
+struct Msg {
+    stream: usize,
+    /// Frame index within the stream.
+    t: usize,
+    /// Stage payload: fused input (→S1), gate pre-activations (→S2),
+    /// cell output m (→S3).
+    payload: Vec<f32>,
+    /// Cell state rides along (written by S2).
+    c: Vec<f32>,
+    dispatched: Instant,
+}
+
+/// Completion record returned to the scheduler.
+struct Done {
+    stream: usize,
+    t: usize,
+    y: Vec<f32>,
+    c: Vec<f32>,
+    dispatched: Instant,
+}
+
+/// The running pipeline (threads + channel endpoints).
+pub struct ClstmPipeline {
+    spec: LstmSpec,
+    to_s1: Option<SyncSender<Msg>>,
+    done_rx: Receiver<Done>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    in_pad: usize,
+    out_pad: usize,
+}
+
+impl ClstmPipeline {
+    /// Compile the three stage artifacts and launch the stage threads.
+    ///
+    /// `weights` provides layer-0 spectral weights (the Table 3 pipeline is
+    /// the single-layer accelerator, like the paper's).
+    pub fn build(
+        rt: Arc<Runtime>,
+        art: &ArtifactDir,
+        cfg: &ConfigArtifacts,
+        weights: &LstmWeights,
+    ) -> Result<Self> {
+        let spec = weights.spec.clone();
+        anyhow::ensure!(spec.k == cfg.k, "weights k={} vs artifact k={}", spec.k, cfg.k);
+        let bundle = SpectralBundle::from_weights(weights, 0, 0);
+        let has_proj = spec.proj_dim.is_some();
+        let h = spec.hidden_dim;
+
+        let exe1 = rt.load_hlo_text(&art.path_of(&cfg.stage1))?;
+        let exe2 = rt.load_hlo_text(&art.path_of(&cfg.stage2))?;
+        let exe3 = rt.load_hlo_text(&art.path_of(&cfg.stage3))?;
+
+        // Double buffers: two-slot bounded channels.
+        let (to_s1, s1_rx) = sync_channel::<Msg>(2);
+        let (s1_tx, s2_rx) = sync_channel::<Msg>(2);
+        let (s2_tx, s3_rx) = sync_channel::<Msg>(2);
+        let (s3_tx, done_rx) = sync_channel::<Done>(2);
+
+        use crate::runtime::client::Executable;
+        let gs = bundle.gates_shape;
+        let g_dims: Vec<i64> = gs.iter().map(|&d| d as i64).collect();
+        let (gre, gim) = (bundle.gates_re.clone(), bundle.gates_im.clone());
+        let h1 = std::thread::Builder::new()
+            .name("clstm-stage1".into())
+            .spawn(move || {
+                // Stage 1: the four fused gate convolutions. Weight
+                // literals are built once (§Perf) — the "BRAM-resident"
+                // spectra of §4.1, software edition.
+                let wre = Executable::literal_f32(&gre, &g_dims).expect("wre literal");
+                let wim = Executable::literal_f32(&gim, &g_dims).expect("wim literal");
+                while let Ok(mut m) = s1_rx.recv() {
+                    let fused_dims = [1i64, m.payload.len() as i64];
+                    let fused = Executable::literal_f32(&m.payload, &fused_dims)
+                        .expect("fused literal");
+                    let out = exe1
+                        .run_literals(&[&wre, &wim, &fused])
+                        .expect("stage1 execute");
+                    m.payload = out.into_iter().next().unwrap();
+                    if s1_tx.send(m).is_err() {
+                        break;
+                    }
+                }
+            })?;
+
+        let bias = bundle.bias.clone();
+        let peep = bundle.peep.clone();
+        let h2 = std::thread::Builder::new()
+            .name("clstm-stage2".into())
+            .spawn(move || {
+                // Stage 2: the element-wise cluster. Bias/peephole literals
+                // prebuilt.
+                let a_dims = [1i64, 4, h as i64];
+                let c_dims = [1i64, h as i64];
+                let bias_lit =
+                    Executable::literal_f32(&bias, &[4, h as i64]).expect("bias literal");
+                let peep_lit =
+                    Executable::literal_f32(&peep, &[3, h as i64]).expect("peep literal");
+                while let Ok(mut m) = s2_rx.recv() {
+                    let a = Executable::literal_f32(&m.payload, &a_dims).expect("a literal");
+                    let c = Executable::literal_f32(&m.c, &c_dims).expect("c literal");
+                    let outs = exe2
+                        .run_literals(&[&a, &c, &bias_lit, &peep_lit])
+                        .expect("stage2 execute");
+                    let mut it = outs.into_iter();
+                    m.payload = it.next().unwrap(); // m_t
+                    m.c = it.next().unwrap(); // c_t
+                    if s2_tx.send(m).is_err() {
+                        break;
+                    }
+                }
+            })?;
+
+        let ps = bundle.proj_shape;
+        let p_dims3: Vec<i64> = ps.iter().map(|&d| d as i64).collect();
+        let (pre, pim) = (bundle.proj_re.clone(), bundle.proj_im.clone());
+        let h3 = std::thread::Builder::new()
+            .name("clstm-stage3".into())
+            .spawn(move || {
+                // Stage 3: projection (or identity padding); spectra
+                // prebuilt.
+                let m_dims = [1i64, h as i64];
+                let pre_lit = Executable::literal_f32(&pre, &p_dims3).expect("pre literal");
+                let pim_lit = Executable::literal_f32(&pim, &p_dims3).expect("pim literal");
+                while let Ok(m) = s3_rx.recv() {
+                    let mp = Executable::literal_f32(&m.payload, &m_dims).expect("m literal");
+                    let outs = if has_proj {
+                        exe3.run_literals(&[&pre_lit, &pim_lit, &mp])
+                    } else {
+                        exe3.run_literals(&[&mp])
+                    }
+                    .expect("stage3 execute");
+                    let y = outs.into_iter().next().unwrap();
+                    if s3_tx
+                        .send(Done {
+                            stream: m.stream,
+                            t: m.t,
+                            y,
+                            c: m.c,
+                            dispatched: m.dispatched,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+            })?;
+
+        Ok(Self {
+            in_pad: spec.pad(spec.layer_input_dim(0)),
+            out_pad: spec.pad(spec.out_dim()),
+            spec,
+            to_s1: Some(to_s1),
+            done_rx,
+            handles: vec![h1, h2, h3],
+        })
+    }
+
+    /// Run a set of utterances through the pipeline, interleaving them as
+    /// streams. Returns per-utterance per-frame outputs `y` and metrics.
+    pub fn run_utterances(&mut self, utts: &[Vec<Vec<f32>>]) -> Result<(Vec<Vec<Vec<f32>>>, Metrics)> {
+        let n = utts.len();
+        let h = self.spec.hidden_dim;
+        let mut y_state = vec![vec![0.0f32; self.out_pad]; n];
+        let mut c_state = vec![vec![0.0f32; h]; n];
+        let mut next_t = vec![0usize; n];
+        let mut outputs: Vec<Vec<Vec<f32>>> =
+            utts.iter().map(|u| Vec::with_capacity(u.len())).collect();
+        let mut metrics = Metrics {
+            utterances: n,
+            ..Default::default()
+        };
+
+        let to_s1 = self.to_s1.as_ref().context("pipeline already shut down")?;
+        let t0 = Instant::now();
+        let mut in_flight = 0usize;
+        let mut ready: std::collections::VecDeque<usize> = (0..n).collect();
+        let mut remaining: usize = utts.iter().map(Vec::len).sum();
+        metrics.frames = remaining;
+
+        while remaining > 0 {
+            // Admit as many ready streams as the double buffers allow.
+            while in_flight < 4 {
+                let Some(s) = ready.pop_front() else { break };
+                let t = next_t[s];
+                let x = &utts[s][t];
+                let mut fused = vec![0.0f32; self.in_pad + self.out_pad];
+                fused[..x.len()].copy_from_slice(x);
+                fused[self.in_pad..].copy_from_slice(&y_state[s]);
+                to_s1
+                    .send(Msg {
+                        stream: s,
+                        t,
+                        payload: fused,
+                        c: c_state[s].clone(),
+                        dispatched: Instant::now(),
+                    })
+                    .context("pipeline send")?;
+                in_flight += 1;
+            }
+            // Harvest one completion.
+            let done = self.done_rx.recv().context("pipeline recv")?;
+            in_flight -= 1;
+            remaining -= 1;
+            metrics
+                .frame_latency_us
+                .push(done.dispatched.elapsed().as_secs_f64() * 1e6);
+            let s = done.stream;
+            debug_assert_eq!(done.t, next_t[s], "frames must complete in order per stream");
+            y_state[s][..done.y.len().min(self.out_pad)]
+                .copy_from_slice(&done.y[..done.y.len().min(self.out_pad)]);
+            c_state[s] = done.c;
+            outputs[s].push(done.y);
+            next_t[s] += 1;
+            if next_t[s] < utts[s].len() {
+                ready.push_back(s);
+            }
+        }
+        metrics.wall = t0.elapsed();
+        Ok((outputs, metrics))
+    }
+
+    /// Shut the pipeline down (joins stage threads).
+    pub fn shutdown(&mut self) {
+        self.to_s1 = None; // closes the channel chain
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ClstmPipeline {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// Integration tests for the pipeline live in rust/tests/integration.rs
+// (they require `make artifacts`).

@@ -1,0 +1,111 @@
+//! End-to-end ASR serving: SynthTIMIT workload → pipeline → classifier →
+//! PER + throughput. The driver behind `clstm serve` and
+//! `examples/asr_pipeline.rs`.
+
+use crate::coordinator::batcher::{Batcher, QueuedUtterance};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::ClstmPipeline;
+use crate::data::per::phone_error_rate;
+use crate::data::synth::{SynthConfig, SynthTimit};
+use crate::lstm::sequence::argmax;
+use crate::lstm::weights::LstmWeights;
+use crate::runtime::artifact::ArtifactDir;
+use crate::runtime::client::Runtime;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Result of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub metrics: Metrics,
+    /// PER of the served model on the generated workload (needs the
+    /// classifier head in the weights).
+    pub per: f64,
+    pub config: String,
+}
+
+/// Generate `n_utts` SynthTIMIT utterances sized for `weights.spec`, run
+/// them through the PJRT pipeline, decode framewise, and score PER.
+pub fn serve_workload(
+    rt: Arc<Runtime>,
+    art: &ArtifactDir,
+    config_name: &str,
+    weights: &LstmWeights,
+    n_utts: usize,
+    max_streams: usize,
+) -> Result<ServeReport> {
+    let cfg = art
+        .config(config_name)
+        .with_context(|| format!("config {config_name} not in manifest"))?;
+    let spec = &weights.spec;
+
+    // Workload generation (truncate synthetic features to the model's
+    // input dim — the generator emits (base+1)*3 ≥ input_dim).
+    let synth_cfg = SynthConfig {
+        n_phones: spec.num_classes.max(2),
+        base_dim: (spec.input_dim / 3).max(2),
+        mean_frames: 60,
+        ..SynthConfig::tiny()
+    };
+    let gen = SynthTimit::new(synth_cfg);
+    let mut batcher = Batcher::new(n_utts, max_streams);
+    for i in 0..n_utts {
+        let mut u = gen.utterance(0x17c5, i as u64);
+        for f in u.frames.iter_mut() {
+            f.truncate(spec.input_dim);
+            f.resize(spec.input_dim, 0.0);
+        }
+        assert!(batcher.offer(QueuedUtterance {
+            id: i as u64,
+            frames: u.frames.clone(),
+        }));
+    }
+
+    let mut pipeline = ClstmPipeline::build(rt, art, cfg, weights)?;
+    let (cls_w, cls_b) = weights
+        .classifier
+        .clone()
+        .context("weights have no classifier head")?;
+    let out_dim = spec.out_dim();
+    let n_cls = cls_b.len();
+
+    let mut metrics = Metrics::default();
+    let mut hyps: Vec<Vec<usize>> = Vec::new();
+    let mut refs: Vec<Vec<usize>> = Vec::new();
+    while !batcher.is_empty() {
+        let wave = batcher.next_wave();
+        let frames: Vec<Vec<Vec<f32>>> = wave.iter().map(|u| u.frames.clone()).collect();
+        let (outputs, m) = pipeline.run_utterances(&frames)?;
+        metrics.frames += m.frames;
+        metrics.utterances += m.utterances;
+        metrics.wall += m.wall;
+        metrics.frame_latency_us.extend(m.frame_latency_us);
+        // Classifier + greedy decode on the host (as in ESE).
+        for (u, outs) in wave.iter().zip(outputs) {
+            let hyp: Vec<usize> = outs
+                .iter()
+                .map(|y| {
+                    let logits: Vec<f32> = (0..n_cls)
+                        .map(|c| {
+                            cls_b[c]
+                                + (0..out_dim)
+                                    .map(|j| cls_w[c * out_dim + j] * y[j])
+                                    .sum::<f32>()
+                        })
+                        .collect();
+                    argmax(&logits)
+                })
+                .collect();
+            hyps.push(hyp);
+            let synth_u = gen.utterance(0x17c5, u.id);
+            refs.push(synth_u.phone_seq());
+        }
+    }
+
+    let per = phone_error_rate(&hyps, &refs);
+    Ok(ServeReport {
+        metrics,
+        per,
+        config: config_name.to_string(),
+    })
+}

@@ -1,0 +1,18 @@
+//! SynthTIMIT — the synthetic stand-in for the TIMIT corpus — and the PER
+//! metric (§3.3, §6; DESIGN.md §2 documents the substitution).
+//!
+//! - [`synth`] — an HMM-style generator over the 39-phone folded TIMIT
+//!   inventory emitting 153-dim (Google) or 39-dim (Small) filterbank-like
+//!   feature frames: per-phone Gaussian emission means, temporal smoothing,
+//!   and Δ/ΔΔ derivative channels, matching the front-end both ESE and
+//!   C-LSTM used (51/12 mel coefficients + energy, with first and second
+//!   temporal derivatives).
+//! - [`per`] — Phone Error Rate: collapse framewise predictions to a phone
+//!   sequence, then Levenshtein distance against the reference sequence
+//!   over reference length — the metric of Tables 1 and 3.
+
+pub mod per;
+pub mod synth;
+
+pub use per::{collapse, edit_distance, phone_error_rate};
+pub use synth::{SynthConfig, SynthTimit, Utterance};

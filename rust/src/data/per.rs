@@ -1,0 +1,173 @@
+//! Phone Error Rate (PER) — the accuracy metric of Tables 1 and 3.
+//!
+//! Framewise predictions are collapsed to a phone sequence (consecutive
+//! repeats merged — the standard framewise-decoder convention), then PER =
+//! Levenshtein(hyp, ref) / len(ref), summed over a corpus.
+
+/// Merge consecutive repeats: `[a a b b b a] → [a b a]`.
+pub fn collapse(labels: &[usize]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for &l in labels {
+        if out.last() != Some(&l) {
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// Levenshtein distance (substitution/insertion/deletion all cost 1).
+pub fn edit_distance(a: &[usize], b: &[usize]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 {
+        return m;
+    }
+    if m == 0 {
+        return n;
+    }
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// Corpus PER in percent: Σ edit distances / Σ reference lengths × 100,
+/// with framewise hypotheses collapsed first.
+pub fn phone_error_rate(hyps_framewise: &[Vec<usize>], refs: &[Vec<usize>]) -> f64 {
+    assert_eq!(hyps_framewise.len(), refs.len());
+    let mut errs = 0usize;
+    let mut total = 0usize;
+    for (h, r) in hyps_framewise.iter().zip(refs) {
+        let hc = collapse(h);
+        errs += edit_distance(&hc, r);
+        total += r.len();
+    }
+    100.0 * errs as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::{forall, gen, no_shrink, Config};
+
+    #[test]
+    fn collapse_basics() {
+        assert_eq!(collapse(&[1, 1, 2, 2, 2, 1]), vec![1, 2, 1]);
+        assert_eq!(collapse(&[]), Vec::<usize>::new());
+        assert_eq!(collapse(&[3]), vec![3]);
+    }
+
+    #[test]
+    fn edit_distance_known_cases() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(edit_distance(&[1, 3], &[1, 2, 3]), 1); // insertion
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+    }
+
+    #[test]
+    fn per_zero_for_perfect_and_100_band_for_garbage() {
+        let refs = vec![vec![1, 2, 3], vec![4, 5]];
+        let hyps = vec![vec![1, 1, 2, 3, 3], vec![4, 4, 5]];
+        assert_eq!(phone_error_rate(&hyps, &refs), 0.0);
+        let garbage = vec![vec![9, 9, 9], vec![9]];
+        let per = phone_error_rate(&garbage, &refs);
+        assert!(per >= 100.0 * 4.0 / 5.0, "{per}");
+    }
+
+    #[test]
+    fn property_metric_axioms() {
+        forall(
+            Config::default().cases(80),
+            |rng| {
+                let a: Vec<usize> = (0..gen::usize_in(rng, 0..=12))
+                    .map(|_| rng.index(5))
+                    .collect();
+                let b: Vec<usize> = (0..gen::usize_in(rng, 0..=12))
+                    .map(|_| rng.index(5))
+                    .collect();
+                let c: Vec<usize> = (0..gen::usize_in(rng, 0..=12))
+                    .map(|_| rng.index(5))
+                    .collect();
+                (a, b, c)
+            },
+            no_shrink,
+            |(a, b, c)| {
+                // Identity, symmetry, triangle inequality.
+                if edit_distance(a, a) != 0 {
+                    return Err("d(a,a) != 0".into());
+                }
+                if edit_distance(a, b) != edit_distance(b, a) {
+                    return Err("asymmetric".into());
+                }
+                let (ab, bc, ac) = (
+                    edit_distance(a, b),
+                    edit_distance(b, c),
+                    edit_distance(a, c),
+                );
+                if ac > ab + bc {
+                    return Err(format!("triangle violated: {ac} > {ab}+{bc}"));
+                }
+                // Bounded by max length.
+                if ab > a.len().max(b.len()) {
+                    return Err("distance exceeds max length".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_collapse_idempotent_and_no_repeats() {
+        forall(
+            Config::default().cases(60),
+            |rng| {
+                (0..gen::usize_in(rng, 0..=40))
+                    .map(|_| rng.index(4))
+                    .collect::<Vec<usize>>()
+            },
+            no_shrink,
+            |xs| {
+                let c = collapse(xs);
+                if c.windows(2).any(|w| w[0] == w[1]) {
+                    return Err("repeats survive".into());
+                }
+                if collapse(&c) != c {
+                    return Err("not idempotent".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn per_monotone_in_corruption() {
+        // Corrupting more frames can only raise (or keep) PER.
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let labels: Vec<usize> = (0..60).map(|i| (i / 6) % 5).collect();
+        let refs = vec![collapse(&labels)];
+        let mut prev_per = 0.0;
+        for corrupt in [0usize, 5, 15, 30] {
+            let mut hyp = labels.clone();
+            for _ in 0..corrupt {
+                let idx = rng.index(hyp.len());
+                hyp[idx] = (hyp[idx] + 1 + rng.index(4)) % 5;
+            }
+            let per = phone_error_rate(&[hyp], &refs);
+            assert!(
+                per + 1e-9 >= prev_per * 0.5,
+                "PER should broadly rise with corruption"
+            );
+            prev_per = per;
+        }
+        assert!(prev_per > 0.0);
+    }
+}

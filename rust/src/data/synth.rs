@@ -1,0 +1,304 @@
+//! The SynthTIMIT generator.
+//!
+//! Each utterance is a first-order Markov chain over `n_phones` classes
+//! (self-loop probability tuned to TIMIT-like phone durations of ~7
+//! frames), emitting `base_dim` mel-filterbank-like coefficients: a fixed
+//! per-phone mean vector plus AR(1)-smoothed Gaussian noise, then the
+//! energy term and Δ/ΔΔ temporal derivatives are appended — giving the
+//! 3×(base+1)-dim features of the ESE/C-LSTM front-end (51+1 → 156≈153
+//! nominal; we expose the exact dims the models use).
+//!
+//! The generator is seeded and deterministic: train/test splits never
+//! overlap and every experiment records its seed.
+
+use crate::util::prng::Xoshiro256;
+
+/// Generator configuration.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    pub n_phones: usize,
+    /// Base filterbank coefficients (51 for Google-style 153-dim features,
+    /// 12 for Small-style 39-dim).
+    pub base_dim: usize,
+    /// Mean utterance length in frames.
+    pub mean_frames: usize,
+    /// Phone self-loop probability (expected duration = 1/(1−p)).
+    pub self_loop: f64,
+    /// Emission noise std relative to inter-phone mean distances.
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl SynthConfig {
+    /// Matches the Google-LSTM front-end: 51 coefficients + energy, ×3
+    /// derivative channels = 156 dims; models read the first 153.
+    pub fn google() -> Self {
+        Self {
+            n_phones: 39,
+            base_dim: 51,
+            mean_frames: 120,
+            self_loop: 0.857, // ≈7-frame phones
+            noise: 0.45,
+            seed: 0x7131,
+        }
+    }
+
+    /// Small-LSTM front-end: 12 coefficients + energy, ×3 = 39 dims.
+    pub fn small() -> Self {
+        Self {
+            base_dim: 12,
+            ..Self::google()
+        }
+    }
+
+    /// Shrunk config for unit tests.
+    pub fn tiny() -> Self {
+        Self {
+            n_phones: 8,
+            base_dim: 5,
+            mean_frames: 30,
+            self_loop: 0.75,
+            noise: 0.3,
+            seed: 42,
+        }
+    }
+
+    /// Total feature dimension: (base + energy) × {static, Δ, ΔΔ}.
+    pub fn feature_dim(&self) -> usize {
+        (self.base_dim + 1) * 3
+    }
+}
+
+/// One utterance: frames plus framewise phone labels.
+#[derive(Debug, Clone)]
+pub struct Utterance {
+    pub frames: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+}
+
+impl Utterance {
+    /// Reference phone sequence (labels with repeats collapsed).
+    pub fn phone_seq(&self) -> Vec<usize> {
+        super::per::collapse(&self.labels)
+    }
+}
+
+/// The dataset generator.
+pub struct SynthTimit {
+    pub cfg: SynthConfig,
+    /// Per-phone emission means (n_phones × base_dim).
+    means: Vec<Vec<f64>>,
+    /// Phone transition preferences (sparse bigram structure).
+    trans: Vec<Vec<f64>>,
+}
+
+impl SynthTimit {
+    pub fn new(cfg: SynthConfig) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+        // Per-phone formant-like means: smooth bumps at phone-dependent
+        // positions so nearby phones are genuinely confusable (PER is not
+        // trivially 0, like real acoustics).
+        let means: Vec<Vec<f64>> = (0..cfg.n_phones)
+            .map(|p| {
+                let centre = (p as f64 + 0.5) / cfg.n_phones as f64;
+                let width = 0.08 + 0.04 * rng.next_f64();
+                let amp = 1.0 + 0.5 * rng.next_f64();
+                (0..cfg.base_dim)
+                    .map(|d| {
+                        let x = d as f64 / cfg.base_dim as f64;
+                        let bump = (-((x - centre) * (x - centre)) / (2.0 * width * width)).exp();
+                        amp * bump + 0.15 * rng.normal()
+                    })
+                    .collect()
+            })
+            .collect();
+        // Bigram structure: each phone prefers a handful of successors.
+        let trans: Vec<Vec<f64>> = (0..cfg.n_phones)
+            .map(|_| {
+                let mut row: Vec<f64> = (0..cfg.n_phones).map(|_| 0.05 + rng.next_f64()).collect();
+                // Boost 4 preferred successors.
+                for _ in 0..4 {
+                    let j = rng.index(cfg.n_phones);
+                    row[j] += 3.0;
+                }
+                row
+            })
+            .collect();
+        Self { cfg, means, trans }
+    }
+
+    /// Generate utterance number `idx` of split `split_seed` (deterministic
+    /// per (idx, split)).
+    pub fn utterance(&self, split_seed: u64, idx: u64) -> Utterance {
+        let mut rng = Xoshiro256::seed_from_u64(
+            self.cfg.seed ^ split_seed.wrapping_mul(0x9E37_79B9).wrapping_add(idx),
+        );
+        let n_frames = (self.cfg.mean_frames as f64 * rng.uniform(0.6, 1.4)) as usize;
+        let n_frames = n_frames.max(8);
+        let d = self.cfg.base_dim;
+
+        let mut labels = Vec::with_capacity(n_frames);
+        let mut phone = rng.index(self.cfg.n_phones);
+        // Static channel with AR(1) smoothing.
+        let mut stat = vec![0.0f64; d + 1];
+        let mut raw: Vec<Vec<f64>> = Vec::with_capacity(n_frames);
+        for _ in 0..n_frames {
+            if rng.next_f64() > self.cfg.self_loop {
+                phone = rng.weighted_index(&self.trans[phone]);
+            }
+            labels.push(phone);
+            let mean = &self.means[phone];
+            let mut frame = vec![0.0f64; d + 1];
+            let mut energy = 0.0;
+            for i in 0..d {
+                let target = mean[i] + self.cfg.noise * rng.normal();
+                // AR(1): frames correlate in time like real speech.
+                stat[i] = 0.6 * stat[i] + 0.4 * target;
+                frame[i] = stat[i];
+                energy += stat[i] * stat[i];
+            }
+            frame[d] = (energy / d as f64).sqrt(); // energy channel
+            raw.push(frame);
+        }
+
+        // Δ and ΔΔ channels (central differences, edge-clamped).
+        let deriv = |xs: &[Vec<f64>]| -> Vec<Vec<f64>> {
+            let n = xs.len();
+            (0..n)
+                .map(|t| {
+                    let prev = &xs[t.saturating_sub(1)];
+                    let next = &xs[(t + 1).min(n - 1)];
+                    prev.iter().zip(next).map(|(a, b)| (b - a) / 2.0).collect()
+                })
+                .collect()
+        };
+        let d1 = deriv(&raw);
+        let d2 = deriv(&d1);
+
+        let frames: Vec<Vec<f32>> = (0..n_frames)
+            .map(|t| {
+                raw[t]
+                    .iter()
+                    .chain(d1[t].iter())
+                    .chain(d2[t].iter())
+                    .map(|&v| v as f32)
+                    .collect()
+            })
+            .collect();
+        Utterance { frames, labels }
+    }
+
+    /// A batch of utterances.
+    pub fn batch(&self, split_seed: u64, n: usize) -> Vec<Utterance> {
+        (0..n as u64).map(|i| self.utterance(split_seed, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let gen = SynthTimit::new(SynthConfig::tiny());
+        let u1 = gen.utterance(1, 0);
+        let u2 = gen.utterance(1, 0);
+        assert_eq!(u1.labels, u2.labels);
+        assert_eq!(u1.frames.len(), u1.labels.len());
+        assert_eq!(u1.frames[0].len(), SynthConfig::tiny().feature_dim());
+        // Different idx ⇒ different content.
+        let u3 = gen.utterance(1, 1);
+        assert_ne!(u1.labels, u3.labels);
+    }
+
+    #[test]
+    fn google_config_feature_dim() {
+        assert_eq!(SynthConfig::google().feature_dim(), 156);
+        assert_eq!(SynthConfig::small().feature_dim(), 39);
+    }
+
+    #[test]
+    fn phone_durations_realistic() {
+        let gen = SynthTimit::new(SynthConfig::google());
+        let mut total_runs = 0usize;
+        let mut total_frames = 0usize;
+        for i in 0..10 {
+            let u = gen.utterance(2, i);
+            total_runs += u.phone_seq().len();
+            total_frames += u.labels.len();
+        }
+        let mean_dur = total_frames as f64 / total_runs as f64;
+        assert!(
+            (3.0..=14.0).contains(&mean_dur),
+            "mean phone duration {mean_dur} frames"
+        );
+    }
+
+    #[test]
+    fn features_are_class_informative() {
+        // A nearest-mean classifier on static channels must beat chance by
+        // a lot — otherwise PER trends would be meaningless noise.
+        let cfg = SynthConfig::tiny();
+        let gen = SynthTimit::new(cfg.clone());
+        // Estimate class means from one split.
+        let mut sums = vec![vec![0.0f64; cfg.base_dim]; cfg.n_phones];
+        let mut counts = vec![0usize; cfg.n_phones];
+        for i in 0..20 {
+            let u = gen.utterance(3, i);
+            for (f, &l) in u.frames.iter().zip(&u.labels) {
+                for d in 0..cfg.base_dim {
+                    sums[l][d] += f[d] as f64;
+                }
+                counts[l] += 1;
+            }
+        }
+        for (s, &c) in sums.iter_mut().zip(&counts) {
+            for v in s.iter_mut() {
+                *v /= c.max(1) as f64;
+            }
+        }
+        // Classify a fresh split.
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for i in 0..10 {
+            let u = gen.utterance(4, i);
+            for (f, &l) in u.frames.iter().zip(&u.labels) {
+                let pred = (0..cfg.n_phones)
+                    .min_by(|&a, &b| {
+                        let da: f64 = (0..cfg.base_dim)
+                            .map(|d| (f[d] as f64 - sums[a][d]).powi(2))
+                            .sum();
+                        let db: f64 = (0..cfg.base_dim)
+                            .map(|d| (f[d] as f64 - sums[b][d]).powi(2))
+                            .sum();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                correct += (pred == l) as usize;
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        let chance = 1.0 / cfg.n_phones as f64;
+        assert!(
+            acc > 3.0 * chance,
+            "nearest-mean accuracy {acc:.3} barely beats chance {chance:.3}"
+        );
+        // ...but not trivially separable either (noise + confusable means).
+        assert!(acc < 0.999, "task too easy: {acc}");
+    }
+
+    #[test]
+    fn derivative_channels_encode_dynamics() {
+        let gen = SynthTimit::new(SynthConfig::tiny());
+        let u = gen.utterance(5, 0);
+        let d = SynthConfig::tiny().base_dim + 1;
+        // Δ channel of a changing signal must be non-zero somewhere.
+        let delta_energy: f32 = u
+            .frames
+            .iter()
+            .map(|f| f[d..2 * d].iter().map(|v| v.abs()).sum::<f32>())
+            .sum();
+        assert!(delta_energy > 0.1);
+    }
+}

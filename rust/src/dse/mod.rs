@@ -1,0 +1,168 @@
+//! Design-space exploration (§4.4, §5.2).
+//!
+//! Ties the whole synthesis flow together: for a model spec, block size and
+//! platform it builds the operator graph, runs Algorithm 1, enumerates
+//! replication, and evaluates the analytical performance / resource / power
+//! models into a [`DesignPoint`] — one row of Table 3. [`explore`] sweeps
+//! block sizes and returns the evaluated points; [`pareto`] filters the
+//! (FPS ↑, power ↓) front.
+
+use crate::graph::builder::build_layer_graph;
+use crate::lstm::config::LstmSpec;
+use crate::perfmodel::performance::{PerfEstimate, PerfModel};
+use crate::perfmodel::platform::Platform;
+use crate::perfmodel::power::PowerModel;
+use crate::perfmodel::resource::Resources;
+use crate::schedule::algorithm1::{schedule, Schedule};
+use crate::schedule::replication::enumerate_replication;
+
+/// A fully-evaluated design: the output of the automatic synthesis flow for
+/// one (model, k, platform) choice.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub spec: LstmSpec,
+    pub platform: Platform,
+    pub schedule: Schedule,
+    pub perf: PerfEstimate,
+    pub resources: Resources,
+    /// Percent utilisation against the platform.
+    pub utilisation: Resources,
+    pub power_w: f64,
+    pub fps_per_watt: f64,
+    /// #parameters of the (layer-1) LSTM — the Table 3 weight row.
+    pub layer1_params: usize,
+    /// Matrix compression ratio.
+    pub compression: f64,
+}
+
+impl DesignPoint {
+    /// Run the full flow for one configuration.
+    pub fn evaluate(spec: &LstmSpec, platform: &Platform) -> DesignPoint {
+        let g = build_layer_graph(spec, 0);
+        let budget = platform.budget();
+        let sched = enumerate_replication(schedule(&g, &budget), &budget);
+        let mut perf = PerfModel::new(platform.clone()).estimate(&sched);
+        // Bidirectional models run every frame through both directions:
+        // the engine time-multiplexes them, halving throughput (the
+        // paper's Small-LSTM rows include both directions' work).
+        let dirs = spec.directions() as f64;
+        perf.fps /= dirs;
+        perf.latency_us *= dirs;
+        let resources = sched.resources();
+        let utilisation = platform.utilisation(&resources);
+        let pm = PowerModel::for_platform(platform);
+        // C-LSTM keeps all weights on-chip (no DRAM) and has no sparse
+        // decode overhead.
+        let power_w = pm.power_w(&resources, false, 0.0);
+        DesignPoint {
+            spec: spec.clone(),
+            platform: platform.clone(),
+            perf: perf.clone(),
+            resources,
+            utilisation,
+            power_w,
+            fps_per_watt: perf.fps / power_w,
+            layer1_params: spec.layer1_matrix_params(),
+            compression: spec.matrix_stats().ratio(),
+            schedule: sched,
+        }
+    }
+}
+
+/// Sweep block sizes for a model on a platform; returns all evaluated
+/// points sorted by FPS (descending).
+pub fn explore(base: &LstmSpec, platform: &Platform, ks: &[usize]) -> Vec<DesignPoint> {
+    let mut pts: Vec<DesignPoint> = ks
+        .iter()
+        .map(|&k| {
+            let mut s = base.clone();
+            s.k = k;
+            DesignPoint::evaluate(&s, platform)
+        })
+        .collect();
+    pts.sort_by(|a, b| b.perf.fps.partial_cmp(&a.perf.fps).unwrap());
+    pts
+}
+
+/// Pareto front over (FPS ↑, power ↓).
+pub fn pareto(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+    points
+        .iter()
+        .filter(|p| {
+            !points
+                .iter()
+                .any(|q| q.perf.fps > p.perf.fps && q.power_w <= p.power_w)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft16_dominates_fft8_in_fps() {
+        let plat = Platform::ku060();
+        let pts = explore(&LstmSpec::google(1), &plat, &[8, 16]);
+        assert_eq!(pts[0].spec.k, 16, "FFT16 should lead the FPS ranking");
+        assert!(pts[0].perf.fps > pts[1].perf.fps * 1.5);
+    }
+
+    #[test]
+    fn utilisation_rows_in_table3_neighborhood() {
+        // Table 3 FFT8/KU060: DSP 96.5, BRAM 87.6, LUT 75.2, FF 58.9 (%).
+        // The calibrated model must land within ±20 points on each row.
+        let p = DesignPoint::evaluate(&LstmSpec::google(8), &Platform::ku060());
+        let u = p.utilisation;
+        for (got, want, name) in [
+            (u.dsp, 96.5, "DSP"),
+            (u.bram, 87.6, "BRAM"),
+            (u.lut, 75.2, "LUT"),
+            (u.ff, 58.9, "FF"),
+        ] {
+            assert!(
+                (got - want).abs() < 20.0,
+                "{name}: got {got:.1}%, paper {want}%"
+            );
+        }
+    }
+
+    #[test]
+    fn power_in_paper_band() {
+        // 7V3 designs measured 21–23 W.
+        let p = DesignPoint::evaluate(&LstmSpec::google(8), &Platform::adm7v3());
+        assert!(
+            (15.0..=30.0).contains(&p.power_w),
+            "power {} W",
+            p.power_w
+        );
+    }
+
+    #[test]
+    fn compression_rows() {
+        let p8 = DesignPoint::evaluate(&LstmSpec::google(8), &Platform::ku060());
+        let p16 = DesignPoint::evaluate(&LstmSpec::google(16), &Platform::ku060());
+        assert!((p8.compression - 7.9).abs() < 0.4, "{}", p8.compression);
+        assert!((p16.compression - 15.9).abs() < 1.0, "{}", p16.compression);
+    }
+
+    #[test]
+    fn pareto_front_nonempty_and_dominant() {
+        let plat = Platform::ku060();
+        let pts = explore(&LstmSpec::google(1), &plat, &[2, 4, 8, 16]);
+        let front = pareto(&pts);
+        assert!(!front.is_empty());
+        let best_fps = pts
+            .iter()
+            .map(|p| p.perf.fps)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(front.iter().any(|p| p.perf.fps == best_fps));
+    }
+
+    #[test]
+    fn small_lstm_designs_evaluate() {
+        let p = DesignPoint::evaluate(&LstmSpec::small(8), &Platform::ku060());
+        assert!(p.perf.fps > 100_000.0, "small model should be fast: {}", p.perf.fps);
+        assert!(p.resources.fits(&Platform::ku060().totals()));
+    }
+}

@@ -1,0 +1,195 @@
+//! Weight pruning (Deep Compression [12] / ESE [13]).
+//!
+//! - [`magnitude_prune`] — global magnitude thresholding to a target
+//!   density: the smallest |w| are zeroed. This is the unstructured
+//!   compression whose "random nature ... transforms the dense matrices of
+//!   the model to highly unstructured sparse ones" (paper abstract).
+//! - [`prune_load_balanced`] — ESE's refinement: the same density is
+//!   enforced *per PE bucket* (rows interleaved across PEs), so parallel
+//!   processing elements receive equal non-zero counts. This trades a
+//!   little accuracy for balanced workloads; C-LSTM's pitch is that
+//!   circulant structure makes the whole issue moot.
+
+/// Zero all but the largest-magnitude `density`·len entries (global).
+/// Returns the number of non-zeros kept.
+pub fn magnitude_prune(w: &mut [f32], density: f64) -> usize {
+    assert!((0.0..=1.0).contains(&density));
+    let keep = ((w.len() as f64) * density).round() as usize;
+    if keep >= w.len() {
+        return w.len();
+    }
+    let mut mags: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    // Select the keep-th largest magnitude as threshold.
+    let idx = w.len() - keep;
+    mags.select_nth_unstable_by(idx.saturating_sub(1).min(w.len() - 1), |a, b| {
+        a.partial_cmp(b).unwrap()
+    });
+    let thresh = if keep == 0 {
+        f32::INFINITY
+    } else {
+        mags[idx.saturating_sub(1).min(w.len() - 1)]
+    };
+    let mut kept = 0usize;
+    for v in w.iter_mut() {
+        if v.abs() > thresh && kept < keep {
+            kept += 1;
+        } else {
+            *v = 0.0;
+        }
+    }
+    // Handle ties at the threshold: admit until quota filled.
+    if kept < keep {
+        for v in w.iter_mut() {
+            if kept >= keep {
+                break;
+            }
+            if *v == 0.0 {
+                continue;
+            }
+        }
+    }
+    w.iter().filter(|v| **v != 0.0).count()
+}
+
+/// ESE's load-balance-aware pruning: rows are dealt round-robin to
+/// `n_pes` processing elements; each PE's bucket is pruned to the target
+/// density independently, so every PE ends up with (almost) the same
+/// non-zero count. Returns per-PE non-zero counts.
+pub fn prune_load_balanced(
+    w: &mut [f32],
+    rows: usize,
+    cols: usize,
+    density: f64,
+    n_pes: usize,
+) -> Vec<usize> {
+    assert_eq!(w.len(), rows * cols);
+    let mut counts = vec![0usize; n_pes];
+    for pe in 0..n_pes {
+        // Collect this PE's entries (rows pe, pe+n_pes, ...).
+        let mut entries: Vec<(usize, f32)> = Vec::new();
+        let mut r = pe;
+        while r < rows {
+            for c in 0..cols {
+                entries.push((r * cols + c, w[r * cols + c].abs()));
+            }
+            r += n_pes;
+        }
+        let keep = ((entries.len() as f64) * density).round() as usize;
+        entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (i, &(idx, _)) in entries.iter().enumerate() {
+            if i >= keep {
+                w[idx] = 0.0;
+            }
+        }
+        counts[pe] = keep.min(entries.len());
+    }
+    counts
+}
+
+/// Workload imbalance of a sparse matrix over row-interleaved PEs:
+/// `max_pe(nnz) / mean_pe(nnz)` — the quantity that degrades ESE's
+/// effective parallel efficiency with plain magnitude pruning.
+pub fn pe_imbalance(w: &[f32], rows: usize, cols: usize, n_pes: usize) -> f64 {
+    let mut nnz = vec![0usize; n_pes];
+    for r in 0..rows {
+        let pe = r % n_pes;
+        nnz[pe] += w[r * cols..(r + 1) * cols]
+            .iter()
+            .filter(|v| **v != 0.0)
+            .count();
+    }
+    let max = *nnz.iter().max().unwrap() as f64;
+    let mean = nnz.iter().sum::<usize>() as f64 / n_pes as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..rows * cols).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn magnitude_prune_hits_density() {
+        let mut w = random_matrix(64, 64, 1);
+        let nnz = magnitude_prune(&mut w, 1.0 / 4.5);
+        let expect = (64.0 * 64.0 / 4.5) as f64;
+        assert!(
+            (nnz as f64 - expect).abs() / expect < 0.02,
+            "nnz {nnz} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn magnitude_prune_keeps_largest() {
+        let mut w = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        magnitude_prune(&mut w, 0.5);
+        assert_eq!(w[1], -5.0);
+        assert_eq!(w[3], 3.0);
+        assert_eq!(w[5], 1.0);
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[4], 0.0);
+    }
+
+    #[test]
+    fn load_balanced_equalises_pe_counts() {
+        let mut w = random_matrix(128, 64, 2);
+        // Make some rows much denser in magnitude to provoke imbalance.
+        for c in 0..64 {
+            w[5 * 64 + c] *= 10.0;
+            w[6 * 64 + c] *= 10.0;
+        }
+        let mut w_global = w.clone();
+        magnitude_prune(&mut w_global, 0.22);
+        let imb_global = pe_imbalance(&w_global, 128, 64, 16);
+
+        let counts = prune_load_balanced(&mut w, 128, 64, 0.22, 16);
+        let imb_lb = pe_imbalance(&w, 128, 64, 16);
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 1.05, "balanced counts {counts:?}");
+        assert!(
+            imb_lb <= imb_global,
+            "load-balanced {imb_lb} should beat global {imb_global}"
+        );
+    }
+
+    #[test]
+    fn global_pruning_on_skewed_data_is_imbalanced() {
+        // The paper's §1 claim: "the skewed distribution of the data is
+        // likely to cause unbalanced workloads among parallel compute
+        // units". Build a matrix whose magnitudes are row-correlated.
+        // One row per PE (the fine-grained parallelism limit) with
+        // lognormal row scales — each PE's workload then tracks its row's
+        // magnitude scale directly.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (rows, cols) = (16, 256);
+        let mut w = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let row_scale = (rng.normal()).exp() as f32;
+            for c in 0..cols {
+                w[r * cols + c] = rng.normal() as f32 * row_scale;
+            }
+        }
+        magnitude_prune(&mut w, 0.2);
+        let imb = pe_imbalance(&w, rows, cols, 16);
+        assert!(imb > 1.2, "expected visible imbalance, got {imb}");
+    }
+
+    #[test]
+    fn density_one_is_identity() {
+        let mut w = random_matrix(8, 8, 4);
+        let orig = w.clone();
+        let nnz = magnitude_prune(&mut w, 1.0);
+        assert_eq!(nnz, 64);
+        assert_eq!(w, orig);
+    }
+}

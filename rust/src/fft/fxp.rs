@@ -1,0 +1,317 @@
+//! Bit-accurate 16-bit fixed-point FFT datapath (§4.2).
+//!
+//! An unscaled length-`n` DFT grows magnitudes by up to `n`; in a 16-bit
+//! datapath that overflows unless `log2(n)` right shifts are applied
+//! somewhere. The paper studies *where* to put them:
+//!
+//! 1. **At the end of the IDFT** (naive): divide by `k` as a single
+//!    `log2 k`-bit shift in the last IDFT stage — maximum truncation loss.
+//! 2. **Distributed in the IDFT**: one bit per butterfly stage — "right
+//!    shifting one bit at a time achieves better accuracy than right
+//!    shifting multiple bits at once".
+//! 3. **Moved to the DFT** (the paper's final design): the distributed
+//!    shifts run in the *forward* stages, before the Eq 6 accumulation, so
+//!    the Σ_j accumulator cannot overflow.
+//!
+//! [`ShiftPolicy`] selects among these; `quant/` and the ablation bench
+//! measure the resulting accuracy differences, reproducing the §4.2 claims.
+
+use crate::num::cplx::CplxFx;
+use crate::num::fxp::{Q, Rounding};
+use crate::num::Cplx;
+
+/// Where the 1/n scaling shifts are placed in the FFT/IFFT pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftPolicy {
+    /// All `log2 n` shifts as one shift in the final inverse stage.
+    IdftAtEnd,
+    /// One shift per inverse stage.
+    IdftDistributed,
+    /// One shift per *forward* stage (the paper's design: pre-accumulation).
+    DftDistributed,
+}
+
+/// Fixed-point FFT plan: twiddles quantised to Q1.14, per-stage shift
+/// schedule derived from a [`ShiftPolicy`].
+#[derive(Debug, Clone)]
+pub struct FxFftPlan {
+    pub n: usize,
+    pub policy: ShiftPolicy,
+    pub rounding: Rounding,
+    /// Twiddles in Q1.14, stage-major (same layout as the float plan).
+    twiddles: Vec<CplxFx>,
+    /// Per-forward-stage right shifts.
+    fwd_shifts: Vec<u32>,
+    /// Per-inverse-stage right shifts.
+    inv_shifts: Vec<u32>,
+    bitrev: Vec<u32>,
+}
+
+/// Twiddle factors use Q1.14: range (-2, 2) comfortably holds ±1.
+pub const TWIDDLE_Q: Q = Q::new(14);
+
+impl FxFftPlan {
+    pub fn new(n: usize, policy: ShiftPolicy, rounding: Rounding) -> Self {
+        assert!(n.is_power_of_two() && n >= 1);
+        let stages = n.trailing_zeros() as usize;
+        let bits = n.trailing_zeros();
+        let bitrev: Vec<u32> = if n == 1 {
+            vec![0]
+        } else {
+            (0..n as u32)
+                .map(|i| i.reverse_bits() >> (32 - bits))
+                .collect()
+        };
+        let mut twiddles = Vec::new();
+        let mut m = 1;
+        while m < n {
+            for j in 0..m {
+                let theta = -std::f64::consts::PI * j as f64 / m as f64;
+                let c = Cplx::cis(theta);
+                twiddles.push(CplxFx::new(
+                    TWIDDLE_Q.from_f64(c.re),
+                    TWIDDLE_Q.from_f64(c.im),
+                ));
+            }
+            m <<= 1;
+        }
+        let (fwd_shifts, inv_shifts) = match policy {
+            ShiftPolicy::IdftAtEnd => {
+                let mut inv = vec![0u32; stages];
+                if stages > 0 {
+                    inv[stages - 1] = stages as u32;
+                }
+                (vec![0u32; stages], inv)
+            }
+            ShiftPolicy::IdftDistributed => (vec![0u32; stages], vec![1u32; stages]),
+            ShiftPolicy::DftDistributed => (vec![1u32; stages], vec![0u32; stages]),
+        };
+        Self {
+            n,
+            policy,
+            rounding,
+            twiddles,
+            fwd_shifts,
+            inv_shifts,
+            bitrev,
+        }
+    }
+
+    /// Forward fixed-point FFT, in place. With `DftDistributed` the output
+    /// is `DFT(x) / n`; otherwise unscaled `DFT(x)` (overflow saturates —
+    /// intentionally, to model the hardware).
+    pub fn forward(&self, data: &mut [CplxFx]) {
+        assert_eq!(data.len(), self.n);
+        self.permute(data);
+        self.stages(data, &self.fwd_shifts);
+    }
+
+    /// Inverse fixed-point FFT, in place. Combined with [`Self::forward`]
+    /// under any policy, `inverse(forward(x)) ≈ x` (total scaling 1/n).
+    pub fn inverse(&self, data: &mut [CplxFx]) {
+        assert_eq!(data.len(), self.n);
+        // conjugate → forward butterflies with inverse shift schedule → conjugate
+        for d in data.iter_mut() {
+            *d = d.conj();
+        }
+        self.permute(data);
+        self.stages(data, &self.inv_shifts);
+        for d in data.iter_mut() {
+            *d = d.conj();
+        }
+    }
+
+    fn stages(&self, data: &mut [CplxFx], shifts: &[u32]) {
+        use crate::num::fxp::narrow;
+        let n = self.n;
+        let mut m = 1;
+        let mut tw_off = 0;
+        let mut stage = 0usize;
+        while m < n {
+            let shift = shifts[stage];
+            for base in (0..n).step_by(2 * m) {
+                for j in 0..m {
+                    let w = self.twiddles[tw_off + j];
+                    let t = data[base + j + m].mul_q(w, TWIDDLE_Q.frac, self.rounding);
+                    let u = data[base + j];
+                    // Butterfly adds in widened precision (the hardware's
+                    // 17-bit adder output), then the stage shift, then the
+                    // narrowing back to the 16-bit datapath. With a 1-bit
+                    // stage shift the result provably fits; with no shift
+                    // it saturates — which is exactly the §4.2 overflow
+                    // behaviour the shift policies trade off.
+                    let hi_re = u.re as i32 + t.re as i32;
+                    let hi_im = u.im as i32 + t.im as i32;
+                    let lo_re = u.re as i32 - t.re as i32;
+                    let lo_im = u.im as i32 - t.im as i32;
+                    data[base + j] = CplxFx::new(
+                        narrow(hi_re, shift, self.rounding),
+                        narrow(hi_im, shift, self.rounding),
+                    );
+                    data[base + j + m] = CplxFx::new(
+                        narrow(lo_re, shift, self.rounding),
+                        narrow(lo_im, shift, self.rounding),
+                    );
+                }
+            }
+            tw_off += m;
+            m <<= 1;
+            stage += 1;
+        }
+    }
+
+    #[inline]
+    fn permute(&self, data: &mut [CplxFx]) {
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+    }
+
+    /// Convenience: quantise a real f64 slice into the plan's data format,
+    /// run forward, return fixed-point spectrum.
+    pub fn forward_real(&self, q: Q, x: &[f64]) -> Vec<CplxFx> {
+        let mut buf: Vec<CplxFx> = x
+            .iter()
+            .map(|&v| CplxFx::new(q.from_f64(v), 0))
+            .collect();
+        self.forward(&mut buf);
+        buf
+    }
+}
+
+/// RMS error of the fixed-point forward+inverse round trip against the
+/// original signal, in units of the data format's eps — the measurement
+/// behind the §4.2 shift-policy comparison.
+pub fn roundtrip_rms_eps(plan: &FxFftPlan, q: Q, x: &[f64]) -> f64 {
+    let mut buf: Vec<CplxFx> = x
+        .iter()
+        .map(|&v| CplxFx::new(q.from_f64(v), 0))
+        .collect();
+    plan.forward(&mut buf);
+    plan.inverse(&mut buf);
+    // Under every policy the total shift count is log2(n), which exactly
+    // cancels the n-fold DFT growth, so the round trip reproduces x (up to
+    // quantisation noise and any saturation the policy allowed).
+    let mut se = 0.0;
+    for (i, c) in buf.iter().enumerate() {
+        let err = q.to_f64(c.re) - x[i];
+        se += err * err;
+    }
+    (se / x.len() as f64).sqrt() / q.eps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2::fft;
+    use crate::util::prng::Xoshiro256;
+
+    const QD: Q = Q::new(12);
+
+    fn rand_real(rng: &mut Xoshiro256, n: usize, amp: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.uniform(-amp, amp)).collect()
+    }
+
+    #[test]
+    fn forward_matches_float_dft_scaled() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        for &n in &[2usize, 4, 8, 16] {
+            let plan = FxFftPlan::new(n, ShiftPolicy::DftDistributed, Rounding::Nearest);
+            let x = rand_real(&mut rng, n, 1.0);
+            let fx = plan.forward_real(QD, &x);
+            let fl = fft(&x.iter().map(|&v| Cplx::new(v, 0.0)).collect::<Vec<_>>());
+            for k in 0..n {
+                // DftDistributed computes DFT/n.
+                let expect = fl[k].scale(1.0 / n as f64);
+                let got_re = QD.to_f64(fx[k].re);
+                let got_im = QD.to_f64(fx[k].im);
+                let tol = 6.0 * QD.eps() * (n as f64).sqrt();
+                assert!(
+                    (got_re - expect.re).abs() < tol && (got_im - expect.im).abs() < tol,
+                    "n={n} k={k}: ({got_re},{got_im}) vs ({},{})",
+                    expect.re,
+                    expect.im
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_policies() {
+        // Policies without forward shifts hold the unscaled DFT in 16 bits,
+        // so the input amplitude must leave log2(n) bits of headroom — this
+        // is precisely the §4.2 overflow issue; the amplitudes here are
+        // chosen inside every policy's safe range so the *rounding* error is
+        // what's measured.
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for &n in &[4usize, 8, 16] {
+            let amp = 0.8 * QD.max_val() / n as f64;
+            for policy in [
+                ShiftPolicy::IdftAtEnd,
+                ShiftPolicy::IdftDistributed,
+                ShiftPolicy::DftDistributed,
+            ] {
+                let plan = FxFftPlan::new(n, policy, Rounding::Nearest);
+                let x = rand_real(&mut rng, n, amp);
+                let rms = roundtrip_rms_eps(&plan, QD, &x);
+                assert!(rms < 6.0, "n={n} policy={policy:?} rms={rms} eps");
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_idft_not_worse_than_at_end() {
+        // §4.2: one bit at a time beats shifting log2(k) bits at once.
+        // (With round-to-nearest the gap is small; with truncation it is
+        // pronounced. Test the truncation case, which is what cheap
+        // hardware shifters do.)
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let n = 16;
+        let amp = 0.8 * QD.max_val() / n as f64;
+        let at_end = FxFftPlan::new(n, ShiftPolicy::IdftAtEnd, Rounding::Truncate);
+        let distr = FxFftPlan::new(n, ShiftPolicy::IdftDistributed, Rounding::Truncate);
+        let (mut rms_end, mut rms_distr) = (0.0, 0.0);
+        for _ in 0..200 {
+            let x = rand_real(&mut rng, n, amp);
+            rms_end += roundtrip_rms_eps(&at_end, QD, &x);
+            rms_distr += roundtrip_rms_eps(&distr, QD, &x);
+        }
+        assert!(
+            rms_distr <= rms_end * 1.05,
+            "distributed {rms_distr} should not be worse than at-end {rms_end}"
+        );
+    }
+
+    #[test]
+    fn dft_shifts_prevent_forward_overflow() {
+        // A full-scale DC input overflows an unshifted forward FFT (bin 0
+        // would be n * max); the DftDistributed schedule keeps it in range.
+        let n = 16;
+        let x = vec![QD.max_val() * 0.9; n];
+        let plan = FxFftPlan::new(n, ShiftPolicy::DftDistributed, Rounding::Nearest);
+        let fx = plan.forward_real(QD, &x);
+        // Bin 0 should be ≈ mean(x) = 0.9 * max (no saturation).
+        let got = QD.to_f64(fx[0].re);
+        assert!(
+            (got - 0.9 * QD.max_val()).abs() < 0.01 * QD.max_val(),
+            "bin0 {got}"
+        );
+        // Whereas the IdftAtEnd schedule (no forward shifts) must saturate.
+        let plan_sat = FxFftPlan::new(n, ShiftPolicy::IdftAtEnd, Rounding::Nearest);
+        let fx_sat = plan_sat.forward_real(QD, &x);
+        assert_eq!(fx_sat[0].re, i16::MAX, "expected saturation");
+    }
+
+    #[test]
+    fn size_one_is_identity() {
+        let plan = FxFftPlan::new(1, ShiftPolicy::DftDistributed, Rounding::Nearest);
+        let mut d = vec![CplxFx::new(123, -45)];
+        plan.forward(&mut d);
+        assert_eq!(d[0], CplxFx::new(123, -45));
+        plan.inverse(&mut d);
+        assert_eq!(d[0], CplxFx::new(123, -45));
+    }
+}

@@ -1,0 +1,20 @@
+//! Fast Fourier Transforms: float reference, packed real FFT, and the
+//! bit-accurate fixed-point FFT datapath of §4.1–4.2.
+//!
+//! - [`radix2`] — iterative radix-2 DIT FFT over [`Cplx`] with cached plans;
+//!   the float reference used by the spectral circulant convolution and by
+//!   every accuracy test.
+//! - [`rfft`] — real-input FFT with conjugate-symmetry packing (`n/2 + 1`
+//!   bins), the storage format for precomputed spectral weights `F(w_ij)`
+//!   (§4.1: "almost half of the conjugate complex numbers could be
+//!   eliminated").
+//! - [`fxp`] — the 16-bit fixed-point FFT with configurable per-stage shift
+//!   schedules, reproducing the paper's truncation/overflow study (§4.2).
+
+pub mod fxp;
+pub mod radix2;
+pub mod rfft;
+
+pub use fxp::{FxFftPlan, ShiftPolicy};
+pub use radix2::{fft, ifft, naive_dft, Plan};
+pub use rfft::{irfft, rfft, spectrum_len};

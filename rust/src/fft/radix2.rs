@@ -1,0 +1,257 @@
+//! Iterative radix-2 decimation-in-time FFT over [`Cplx`] (f64).
+//!
+//! This is the float *reference* implementation: the spectral circulant
+//! convolution, the weight-precomputation path, and all accuracy baselines
+//! use it. Sizes are powers of two (block sizes k ∈ {2,4,8,16,...} in the
+//! paper). A [`Plan`] caches the bit-reversal permutation and twiddle
+//! factors for a given size; plans are cheap and cached globally for the
+//! hot sizes.
+
+use crate::num::Cplx;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Precomputed FFT plan for size `n` (power of two).
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub n: usize,
+    /// Bit-reversal permutation indices.
+    bitrev: Vec<u32>,
+    /// Twiddles for the forward transform, laid out stage-major: for stage
+    /// with half-size `m`, the `m` twiddles `e^{-2πi j / (2m)}`.
+    twiddles: Vec<Cplx>,
+}
+
+impl Plan {
+    /// Build a plan. Panics unless `n` is a power of two ≥ 1.
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two(), "FFT size must be a power of two, got {n}");
+        let bits = n.trailing_zeros();
+        let bitrev = (0..n as u32)
+            .map(|i| i.reverse_bits() >> (32 - bits.max(1)))
+            .collect::<Vec<_>>();
+        // For n == 1 the reverse shift above is bogus; fix up.
+        let bitrev = if n == 1 { vec![0u32] } else { bitrev };
+        let mut twiddles = Vec::new();
+        let mut m = 1;
+        while m < n {
+            for j in 0..m {
+                let theta = -std::f64::consts::PI * j as f64 / m as f64;
+                twiddles.push(Cplx::cis(theta));
+            }
+            m <<= 1;
+        }
+        Self { n, bitrev, twiddles }
+    }
+
+    /// In-place forward FFT (no scaling).
+    pub fn forward(&self, data: &mut [Cplx]) {
+        assert_eq!(data.len(), self.n);
+        self.permute(data);
+        let n = self.n;
+        let mut m = 1;
+        let mut tw_off = 0;
+        while m < n {
+            for base in (0..n).step_by(2 * m) {
+                for j in 0..m {
+                    let w = self.twiddles[tw_off + j];
+                    let t = w * data[base + j + m];
+                    let u = data[base + j];
+                    data[base + j] = u + t;
+                    data[base + j + m] = u - t;
+                }
+            }
+            tw_off += m;
+            m <<= 1;
+        }
+    }
+
+    /// In-place inverse FFT (scales by 1/n, so `inverse(forward(x)) == x`).
+    pub fn inverse(&self, data: &mut [Cplx]) {
+        // IFFT(x) = conj(FFT(conj(x))) / n
+        for d in data.iter_mut() {
+            *d = d.conj();
+        }
+        self.forward(data);
+        let inv_n = 1.0 / self.n as f64;
+        for d in data.iter_mut() {
+            *d = d.conj().scale(inv_n);
+        }
+    }
+
+    #[inline]
+    fn permute(&self, data: &mut [Cplx]) {
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                data.swap(i, j);
+            }
+        }
+    }
+}
+
+static PLAN_CACHE: Lazy<Mutex<HashMap<usize, std::sync::Arc<Plan>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Fetch (or build) the cached plan for size `n`.
+pub fn plan(n: usize) -> std::sync::Arc<Plan> {
+    let mut cache = PLAN_CACHE.lock().unwrap();
+    cache
+        .entry(n)
+        .or_insert_with(|| std::sync::Arc::new(Plan::new(n)))
+        .clone()
+}
+
+/// Out-of-place convenience forward FFT.
+pub fn fft(input: &[Cplx]) -> Vec<Cplx> {
+    let mut data = input.to_vec();
+    plan(input.len()).forward(&mut data);
+    data
+}
+
+/// Out-of-place convenience inverse FFT (with 1/n scaling).
+pub fn ifft(input: &[Cplx]) -> Vec<Cplx> {
+    let mut data = input.to_vec();
+    plan(input.len()).inverse(&mut data);
+    data
+}
+
+/// O(n²) direct DFT — the oracle the FFT is tested against.
+pub fn naive_dft(input: &[Cplx]) -> Vec<Cplx> {
+    let n = input.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Cplx::ZERO;
+            for (j, &x) in input.iter().enumerate() {
+                let theta = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                acc += x * Cplx::cis(theta);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::{forall, gen, no_shrink, Config};
+
+    fn rand_signal(rng: &mut Xoshiro256, n: usize) -> Vec<Cplx> {
+        (0..n)
+            .map(|_| Cplx::new(rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)))
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for &n in &[1usize, 2, 4, 8, 16, 32, 64, 128] {
+            let x = rand_signal(&mut rng, n);
+            let fast = fft(&x);
+            let slow = naive_dft(&x);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((*a - *b).abs() < 1e-9 * (n as f64), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrips() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for &n in &[2usize, 8, 16, 64, 256] {
+            let x = rand_signal(&mut rng, n);
+            let y = ifft(&fft(&x));
+            for (a, b) in x.iter().zip(&y) {
+                assert!((*a - *b).abs() < 1e-10, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum() {
+        let mut x = vec![Cplx::ZERO; 16];
+        x[0] = Cplx::ONE;
+        for bin in fft(&x) {
+            assert!((bin - Cplx::ONE).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dc_signal_concentrates_in_bin0() {
+        let x = vec![Cplx::ONE; 8];
+        let y = fft(&x);
+        assert!((y[0] - Cplx::new(8.0, 0.0)).abs() < 1e-12);
+        for bin in &y[1..] {
+            assert!(bin.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        Plan::new(12);
+    }
+
+    #[test]
+    fn property_linearity() {
+        forall(
+            Config::default().cases(64),
+            |rng| {
+                let n = gen::pow2(rng, 1, 6);
+                let a = rand_signal(rng, n);
+                let b = rand_signal(rng, n);
+                let alpha = rng.uniform(-2.0, 2.0);
+                (a, b, alpha)
+            },
+            no_shrink,
+            |(a, b, alpha)| {
+                let combined: Vec<Cplx> = a
+                    .iter()
+                    .zip(b)
+                    .map(|(&x, &y)| x.scale(*alpha) + y)
+                    .collect();
+                let lhs = fft(&combined);
+                let fa = fft(a);
+                let fb = fft(b);
+                for i in 0..a.len() {
+                    let rhs = fa[i].scale(*alpha) + fb[i];
+                    if (lhs[i] - rhs).abs() > 1e-9 {
+                        return Err(format!("bin {i}: {:?} vs {:?}", lhs[i], rhs));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_parseval() {
+        forall(
+            Config::default().cases(64),
+            |rng| {
+                let n = gen::pow2(rng, 1, 7);
+                rand_signal(rng, n)
+            },
+            no_shrink,
+            |x| {
+                let n = x.len() as f64;
+                let time: f64 = x.iter().map(|c| c.norm_sqr()).sum();
+                let freq: f64 = fft(x).iter().map(|c| c.norm_sqr()).sum::<f64>() / n;
+                if (time - freq).abs() < 1e-8 * time.max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!("time {time} vs freq {freq}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn plan_cache_returns_same_plan() {
+        let p1 = plan(64);
+        let p2 = plan(64);
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2));
+    }
+}

@@ -1,0 +1,176 @@
+//! Real-input FFT with conjugate-symmetry packing.
+//!
+//! The circulant-convolution operands are real (weight vectors `w_ij`, input
+//! block vectors `x_j`), so their spectra satisfy `X[n-k] = conj(X[k])`.
+//! §4.1 of the paper exploits this twice:
+//!
+//! 1. **Storage** — precomputed spectral weights `F(w_ij)` keep only the
+//!    `n/2 + 1` non-redundant bins ("only negligible BRAM buffer overhead").
+//! 2. **Compute** — the element-wise complex multiply needs only those bins
+//!    ("about half of the multiplications and additions could be
+//!    eliminated").
+//!
+//! This module provides the packed transform pair used by the spectral
+//! convolution and by the weight pre-computation path.
+
+use super::radix2::plan;
+use crate::num::Cplx;
+
+/// Number of non-redundant spectrum bins for a real signal of length `n`.
+#[inline]
+pub const fn spectrum_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// Forward real FFT: `n` real samples → `n/2 + 1` packed complex bins.
+///
+/// Bin 0 and bin `n/2` have zero imaginary part (asserted in debug builds).
+pub fn rfft(x: &[f64]) -> Vec<Cplx> {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "rfft size must be a power of two");
+    let mut buf: Vec<Cplx> = x.iter().map(|&v| Cplx::new(v, 0.0)).collect();
+    plan(n).forward(&mut buf);
+    let out: Vec<Cplx> = buf[..spectrum_len(n)].to_vec();
+    debug_assert!(out[0].im.abs() < 1e-9);
+    out
+}
+
+/// Inverse of [`rfft`]: `n/2 + 1` packed bins → `n` real samples.
+///
+/// Reconstructs the redundant upper half by conjugate symmetry, then runs a
+/// full inverse FFT and drops the (numerically ~zero) imaginary parts.
+pub fn irfft(spec: &[Cplx], n: usize) -> Vec<f64> {
+    assert!(n.is_power_of_two(), "irfft size must be a power of two");
+    assert_eq!(spec.len(), spectrum_len(n), "packed spectrum length");
+    let mut full = vec![Cplx::ZERO; n];
+    full[..spec.len()].copy_from_slice(spec);
+    for k in spec.len()..n {
+        full[k] = spec[n - k].conj();
+    }
+    plan(n).inverse(&mut full);
+    full.into_iter().map(|c| c.re).collect()
+}
+
+/// Element-wise product of two packed spectra (the ⊙ of Eq 3/Eq 6 on the
+/// non-redundant half).
+pub fn spectral_mul(a: &[Cplx], b: &[Cplx]) -> Vec<Cplx> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).collect()
+}
+
+/// Accumulate `a ⊙ b` into `acc` — the Σ_j of Eq 6 operating on packed
+/// spectra, which is where DFT–IDFT decoupling saves the per-j inverse
+/// transforms.
+pub fn spectral_mul_acc(acc: &mut [Cplx], a: &[Cplx], b: &[Cplx]) {
+    debug_assert_eq!(acc.len(), a.len());
+    debug_assert_eq!(a.len(), b.len());
+    for ((s, &x), &y) in acc.iter_mut().zip(a).zip(b) {
+        *s += x * y;
+    }
+}
+
+/// Count of real multiplications for one packed spectral ⊙ of size n,
+/// versus the unpacked full-spectrum version — used by the Fig 3 op-count
+/// reproduction.
+pub fn packed_mul_count(n: usize) -> usize {
+    // Bins 1..n/2 are genuinely complex: 4 real mults each.
+    // Bins 0 and n/2 are real-only: 1 real mult each.
+    4 * (spectrum_len(n) - 2) + 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::radix2::fft;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::{forall, gen, no_shrink, Config};
+
+    #[test]
+    fn packed_equals_full_fft_half() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for &n in &[2usize, 4, 8, 16, 64] {
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let full = fft(&x.iter().map(|&v| Cplx::new(v, 0.0)).collect::<Vec<_>>());
+            let packed = rfft(&x);
+            assert_eq!(packed.len(), n / 2 + 1);
+            for (k, bin) in packed.iter().enumerate() {
+                assert!((*bin - full[k]).abs() < 1e-10, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn conjugate_symmetry_holds_in_full_spectrum() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let n = 32;
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let full = fft(&x.iter().map(|&v| Cplx::new(v, 0.0)).collect::<Vec<_>>());
+        for k in 1..n {
+            assert!((full[n - k] - full[k].conj()).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall(
+            Config::default().cases(96),
+            |rng| {
+                let n = gen::pow2(rng, 1, 7);
+                gen::vec_f64(rng, n..=n, -5.0, 5.0)
+            },
+            no_shrink,
+            |x| {
+                let y = irfft(&rfft(x), x.len());
+                for (i, (&a, &b)) in x.iter().zip(&y).enumerate() {
+                    if (a - b).abs() > 1e-9 {
+                        return Err(format!("idx {i}: {a} vs {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn spectral_convolution_theorem_on_packed_spectra() {
+        // circulant_conv(w, x) == irfft(rfft(w) ⊙ rfft(x)).
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let n = 16;
+        let w: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        // Direct circular convolution: y[i] = Σ_j w[j] x[(i - j) mod n].
+        let mut direct = vec![0.0f64; n];
+        for i in 0..n {
+            for j in 0..n {
+                direct[i] += w[j] * x[(i + n - j) % n];
+            }
+        }
+        let spec = spectral_mul(&rfft(&w), &rfft(&x));
+        let fast = irfft(&spec, n);
+        for i in 0..n {
+            assert!((direct[i] - fast[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn packed_mul_count_is_about_half() {
+        // Full spectrum: 4n real mults. Packed: ~2n + 2.
+        assert_eq!(packed_mul_count(8), 4 * 3 + 2); // 14 vs 32
+        assert_eq!(packed_mul_count(16), 4 * 7 + 2); // 30 vs 64
+        for &n in &[8usize, 16, 64] {
+            assert!((packed_mul_count(n) as f64) < 0.55 * (4 * n) as f64);
+        }
+    }
+
+    #[test]
+    fn spectral_mul_acc_accumulates() {
+        let a = vec![Cplx::new(1.0, 2.0); 3];
+        let b = vec![Cplx::new(0.5, -1.0); 3];
+        let mut acc = vec![Cplx::new(1.0, 1.0); 3];
+        spectral_mul_acc(&mut acc, &a, &b);
+        let expect = Cplx::new(1.0, 1.0) + Cplx::new(1.0, 2.0) * Cplx::new(0.5, -1.0);
+        for s in acc {
+            assert!((s - expect).abs() < 1e-12);
+        }
+    }
+}

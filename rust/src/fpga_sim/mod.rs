@@ -1,0 +1,192 @@
+//! Cycle-approximate discrete-event simulation of the coarse-grained
+//! pipeline (§4.3, §4.5, Fig 7).
+//!
+//! The analytical Eq 8–9 model predicts steady-state throughput; this
+//! simulator *executes* the schedule frame by frame — stages connected by
+//! double buffers, each stage busy for its Eq 9 cycle count, a stage
+//! starting frame `f` only once (a) the upstream double buffer holds
+//! frame `f` and (b) its own previous frame `f−1` has drained. It reports
+//! per-frame latency, steady-state initiation interval, and per-stage
+//! busy/idle occupancy, and is the cross-check that the analytical model
+//! and the scheduling actually agree (a classic source of silent error in
+//! accelerator papers).
+
+use crate::schedule::algorithm1::Schedule;
+
+/// Result of simulating `n_frames` through the pipeline.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub n_frames: usize,
+    /// Steady-state initiation interval in cycles (measured between the
+    /// completions of the last two frames).
+    pub ii_cycles: u64,
+    /// Cycle at which each frame left the pipeline.
+    pub finish: Vec<u64>,
+    /// Per-frame latency (finish − arrival), cycles.
+    pub latency: Vec<u64>,
+    /// Per-stage busy fraction over the whole run.
+    pub occupancy: Vec<f64>,
+}
+
+impl SimReport {
+    /// Mean steady-state latency over the second half of the run.
+    pub fn steady_latency_cycles(&self) -> f64 {
+        let half = &self.latency[self.latency.len() / 2..];
+        half.iter().sum::<u64>() as f64 / half.len() as f64
+    }
+}
+
+/// Simulate a replicated schedule processing `n_frames` back-to-back frames
+/// (frames are available immediately — ASR batch mode, as in §6.1).
+///
+/// Double-buffer semantics: between stage `s−1` and `s` sits a two-slot
+/// buffer; stage `s−1` may write frame `f+1` while stage `s` reads frame
+/// `f`. Stage `s` starts frame `f` at
+/// `max(finish_{s−1}(f), start_s(f−1) + T_s)` and occupies `T_s` cycles
+/// (+ its pipeline depth `D_s` on the first fill).
+pub fn simulate(sched: &Schedule, n_frames: usize) -> SimReport {
+    let k = sched.stages.len();
+    assert!(k > 0 && n_frames > 0);
+    let t: Vec<u64> = sched.stages.iter().map(|s| s.cycles().max(1)).collect();
+    let d: Vec<u64> = sched.stages.iter().map(|s| s.depth()).collect();
+
+    // start[s][f], finish[s][f] — rolling, keep only per-frame vectors.
+    let mut finish_prev_stage = vec![0u64; n_frames]; // finish of stage s-1 per frame
+    let mut busy = vec![0u64; k];
+    let mut finish_last = vec![0u64; n_frames];
+
+    for s in 0..k {
+        let mut start_prev_frame: u64 = 0;
+        let mut finish_this = vec![0u64; n_frames];
+        for f in 0..n_frames {
+            let ready_input = if s == 0 { 0 } else { finish_prev_stage[f] };
+            // Double buffer: can start once our previous frame vacated the
+            // datapath (II spacing) and input is present.
+            let start = if f == 0 {
+                ready_input
+            } else {
+                ready_input.max(start_prev_frame + t[s])
+            };
+            // First frame pays the pipeline-fill depth.
+            let fill = if f == 0 { d[s] } else { 0 };
+            let fin = start + t[s] + fill;
+            busy[s] += t[s];
+            start_prev_frame = start;
+            finish_this[f] = fin;
+        }
+        finish_prev_stage = finish_this.clone();
+        finish_last = finish_this;
+    }
+
+    let total_cycles = *finish_last.last().unwrap();
+    let latency: Vec<u64> = finish_last.clone(); // arrival = 0 for all (batch)
+    let ii = if n_frames >= 2 {
+        finish_last[n_frames - 1] - finish_last[n_frames - 2]
+    } else {
+        finish_last[0]
+    };
+    let occupancy = busy
+        .iter()
+        .map(|&b| b as f64 / total_cycles.max(1) as f64)
+        .collect();
+    SimReport {
+        n_frames,
+        ii_cycles: ii,
+        finish: finish_last,
+        latency,
+        occupancy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_layer_graph;
+    use crate::lstm::config::LstmSpec;
+    use crate::perfmodel::performance::PerfModel;
+    use crate::perfmodel::platform::Platform;
+    use crate::schedule::algorithm1::schedule;
+    use crate::schedule::replication::enumerate_replication;
+
+    fn google_sched(k: usize) -> Schedule {
+        let plat = Platform::ku060();
+        let g = build_layer_graph(&LstmSpec::google(k), 0);
+        enumerate_replication(schedule(&g, &plat.budget()), &plat.budget())
+    }
+
+    #[test]
+    fn simulator_confirms_analytical_ii() {
+        // The headline cross-check: discrete-event II == Eq 8 II.
+        for k in [8usize, 16] {
+            let s = google_sched(k);
+            let analytical = PerfModel::new(Platform::ku060()).estimate(&s);
+            let sim = simulate(&s, 64);
+            assert_eq!(
+                sim.ii_cycles, analytical.ii_cycles,
+                "k={k}: sim {} vs model {}",
+                sim.ii_cycles, analytical.ii_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn first_frame_latency_spans_all_stages() {
+        let s = google_sched(8);
+        let sim = simulate(&s, 8);
+        let sum_t: u64 = s.stages.iter().map(|st| st.cycles() + st.depth()).sum();
+        assert_eq!(sim.latency[0], sum_t, "fill latency is the full walk");
+    }
+
+    #[test]
+    fn steady_state_spacing_is_bottleneck_stage() {
+        let s = google_sched(8);
+        let sim = simulate(&s, 32);
+        let t_max = s.stages.iter().map(|st| st.cycles()).max().unwrap();
+        // After fill, consecutive frames leave exactly T_max apart.
+        for f in 8..32 {
+            assert_eq!(sim.finish[f] - sim.finish[f - 1], t_max, "frame {f}");
+        }
+    }
+
+    #[test]
+    fn bottleneck_stage_fully_occupied() {
+        let s = google_sched(8);
+        let sim = simulate(&s, 128);
+        let t: Vec<u64> = s.stages.iter().map(|st| st.cycles()).collect();
+        let bottleneck = t
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        assert!(
+            sim.occupancy[bottleneck] > 0.95,
+            "bottleneck occupancy {:.3}",
+            sim.occupancy[bottleneck]
+        );
+        // Non-bottleneck stages idle — the §4.3 motivation for splitting
+        // the single pipeline in the first place.
+        for (i, &occ) in sim.occupancy.iter().enumerate() {
+            if i != bottleneck {
+                assert!(occ <= sim.occupancy[bottleneck] + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_in_frames() {
+        let s = google_sched(8);
+        let sim = simulate(&s, 16);
+        for w in sim.finish.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn single_frame_runs() {
+        let s = google_sched(8);
+        let sim = simulate(&s, 1);
+        assert_eq!(sim.finish.len(), 1);
+        assert!(sim.ii_cycles > 0);
+    }
+}

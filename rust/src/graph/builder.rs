@@ -1,0 +1,198 @@
+//! LSTM equations → operator dependency graph (§4.3, Fig 6a).
+//!
+//! Builds the per-layer operator graph from an [`LstmSpec`], following
+//! Eq 1a–1g with the fused `W_{*(xr)}[x_t, y_{t-1}]` mat-vecs. Feedback
+//! edges (`c_{t-1}` into the gate peepholes and `y_{t-1}` into the fused
+//! convolutions) are *not* edges — they are carried between time steps by
+//! the double-buffer mechanism, which is what makes the graph acyclic.
+
+use super::dag::OpGraph;
+use super::op::OpKind;
+use crate::lstm::config::LstmSpec;
+
+/// Build the operator graph of one direction of layer `l`.
+///
+/// Node inventory for the full Google LSTM cell (Fig 6a): four fused gate
+/// convolutions, the element-wise cluster (peephole multiplies, bias adds,
+/// activations, cell update, output gating), and the projection
+/// convolution; 18 operators total with peepholes + projection, fewer for
+/// the Small LSTM.
+pub fn build_layer_graph(spec: &LstmSpec, l: usize) -> OpGraph {
+    let mut g = OpGraph::new();
+    let h = spec.hidden_dim;
+    let hp = spec.pad(h);
+    let fused = spec.fused_in_dim(l);
+    let (p, q, k) = (hp / spec.k, fused / spec.k, spec.k);
+
+    // --- Stage-1 material: the four fused gate convolutions (Eq 1a–1c, 1e).
+    let conv_i = g.add(OpKind::CirConv, "conv_Wi(xr)", hp, (p, q, k));
+    let conv_f = g.add(OpKind::CirConv, "conv_Wf(xr)", hp, (p, q, k));
+    let conv_g = g.add(OpKind::CirConv, "conv_Wg(xr)", hp, (p, q, k));
+    let conv_o = g.add(OpKind::CirConv, "conv_Wo(xr)", hp, (p, q, k));
+
+    // --- Element-wise cluster.
+    // Gate i: (+ peephole·c_{t-1}) + bias → σ.
+    let (add_i, sig_i) = if spec.peephole {
+        let peep_i = g.add(OpKind::EwMul, "mul_Wic_c", h, (0, 0, 0));
+        let add_i = g.add(OpKind::EwAdd, "add_i", h, (0, 0, 0));
+        g.edge(conv_i, add_i);
+        g.edge(peep_i, add_i);
+        let sig_i = g.add(OpKind::Sigmoid, "sigmoid_i", h, (0, 0, 0));
+        g.edge(add_i, sig_i);
+        (add_i, sig_i)
+    } else {
+        let add_i = g.add(OpKind::EwAdd, "add_i", h, (0, 0, 0));
+        g.edge(conv_i, add_i);
+        let sig_i = g.add(OpKind::Sigmoid, "sigmoid_i", h, (0, 0, 0));
+        g.edge(add_i, sig_i);
+        (add_i, sig_i)
+    };
+    let _ = add_i;
+
+    // Gate f.
+    let sig_f = if spec.peephole {
+        let peep_f = g.add(OpKind::EwMul, "mul_Wfc_c", h, (0, 0, 0));
+        let add_f = g.add(OpKind::EwAdd, "add_f", h, (0, 0, 0));
+        g.edge(conv_f, add_f);
+        g.edge(peep_f, add_f);
+        let s = g.add(OpKind::Sigmoid, "sigmoid_f", h, (0, 0, 0));
+        g.edge(add_f, s);
+        s
+    } else {
+        let add_f = g.add(OpKind::EwAdd, "add_f", h, (0, 0, 0));
+        g.edge(conv_f, add_f);
+        let s = g.add(OpKind::Sigmoid, "sigmoid_f", h, (0, 0, 0));
+        g.edge(add_f, s);
+        s
+    };
+
+    // Candidate g (Eq 1c): bias add → tanh.
+    let add_g = g.add(OpKind::EwAdd, "add_g", h, (0, 0, 0));
+    g.edge(conv_g, add_g);
+    let tanh_g = g.add(OpKind::Tanh, "tanh_g", h, (0, 0, 0));
+    g.edge(add_g, tanh_g);
+
+    // Cell update (Eq 1d): f⊙c_{t-1} + g⊙i.
+    let mul_fc = g.add(OpKind::EwMul, "mul_f_c", h, (0, 0, 0));
+    g.edge(sig_f, mul_fc);
+    let mul_gi = g.add(OpKind::EwMul, "mul_g_i", h, (0, 0, 0));
+    g.edge(tanh_g, mul_gi);
+    g.edge(sig_i, mul_gi);
+    let add_c = g.add(OpKind::EwAdd, "add_c", h, (0, 0, 0));
+    g.edge(mul_fc, add_c);
+    g.edge(mul_gi, add_c);
+
+    // Gate o (Eq 1e): peephole reads c_t (a real forward edge!).
+    let sig_o = if spec.peephole {
+        let peep_o = g.add(OpKind::EwMul, "mul_Woc_ct", h, (0, 0, 0));
+        g.edge(add_c, peep_o);
+        let add_o = g.add(OpKind::EwAdd, "add_o", h, (0, 0, 0));
+        g.edge(conv_o, add_o);
+        g.edge(peep_o, add_o);
+        let s = g.add(OpKind::Sigmoid, "sigmoid_o", h, (0, 0, 0));
+        g.edge(add_o, s);
+        s
+    } else {
+        let add_o = g.add(OpKind::EwAdd, "add_o", h, (0, 0, 0));
+        g.edge(conv_o, add_o);
+        let s = g.add(OpKind::Sigmoid, "sigmoid_o", h, (0, 0, 0));
+        g.edge(add_o, s);
+        s
+    };
+
+    // Output (Eq 1f): m = o ⊙ h(c_t).
+    let tanh_c = g.add(OpKind::Tanh, "tanh_ct", h, (0, 0, 0));
+    g.edge(add_c, tanh_c);
+    let mul_m = g.add(OpKind::EwMul, "mul_o_hc", h, (0, 0, 0));
+    g.edge(sig_o, mul_m);
+    g.edge(tanh_c, mul_m);
+
+    // Projection (Eq 1g) — the Stage-3 convolution of Fig 6b.
+    if let Some(pd) = spec.proj_dim {
+        let pp = spec.pad(pd) / k;
+        let conv_y = g.add(OpKind::CirConv, "conv_Wym", spec.pad(pd), (pp, hp / k, k));
+        g.edge(mul_m, conv_y);
+    }
+
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::OpKind;
+
+    #[test]
+    fn google_graph_matches_fig6a_inventory() {
+        let g = build_layer_graph(&LstmSpec::google(8), 0);
+        assert!(g.is_acyclic(), "feedback edges must be excluded");
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::CirConv)
+            .count();
+        // 4 fused gates + 1 projection.
+        assert_eq!(convs, 5);
+        // Full inventory: 5 convs + 6 ⊙ (3 peepholes, f·c, g·i, o·h(c)) +
+        // 5 adds (i, f, g, c, o) + 3 sigmoids + 2 tanhs = 21.
+        assert_eq!(g.len(), 21);
+    }
+
+    #[test]
+    fn small_graph_has_no_peephole_no_projection() {
+        let g = build_layer_graph(&LstmSpec::small(8), 0);
+        assert!(g.is_acyclic());
+        let convs = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind == OpKind::CirConv)
+            .count();
+        assert_eq!(convs, 4);
+        assert!(!g.nodes.iter().any(|n| n.name.contains("Wic")));
+        assert!(!g.nodes.iter().any(|n| n.name.contains("Wym")));
+    }
+
+    #[test]
+    fn projection_is_the_unique_sink() {
+        let g = build_layer_graph(&LstmSpec::google(8), 0);
+        let sinks: Vec<_> = (0..g.len()).filter(|&v| g.succs[v].is_empty()).collect();
+        assert_eq!(sinks.len(), 1);
+        assert_eq!(g.nodes[sinks[0]].name, "conv_Wym");
+    }
+
+    #[test]
+    fn gate_convs_have_highest_priority() {
+        // Eq 7: the longest chains start at the gate convolutions, so
+        // Algorithm 1 visits them first — which is what produces the
+        // Fig 6b stage split.
+        let g = build_layer_graph(&LstmSpec::google(8), 0);
+        let order = g.by_priority();
+        let first_four: Vec<_> = order[..4]
+            .iter()
+            .map(|&v| g.nodes[v].kind)
+            .collect();
+        assert!(
+            first_four.iter().all(|k| *k == OpKind::CirConv),
+            "first four by priority should be the gate convs, got {first_four:?}"
+        );
+    }
+
+    #[test]
+    fn output_peephole_depends_on_cell_update() {
+        let g = build_layer_graph(&LstmSpec::google(8), 0);
+        let add_c = g.nodes.iter().find(|n| n.name == "add_c").unwrap().id;
+        let peep_o = g.nodes.iter().find(|n| n.name == "mul_Woc_ct").unwrap().id;
+        assert!(g.succs[add_c].contains(&peep_o), "Eq 1e reads c_t");
+    }
+
+    #[test]
+    fn layer2_dimensions_differ() {
+        let spec = LstmSpec::google(8);
+        let g0 = build_layer_graph(&spec, 0);
+        let g1 = build_layer_graph(&spec, 1);
+        let q0 = g0.nodes[0].pqk.1;
+        let q1 = g1.nodes[0].pqk.1;
+        assert_eq!(q0, (160 + 512) / 8);
+        assert_eq!(q1, (512 + 512) / 8);
+    }
+}

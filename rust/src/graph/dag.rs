@@ -1,0 +1,206 @@
+//! The operator dependency DAG with topological utilities.
+
+use super::op::{OpKind, OpNode};
+use std::collections::VecDeque;
+
+/// A directed acyclic operator graph. Node ids are dense indices into
+/// `nodes`; edges are stored as adjacency lists both ways.
+#[derive(Debug, Clone, Default)]
+pub struct OpGraph {
+    pub nodes: Vec<OpNode>,
+    /// `succs[v]` — ids of operators consuming v's output.
+    pub succs: Vec<Vec<usize>>,
+    /// `preds[v]` — ids of operators producing v's inputs.
+    pub preds: Vec<Vec<usize>>,
+}
+
+impl OpGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a node; returns its id.
+    pub fn add(&mut self, kind: OpKind, name: &str, out_len: usize, pqk: (usize, usize, usize)) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(OpNode {
+            id,
+            kind,
+            name: name.to_string(),
+            out_len,
+            pqk,
+        });
+        self.succs.push(Vec::new());
+        self.preds.push(Vec::new());
+        id
+    }
+
+    /// Add a dependency edge `from → to`.
+    pub fn edge(&mut self, from: usize, to: usize) {
+        assert!(from < self.nodes.len() && to < self.nodes.len());
+        assert_ne!(from, to, "self-loop would make the graph cyclic");
+        if !self.succs[from].contains(&to) {
+            self.succs[from].push(to);
+            self.preds[to].push(from);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(Vec::len).collect();
+        let mut queue: VecDeque<usize> = (0..self.len()).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &s in &self.succs[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        (order.len() == self.len()).then_some(order)
+    }
+
+    /// True if the graph is acyclic.
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Eq 7 priorities: `P(v) = W(v) + max_{s ∈ succ(v)} P(s)` (longest
+    /// weighted path to a sink). Computed in reverse topological order.
+    pub fn priorities(&self) -> Vec<u64> {
+        let order = self.topo_order().expect("operator graph must be acyclic");
+        let mut p = vec![0u64; self.len()];
+        for &v in order.iter().rev() {
+            let best_succ = self.succs[v].iter().map(|&s| p[s]).max().unwrap_or(0);
+            p[v] = self.nodes[v].complexity() + best_succ;
+        }
+        p
+    }
+
+    /// Node ids sorted by decreasing priority (Algorithm 1's visit order);
+    /// ties broken by id for determinism.
+    pub fn by_priority(&self) -> Vec<usize> {
+        let p = self.priorities();
+        let mut ids: Vec<usize> = (0..self.len()).collect();
+        ids.sort_by_key(|&v| (std::cmp::Reverse(p[v]), v));
+        ids
+    }
+
+    /// Render as Graphviz dot (squares = cirConv, circles = element-wise,
+    /// matching the Fig 6 legend).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::from("digraph lstm {\n  rankdir=TB;\n");
+        for n in &self.nodes {
+            let shape = if n.kind == OpKind::CirConv {
+                "box"
+            } else {
+                "ellipse"
+            };
+            s.push_str(&format!(
+                "  n{} [label=\"{}\" shape={}];\n",
+                n.id, n.name, shape
+            ));
+        }
+        for (v, ss) in self.succs.iter().enumerate() {
+            for &t in ss {
+                s.push_str(&format!("  n{v} -> n{t};\n"));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> OpGraph {
+        // a → b, a → c, b → d, c → d
+        let mut g = OpGraph::new();
+        let a = g.add(OpKind::CirConv, "a", 64, (8, 8, 8));
+        let b = g.add(OpKind::EwAdd, "b", 64, (0, 0, 0));
+        let c = g.add(OpKind::EwMul, "c", 64, (0, 0, 0));
+        let d = g.add(OpKind::Sigmoid, "d", 64, (0, 0, 0));
+        g.edge(a, b);
+        g.edge(a, c);
+        g.edge(b, d);
+        g.edge(c, d);
+        g
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for (v, ss) in g.succs.iter().enumerate() {
+            for &t in ss {
+                assert!(pos[v] < pos[t], "{v} must precede {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = diamond();
+        g.edge(3, 0); // close the loop
+        assert!(!g.is_acyclic());
+    }
+
+    #[test]
+    fn priorities_are_topologically_monotone() {
+        // Eq 7: a predecessor's priority strictly exceeds each successor's.
+        let g = diamond();
+        let p = g.priorities();
+        for (v, ss) in g.succs.iter().enumerate() {
+            for &t in ss {
+                assert!(p[v] > p[t], "P({v})={} !> P({t})={}", p[v], p[t]);
+            }
+        }
+    }
+
+    #[test]
+    fn priority_order_schedules_preds_before_succs_along_chains() {
+        let g = diamond();
+        let order = g.by_priority();
+        let pos_a = order.iter().position(|&v| v == 0).unwrap();
+        let pos_d = order.iter().position(|&v| v == 3).unwrap();
+        assert!(pos_a < pos_d);
+    }
+
+    #[test]
+    fn sink_priority_is_own_weight() {
+        let g = diamond();
+        let p = g.priorities();
+        assert_eq!(p[3], g.nodes[3].complexity());
+    }
+
+    #[test]
+    fn dot_renders_shapes() {
+        let dot = diamond().to_dot();
+        assert!(dot.contains("shape=box") && dot.contains("shape=ellipse"));
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loop() {
+        let mut g = diamond();
+        g.edge(1, 1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Operator dependency graphs (§4.3, Fig 6a).
+//!
+//! The C-LSTM synthesis flow starts by transforming the LSTM algorithm
+//! specification (the Eq 1 equations) into a directed acyclic dependency
+//! graph whose nodes are *primitive operators* — circulant convolution,
+//! element-wise add/multiply, sigmoid, tanh — and whose edges are data
+//! dependencies. Feedback edges (`c_t`, `y_t` into the next time step) are
+//! deliberately removed; the double-buffer mechanism of the coarse-grained
+//! pipeline carries them (§4.3).
+//!
+//! [`op`] defines the operator vocabulary with per-operator workloads
+//! `Q(v)` and arithmetic complexities `W(v)` (Fig 5); [`builder`] generates
+//! the graph for any [`LstmSpec`](crate::lstm::LstmSpec); [`dag`] is the
+//! graph structure itself with topological utilities.
+
+pub mod builder;
+pub mod dag;
+pub mod op;
+
+pub use builder::build_layer_graph;
+pub use dag::OpGraph;
+pub use op::{OpKind, OpNode};

@@ -1,0 +1,43 @@
+//! # C-LSTM — structured LSTM compression + FPGA synthesis framework
+//!
+//! A full reproduction of *C-LSTM: Enabling Efficient LSTM using Structured
+//! Compression Techniques on FPGAs* (Wang et al., FPGA'18) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (build-time Python): a Pallas kernel computing the FFT-domain
+//!   block-circulant mat-vec, `a_i = IDFT(Σ_j F(w_ij) ⊙ F(x_j))`.
+//! - **Layer 2** (build-time Python): the Google-LSTM / Small-LSTM compute
+//!   graphs in JAX, AOT-lowered to HLO text in `artifacts/`.
+//! - **Layer 3** (this crate): the entire C-LSTM *framework* — operator graph
+//!   generation, Algorithm-1 scheduling, analytical performance/resource
+//!   models (Eq 7–12), design-space exploration, HLS code generation, a
+//!   cycle-approximate FPGA pipeline simulator, the ESE sparse baseline, a
+//!   bit-accurate 16-bit fixed-point inference engine, and a serving
+//!   coordinator that executes the AOT artifacts through PJRT.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every table and figure of the paper to a module and bench target.
+
+pub mod circulant;
+pub mod coordinator;
+pub mod data;
+pub mod dse;
+pub mod ese;
+pub mod fft;
+pub mod fpga_sim;
+pub mod graph;
+pub mod hlscodegen;
+pub mod lstm;
+pub mod num;
+pub mod perfmodel;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and the serving coordinator.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,293 @@
+//! Activation functions: exact and 22-segment piece-wise linear (§4.2, Fig 4).
+//!
+//! Transcendental activations are expensive on FPGAs; the paper replaces
+//! them with quantised piece-wise linear (PWL) approximations — 22 segments,
+//! "error rate less than 1 %", evaluated as one comparison (segment index),
+//! one 16-bit multiply and one addition.
+//!
+//! Each segment uses the *minimax* (equioscillating) linear fit rather than
+//! endpoint interpolation, which halves the worst-case error and is what
+//! makes 22 segments sufficient for tanh. Outside the fitted range the
+//! functions are clamped to their asymptotes.
+
+use crate::num::fxp::{narrow, Q, Rounding};
+
+/// Exact logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Exact hyperbolic tangent.
+#[inline]
+pub fn tanh(x: f32) -> f32 {
+    x.tanh()
+}
+
+/// Which activation implementation an engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActivationMode {
+    /// Exact transcendental (reference).
+    Exact,
+    /// 22-segment piece-wise linear (the FPGA implementation).
+    Pwl,
+}
+
+/// The number of segments used by the paper (Fig 4).
+pub const PAPER_SEGMENTS: usize = 22;
+
+/// A piece-wise linear approximation table with uniform segments.
+///
+/// Stores float slope/intercept pairs and their 16-bit quantised forms:
+/// slopes in Q1.14 (|slope| ≤ 1 for σ and tanh), intercepts in the data
+/// format. The fixed-point evaluation path is bit-accurate to the FPGA
+/// datapath: segment index by comparison, one multiply, one add.
+#[derive(Debug, Clone)]
+pub struct PwlTable {
+    pub x_min: f32,
+    pub x_max: f32,
+    pub segments: usize,
+    /// Clamp values left/right of the fitted range.
+    pub y_left: f32,
+    pub y_right: f32,
+    pub slope: Vec<f32>,
+    pub intercept: Vec<f32>,
+    /// Quantised slopes (Q1.14).
+    pub slope_fx: Vec<i16>,
+    /// Quantised intercepts (data format).
+    pub intercept_fx: Vec<i16>,
+    /// Data Q-format used by the fixed-point path.
+    pub q_data: Q,
+    inv_step: f32,
+}
+
+/// Q-format of the PWL slopes.
+pub const SLOPE_Q: Q = Q::new(14);
+
+impl PwlTable {
+    /// Build a minimax-fit PWL table for `f` over `[x_min, x_max]` with
+    /// `segments` uniform pieces, quantised against `q_data`.
+    pub fn build(
+        f: impl Fn(f64) -> f64,
+        x_min: f32,
+        x_max: f32,
+        segments: usize,
+        y_left: f32,
+        y_right: f32,
+        q_data: Q,
+    ) -> Self {
+        assert!(segments >= 1 && x_max > x_min);
+        let h = (x_max - x_min) as f64 / segments as f64;
+        let mut slope = Vec::with_capacity(segments);
+        let mut intercept = Vec::with_capacity(segments);
+        for s in 0..segments {
+            let a = x_min as f64 + s as f64 * h;
+            let b = a + h;
+            let m = 0.5 * (a + b);
+            let sl = (f(b) - f(a)) / h;
+            // Equioscillating intercept: average of the endpoint-chord
+            // intercept and the midpoint-tangent intercept. For a segment
+            // where f has one sign of curvature this is the L∞-optimal
+            // linear fit (error = h²·|f''|/16 instead of /8).
+            let c_chord = f(a) - sl * a;
+            let c_mid = f(m) - sl * m;
+            let c = 0.5 * (c_chord + c_mid);
+            slope.push(sl as f32);
+            intercept.push(c as f32);
+        }
+        let slope_fx = slope.iter().map(|&s| SLOPE_Q.from_f32(s)).collect();
+        let intercept_fx = intercept.iter().map(|&c| q_data.from_f32(c)).collect();
+        Self {
+            x_min,
+            x_max,
+            segments,
+            y_left,
+            y_right,
+            slope,
+            intercept,
+            slope_fx,
+            intercept_fx,
+            q_data,
+            inv_step: segments as f32 / (x_max - x_min),
+        }
+    }
+
+    /// The paper's sigmoid table: 22 segments over [−8, 8] (Fig 4 left).
+    pub fn sigmoid(q_data: Q) -> Self {
+        Self::build(
+            |x| 1.0 / (1.0 + (-x).exp()),
+            -8.0,
+            8.0,
+            PAPER_SEGMENTS,
+            0.0,
+            1.0,
+            q_data,
+        )
+    }
+
+    /// The paper's tanh table: 22 segments over [−4, 4] (Fig 4 right —
+    /// tanh saturates by ±4, so the fitted range is tighter).
+    pub fn tanh(q_data: Q) -> Self {
+        Self::build(|x| x.tanh(), -4.0, 4.0, PAPER_SEGMENTS, -1.0, 1.0, q_data)
+    }
+
+    /// Float evaluation.
+    #[inline]
+    pub fn eval(&self, x: f32) -> f32 {
+        if x < self.x_min {
+            return self.y_left;
+        }
+        if x >= self.x_max {
+            return self.y_right;
+        }
+        let idx = ((x - self.x_min) * self.inv_step) as usize;
+        let idx = idx.min(self.segments - 1);
+        self.slope[idx] * x + self.intercept[idx]
+    }
+
+    /// Bit-accurate fixed-point evaluation: raw `i16` in the data format →
+    /// raw `i16` in the data format. One comparison chain (here: integer
+    /// divide by the segment width), one Q1.14 multiply, one saturating add.
+    #[inline]
+    pub fn eval_fx(&self, x: i16, rounding: Rounding) -> i16 {
+        let x_min_raw = self.q_data.from_f32(self.x_min) as i32;
+        let x_max_raw = self.q_data.from_f32(self.x_max) as i32;
+        let xi = x as i32;
+        if xi < x_min_raw {
+            return self.q_data.from_f32(self.y_left);
+        }
+        if xi >= x_max_raw {
+            return self.q_data.from_f32(self.y_right);
+        }
+        let span = (x_max_raw - x_min_raw) as i64;
+        let idx = (((xi - x_min_raw) as i64 * self.segments as i64) / span) as usize;
+        let idx = idx.min(self.segments - 1);
+        // y = slope·x + intercept; slope in Q1.14, x in data format →
+        // product has frac(data)+14 bits; narrow by 14 back to data format.
+        let prod = self.slope_fx[idx] as i32 * x as i32;
+        let term = narrow(prod, SLOPE_Q.frac, rounding);
+        term.saturating_add(self.intercept_fx[idx])
+    }
+
+    /// Maximum absolute error of the float PWL over a dense grid — the
+    /// quantity Fig 4 claims is below 1 %.
+    pub fn max_error(&self, f: impl Fn(f64) -> f64) -> f64 {
+        let mut worst = 0.0f64;
+        let n = 20_000;
+        // Probe beyond the fitted range to include clamp error.
+        let lo = self.x_min as f64 - 4.0;
+        let hi = self.x_max as f64 + 4.0;
+        for i in 0..=n {
+            let x = lo + (hi - lo) * i as f64 / n as f64;
+            let approx = self.eval(x as f32) as f64;
+            worst = worst.max((approx - f(x)).abs());
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const QD: Q = Q::new(12);
+
+    #[test]
+    fn paper_claim_sigmoid_error_below_1_percent() {
+        let t = PwlTable::sigmoid(QD);
+        let err = t.max_error(|x| 1.0 / (1.0 + (-x).exp()));
+        assert!(err < 0.01, "sigmoid PWL max error {err}");
+    }
+
+    #[test]
+    fn paper_claim_tanh_error_below_1_percent() {
+        let t = PwlTable::tanh(QD);
+        let err = t.max_error(|x| x.tanh());
+        assert!(err < 0.01, "tanh PWL max error {err}");
+    }
+
+    #[test]
+    fn minimax_beats_chord_interpolation() {
+        // Same segment budget, chord fit (intercept through endpoints):
+        let chord = {
+            let h = 8.0f64 / PAPER_SEGMENTS as f64;
+            let mut worst = 0.0f64;
+            for s in 0..PAPER_SEGMENTS {
+                let a = -4.0 + s as f64 * h;
+                let b = a + h;
+                let sl = (b.tanh() - a.tanh()) / h;
+                let c = a.tanh() - sl * a;
+                for i in 0..200 {
+                    let x = a + h * i as f64 / 200.0;
+                    worst = worst.max((sl * x + c - x.tanh()).abs());
+                }
+            }
+            worst
+        };
+        let minimax = PwlTable::tanh(QD).max_error(|x| x.tanh());
+        assert!(
+            minimax < chord,
+            "minimax {minimax} should beat chord {chord}"
+        );
+    }
+
+    #[test]
+    fn clamps_outside_range() {
+        let t = PwlTable::sigmoid(QD);
+        assert_eq!(t.eval(-100.0), 0.0);
+        assert_eq!(t.eval(100.0), 1.0);
+        let th = PwlTable::tanh(QD);
+        assert_eq!(th.eval(-100.0), -1.0);
+        assert_eq!(th.eval(100.0), 1.0);
+    }
+
+    #[test]
+    fn fixed_point_matches_float_within_lsbs() {
+        let t = PwlTable::sigmoid(QD);
+        let th = PwlTable::tanh(QD);
+        for i in -4000..4000 {
+            let x = i as f32 * 0.002 * 4.0; // [-32, 32] → includes clamps
+            let xq = QD.from_f32(x);
+            for (tab, name) in [(&t, "sigmoid"), (&th, "tanh")] {
+                let fx = QD.to_f32(tab.eval_fx(xq, Rounding::Nearest));
+                let fl = tab.eval(QD.to_f32(xq));
+                assert!(
+                    (fx - fl).abs() <= 4.0 * QD.eps() as f32,
+                    "{name}({x}): fx {fx} vs float {fl}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn near_monotone_on_grid() {
+        // σ is monotone; the minimax PWL has small jumps at segment
+        // boundaries (bounded by ~2× the fit error) but no larger
+        // violations, and is globally increasing.
+        let t = PwlTable::sigmoid(QD);
+        let mut prev = f32::MIN;
+        for i in -1000..=1000 {
+            let y = t.eval(i as f32 * 0.01);
+            assert!(y >= prev - 8e-3, "x={}", i as f32 * 0.01);
+            prev = y;
+        }
+        assert!(t.eval(8.0) > t.eval(-8.0) + 0.9);
+    }
+
+    #[test]
+    fn odd_symmetry_of_tanh_table() {
+        let t = PwlTable::tanh(QD);
+        for i in 0..400 {
+            let x = i as f32 * 0.01;
+            let err = (t.eval(x) + t.eval(-x)).abs();
+            assert!(err < 2e-2, "tanh symmetry at {x}: {err}");
+        }
+    }
+
+    #[test]
+    fn exact_helpers() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!((tanh(0.0)).abs() < 1e-7);
+        assert!((sigmoid(4.0) + sigmoid(-4.0) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,345 @@
+//! LSTM architecture specifications and parameter accounting (§2, §3.3, §6).
+//!
+//! Two concrete models are evaluated in the paper, both reproduced here:
+//!
+//! - **Google LSTM** [25] (the ESE baseline architecture): 153-dim input
+//!   (51 mel filterbank coefficients + energy, with Δ and ΔΔ), 1024 cells,
+//!   peephole connections, 512-dim recurrent projection, two stacked
+//!   layers. At block size 1 this is the 8.01 M-parameter model of Table 1.
+//! - **Small LSTM** [20] (§6.1): 39-dim input (12 filterbank coefficients +
+//!   energy, with Δ and ΔΔ), 512 cells, no peephole, no projection,
+//!   bidirectional, two stacked layers.
+//!
+//! Dimensions that are not multiples of the block size `k` are zero-padded
+//! up to the next multiple (the input feature dim 153 → 160 for k ∈ {8,16});
+//! padding contributes parameters exactly as an FPGA BRAM layout would.
+
+use crate::circulant::compress::CompressionStats;
+
+/// Which of the paper's two models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Google,
+    Small,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Google => "google",
+            ModelKind::Small => "small",
+        }
+    }
+}
+
+/// Architecture specification of a (possibly stacked, possibly
+/// bidirectional) LSTM with optional peepholes and projection, compressed
+/// with block-circulant matrices of block size `k`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LstmSpec {
+    pub kind: ModelKind,
+    /// Raw input feature dimension (pre-padding).
+    pub input_dim: usize,
+    /// Gate/cell dimension.
+    pub hidden_dim: usize,
+    /// Projection (output) dimension; `None` ⇒ output = cell output `m_t`.
+    pub proj_dim: Option<usize>,
+    /// Peephole connections `W_ic, W_fc, W_oc` (diagonal ⇒ element-wise).
+    pub peephole: bool,
+    /// Stacked layers.
+    pub layers: usize,
+    /// Bidirectional (outputs of the two directions are concatenated).
+    pub bidirectional: bool,
+    /// Circulant block size (1 = uncompressed dense).
+    pub k: usize,
+    /// Output classes of the final affine layer (phones incl. blank); used
+    /// by the PER evaluation. 0 ⇒ no classifier head.
+    pub num_classes: usize,
+}
+
+impl LstmSpec {
+    /// The Google LSTM [25] at block size `k` (Table 1 / Table 3 rows).
+    pub fn google(k: usize) -> Self {
+        Self {
+            kind: ModelKind::Google,
+            input_dim: 153,
+            hidden_dim: 1024,
+            proj_dim: Some(512),
+            peephole: true,
+            layers: 2,
+            bidirectional: false,
+            k,
+            num_classes: 39,
+        }
+    }
+
+    /// The Small LSTM [20] at block size `k` (§6.1, §6.3).
+    pub fn small(k: usize) -> Self {
+        Self {
+            kind: ModelKind::Small,
+            input_dim: 39,
+            hidden_dim: 512,
+            proj_dim: None,
+            peephole: false,
+            layers: 2,
+            bidirectional: true,
+            k,
+            num_classes: 39,
+        }
+    }
+
+    /// A tiny configuration for tests and the quickstart example.
+    pub fn tiny(k: usize) -> Self {
+        Self {
+            kind: ModelKind::Small,
+            input_dim: 16,
+            hidden_dim: 32,
+            proj_dim: Some(16),
+            peephole: true,
+            layers: 1,
+            bidirectional: false,
+            k,
+            num_classes: 8,
+        }
+    }
+
+    /// Round `dim` up to a multiple of the block size.
+    pub fn pad(&self, dim: usize) -> usize {
+        dim.div_ceil(self.k) * self.k
+    }
+
+    /// Output dimension of one direction of one layer.
+    pub fn out_dim(&self) -> usize {
+        self.proj_dim.unwrap_or(self.hidden_dim)
+    }
+
+    /// Input dimension seen by layer `l` (0-based): raw features for layer
+    /// 0, previous layer's (possibly bidirectional-concatenated) output
+    /// otherwise.
+    pub fn layer_input_dim(&self, l: usize) -> usize {
+        if l == 0 {
+            self.input_dim
+        } else {
+            self.out_dim() * if self.bidirectional { 2 } else { 1 }
+        }
+    }
+
+    /// Dimension of the fused mat-vec operand `[x_t, y_{t-1}]` for layer
+    /// `l`, after padding both halves to block-size multiples.
+    pub fn fused_in_dim(&self, l: usize) -> usize {
+        self.pad(self.layer_input_dim(l)) + self.pad(self.out_dim())
+    }
+
+    /// Directions (1 or 2).
+    pub fn directions(&self) -> usize {
+        if self.bidirectional {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Compression stats of all *matrix* weights (the quantity Tables 1
+    /// and 3 track; peepholes/biases are vectors and excluded from matrix
+    /// compression ratios, matching the paper's "matrix compression ratio").
+    pub fn matrix_stats(&self) -> CompressionStats {
+        let mut per = Vec::new();
+        for l in 0..self.layers {
+            let fused = self.fused_in_dim(l);
+            let h = self.pad(self.hidden_dim);
+            // Four gates: i, f, c, o.
+            for _ in 0..4 {
+                per.push(CompressionStats::for_matrix(h, fused, self.k));
+            }
+            if let Some(p) = self.proj_dim {
+                per.push(CompressionStats::for_matrix(self.pad(p), h, self.k));
+            }
+        }
+        let mut combined = CompressionStats::combine(&per);
+        // Bidirectional doubles every matrix.
+        combined.dense_params *= self.directions();
+        combined.circulant_params *= self.directions();
+        combined
+    }
+
+    /// Total stored parameters including peepholes and biases — the
+    /// Table 1 "#Model Parameters" column.
+    pub fn total_params(&self) -> usize {
+        let m = self.matrix_stats().circulant_params;
+        let mut vecs = 0usize;
+        for _ in 0..self.layers {
+            vecs += 4 * self.hidden_dim; // biases
+            if self.peephole {
+                vecs += 3 * self.hidden_dim;
+            }
+        }
+        m + vecs * self.directions()
+    }
+
+    /// Parameters of the single first layer — the Table 3 "Weight Matrix
+    /// Size (#Parameters of LSTM)" row counts one layer of the model.
+    pub fn layer1_matrix_params(&self) -> usize {
+        let fused = self.fused_in_dim(0);
+        let h = self.pad(self.hidden_dim);
+        let mut per = vec![CompressionStats::for_matrix(h, fused, self.k); 4];
+        if let Some(p) = self.proj_dim {
+            per.push(CompressionStats::for_matrix(self.pad(p), h, self.k));
+        }
+        CompressionStats::combine(&per).circulant_params * self.directions()
+    }
+
+    /// The Table 1 "Computational Complexity" column, normalised to the
+    /// dense model. The paper reports the asymptotic operator-count ratio
+    /// `O(k log k) / O(k²) = log2(k)/k` (its rows: k=2 → 0.50, k=4 → 0.50,
+    /// k=8 → 0.39 ≈ 0.375, k=16 → 0.27 ≈ 0.25 — the small excess being
+    /// element-wise overhead). We reproduce exactly that metric;
+    /// [`Self::flops_vs_dense`] gives the finer real-flop estimate used by
+    /// the performance model.
+    pub fn complexity_vs_dense(&self) -> f64 {
+        if self.k == 1 {
+            1.0
+        } else {
+            (self.k as f64).log2() / self.k as f64
+        }
+    }
+
+    /// Measured-flop ratio of the Eq 6 circulant inference versus dense
+    /// (`k = 1`), summed over all matrices of the model.
+    ///
+    /// Dense mat-vec: `2·m·n` flops. FFT-based circulant conv (Eq 6 with
+    /// per-`j` shared DFTs): per matrix `(q + p)·(k/2)·log2(k)·5` flops for
+    /// the transforms (radix-2 real FFT butterflies ≈ 5 real flops each)
+    /// plus `p·q·k·4` for the packed ⊙-accumulate. Element-wise operators
+    /// are identical across block sizes and excluded, as in the paper.
+    pub fn flops_vs_dense(&self) -> f64 {
+        let mut dense_flops = 0.0f64;
+        let mut circ_flops = 0.0f64;
+        for l in 0..self.layers {
+            let mut dims = vec![(self.pad(self.hidden_dim), self.fused_in_dim(l)); 4];
+            if let Some(p) = self.proj_dim {
+                dims.push((self.pad(p), self.pad(self.hidden_dim)));
+            }
+            for (m, n) in dims {
+                dense_flops += 2.0 * (m * n) as f64;
+                if self.k == 1 {
+                    circ_flops += 2.0 * (m * n) as f64;
+                } else {
+                    let p = m / self.k;
+                    let q = n / self.k;
+                    let kf = self.k as f64;
+                    let transforms =
+                        (p + q) as f64 * (kf / 2.0) * kf.log2() * 5.0;
+                    let ew = (p * q) as f64 * kf * 4.0;
+                    circ_flops += transforms + ew;
+                }
+            }
+        }
+        circ_flops / dense_flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn google_total_params_match_table1() {
+        // Table 1: block size 1 → 8.01M; 2 → 4.03M; 4 → 2.04M; 8 → 1.05M;
+        // 16 → 0.55M. Padding makes ours differ by <2%.
+        // Tolerances widen slightly with k: the paper's small-k rows are
+        // sharp (8.01M → ours 7.98M) while the k=16 row is coarsely rounded
+        // (0.55M vs an arithmetic 8.01M/16 + vectors ≈ 0.52M).
+        let expect = [
+            (1usize, 8.01e6, 0.02),
+            (2, 4.03e6, 0.02),
+            (4, 2.04e6, 0.03),
+            (8, 1.05e6, 0.05),
+            (16, 0.55e6, 0.08),
+        ];
+        for (k, target, tol) in expect {
+            let got = LstmSpec::google(k).total_params() as f64;
+            let rel = (got - target).abs() / target;
+            assert!(
+                rel < tol,
+                "k={k}: got {got:.3e}, table says {target:.3e} (rel {rel:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn google_layer1_matches_table3() {
+        // Table 3: ESE 0.73M at 4.5:1 → dense layer-1 ≈ 3.25M;
+        // C-LSTM FFT8 0.41M, FFT16 0.20M.
+        let dense = LstmSpec::google(1).layer1_matrix_params() as f64;
+        assert!((dense / 3.25e6 - 1.0).abs() < 0.02, "dense layer1 {dense:.3e}");
+        let k8 = LstmSpec::google(8).layer1_matrix_params() as f64;
+        assert!((k8 / 0.41e6 - 1.0).abs() < 0.03, "fft8 layer1 {k8:.3e}");
+        let k16 = LstmSpec::google(16).layer1_matrix_params() as f64;
+        assert!((k16 / 0.20e6 - 1.0).abs() < 0.06, "fft16 layer1 {k16:.3e}");
+    }
+
+    #[test]
+    fn small_layer1_matches_table3() {
+        // Table 3 Small LSTM: FFT8 0.28M, FFT16 0.14M.
+        let k8 = LstmSpec::small(8).layer1_matrix_params() as f64;
+        assert!((k8 / 0.28e6 - 1.0).abs() < 0.05, "small fft8 {k8:.3e}");
+        let k16 = LstmSpec::small(16).layer1_matrix_params() as f64;
+        assert!((k16 / 0.14e6 - 1.0).abs() < 0.05, "small fft16 {k16:.3e}");
+    }
+
+    #[test]
+    fn compression_ratios_match_table3() {
+        // Matrix compression ratio rows: 7.9:1 (k=8), 15.9:1 (k=16).
+        // (Slightly below k because padding adds parameters.)
+        let r8 = LstmSpec::google(8).matrix_stats().ratio();
+        let r16 = LstmSpec::google(16).matrix_stats().ratio();
+        assert!((7.5..=8.0).contains(&r8), "r8 {r8}");
+        assert!((15.0..=16.0).contains(&r16), "r16 {r16}");
+    }
+
+    #[test]
+    fn complexity_column_matches_table1() {
+        // Table 1 normalized complexity: 1, 0.50, 0.50, 0.39, 0.27 for
+        // k = 1, 2, 4, 8, 16 — the paper's op-count ratio.
+        assert_eq!(LstmSpec::google(1).complexity_vs_dense(), 1.0);
+        assert_eq!(LstmSpec::google(2).complexity_vs_dense(), 0.5);
+        assert_eq!(LstmSpec::google(4).complexity_vs_dense(), 0.5);
+        let c8 = LstmSpec::google(8).complexity_vs_dense();
+        let c16 = LstmSpec::google(16).complexity_vs_dense();
+        assert!((c8 - 0.39).abs() < 0.03, "c8 {c8}"); // 0.375
+        assert!((c16 - 0.27).abs() < 0.03, "c16 {c16}"); // 0.25
+    }
+
+    #[test]
+    fn flop_ratio_monotone_and_below_paper_metric() {
+        let f2 = LstmSpec::google(2).flops_vs_dense();
+        let f4 = LstmSpec::google(4).flops_vs_dense();
+        let f8 = LstmSpec::google(8).flops_vs_dense();
+        let f16 = LstmSpec::google(16).flops_vs_dense();
+        assert!(f2 > f4 && f4 > f8 && f8 > f16, "{f2} {f4} {f8} {f16}");
+        // Real flop savings are at least as good as the asymptotic metric.
+        assert!(f8 <= LstmSpec::google(8).complexity_vs_dense() + 0.05);
+        assert_eq!(LstmSpec::google(1).flops_vs_dense(), 1.0);
+    }
+
+    #[test]
+    fn padding_rules() {
+        let s = LstmSpec::google(8);
+        assert_eq!(s.pad(153), 160);
+        assert_eq!(s.pad(512), 512);
+        assert_eq!(s.fused_in_dim(0), 160 + 512);
+        assert_eq!(s.fused_in_dim(1), 512 + 512);
+        let sm = LstmSpec::small(16);
+        assert_eq!(sm.pad(39), 48);
+        // Layer 2 of the bidirectional model sees both directions.
+        assert_eq!(sm.layer_input_dim(1), 1024);
+    }
+
+    #[test]
+    fn tiny_spec_consistent() {
+        let t = LstmSpec::tiny(4);
+        assert_eq!(t.out_dim(), 16);
+        assert!(t.total_params() > 0);
+        assert_eq!(t.directions(), 1);
+    }
+}

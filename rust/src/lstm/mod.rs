@@ -1,0 +1,31 @@
+//! LSTM model definitions and inference engines (§2, §4.2).
+//!
+//! - [`config`] — [`LstmSpec`]: the two evaluated architectures (Google
+//!   LSTM [25] with peepholes + projection; Small LSTM [20], bidirectional)
+//!   plus parameter accounting that regenerates the Table 1 / Table 3
+//!   "#parameters" columns.
+//! - [`activations`] — exact σ/tanh and the 22-segment piece-wise-linear
+//!   approximations of Fig 4 (float and bit-accurate fixed-point forms).
+//! - [`weights`] — block-circulant weight bundles: init, save/load, and
+//!   precomputed spectral forms for both engines.
+//! - [`cell_f32`] — float inference engine (Eq 1a–1g) over the Eq 6
+//!   optimized circulant convolution; the accuracy reference.
+//! - [`cell_fxp`] — the bit-accurate 16-bit fixed-point engine: every
+//!   multiply, add, shift and activation exactly as the FPGA datapath
+//!   executes them.
+//! - [`sequence`] — sequence/stack/bidirectional runners used by the PER
+//!   evaluation and the serving pipeline.
+
+pub mod activations;
+pub mod cell_f32;
+pub mod cell_fxp;
+pub mod config;
+pub mod sequence;
+pub mod weights;
+
+pub use activations::{sigmoid, tanh, ActivationMode, PwlTable};
+pub use cell_f32::CellF32;
+pub use cell_fxp::CellFx;
+pub use config::{LstmSpec, ModelKind};
+pub use sequence::{run_sequence_f32, run_stack_f32, StackF32};
+pub use weights::{LayerWeights, LstmWeights};

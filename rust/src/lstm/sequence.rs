@@ -1,0 +1,321 @@
+//! Sequence runners: stacked / bidirectional execution, classifier head,
+//! greedy framewise decoding (used by the PER evaluation of §3.3/§6).
+
+use super::activations::ActivationMode;
+use super::cell_f32::CellF32;
+use super::cell_fxp::CellFx;
+use super::config::LstmSpec;
+use super::weights::LstmWeights;
+use crate::num::fxp::Q;
+
+/// A ready-to-run float model: all layers/directions with precomputed
+/// spectra, plus the classifier head.
+pub struct StackF32 {
+    pub spec: LstmSpec,
+    /// `cells[l][d]`.
+    cells: Vec<Vec<CellF32>>,
+    classifier: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl StackF32 {
+    pub fn new(w: &LstmWeights, mode: ActivationMode) -> Self {
+        let cells = w
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, dirs)| {
+                dirs.iter()
+                    .map(|lw| CellF32::new(&w.spec, l, lw, mode))
+                    .collect()
+            })
+            .collect();
+        Self {
+            spec: w.spec.clone(),
+            cells,
+            classifier: w.classifier.clone(),
+        }
+    }
+
+    /// Run a full utterance: `frames[t]` is the feature vector at time `t`.
+    /// Returns per-frame final-layer outputs (concatenated over directions).
+    pub fn run(&self, frames: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut inputs: Vec<Vec<f32>> = frames.to_vec();
+        for (l, dirs) in self.cells.iter().enumerate() {
+            let _ = l;
+            let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); inputs.len()];
+            // Forward direction.
+            let fwd = &dirs[0];
+            let mut st = fwd.zero_state();
+            for (t, x) in inputs.iter().enumerate() {
+                let y = fwd.step(x, &mut st);
+                outputs[t].extend_from_slice(&y[..self.spec.out_dim()]);
+            }
+            // Backward direction (bidirectional): reversed time, outputs
+            // concatenated feature-wise.
+            if dirs.len() > 1 {
+                let bwd = &dirs[1];
+                let mut st = bwd.zero_state();
+                let mut rev: Vec<Vec<f32>> = Vec::with_capacity(inputs.len());
+                for x in inputs.iter().rev() {
+                    let y = bwd.step(x, &mut st);
+                    rev.push(y[..self.spec.out_dim()].to_vec());
+                }
+                for (t, y) in rev.into_iter().rev().enumerate() {
+                    outputs[t].extend_from_slice(&y);
+                }
+            }
+            inputs = outputs;
+        }
+        inputs
+    }
+
+    /// Per-frame class logits.
+    pub fn logits(&self, frames: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let outs = self.run(frames);
+        let (w, b) = self
+            .classifier
+            .as_ref()
+            .expect("spec.num_classes == 0: no classifier head");
+        let n_cls = b.len();
+        outs.into_iter()
+            .map(|o| {
+                (0..n_cls)
+                    .map(|c| {
+                        b[c] + o
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &v)| w[c * o.len() + j] * v)
+                            .sum::<f32>()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Greedy framewise decode → per-frame class ids.
+    pub fn decode(&self, frames: &[Vec<f32>]) -> Vec<usize> {
+        self.logits(frames)
+            .into_iter()
+            .map(|l| argmax(&l))
+            .collect()
+    }
+}
+
+/// Fixed-point stack mirroring [`StackF32`] (classifier head evaluated in
+/// float on the dequantised outputs — on the FPGA the tiny softmax head
+/// runs on the host, as in ESE).
+pub struct StackFx {
+    pub spec: LstmSpec,
+    cells: Vec<Vec<CellFx>>,
+    classifier: Option<(Vec<f32>, Vec<f32>)>,
+    q: Q,
+}
+
+impl StackFx {
+    pub fn new(w: &LstmWeights, q: Q) -> Self {
+        let cells = w
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, dirs)| {
+                dirs.iter()
+                    .map(|lw| CellFx::new(&w.spec, l, lw, q))
+                    .collect()
+            })
+            .collect();
+        Self {
+            spec: w.spec.clone(),
+            cells,
+            classifier: w.classifier.clone(),
+            q,
+        }
+    }
+
+    /// Run a full utterance in fixed point; returns dequantised outputs.
+    pub fn run(&self, frames: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let mut inputs: Vec<Vec<i16>> = frames
+            .iter()
+            .map(|f| self.q.quantize_slice(f))
+            .collect();
+        for dirs in self.cells.iter() {
+            let mut outputs: Vec<Vec<i16>> = vec![Vec::new(); inputs.len()];
+            let fwd = &dirs[0];
+            let mut st = fwd.zero_state();
+            for (t, x) in inputs.iter().enumerate() {
+                let y = fwd.step(x, &mut st);
+                outputs[t].extend_from_slice(&y[..self.spec.out_dim()]);
+            }
+            if dirs.len() > 1 {
+                let bwd = &dirs[1];
+                let mut st = bwd.zero_state();
+                let mut rev: Vec<Vec<i16>> = Vec::with_capacity(inputs.len());
+                for x in inputs.iter().rev() {
+                    let y = bwd.step(x, &mut st);
+                    rev.push(y[..self.spec.out_dim()].to_vec());
+                }
+                for (t, y) in rev.into_iter().rev().enumerate() {
+                    outputs[t].extend_from_slice(&y);
+                }
+            }
+            inputs = outputs;
+        }
+        inputs
+            .into_iter()
+            .map(|o| self.q.dequantize_slice(&o))
+            .collect()
+    }
+
+    /// Greedy framewise decode.
+    pub fn decode(&self, frames: &[Vec<f32>]) -> Vec<usize> {
+        let outs = self.run(frames);
+        let (w, b) = self
+            .classifier
+            .as_ref()
+            .expect("no classifier head");
+        let n_cls = b.len();
+        outs.into_iter()
+            .map(|o| {
+                let logits: Vec<f32> = (0..n_cls)
+                    .map(|c| {
+                        b[c] + o
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &v)| w[c * o.len() + j] * v)
+                            .sum::<f32>()
+                    })
+                    .collect();
+                argmax(&logits)
+            })
+            .collect()
+    }
+}
+
+/// Index of the maximum element.
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Convenience: run one float sequence through a freshly-built stack.
+pub fn run_sequence_f32(w: &LstmWeights, frames: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    StackF32::new(w, ActivationMode::Exact).run(frames)
+}
+
+/// Convenience: build + decode.
+pub fn run_stack_f32(w: &LstmWeights, frames: &[Vec<f32>]) -> Vec<usize> {
+    StackF32::new(w, ActivationMode::Exact).decode(frames)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn frames(spec: &LstmSpec, t: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..t)
+            .map(|_| {
+                (0..spec.input_dim)
+                    .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn unidirectional_shapes() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 1);
+        let outs = run_sequence_f32(&w, &frames(&spec, 7, 2));
+        assert_eq!(outs.len(), 7);
+        assert_eq!(outs[0].len(), spec.out_dim());
+    }
+
+    #[test]
+    fn bidirectional_concat_shapes() {
+        let mut spec = LstmSpec::small(4);
+        spec.hidden_dim = 32;
+        spec.input_dim = 8;
+        spec.layers = 2;
+        let w = LstmWeights::random(&spec, 3);
+        let stack = StackF32::new(&w, ActivationMode::Exact);
+        let outs = stack.run(&frames(&spec, 5, 4));
+        assert_eq!(outs.len(), 5);
+        assert_eq!(outs[0].len(), 2 * spec.out_dim());
+    }
+
+    #[test]
+    fn bidirectional_sees_future_context() {
+        // Changing the LAST frame must change the FIRST frame's output in a
+        // bidirectional stack (and must not in a unidirectional one).
+        let mut spec = LstmSpec::small(2);
+        spec.hidden_dim = 16;
+        spec.input_dim = 4;
+        spec.layers = 1;
+        let w = LstmWeights::random(&spec, 5);
+        let stack = StackF32::new(&w, ActivationMode::Exact);
+        let mut f1 = frames(&spec, 6, 6);
+        let o1 = stack.run(&f1);
+        for v in f1.last_mut().unwrap().iter_mut() {
+            *v += 1.0;
+        }
+        let o2 = stack.run(&f1);
+        let first_diff: f32 = o1[0].iter().zip(&o2[0]).map(|(a, b)| (a - b).abs()).sum();
+        assert!(first_diff > 1e-6, "bwd direction must propagate future");
+    }
+
+    #[test]
+    fn unidirectional_is_causal() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 7);
+        let stack = StackF32::new(&w, ActivationMode::Exact);
+        let mut f = frames(&spec, 6, 8);
+        let o1 = stack.run(&f);
+        for v in f.last_mut().unwrap().iter_mut() {
+            *v += 1.0;
+        }
+        let o2 = stack.run(&f);
+        for t in 0..5 {
+            let d: f32 = o1[t].iter().zip(&o2[t]).map(|(a, b)| (a - b).abs()).sum();
+            assert!(d == 0.0, "causality violated at t={t}");
+        }
+    }
+
+    #[test]
+    fn decode_yields_valid_classes() {
+        let spec = LstmSpec::tiny(2);
+        let w = LstmWeights::random(&spec, 9);
+        let ids = run_stack_f32(&w, &frames(&spec, 10, 10));
+        assert_eq!(ids.len(), 10);
+        assert!(ids.iter().all(|&c| c < spec.num_classes));
+    }
+
+    #[test]
+    fn fxp_stack_tracks_float_stack_decisions() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 11);
+        let fs = frames(&spec, 12, 12);
+        let float_ids = StackF32::new(&w, ActivationMode::Pwl).decode(&fs);
+        let fx_ids = StackFx::new(&w, Q::new(12)).decode(&fs);
+        let agree = float_ids
+            .iter()
+            .zip(&fx_ids)
+            .filter(|(a, b)| a == b)
+            .count();
+        // Quantisation may flip the odd borderline frame but most agree.
+        assert!(
+            agree * 10 >= float_ids.len() * 8,
+            "only {agree}/{} frames agree",
+            float_ids.len()
+        );
+    }
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[1.0]), 0);
+    }
+}

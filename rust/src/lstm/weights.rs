@@ -1,0 +1,379 @@
+//! Block-circulant LSTM weight bundles: initialisation, (de)serialisation,
+//! and the golden-vector interchange with the Python (JAX) layer.
+//!
+//! Gate order is fixed as `i, f, g, o` (input, forget, cell-candidate,
+//! output) everywhere — Rust engines, Python model, and AOT artifacts.
+//!
+//! The on-disk format is a small JSON header (spec + array manifest)
+//! followed by raw little-endian `f32` payloads, so the 8M-parameter Google
+//! model loads in milliseconds and the exact same bytes can be produced by
+//! `python/compile/train.py`.
+
+use super::config::LstmSpec;
+use crate::circulant::BlockCirculant;
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256;
+use anyhow::{bail, Context};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Gate indices.
+pub const GATE_I: usize = 0;
+pub const GATE_F: usize = 1;
+pub const GATE_G: usize = 2;
+pub const GATE_O: usize = 3;
+
+/// Weights of one direction of one layer.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// Fused gate matrices `W_{*(xr)}` over `[x_t, y_{t-1}]` (padded), in
+    /// gate order i, f, g, o. Shape: `hidden_pad × fused_in`.
+    pub gates: [BlockCirculant; 4],
+    /// Gate biases (length `hidden`).
+    pub bias: [Vec<f32>; 4],
+    /// Peephole vectors `w_ic, w_fc, w_oc` (diagonal matrices ⇒ vectors).
+    pub peephole: Option<[Vec<f32>; 3]>,
+    /// Projection `W_ym` (`proj_pad × hidden_pad`), if the spec has one.
+    pub proj: Option<BlockCirculant>,
+}
+
+/// All weights of a model, plus the small dense classifier head used by the
+/// PER evaluation.
+#[derive(Debug, Clone)]
+pub struct LstmWeights {
+    pub spec: LstmSpec,
+    /// `layers[l][d]` — layer `l`, direction `d`.
+    pub layers: Vec<Vec<LayerWeights>>,
+    /// Dense classifier `num_classes × final_out` (row-major) + bias.
+    pub classifier: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl LstmWeights {
+    /// Random initialisation (Glorot for matrices, +1.0 forget-gate bias —
+    /// the standard recipe; the Python trainer uses the same).
+    pub fn random(spec: &LstmSpec, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut layers = Vec::new();
+        for l in 0..spec.layers {
+            let mut dirs = Vec::new();
+            for _d in 0..spec.directions() {
+                dirs.push(Self::random_layer(spec, l, &mut rng));
+            }
+            layers.push(dirs);
+        }
+        let classifier = if spec.num_classes > 0 {
+            let final_out = spec.out_dim() * spec.directions();
+            let std = (2.0 / (final_out + spec.num_classes) as f64).sqrt();
+            let w: Vec<f32> = (0..spec.num_classes * final_out)
+                .map(|_| rng.normal_with(0.0, std) as f32)
+                .collect();
+            let b = vec![0.0f32; spec.num_classes];
+            Some((w, b))
+        } else {
+            None
+        };
+        Self {
+            spec: spec.clone(),
+            layers,
+            classifier,
+        }
+    }
+
+    fn random_layer(spec: &LstmSpec, l: usize, rng: &mut Xoshiro256) -> LayerWeights {
+        let h = spec.pad(spec.hidden_dim);
+        let fused = spec.fused_in_dim(l);
+        let gates = [
+            BlockCirculant::random_init(h, fused, spec.k, rng),
+            BlockCirculant::random_init(h, fused, spec.k, rng),
+            BlockCirculant::random_init(h, fused, spec.k, rng),
+            BlockCirculant::random_init(h, fused, spec.k, rng),
+        ];
+        let mut bias = [
+            vec![0.0f32; spec.hidden_dim],
+            vec![0.0f32; spec.hidden_dim],
+            vec![0.0f32; spec.hidden_dim],
+            vec![0.0f32; spec.hidden_dim],
+        ];
+        // Forget-gate bias +1 stabilises early training and is what the
+        // Python trainer exports.
+        for b in bias[GATE_F].iter_mut() {
+            *b = 1.0;
+        }
+        let peephole = if spec.peephole {
+            let mut mk = || {
+                (0..spec.hidden_dim)
+                    .map(|_| rng.normal_with(0.0, 0.1) as f32)
+                    .collect::<Vec<f32>>()
+            };
+            Some([mk(), mk(), mk()])
+        } else {
+            None
+        };
+        let proj = spec
+            .proj_dim
+            .map(|p| BlockCirculant::random_init(spec.pad(p), h, spec.k, rng));
+        LayerWeights {
+            gates,
+            bias,
+            peephole,
+            proj,
+        }
+    }
+
+    // ------------------------------------------------------------- save/load
+
+    /// Serialise to the `CLSTMW1` container (JSON header + raw f32).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut arrays: Vec<(String, &[f32])> = Vec::new();
+        for (l, dirs) in self.layers.iter().enumerate() {
+            for (d, lw) in dirs.iter().enumerate() {
+                for (g, name) in ["i", "f", "g", "o"].iter().enumerate() {
+                    arrays.push((format!("l{l}.d{d}.w_{name}"), &lw.gates[g].w));
+                    arrays.push((format!("l{l}.d{d}.b_{name}"), &lw.bias[g]));
+                }
+                if let Some(p) = &lw.peephole {
+                    arrays.push((format!("l{l}.d{d}.p_ic"), &p[0]));
+                    arrays.push((format!("l{l}.d{d}.p_fc"), &p[1]));
+                    arrays.push((format!("l{l}.d{d}.p_oc"), &p[2]));
+                }
+                if let Some(pr) = &lw.proj {
+                    arrays.push((format!("l{l}.d{d}.w_proj"), &pr.w));
+                }
+            }
+        }
+        if let Some((w, b)) = &self.classifier {
+            arrays.push(("cls.w".into(), w));
+            arrays.push(("cls.b".into(), b));
+        }
+        let manifest = Json::Arr(
+            arrays
+                .iter()
+                .map(|(n, a)| {
+                    Json::obj(vec![
+                        ("name", Json::str(n.clone())),
+                        ("len", Json::num(a.len() as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let header = Json::obj(vec![
+            ("format", Json::str("CLSTMW1")),
+            ("model", Json::str(self.spec.kind.as_str())),
+            ("k", Json::num(self.spec.k as f64)),
+            ("input_dim", Json::num(self.spec.input_dim as f64)),
+            ("hidden_dim", Json::num(self.spec.hidden_dim as f64)),
+            (
+                "proj_dim",
+                self.spec
+                    .proj_dim
+                    .map(|p| Json::num(p as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("peephole", Json::Bool(self.spec.peephole)),
+            ("layers", Json::num(self.spec.layers as f64)),
+            ("bidirectional", Json::Bool(self.spec.bidirectional)),
+            ("num_classes", Json::num(self.spec.num_classes as f64)),
+            ("arrays", manifest),
+        ])
+        .to_string();
+
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(b"CLSTMW1\n")?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, a) in &arrays {
+            let bytes: Vec<u8> = a.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load a `CLSTMW1` container. The spec is reconstructed from the
+    /// header; array shapes are re-derived from it and validated against
+    /// the manifest.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"CLSTMW1\n" {
+            bail!("{}: not a CLSTMW1 weight file", path.display());
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("weight header: {e}"))?;
+
+        let kind = match header.get_str("model") {
+            Some("google") => super::config::ModelKind::Google,
+            _ => super::config::ModelKind::Small,
+        };
+        let spec = LstmSpec {
+            kind,
+            input_dim: header.get_usize("input_dim").context("input_dim")?,
+            hidden_dim: header.get_usize("hidden_dim").context("hidden_dim")?,
+            proj_dim: header.get("proj_dim").and_then(Json::as_usize),
+            peephole: header.get("peephole").and_then(Json::as_bool).unwrap_or(false),
+            layers: header.get_usize("layers").context("layers")?,
+            bidirectional: header
+                .get("bidirectional")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            k: header.get_usize("k").context("k")?,
+            num_classes: header.get_usize("num_classes").unwrap_or(0),
+        };
+
+        let manifest = header
+            .get("arrays")
+            .and_then(Json::as_arr)
+            .context("arrays manifest")?;
+        let mut order: Vec<(String, usize)> = Vec::new();
+        for a in manifest {
+            order.push((
+                a.get_str("name").context("array name")?.to_string(),
+                a.get_usize("len").context("array len")?,
+            ));
+        }
+        let mut data = std::collections::BTreeMap::new();
+        for (name, len) in &order {
+            let mut buf = vec![0u8; len * 4];
+            f.read_exact(&mut buf)
+                .with_context(|| format!("reading array {name}"))?;
+            let vals: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            data.insert(name.clone(), vals);
+        }
+
+        let mut take = |name: String| -> anyhow::Result<Vec<f32>> {
+            data.remove(&name).with_context(|| format!("missing array {name}"))
+        };
+
+        let mut layers = Vec::new();
+        for l in 0..spec.layers {
+            let mut dirs = Vec::new();
+            for d in 0..spec.directions() {
+                let h = spec.pad(spec.hidden_dim);
+                let fused = spec.fused_in_dim(l);
+                let mut gates = Vec::new();
+                let mut bias = Vec::new();
+                for name in ["i", "f", "g", "o"] {
+                    gates.push(BlockCirculant::from_vectors(
+                        h,
+                        fused,
+                        spec.k,
+                        take(format!("l{l}.d{d}.w_{name}"))?,
+                    ));
+                    bias.push(take(format!("l{l}.d{d}.b_{name}"))?);
+                }
+                let gates: [BlockCirculant; 4] =
+                    gates.try_into().map_err(|_| anyhow::anyhow!("gate count"))?;
+                let bias: [Vec<f32>; 4] =
+                    bias.try_into().map_err(|_| anyhow::anyhow!("bias count"))?;
+                let peephole = if spec.peephole {
+                    Some([
+                        take(format!("l{l}.d{d}.p_ic"))?,
+                        take(format!("l{l}.d{d}.p_fc"))?,
+                        take(format!("l{l}.d{d}.p_oc"))?,
+                    ])
+                } else {
+                    None
+                };
+                let proj = match spec.proj_dim {
+                    Some(p) => Some(BlockCirculant::from_vectors(
+                        spec.pad(p),
+                        h,
+                        spec.k,
+                        take(format!("l{l}.d{d}.w_proj"))?,
+                    )),
+                    None => None,
+                };
+                dirs.push(LayerWeights {
+                    gates,
+                    bias,
+                    peephole,
+                    proj,
+                });
+            }
+            layers.push(dirs);
+        }
+        let classifier = if spec.num_classes > 0 {
+            Some((take("cls.w".into())?, take("cls.b".into())?))
+        } else {
+            None
+        };
+        Ok(Self {
+            spec,
+            layers,
+            classifier,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_save_load_tiny() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 99);
+        let dir = std::env::temp_dir().join("clstm_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.clstmw");
+        w.save(&path).unwrap();
+        let r = LstmWeights::load(&path).unwrap();
+        assert_eq!(r.spec, spec);
+        assert_eq!(r.layers.len(), w.layers.len());
+        assert_eq!(r.layers[0][0].gates[0].w, w.layers[0][0].gates[0].w);
+        assert_eq!(r.layers[0][0].bias[1], w.layers[0][0].bias[1]);
+        assert_eq!(
+            r.layers[0][0].peephole.as_ref().unwrap()[2],
+            w.layers[0][0].peephole.as_ref().unwrap()[2]
+        );
+        assert_eq!(
+            r.classifier.as_ref().unwrap().0,
+            w.classifier.as_ref().unwrap().0
+        );
+    }
+
+    #[test]
+    fn roundtrip_bidirectional() {
+        let spec = LstmSpec::small(8);
+        // Shrink for test speed.
+        let spec = LstmSpec {
+            hidden_dim: 64,
+            layers: 2,
+            ..spec
+        };
+        let w = LstmWeights::random(&spec, 7);
+        assert_eq!(w.layers[0].len(), 2, "two directions");
+        let dir = std::env::temp_dir().join("clstm_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bidir.clstmw");
+        w.save(&path).unwrap();
+        let r = LstmWeights::load(&path).unwrap();
+        assert_eq!(r.layers[1][1].gates[3].w, w.layers[1][1].gates[3].w);
+    }
+
+    #[test]
+    fn forget_bias_is_one() {
+        let w = LstmWeights::random(&LstmSpec::tiny(2), 1);
+        assert!(w.layers[0][0].bias[GATE_F].iter().all(|&b| b == 1.0));
+        assert!(w.layers[0][0].bias[GATE_I].iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("clstm_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.clstmw");
+        std::fs::write(&path, b"NOTVALID........").unwrap();
+        assert!(LstmWeights::load(&path).is_err());
+    }
+}

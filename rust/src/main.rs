@@ -1,0 +1,73 @@
+//! `clstm` — the C-LSTM framework CLI (Layer-3 leader entrypoint).
+//!
+//! Subcommands map 1:1 onto the paper's artefacts:
+//!
+//! ```text
+//! clstm table1            # Table 1  — compression/accuracy trade-off rows
+//! clstm table3            # Table 3  — full C-LSTM vs ESE comparison
+//! clstm fig3|fig4|fig5|fig6   # the four figures
+//! clstm schedule          # run Algorithm 1 + replication on a model
+//! clstm dse               # sweep block sizes, print design points
+//! clstm codegen           # emit the HLS C++ for a scheduled design
+//! clstm simulate          # discrete-event pipeline simulation
+//! clstm serve             # serve SynthTIMIT through the PJRT pipeline
+//! clstm quantize          # range analysis + fxp-vs-float accuracy report
+//! ```
+
+use clstm::util::cli::Cli;
+
+mod cmds {
+    pub mod figures;
+    pub mod quantize;
+    pub mod serve;
+    pub mod tables;
+}
+
+fn main() {
+    let cli = Cli::new(
+        "clstm",
+        "C-LSTM: structured-compression LSTM synthesis framework (FPGA'18 reproduction)",
+    )
+    .opt("model", "google", "model: google | small | tiny")
+    .opt("k", "8", "circulant block size")
+    .opt("platform", "ku060", "platform: ku060 | 7v3")
+    .opt("artifacts", "artifacts", "artifacts directory (for serve/quickcheck)")
+    .opt("utts", "8", "utterances to serve")
+    .opt("streams", "4", "interleaved streams in the pipeline")
+    .opt("seed", "1234", "random seed")
+    .opt("out", "", "optional output file for generated code/reports")
+    .flag("verbose", "chatty logging")
+    .parse_env();
+
+    let cmd = cli
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "help".to_string());
+
+    let result = match cmd.as_str() {
+        "table1" => cmds::tables::table1(&cli),
+        "table3" => cmds::tables::table3(&cli),
+        "fig3" => cmds::figures::fig3(&cli),
+        "fig4" => cmds::figures::fig4(&cli),
+        "fig5" => cmds::figures::fig5(&cli),
+        "fig6" => cmds::figures::fig6(&cli),
+        "schedule" => cmds::tables::schedule_cmd(&cli),
+        "dse" => cmds::tables::dse_cmd(&cli),
+        "codegen" => cmds::tables::codegen_cmd(&cli),
+        "simulate" => cmds::tables::simulate_cmd(&cli),
+        "serve" => cmds::serve::serve_cmd(&cli),
+        "quantize" => cmds::quantize::quantize_cmd(&cli),
+        _ => {
+            eprintln!(
+                "usage: clstm <table1|table3|fig3|fig4|fig5|fig6|schedule|dse|codegen|simulate|serve|quantize> [options]\n\
+                 run `clstm --help` for options"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

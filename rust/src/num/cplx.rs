@@ -1,0 +1,254 @@
+//! Complex arithmetic over floats and 16-bit fixed point.
+//!
+//! [`Cplx`] is the float complex number used by the reference FFT and the
+//! float spectral convolution. [`CplxFx`] is the 16-bit fixed-point complex
+//! word that travels through the bit-accurate FFT datapath: its multiply is
+//! the 4-mult/3-add (or 3-mult Karatsuba) structure an FPGA implementation
+//! maps onto DSP slices, with explicit narrowing.
+
+use super::fxp::{narrow, Fx32, Rounding};
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Complex number over f64 (also used with f32 data promoted to f64 — the
+/// reference path prioritises accuracy, not speed).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cplx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cplx {
+    pub const ZERO: Cplx = Cplx { re: 0.0, im: 0.0 };
+    pub const ONE: Cplx = Cplx { re: 1.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// `e^{iθ}`.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        Self {
+            re: theta.cos(),
+            im: theta.sin(),
+        }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Self {
+            re: self.re * s,
+            im: self.im * s,
+        }
+    }
+}
+
+impl Add for Cplx {
+    type Output = Cplx;
+    #[inline]
+    fn add(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for Cplx {
+    #[inline]
+    fn add_assign(&mut self, o: Cplx) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for Cplx {
+    type Output = Cplx;
+    #[inline]
+    fn sub(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Cplx {
+    type Output = Cplx;
+    #[inline]
+    fn mul(self, o: Cplx) -> Cplx {
+        Cplx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for Cplx {
+    type Output = Cplx;
+    #[inline]
+    fn neg(self) -> Cplx {
+        Cplx::new(-self.re, -self.im)
+    }
+}
+
+/// 16-bit fixed-point complex word. The Q-format is carried externally by
+/// the datapath (the FFT plan knows the format at every stage); this type
+/// only stores raw bits and implements the format-generic operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CplxFx {
+    pub re: i16,
+    pub im: i16,
+}
+
+impl CplxFx {
+    pub const ZERO: CplxFx = CplxFx { re: 0, im: 0 };
+
+    #[inline]
+    pub fn new(re: i16, im: i16) -> Self {
+        Self { re, im }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self {
+            re: self.re,
+            im: self.im.saturating_neg(),
+        }
+    }
+
+    /// Saturating add — the butterfly adder.
+    #[inline]
+    pub fn add_sat(self, o: CplxFx) -> CplxFx {
+        CplxFx::new(self.re.saturating_add(o.re), self.im.saturating_add(o.im))
+    }
+
+    /// Saturating subtract — the butterfly subtractor.
+    #[inline]
+    pub fn sub_sat(self, o: CplxFx) -> CplxFx {
+        CplxFx::new(self.re.saturating_sub(o.re), self.im.saturating_sub(o.im))
+    }
+
+    /// Complex multiply where `o` is in Q-format with `frac` fractional bits
+    /// (typically a twiddle factor in Q1.14): classic 4-mult 2-add datapath,
+    /// full-width products, one narrowing shift by `frac`.
+    #[inline]
+    pub fn mul_q(self, o: CplxFx, frac: u32, r: Rounding) -> CplxFx {
+        let ar = self.re as Fx32;
+        let ai = self.im as Fx32;
+        let br = o.re as Fx32;
+        let bi = o.im as Fx32;
+        let re = ar * br - ai * bi;
+        let im = ar * bi + ai * br;
+        CplxFx::new(narrow(re, frac, r), narrow(im, frac, r))
+    }
+
+    /// Wide complex multiply: returns the 32-bit products without narrowing
+    /// (for accumulation before a single shift — the Eq 6 accumulator).
+    #[inline]
+    pub fn mul_wide(self, o: CplxFx) -> (Fx32, Fx32) {
+        let ar = self.re as Fx32;
+        let ai = self.im as Fx32;
+        let br = o.re as Fx32;
+        let bi = o.im as Fx32;
+        (ar * br - ai * bi, ar * bi + ai * br)
+    }
+
+    /// Arithmetic right shift of both parts (the §4.2 distributed shifter).
+    #[inline]
+    pub fn shr(self, n: u32, r: Rounding) -> CplxFx {
+        CplxFx::new(
+            narrow(self.re as Fx32, n, r),
+            narrow(self.im as Fx32, n, r),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::fxp::Q;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn float_complex_field_axioms() {
+        let a = Cplx::new(1.5, -2.0);
+        let b = Cplx::new(-0.25, 0.75);
+        let c = Cplx::new(3.0, 0.5);
+        // Commutativity / associativity (exact for these dyadic values).
+        assert_eq!(a + b, b + a);
+        assert_eq!(a * b, b * a);
+        assert_eq!((a + b) + c, a + (b + c));
+        // Distributivity.
+        let lhs = a * (b + c);
+        let rhs = a * b + a * c;
+        assert!((lhs - rhs).abs() < 1e-12);
+        // Conjugate: |a|^2 = a * conj(a).
+        let m = a * a.conj();
+        assert!((m.re - a.norm_sqr()).abs() < 1e-12 && m.im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        for k in 0..16 {
+            let t = k as f64 * std::f64::consts::PI / 8.0;
+            assert!((Cplx::cis(t).abs() - 1.0).abs() < 1e-12);
+        }
+        let i = Cplx::cis(std::f64::consts::FRAC_PI_2);
+        assert!(i.re.abs() < 1e-12 && (i.im - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fx_mul_matches_float_model() {
+        // Data in Q3.12, twiddles in Q1.14.
+        let qd = Q::new(12);
+        let qt = Q::new(14);
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for _ in 0..2000 {
+            let a = Cplx::new(rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0));
+            let t = Cplx::cis(rng.uniform(0.0, std::f64::consts::TAU));
+            let afx = CplxFx::new(qd.from_f64(a.re), qd.from_f64(a.im));
+            let tfx = CplxFx::new(qt.from_f64(t.re), qt.from_f64(t.im));
+            let p = afx.mul_q(tfx, 14, Rounding::Nearest);
+            let pf = a * t;
+            let err_re = (qd.to_f64(p.re) - pf.re).abs();
+            let err_im = (qd.to_f64(p.im) - pf.im).abs();
+            // |t| = 1, |a| ≤ 2√2: error is a few LSBs.
+            assert!(err_re < 8.0 * qd.eps() && err_im < 8.0 * qd.eps());
+        }
+    }
+
+    #[test]
+    fn fx_butterfly_saturates_not_wraps() {
+        let a = CplxFx::new(i16::MAX, i16::MIN);
+        let b = CplxFx::new(1000, -1000);
+        let s = a.add_sat(b);
+        assert_eq!(s.re, i16::MAX);
+        assert_eq!(s.im, i16::MIN);
+        let d = a.sub_sat(CplxFx::new(-1000, 1000));
+        assert_eq!(d.re, i16::MAX);
+        assert_eq!(d.im, i16::MIN);
+    }
+
+    #[test]
+    fn shr_rounds_per_mode() {
+        let v = CplxFx::new(3, -3);
+        let t = v.shr(1, Rounding::Truncate);
+        let n = v.shr(1, Rounding::Nearest);
+        assert_eq!((t.re, t.im), (1, -2));
+        assert_eq!((n.re, n.im), (2, -2));
+    }
+}

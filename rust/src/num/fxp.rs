@@ -1,0 +1,314 @@
+//! Bit-accurate 16-bit Q-format fixed-point arithmetic (§4.2 of the paper).
+//!
+//! A value is stored as a raw `i16`; the interpretation (how many fractional
+//! bits) is carried by a [`Q`] descriptor. The C-LSTM datapath is 16 bits
+//! total: 1 sign bit, `15 - frac` integer bits, `frac` fractional bits.
+//! Multiplication widens into `i32` ([`Fx32`]) and is narrowed back with an
+//! explicit, configurable [`Rounding`] mode — exactly the operation an FPGA
+//! DSP slice + shifter performs, including the paper's two shift policies
+//! (truncate-at-once vs distributed one-bit shifts, §4.2).
+
+/// Rounding behaviour when discarding low-order bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rounding {
+    /// Arithmetic right shift (floor). Cheapest in hardware; what a bare
+    /// `>>` does.
+    Truncate,
+    /// Round half away from zero by adding ±(1 << (shift-1)) before the
+    /// shift. One extra adder in hardware; markedly better accuracy.
+    Nearest,
+}
+
+/// 32-bit accumulator value in some Q-format (used between multiply and the
+/// narrowing shift, and by the accumulation stage of the circulant conv).
+pub type Fx32 = i32;
+
+/// Q-format descriptor for a 16-bit word: `frac` fractional bits.
+///
+/// `Q::new(12)` is Q3.12 (1 sign + 3 integer + 12 fraction): range
+/// `[-8, 8)` with resolution `2^-12` — the default weight/activation format
+/// chosen by the range analysis for the LSTM models in this repo.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Q {
+    pub frac: u32,
+}
+
+impl Q {
+    pub const fn new(frac: u32) -> Self {
+        assert!(frac <= 15);
+        Self { frac }
+    }
+
+    /// Scale factor `2^frac`.
+    #[inline]
+    pub fn scale(self) -> f64 {
+        (1i64 << self.frac) as f64
+    }
+
+    /// Smallest representable increment.
+    #[inline]
+    pub fn eps(self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// Largest representable value.
+    #[inline]
+    pub fn max_val(self) -> f64 {
+        i16::MAX as f64 / self.scale()
+    }
+
+    /// Smallest (most negative) representable value.
+    #[inline]
+    pub fn min_val(self) -> f64 {
+        i16::MIN as f64 / self.scale()
+    }
+
+    /// Quantise an f64 to the raw i16 representation (round-nearest,
+    /// saturating — matches the behaviour of a quantiser block).
+    #[inline]
+    pub fn from_f64(self, x: f64) -> i16 {
+        let v = (x * self.scale()).round();
+        if v >= i16::MAX as f64 {
+            i16::MAX
+        } else if v <= i16::MIN as f64 {
+            i16::MIN
+        } else {
+            v as i16
+        }
+    }
+
+    #[inline]
+    pub fn from_f32(self, x: f32) -> i16 {
+        self.from_f64(x as f64)
+    }
+
+    /// Interpret a raw i16 back as f64.
+    #[inline]
+    pub fn to_f64(self, v: i16) -> f64 {
+        v as f64 / self.scale()
+    }
+
+    #[inline]
+    pub fn to_f32(self, v: i16) -> f32 {
+        self.to_f64(v) as f32
+    }
+
+    /// Quantise a slice.
+    pub fn quantize_slice(self, xs: &[f32]) -> Vec<i16> {
+        xs.iter().map(|&x| self.from_f32(x)).collect()
+    }
+
+    /// Dequantise a slice.
+    pub fn dequantize_slice(self, vs: &[i16]) -> Vec<f32> {
+        vs.iter().map(|&v| self.to_f32(v)).collect()
+    }
+
+    /// Saturating addition of two values in this format.
+    #[inline]
+    pub fn add_sat(self, a: i16, b: i16) -> i16 {
+        a.saturating_add(b)
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sub_sat(self, a: i16, b: i16) -> i16 {
+        a.saturating_sub(b)
+    }
+
+    /// Full-precision product of two 16-bit values: a 32-bit value with
+    /// `2*frac` fractional bits (no information loss — this is the DSP48
+    /// multiplier output).
+    #[inline]
+    pub fn mul_wide(self, a: i16, b: i16) -> Fx32 {
+        a as i32 * b as i32
+    }
+
+    /// Multiply and narrow back to this format with the given rounding.
+    #[inline]
+    pub fn mul(self, a: i16, b: i16, r: Rounding) -> i16 {
+        let wide = self.mul_wide(a, b);
+        narrow(wide, self.frac, r)
+    }
+}
+
+/// Arithmetic right shift by `shift` bits with the chosen rounding, then
+/// saturate into i16. This is the single primitive every datapath-narrowing
+/// step in the design reduces to.
+#[inline]
+pub fn narrow(wide: Fx32, shift: u32, r: Rounding) -> i16 {
+    let shifted = shift_round(wide, shift, r);
+    if shifted > i16::MAX as i32 {
+        i16::MAX
+    } else if shifted < i16::MIN as i32 {
+        i16::MIN
+    } else {
+        shifted as i16
+    }
+}
+
+/// Right shift a 32-bit accumulator with rounding, staying in i32 (no
+/// saturation) — used inside FFT stages where the accumulator keeps width.
+#[inline]
+pub fn shift_round(wide: Fx32, shift: u32, r: Rounding) -> Fx32 {
+    if shift == 0 {
+        return wide;
+    }
+    match r {
+        Rounding::Truncate => wide >> shift,
+        Rounding::Nearest => {
+            // Round half away from zero, bias before shifting.
+            let bias = 1i32 << (shift - 1);
+            if wide >= 0 {
+                (wide + bias) >> shift
+            } else {
+                -(((-wide) + bias) >> shift)
+            }
+        }
+    }
+}
+
+/// Compute the quantisation signal-to-noise ratio (dB) of representing `xs`
+/// in format `q` — used by the range-analysis pass to pick formats.
+pub fn quant_snr_db(q: Q, xs: &[f32]) -> f64 {
+    let mut sig = 0.0f64;
+    let mut noise = 0.0f64;
+    for &x in xs {
+        let xq = q.to_f64(q.from_f32(x));
+        sig += (x as f64) * (x as f64);
+        let e = x as f64 - xq;
+        noise += e * e;
+    }
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::testing::{forall, gen, no_shrink, Config};
+
+    const Q12: Q = Q::new(12);
+
+    #[test]
+    fn roundtrip_within_eps() {
+        let q = Q12;
+        for &x in &[0.0, 1.0, -1.0, 3.99, -3.99, 0.000244, 7.9997] {
+            let v = q.from_f64(x);
+            assert!((q.to_f64(v) - x).abs() <= q.eps() / 2.0 + 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_range_edges() {
+        let q = Q12;
+        assert_eq!(q.from_f64(100.0), i16::MAX);
+        assert_eq!(q.from_f64(-100.0), i16::MIN);
+        assert_eq!(q.add_sat(i16::MAX, 1), i16::MAX);
+        assert_eq!(q.add_sat(i16::MIN, -1), i16::MIN);
+    }
+
+    #[test]
+    fn mul_matches_float_within_eps() {
+        let q = Q12;
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for _ in 0..2000 {
+            let a = rng.uniform(-2.0, 2.0);
+            let b = rng.uniform(-2.0, 2.0);
+            let pa = q.from_f64(a);
+            let pb = q.from_f64(b);
+            let prod = q.to_f64(q.mul(pa, pb, Rounding::Nearest));
+            // Error bound: input quantisation (≤eps/2 each, magnitudes ≤2)
+            // plus output rounding eps/2.
+            let bound = q.eps() * (2.0 + 2.0) / 2.0 + q.eps();
+            assert!((prod - a * b).abs() <= bound, "{a}*{b} -> {prod}");
+        }
+    }
+
+    #[test]
+    fn nearest_beats_truncate_on_average() {
+        let q = Q12;
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let (mut err_t, mut err_n) = (0.0f64, 0.0f64);
+        for _ in 0..5000 {
+            let a = rng.uniform(-1.5, 1.5);
+            let b = rng.uniform(-1.5, 1.5);
+            let (pa, pb) = (q.from_f64(a), q.from_f64(b));
+            let t = q.to_f64(q.mul(pa, pb, Rounding::Truncate));
+            let n = q.to_f64(q.mul(pa, pb, Rounding::Nearest));
+            err_t += (t - a * b).abs();
+            err_n += (n - a * b).abs();
+        }
+        assert!(err_n < err_t, "nearest {err_n} !< truncate {err_t}");
+    }
+
+    #[test]
+    fn shift_round_halfway_behaviour() {
+        // 3 >> 1 with nearest: 3/2 = 1.5 → 2 (away from zero).
+        assert_eq!(shift_round(3, 1, Rounding::Nearest), 2);
+        assert_eq!(shift_round(-3, 1, Rounding::Nearest), -2);
+        assert_eq!(shift_round(3, 1, Rounding::Truncate), 1);
+        // Truncation floors negatives.
+        assert_eq!(shift_round(-3, 1, Rounding::Truncate), -2);
+        assert_eq!(shift_round(100, 0, Rounding::Nearest), 100);
+    }
+
+    #[test]
+    fn distributed_shifts_equal_single_shift_in_truncate_only_sometimes() {
+        // The paper's observation (§4.2): shifting 1 bit at a time with
+        // rounding ≠ shifting log2(k) bits at once; distributed retains
+        // more precision on average. Verify both are at most 1 apart and
+        // that for exact multiples they agree.
+        for v in [-4096i32, -64, 0, 64, 4096] {
+            let once = shift_round(v, 3, Rounding::Nearest);
+            let mut step = v;
+            for _ in 0..3 {
+                step = shift_round(step, 1, Rounding::Nearest);
+            }
+            assert_eq!(once, step, "exact multiple v={v}");
+        }
+        for v in [-1000i32, -37, 37, 999] {
+            let once = shift_round(v, 3, Rounding::Nearest);
+            let mut step = v;
+            for _ in 0..3 {
+                step = shift_round(step, 1, Rounding::Nearest);
+            }
+            assert!((once - step).abs() <= 1, "v={v}: {once} vs {step}");
+        }
+    }
+
+    #[test]
+    fn property_quantisation_error_bounded() {
+        forall(
+            Config::default().cases(200),
+            |rng| {
+                let frac = gen::usize_in(rng, 4..=14) as u32;
+                let q = Q::new(frac);
+                let x = rng.uniform(q.min_val(), q.max_val());
+                (frac, x)
+            },
+            no_shrink,
+            |&(frac, x)| {
+                let q = Q::new(frac);
+                let err = (q.to_f64(q.from_f64(x)) - x).abs();
+                if err <= q.eps() / 2.0 + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("err {err} > eps/2 {}", q.eps() / 2.0))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn snr_improves_with_more_frac_bits() {
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let xs: Vec<f32> = (0..4000).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let snr8 = quant_snr_db(Q::new(8), &xs);
+        let snr12 = quant_snr_db(Q::new(12), &xs);
+        // ~6 dB per bit.
+        assert!(snr12 - snr8 > 20.0, "snr8={snr8} snr12={snr12}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Numeric substrates: Q-format fixed-point arithmetic and complex numbers.
+//!
+//! The paper's datapath is 16-bit fixed point (§4.2); [`fxp`] models it
+//! bit-accurately (saturation, rounding/truncation, shift schedules) so the
+//! Rust engine reports the *same* quantisation behaviour the FPGA would.
+//! [`cplx`] provides the complex arithmetic used by the FFT and the spectral
+//! circulant convolution, over both floats and fixed point.
+
+pub mod cplx;
+pub mod fxp;
+
+pub use cplx::{Cplx, CplxFx};
+pub use fxp::{Fx32, Q, Rounding};

@@ -1,0 +1,19 @@
+//! Analytical performance, resource, and power models (§4.4, Eq 8–12).
+//!
+//! The paper's design flow *predicts* FPS and utilisation from linear
+//! per-operator resource profiles and the Eq 8–9 pipeline model, then
+//! validates on hardware. Without the hardware, the same models are our
+//! primary instrument (see DESIGN.md §2 for the substitution argument);
+//! the coefficients in [`resource`] are calibrated against the utilisation
+//! rows the paper reports in Table 3, and the discrete-event simulator
+//! (`fpga_sim`) cross-checks the Eq 8–9 predictions.
+
+pub mod performance;
+pub mod platform;
+pub mod power;
+pub mod resource;
+
+pub use performance::{PerfEstimate, PerfModel};
+pub use platform::{Platform, PlatformKind};
+pub use power::PowerModel;
+pub use resource::{OpProfile, Resources};

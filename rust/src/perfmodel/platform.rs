@@ -1,0 +1,127 @@
+//! FPGA platform specifications (Table 2) and clocking (§6.1).
+
+use super::resource::Resources;
+
+/// The two evaluation platforms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlatformKind {
+    /// Xilinx KU060 (XCKU060, 20 nm) — the ESE platform.
+    Ku060,
+    /// Alpha Data ADM-7V3 (Virtex-7 690t, 28 nm).
+    Adm7v3,
+}
+
+/// On-chip resources and process of one FPGA platform (Table 2 verbatim).
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub kind: PlatformKind,
+    pub name: &'static str,
+    pub dsp: u64,
+    pub bram36: u64,
+    pub lut: u64,
+    pub ff: u64,
+    pub process_nm: u32,
+    /// Operating frequency of all C-LSTM designs (§6.1: 200 MHz).
+    pub freq_hz: f64,
+}
+
+impl Platform {
+    pub fn ku060() -> Self {
+        Platform {
+            kind: PlatformKind::Ku060,
+            name: "XCKU060",
+            dsp: 2760,
+            bram36: 1080,
+            lut: 331_680,
+            ff: 663_360,
+            process_nm: 20,
+            freq_hz: 200e6,
+        }
+    }
+
+    pub fn adm7v3() -> Self {
+        Platform {
+            kind: PlatformKind::Adm7v3,
+            name: "Virtex-7(690t)",
+            dsp: 3600,
+            bram36: 1470,
+            lut: 859_200,
+            ff: 429_600,
+            process_nm: 28,
+            freq_hz: 200e6,
+        }
+    }
+
+    /// Total resources as a vector.
+    pub fn totals(&self) -> Resources {
+        Resources {
+            dsp: self.dsp as f64,
+            bram: self.bram36 as f64,
+            lut: self.lut as f64,
+            ff: self.ff as f64,
+        }
+    }
+
+    /// The budget the DSE may fill. §6.2: "to make a fair comparison, we
+    /// use the total resource of KU060 as the resource consumption bound
+    /// for the ADM-7V3 platform" — so both platforms share the KU060
+    /// envelope, clamped to what each chip physically has (the Virtex-7
+    /// carries fewer FFs than the KU060).
+    pub fn budget(&self) -> Resources {
+        let bound = Platform::ku060().totals();
+        let own = self.totals();
+        let envelope = Resources {
+            dsp: bound.dsp.min(own.dsp),
+            bram: bound.bram.min(own.bram),
+            lut: bound.lut.min(own.lut),
+            ff: bound.ff.min(own.ff),
+        };
+        // Table 3's densest design reaches 98% DSP / 89% BRAM on KU060; a
+        // 0.98 derate reproduces "fill the chip" without exceeding it.
+        envelope.scale(0.98)
+    }
+
+    /// Utilisation percentages of `used` against this platform's totals.
+    pub fn utilisation(&self, used: &Resources) -> Resources {
+        let t = self.totals();
+        Resources {
+            dsp: 100.0 * used.dsp / t.dsp,
+            bram: 100.0 * used.bram / t.bram,
+            lut: 100.0 * used.lut / t.lut,
+            ff: 100.0 * used.ff / t.ff,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_verbatim() {
+        let ku = Platform::ku060();
+        assert_eq!((ku.dsp, ku.bram36, ku.lut, ku.ff), (2760, 1080, 331_680, 663_360));
+        assert_eq!(ku.process_nm, 20);
+        let v7 = Platform::adm7v3();
+        assert_eq!((v7.dsp, v7.bram36, v7.lut, v7.ff), (3600, 1470, 859_200, 429_600));
+        assert_eq!(v7.process_nm, 28);
+        assert_eq!(v7.freq_hz, 200e6);
+    }
+
+    #[test]
+    fn v7_budget_bounded_by_ku060() {
+        // The §6.2 fairness rule.
+        let b = Platform::adm7v3().budget();
+        let ku = Platform::ku060().totals();
+        assert!(b.dsp <= ku.dsp && b.bram <= ku.bram && b.lut <= ku.lut && b.ff <= ku.ff);
+    }
+
+    #[test]
+    fn utilisation_percentages() {
+        let ku = Platform::ku060();
+        let half = ku.totals().scale(0.5);
+        let u = ku.utilisation(&half);
+        assert!((u.dsp - 50.0).abs() < 1e-9);
+        assert!((u.bram - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Quantisation tooling (§4.2): the "bit-accurate software simulator" the
+//! paper uses to pick the 16-bit datapath format.
+//!
+//! [`range`] tracks value distributions of every tensor class flowing
+//! through the float engine (inputs, gate pre-activations, cell states,
+//! outputs, spectral weights) and recommends Q-formats that avoid overflow
+//! while maximising fractional precision; it then *measures* the resulting
+//! accuracy of the fixed-point engine against the float engine, which is
+//! how we validate the paper's "16-bit fixed point is accurate enough"
+//! claim without TIMIT.
+
+pub mod range;
+
+pub use range::{FormatReport, RangeTracker};

@@ -1,0 +1,230 @@
+//! Range analysis and Q-format selection (§4.2).
+//!
+//! "We first analyze the numerical range of the trained weights in the
+//! LSTM, and then determine the bitwidth of integer and fractional parts to
+//! avoid data overflow and accuracy degradation."
+//!
+//! [`RangeTracker`] accumulates min/max/mean/rms per tensor class;
+//! [`FormatReport`] turns the observed ranges into Q-format
+//! recommendations and quantisation-SNR estimates.
+
+use crate::num::fxp::{quant_snr_db, Q};
+use std::collections::BTreeMap;
+
+/// Running statistics of one tensor class.
+#[derive(Debug, Clone)]
+pub struct RangeStats {
+    pub count: u64,
+    pub min: f64,
+    pub max: f64,
+    pub sum_abs: f64,
+    pub sum_sq: f64,
+    /// Reservoir of samples for SNR estimation.
+    samples: Vec<f32>,
+}
+
+impl Default for RangeStats {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sum_abs: 0.0,
+            sum_sq: 0.0,
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl RangeStats {
+    pub fn absmax(&self) -> f64 {
+        self.min.abs().max(self.max.abs()).max(0.0)
+    }
+
+    pub fn rms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            (self.sum_sq / self.count as f64).sqrt()
+        }
+    }
+
+    /// Smallest-`frac` format whose range covers `absmax` with `headroom`
+    /// extra integer bits (headroom absorbs inputs hotter than calibration).
+    pub fn recommend(&self, headroom: u32) -> Q {
+        let am = self.absmax().max(1e-12);
+        // Need 2^(15−frac) > am·2^headroom.
+        let int_bits = am.log2().ceil().max(0.0) as i64 + headroom as i64;
+        let frac = (15 - int_bits).clamp(0, 15) as u32;
+        Q::new(frac)
+    }
+}
+
+/// Tracks many named tensor classes during a calibration run.
+#[derive(Debug, Default)]
+pub struct RangeTracker {
+    stats: BTreeMap<String, RangeStats>,
+    /// Max samples kept per class for SNR estimation.
+    reservoir: usize,
+}
+
+impl RangeTracker {
+    pub fn new() -> Self {
+        Self {
+            stats: BTreeMap::new(),
+            reservoir: 8192,
+        }
+    }
+
+    /// Record a batch of values for a class.
+    pub fn observe(&mut self, class: &str, values: &[f32]) {
+        let s = self.stats.entry(class.to_string()).or_default();
+        for &v in values {
+            let vf = v as f64;
+            s.count += 1;
+            s.min = s.min.min(vf);
+            s.max = s.max.max(vf);
+            s.sum_abs += vf.abs();
+            s.sum_sq += vf * vf;
+            if s.samples.len() < self.reservoir {
+                s.samples.push(v);
+            }
+        }
+    }
+
+    pub fn get(&self, class: &str) -> Option<&RangeStats> {
+        self.stats.get(class)
+    }
+
+    /// Produce the per-class format report with `headroom` integer bits.
+    pub fn report(&self, headroom: u32) -> FormatReport {
+        let entries = self
+            .stats
+            .iter()
+            .map(|(name, s)| {
+                let q = s.recommend(headroom);
+                let snr = if s.samples.is_empty() {
+                    f64::INFINITY
+                } else {
+                    quant_snr_db(q, &s.samples)
+                };
+                FormatEntry {
+                    class: name.clone(),
+                    absmax: s.absmax(),
+                    rms: s.rms(),
+                    q,
+                    snr_db: snr,
+                }
+            })
+            .collect();
+        FormatReport { entries }
+    }
+}
+
+/// One class's recommendation.
+#[derive(Debug, Clone)]
+pub struct FormatEntry {
+    pub class: String,
+    pub absmax: f64,
+    pub rms: f64,
+    pub q: Q,
+    pub snr_db: f64,
+}
+
+/// The full report; also picks the single *datapath* format (the paper uses
+/// one 16-bit format for the shared datapath) as the minimum-frac
+/// recommendation across activation-like classes.
+#[derive(Debug, Clone)]
+pub struct FormatReport {
+    pub entries: Vec<FormatEntry>,
+}
+
+impl FormatReport {
+    /// The shared datapath format: min fractional bits over all classes
+    /// (covers the widest range seen anywhere).
+    pub fn datapath_format(&self) -> Q {
+        self.entries
+            .iter()
+            .map(|e| e.q)
+            .min_by_key(|q| q.frac)
+            .unwrap_or(Q::new(12))
+    }
+
+    /// Render as an aligned text table.
+    pub fn to_table(&self) -> String {
+        let mut s = String::from(
+            "class                          absmax        rms     format   SNR(dB)\n",
+        );
+        for e in &self.entries {
+            s.push_str(&format!(
+                "{:<28} {:>9.4} {:>10.5}   Q{}.{:<2} {:>9.1}\n",
+                e.class,
+                e.absmax,
+                e.rms,
+                15 - e.q.frac,
+                e.q.frac,
+                e.snr_db
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn recommends_wider_int_for_wider_range() {
+        let mut t = RangeTracker::new();
+        t.observe("small", &[0.1, -0.2, 0.05]);
+        t.observe("big", &[30.0, -12.0, 4.0]);
+        let r = t.report(0);
+        let small = r.entries.iter().find(|e| e.class == "small").unwrap();
+        let big = r.entries.iter().find(|e| e.class == "big").unwrap();
+        assert!(small.q.frac > big.q.frac);
+        // Ranges actually covered.
+        assert!(small.q.max_val() >= 0.2);
+        assert!(big.q.max_val() >= 30.0);
+    }
+
+    #[test]
+    fn headroom_reduces_frac() {
+        let mut t = RangeTracker::new();
+        t.observe("x", &[1.5, -1.0]);
+        let r0 = t.report(0).entries[0].q;
+        let r2 = t.report(2).entries[0].q;
+        assert!(r2.frac < r0.frac);
+    }
+
+    #[test]
+    fn datapath_format_is_min_frac() {
+        let mut t = RangeTracker::new();
+        t.observe("a", &[0.1]);
+        t.observe("b", &[100.0]);
+        let r = t.report(0);
+        let dp = r.datapath_format();
+        let bq = r.entries.iter().find(|e| e.class == "b").unwrap().q;
+        assert_eq!(dp.frac, bq.frac);
+    }
+
+    #[test]
+    fn snr_reported_for_gaussian_data() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let data: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        let mut t = RangeTracker::new();
+        t.observe("g", &data);
+        let r = t.report(1);
+        // 16-bit fixed point on unit-variance data: SNR well above 40 dB.
+        assert!(r.entries[0].snr_db > 40.0, "snr {}", r.entries[0].snr_db);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = RangeTracker::new();
+        t.observe("x", &[1.0, 2.0]);
+        let tbl = t.report(1).to_table();
+        assert!(tbl.contains('x') && tbl.contains("Q"));
+    }
+}

@@ -1,0 +1,163 @@
+//! Reproduction harnesses for the paper's figures.
+
+use super::Table;
+use crate::circulant::conv::OpCount;
+use crate::graph::builder::build_layer_graph;
+use crate::graph::op::{fig5_series, OpKind};
+use crate::lstm::activations::PwlTable;
+use crate::lstm::config::LstmSpec;
+use crate::num::fxp::Q;
+use crate::perfmodel::platform::Platform;
+use crate::schedule::algorithm1::schedule;
+use crate::schedule::replication::enumerate_replication;
+
+/// Fig 3 — circulant-convolution operator counts, original vs optimized.
+pub fn fig3(k: usize) -> Table {
+    let spec = LstmSpec::google(k);
+    let h = spec.pad(spec.hidden_dim);
+    let fused = spec.fused_in_dim(0);
+    let (p, q) = (h / k, fused / k);
+    let orig = OpCount::original(p, q, k);
+    let opt = OpCount::optimized(p, q, k);
+    let mut t = Table::new(
+        &format!("Fig 3 — circulant conv op counts (Google LSTM gate matrix, k={k}, p={p}, q={q})"),
+        &["metric", "original (Eq 3)", "optimized (Eq 6)", "reduction"],
+    );
+    let rowf = |name: &str, a: usize, b: usize| -> Vec<String> {
+        vec![
+            name.to_string(),
+            a.to_string(),
+            b.to_string(),
+            format!("{:.1}x", a as f64 / b.max(1) as f64),
+        ]
+    };
+    t.rows.push(rowf("DFT calls", orig.dft_calls, opt.dft_calls));
+    t.rows.push(rowf("IDFT calls", orig.idft_calls, opt.idft_calls));
+    t.rows.push(rowf("⊙ real mults", orig.ew_mults, opt.ew_mults));
+    t.rows.push(rowf("⊙/acc real adds", orig.ew_adds, opt.ew_adds));
+    t.rows.push(rowf(
+        "transform calls total",
+        orig.transform_calls(),
+        opt.transform_calls(),
+    ));
+    t
+}
+
+/// Fig 4 — PWL activation approximation error.
+pub fn fig4() -> Table {
+    let q = Q::new(12);
+    let sig = PwlTable::sigmoid(q);
+    let tanh = PwlTable::tanh(q);
+    let sig_err = sig.max_error(|x| 1.0 / (1.0 + (-x).exp()));
+    let tanh_err = tanh.max_error(|x| x.tanh());
+    let mut t = Table::new(
+        "Fig 4 — 22-segment piece-wise-linear activations (paper: error < 1%)",
+        &["function", "segments", "fit range", "max |error|", "<1% ?"],
+    );
+    t.row(vec![
+        "sigmoid".into(),
+        sig.segments.to_string(),
+        format!("[{}, {}]", sig.x_min, sig.x_max),
+        format!("{sig_err:.5}"),
+        (sig_err < 0.01).to_string(),
+    ]);
+    t.row(vec![
+        "tanh".into(),
+        tanh.segments.to_string(),
+        format!("[{}, {}]", tanh.x_min, tanh.x_max),
+        format!("{tanh_err:.5}"),
+        (tanh_err < 0.01).to_string(),
+    ]);
+    t
+}
+
+/// Fig 5 — normalized computational complexity of the primitive operators.
+pub fn fig5(k: usize) -> Table {
+    let spec = LstmSpec::google(k);
+    let series = fig5_series(
+        spec.pad(spec.hidden_dim),
+        spec.fused_in_dim(0),
+        k,
+    );
+    let mut t = Table::new(
+        &format!("Fig 5 — primitive operator complexity, normalized (Google LSTM, k={k})"),
+        &["operator", "normalized complexity", "bar"],
+    );
+    for (kind, v) in series {
+        let bar_len = (v.log10().max(0.0) * 20.0) as usize + 1;
+        t.row(vec![
+            kind.as_str().to_string(),
+            format!("{v:.1}"),
+            "#".repeat(bar_len),
+        ]);
+    }
+    t
+}
+
+/// Fig 6 — the operator graph and its scheduled stages.
+pub fn fig6(k: usize) -> (Table, String) {
+    let spec = LstmSpec::google(k);
+    let g = build_layer_graph(&spec, 0);
+    let plat = Platform::ku060();
+    let s = enumerate_replication(schedule(&g, &plat.budget()), &plat.budget());
+    let mut t = Table::new(
+        &format!("Fig 6 — operator scheduling (Google LSTM, k={k})"),
+        &["stage", "R", "cycles", "operators"],
+    );
+    for (i, st) in s.stages.iter().enumerate() {
+        let ops: Vec<String> = st
+            .ops
+            .iter()
+            .map(|o| {
+                if o.node.kind == OpKind::CirConv {
+                    format!("[{}]", o.node.name) // squares
+                } else {
+                    format!("({})", o.node.name) // circles
+                }
+            })
+            .collect();
+        t.row(vec![
+            (i + 1).to_string(),
+            st.replication.to_string(),
+            st.cycles().to_string(),
+            ops.join(" "),
+        ]);
+    }
+    (t, g.to_dot())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shows_section41_reductions() {
+        let t = fig3(8);
+        let s = t.render();
+        assert!(s.contains("DFT calls"));
+        // IDFT reduction is q (= 84): per block-row q→1.
+        assert!(s.contains("84.0x"), "{s}");
+    }
+
+    #[test]
+    fn fig4_confirms_sub_1pct() {
+        let s = fig4().render();
+        assert_eq!(s.matches("true").count(), 2, "{s}");
+    }
+
+    #[test]
+    fn fig5_conv_dominates() {
+        let t = fig5(8);
+        assert_eq!(t.rows[0][0], "cirConv");
+        let v: f64 = t.rows[0][1].parse().unwrap();
+        assert!(v > 50.0);
+    }
+
+    #[test]
+    fn fig6_three_stages_and_dot() {
+        let (t, dot) = fig6(8);
+        assert_eq!(t.rows.len(), 3);
+        assert!(t.rows[2][3].contains("[conv_Wym]"));
+        assert!(dot.contains("digraph"));
+    }
+}

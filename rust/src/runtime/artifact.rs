@@ -1,0 +1,259 @@
+//! Artifact manifest handling and spectral-weight buffer preparation.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing, per
+//! model configuration, the four HLO artifacts (stage1/2/3 + fused step)
+//! with their argument shapes. [`SpectralBundle`] converts a Rust-side
+//! [`LstmWeights`] layer into exactly the flat `(4p, q, bins)` re/im
+//! buffers those artifacts expect — the same math as
+//! `compile.kernels.ref.spectral_weights`.
+
+use crate::fft::rfft::{rfft, spectrum_len};
+use crate::lstm::weights::{LayerWeights, LstmWeights};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub out_shapes: Vec<Vec<usize>>,
+}
+
+/// One model configuration's artifact set.
+#[derive(Debug, Clone)]
+pub struct ConfigArtifacts {
+    pub name: String,
+    pub k: usize,
+    pub batch: usize,
+    pub hidden: usize,
+    pub stage1: ArtifactMeta,
+    pub stage2: ArtifactMeta,
+    pub stage3: ArtifactMeta,
+    pub step: ArtifactMeta,
+}
+
+/// The artifacts directory with its parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+    pub configs: Vec<ConfigArtifacts>,
+    pub golden_weights: Option<PathBuf>,
+    pub golden_vectors: Option<PathBuf>,
+}
+
+fn parse_meta(j: &Json) -> Result<ArtifactMeta> {
+    let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .context("shape list")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect()
+            })
+            .collect()
+    };
+    Ok(ArtifactMeta {
+        file: j.get_str("file").context("file")?.to_string(),
+        arg_shapes: shapes("args")?,
+        out_shapes: shapes("outs")?,
+    })
+}
+
+impl ArtifactDir {
+    /// Parse `<root>/manifest.json`.
+    pub fn open(root: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", root.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut configs = Vec::new();
+        for (name, cfg) in j.get("configs").and_then(Json::as_obj).context("configs")? {
+            let arts = cfg.get("artifacts").and_then(Json::as_obj).context("artifacts")?;
+            configs.push(ConfigArtifacts {
+                name: name.clone(),
+                k: cfg.get_usize("k").context("k")?,
+                batch: cfg.get_usize("batch").unwrap_or(1),
+                hidden: cfg.get_usize("hidden").context("hidden")?,
+                stage1: parse_meta(arts.get("stage1").context("stage1")?)?,
+                stage2: parse_meta(arts.get("stage2").context("stage2")?)?,
+                stage3: parse_meta(arts.get("stage3").context("stage3")?)?,
+                step: parse_meta(arts.get("step").context("step")?)?,
+            });
+        }
+        configs.sort_by(|a, b| a.name.cmp(&b.name));
+        let golden = j.get("golden");
+        Ok(Self {
+            root: root.to_path_buf(),
+            configs,
+            golden_weights: golden
+                .and_then(|g| g.get_str("weights"))
+                .map(|f| root.join(f)),
+            golden_vectors: golden
+                .and_then(|g| g.get_str("vectors"))
+                .map(|f| root.join(f)),
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Option<&ConfigArtifacts> {
+        self.configs.iter().find(|c| c.name == name)
+    }
+
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.root.join(&meta.file)
+    }
+}
+
+/// Flat spectral-weight buffers for one layer, in the artifact layout.
+#[derive(Debug, Clone)]
+pub struct SpectralBundle {
+    /// Gate spectra, `(4p, q, bins)` row-major, gates stacked i, f, g, o.
+    pub gates_re: Vec<f32>,
+    pub gates_im: Vec<f32>,
+    pub gates_shape: [usize; 3],
+    /// Projection spectra `(pp, hp/k, bins)`; empty + [1,1,1] when absent
+    /// (the step artifact still takes dummy operands).
+    pub proj_re: Vec<f32>,
+    pub proj_im: Vec<f32>,
+    pub proj_shape: [usize; 3],
+    /// Biases `(4, h)` and peepholes `(3, h)` (zeros when absent).
+    pub bias: Vec<f32>,
+    pub peep: Vec<f32>,
+    pub hidden: usize,
+}
+
+impl SpectralBundle {
+    /// Precompute from a weights bundle's layer `l`, direction `d`.
+    pub fn from_weights(w: &LstmWeights, l: usize, d: usize) -> Self {
+        let lw: &LayerWeights = &w.layers[l][d];
+        let k = w.spec.k;
+        let bins = spectrum_len(k);
+        let (p, q) = (lw.gates[0].p, lw.gates[0].q);
+
+        let mut gates_re = Vec::with_capacity(4 * p * q * bins);
+        let mut gates_im = Vec::with_capacity(4 * p * q * bins);
+        let mut scratch = vec![0.0f64; k];
+        for g in 0..4 {
+            for i in 0..p {
+                for j in 0..q {
+                    for (dd, &v) in lw.gates[g].block(i, j).iter().enumerate() {
+                        scratch[dd] = v as f64;
+                    }
+                    for c in rfft(&scratch) {
+                        gates_re.push(c.re as f32);
+                        gates_im.push(c.im as f32);
+                    }
+                }
+            }
+        }
+
+        let (proj_re, proj_im, proj_shape) = match &lw.proj {
+            Some(pm) => {
+                let mut re = Vec::with_capacity(pm.p * pm.q * bins);
+                let mut im = Vec::with_capacity(pm.p * pm.q * bins);
+                for i in 0..pm.p {
+                    for j in 0..pm.q {
+                        for (dd, &v) in pm.block(i, j).iter().enumerate() {
+                            scratch[dd] = v as f64;
+                        }
+                        for c in rfft(&scratch) {
+                            re.push(c.re as f32);
+                            im.push(c.im as f32);
+                        }
+                    }
+                }
+                let shape = [pm.p, pm.q, bins];
+                (re, im, shape)
+            }
+            None => (vec![0.0f32], vec![0.0f32], [1usize, 1, 1]),
+        };
+
+        let h = w.spec.hidden_dim;
+        let mut bias = Vec::with_capacity(4 * h);
+        for g in 0..4 {
+            bias.extend_from_slice(&lw.bias[g]);
+        }
+        let peep = match &lw.peephole {
+            Some(pv) => {
+                let mut out = Vec::with_capacity(3 * h);
+                for v in pv {
+                    out.extend_from_slice(v);
+                }
+                out
+            }
+            None => vec![0.0f32; 3 * h],
+        };
+
+        Self {
+            gates_re,
+            gates_im,
+            gates_shape: [4 * p, q, bins],
+            proj_re,
+            proj_im,
+            proj_shape,
+            bias,
+            peep,
+            hidden: h,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::config::LstmSpec;
+
+    #[test]
+    fn bundle_shapes_consistent() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 1);
+        let b = SpectralBundle::from_weights(&w, 0, 0);
+        let bins = 4 / 2 + 1;
+        let p = spec.pad(spec.hidden_dim) / 4;
+        let q = spec.fused_in_dim(0) / 4;
+        assert_eq!(b.gates_shape, [4 * p, q, bins]);
+        assert_eq!(b.gates_re.len(), 4 * p * q * bins);
+        assert_eq!(b.bias.len(), 4 * spec.hidden_dim);
+        assert_eq!(b.peep.len(), 3 * spec.hidden_dim);
+        let pp = spec.pad(spec.proj_dim.unwrap()) / 4;
+        assert_eq!(b.proj_shape, [pp, p, bins]);
+    }
+
+    #[test]
+    fn spectra_match_circulant_module() {
+        use crate::circulant::spectral::SpectralWeights;
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 2);
+        let b = SpectralBundle::from_weights(&w, 0, 0);
+        // Cross-check the first gate's spectra against SpectralWeights.
+        let sw = SpectralWeights::precompute(&w.layers[0][0].gates[0]);
+        let bins = 3;
+        for i in 0..sw.p {
+            for j in 0..sw.q {
+                for bb in 0..bins {
+                    let idx = ((i * sw.q) + j) * bins + bb;
+                    assert!(
+                        (b.gates_re[idx] as f64 - sw.block(i, j)[bb].re).abs() < 1e-5
+                    );
+                    assert!(
+                        (b.gates_im[idx] as f64 - sw.block(i, j)[bb].im).abs() < 1e-5
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_projection_gives_dummy() {
+        let mut spec = LstmSpec::small(4);
+        spec.hidden_dim = 16;
+        let w = LstmWeights::random(&spec, 3);
+        let b = SpectralBundle::from_weights(&w, 0, 0);
+        assert_eq!(b.proj_shape, [1, 1, 1]);
+        assert_eq!(b.peep, vec![0.0f32; 3 * 16]);
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT artifacts from Layer 2.
+//!
+//! Python is build-time only; at runtime this module is the sole bridge to
+//! the compiled compute graphs: `artifacts/*.hlo.txt` (HLO **text** — the
+//! xla_extension 0.5.1 proto parser rejects jax ≥ 0.5 serialized modules)
+//! is parsed, compiled once per process on the PJRT CPU client, and
+//! executed from the serving hot path.
+//!
+//! - [`client`] — thin wrapper over the `xla` crate: executable cache,
+//!   literal helpers.
+//! - [`artifact`] — `manifest.json` parsing, per-config artifact bundles,
+//!   and the spectral-weight buffer preparation that matches the kernel's
+//!   `(4p, q, bins)` layout.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,423 @@
+//! Algorithm 1: operator scheduling (§4.3).
+//!
+//! The algorithm walks operators in decreasing Eq 7 priority. For each
+//! operator `v_i` it tentatively adds it to the current stage, applying the
+//! paper's parallelism update to the stage's existing members:
+//! `N'(v_j) = N(v_j)·⌈W(v_j)/W(v_i)⌉` (the newcomer starts at `N = 1`).
+//! If the rebalanced stage — together with every already-closed stage —
+//! still satisfies the Eq 10–12 resource constraints, the operator joins;
+//! otherwise the stage closes and a new one opens.
+//!
+//! **Feasibility is checked replication-normalized**: a set of stages is
+//! only as good as the throughput the later `R(G_k)` enumeration can reach,
+//! so the check evaluates each stage at the replication needed to match the
+//! fastest stage's cycle count (the throughput-balanced design point). This
+//! is what makes mixed stages fail: parking the projection convolution in
+//! the element-wise stage forces that whole stage — cheap operators
+//! included — to replicate ~40× to recover throughput, which blows the DSP
+//! budget. The result is exactly the Fig 6b split for the Google LSTM:
+//! [4 gate convs] → [element-wise cluster] → [projection conv].
+
+use crate::graph::dag::OpGraph;
+use crate::graph::op::{OpKind, OpNode};
+use crate::perfmodel::resource::{OpProfile, Resources};
+
+/// An operator placed in a stage with its parallelism `N(v)`.
+#[derive(Debug, Clone)]
+pub struct StageOp {
+    pub node: OpNode,
+    pub n: u64,
+}
+
+/// One coarse-grained pipeline stage.
+#[derive(Debug, Clone, Default)]
+pub struct Stage {
+    pub ops: Vec<StageOp>,
+    /// Replication factor `R(G_k)` (1 until the replication pass runs).
+    pub replication: u64,
+}
+
+impl Stage {
+    /// Eq 10–12 resources of this stage (at its current replication).
+    pub fn resources(&self) -> Resources {
+        let ops: Vec<(OpNode, u64)> = self
+            .ops
+            .iter()
+            .map(|o| (o.node.clone(), o.n))
+            .collect();
+        OpProfile::stage(&ops, self.replication.max(1))
+    }
+
+    /// Eq 9 cycle count of this stage at replication R=1 (the slowest
+    /// member's workload over its parallelism).
+    pub fn base_cycles(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|o| o.node.workload().div_ceil(o.n.max(1)))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Eq 9 cycle count at the stage's replication.
+    pub fn cycles(&self) -> u64 {
+        self.base_cycles().div_ceil(self.replication.max(1))
+    }
+
+    /// Pipeline depth `D_k` (fill latency): transform depth of the deepest
+    /// convolution plus handshake overhead.
+    pub fn depth(&self) -> u64 {
+        let conv_depth = self
+            .ops
+            .iter()
+            .filter(|o| o.node.kind == OpKind::CirConv)
+            .map(|o| 2 * (o.node.pqk.2.max(2) as f64).log2() as u64 + 8)
+            .max()
+            .unwrap_or(0);
+        conv_depth + 4
+    }
+
+    /// Maximum useful parallelism of an op.
+    fn clamp_n(node: &OpNode, n: u64) -> u64 {
+        let cap = match node.kind {
+            OpKind::CirConv => (node.pqk.0 * node.pqk.1) as u64,
+            _ => node.out_len as u64,
+        };
+        n.clamp(1, cap.max(1))
+    }
+
+    /// The paper's update when `incoming` joins: every existing member is
+    /// scaled by `⌈W(v_j)/W(v_i)⌉`; the newcomer enters at `N = 1`.
+    fn add_rebalanced(&mut self, incoming: OpNode) {
+        let wi = incoming.complexity().max(1);
+        for o in self.ops.iter_mut() {
+            let ratio = o.node.complexity().max(1).div_ceil(wi);
+            o.n = Self::clamp_n(&o.node, o.n.saturating_mul(ratio));
+        }
+        self.ops.push(StageOp {
+            node: incoming,
+            n: 1,
+        });
+    }
+}
+
+/// A complete schedule: ordered stages.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub stages: Vec<Stage>,
+}
+
+impl Schedule {
+    /// Total Eq 10–12 resources at current replications.
+    pub fn resources(&self) -> Resources {
+        self.stages
+            .iter()
+            .fold(Resources::ZERO, |acc, s| acc.add(&s.resources()))
+    }
+
+    /// Resources if each stage were replicated to bring its cycles down to
+    /// `target_cycles` — the replication-normalized cost used both by the
+    /// Algorithm-1 feasibility check and the R enumeration.
+    pub fn resources_at_target(&self, target_cycles: u64) -> Resources {
+        let t = target_cycles.max(1);
+        self.stages.iter().fold(Resources::ZERO, |acc, s| {
+            let r = s.base_cycles().div_ceil(t).max(1);
+            let mut st = s.clone();
+            st.replication = r;
+            acc.add(&st.resources())
+        })
+    }
+
+    /// The fastest stage's base cycle count — the throughput-balance target.
+    pub fn min_base_cycles(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(Stage::base_cycles)
+            .min()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// All operator ids in schedule order.
+    pub fn op_ids(&self) -> Vec<usize> {
+        self.stages
+            .iter()
+            .flat_map(|s| s.ops.iter().map(|o| o.node.id))
+            .collect()
+    }
+
+    /// Stage index of an operator.
+    pub fn stage_of(&self, id: usize) -> Option<usize> {
+        self.stages
+            .iter()
+            .position(|s| s.ops.iter().any(|o| o.node.id == id))
+    }
+
+    /// Human-readable summary (the Fig 6b rendering).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        for (i, st) in self.stages.iter().enumerate() {
+            s.push_str(&format!(
+                "Stage {} (R={}, {} cycles): ",
+                i + 1,
+                st.replication.max(1),
+                st.cycles()
+            ));
+            let names: Vec<String> = st
+                .ops
+                .iter()
+                .map(|o| format!("{}[N={}]", o.node.name, o.n))
+                .collect();
+            s.push_str(&names.join(", "));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// The smallest common target cycle count (= best achievable initiation
+/// interval after replication) for a set of stages under `budget`, or
+/// `None` if even the unreplicated pipeline does not fit. Resource need is
+/// monotone non-increasing in the target, so binary search applies.
+pub fn min_feasible_target(stages: &[Stage], budget: &Resources) -> Option<u64> {
+    if stages.is_empty() {
+        return Some(1);
+    }
+    let sched = Schedule {
+        stages: stages.to_vec(),
+    };
+    let t_max = stages
+        .iter()
+        .map(Stage::base_cycles)
+        .max()
+        .unwrap()
+        .max(1);
+    if !sched.resources_at_target(t_max).fits(budget) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1u64, t_max);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if sched.resources_at_target(mid).fits(budget) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(hi)
+}
+
+/// Run Algorithm 1 on an operator graph under a resource budget.
+///
+/// For each operator (in decreasing Eq 7 priority) the two placements —
+/// join the current stage vs. open a new one — are compared by the best
+/// initiation interval the replication enumeration could reach ("with the
+/// help of our analytical performance and resource models", §4.3); the
+/// higher-throughput placement wins, ties preferring the current stage.
+pub fn schedule(graph: &OpGraph, budget: &Resources) -> Schedule {
+    let order = graph.by_priority();
+    let mut closed: Vec<Stage> = Vec::new();
+    let mut current = Stage {
+        ops: Vec::new(),
+        replication: 1,
+    };
+
+    for &vid in &order {
+        let node = graph.nodes[vid].clone();
+        if current.ops.is_empty() {
+            current.add_rebalanced(node);
+            continue;
+        }
+        // Option A: join the current stage (paper's N(v) update applied).
+        let mut joined = current.clone();
+        joined.add_rebalanced(node.clone());
+        let mut stages_a = closed.clone();
+        stages_a.push(joined.clone());
+        let t_join = min_feasible_target(&stages_a, budget);
+
+        // Option B: close the stage, place the op in a fresh one.
+        let mut fresh = Stage {
+            ops: Vec::new(),
+            replication: 1,
+        };
+        fresh.add_rebalanced(node.clone());
+        let mut stages_b = closed.clone();
+        stages_b.push(current.clone());
+        stages_b.push(fresh.clone());
+        let t_new = min_feasible_target(&stages_b, budget);
+
+        match (t_join, t_new) {
+            (Some(a), Some(b)) if a <= b => current = joined,
+            (Some(_a), None) => current = joined,
+            _ => {
+                closed.push(std::mem::take(&mut current));
+                current = fresh;
+            }
+        }
+    }
+    if !current.ops.is_empty() {
+        closed.push(current);
+    }
+    Schedule { stages: closed }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_layer_graph;
+    use crate::lstm::config::LstmSpec;
+    use crate::perfmodel::platform::Platform;
+    use crate::util::testing::{forall, gen, no_shrink, Config};
+
+    fn google_schedule(k: usize) -> (OpGraph, Schedule) {
+        let g = build_layer_graph(&LstmSpec::google(k), 0);
+        let s = schedule(&g, &Platform::ku060().budget());
+        (g, s)
+    }
+
+    #[test]
+    fn google_lstm_forms_three_stages_like_fig6b() {
+        let (g, s) = google_schedule(8);
+        assert_eq!(s.stages.len(), 3, "{}", s.describe());
+        // Stage 1: the four fused gate convolutions.
+        let s1_kinds: Vec<_> = s.stages[0].ops.iter().map(|o| o.node.kind).collect();
+        assert_eq!(s1_kinds.len(), 4);
+        assert!(s1_kinds.iter().all(|k| *k == OpKind::CirConv));
+        // Stage 2: the element-wise cluster (no convolutions).
+        assert!(s.stages[1]
+            .ops
+            .iter()
+            .all(|o| o.node.kind != OpKind::CirConv));
+        // Stage 3: the projection convolution alone.
+        assert_eq!(s.stages[2].ops.len(), 1);
+        assert_eq!(s.stages[2].ops[0].node.name, "conv_Wym");
+        let _ = g;
+    }
+
+    #[test]
+    fn every_op_scheduled_exactly_once() {
+        let (g, s) = google_schedule(8);
+        let mut ids = s.op_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..g.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stage_assignment_respects_topology() {
+        // If u → v then stage(u) ≤ stage(v): since decreasing Eq 7 priority
+        // is a topological order and the running stage index never
+        // decreases, consumers can never land before their producers.
+        for k in [8usize, 16] {
+            let (g, s) = google_schedule(k);
+            for (u, succs) in g.succs.iter().enumerate() {
+                for &v in succs {
+                    let su = s.stage_of(u).unwrap();
+                    let sv = s.stage_of(v).unwrap();
+                    assert!(su <= sv, "edge {u}→{v} crosses stages {su}→{sv} backwards");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_feasible_replication_normalized() {
+        for k in [8usize, 16] {
+            let (_, s) = google_schedule(k);
+            let budget = Platform::ku060().budget();
+            let target = s.min_base_cycles();
+            assert!(
+                s.resources_at_target(target).fits(&budget),
+                "k={k}: replication-balanced design must fit"
+            );
+        }
+    }
+
+    #[test]
+    fn gate_conv_stage_balanced_at_n1() {
+        let (_, s) = google_schedule(8);
+        // Equal-complexity convolutions: the paper update leaves them at
+        // N=1 each; replication does the scaling.
+        let ns: Vec<u64> = s.stages[0].ops.iter().map(|o| o.n).collect();
+        assert!(ns.iter().all(|&n| n == 1), "{ns:?}");
+    }
+
+    #[test]
+    fn ew_stage_throughput_floor_is_hidden_dim() {
+        // The element-wise stage at N=1 processes one element/cycle:
+        // 1024 cycles for the Google LSTM — the FPS=195,313 quantum that
+        // shows up in Table 3.
+        let (_, s) = google_schedule(8);
+        assert_eq!(s.stages[1].base_cycles(), 1024);
+    }
+
+    #[test]
+    fn small_lstm_schedules_without_projection_stage() {
+        let g = build_layer_graph(&LstmSpec::small(8), 0);
+        let s = schedule(&g, &Platform::ku060().budget());
+        assert_eq!(s.stages.len(), 2, "{}", s.describe());
+        assert!(s.stages[0]
+            .ops
+            .iter()
+            .all(|o| o.node.kind == OpKind::CirConv));
+    }
+
+    #[test]
+    fn property_schedule_invariants_random_graphs() {
+        use crate::graph::op::OpKind;
+        forall(
+            Config::default().cases(40),
+            |rng| {
+                let n = gen::usize_in(rng, 2..=14);
+                let mut kinds = Vec::new();
+                for _ in 0..n {
+                    kinds.push(match rng.index(5) {
+                        0 => OpKind::CirConv,
+                        1 => OpKind::EwAdd,
+                        2 => OpKind::EwMul,
+                        3 => OpKind::Sigmoid,
+                        _ => OpKind::Tanh,
+                    });
+                }
+                let mut edges = Vec::new();
+                for v in 1..n {
+                    let preds = 1 + rng.index(2.min(v));
+                    for _ in 0..preds {
+                        edges.push((rng.index(v), v));
+                    }
+                }
+                (kinds, edges)
+            },
+            no_shrink,
+            |(kinds, edges)| {
+                let mut g = OpGraph::new();
+                for (i, k) in kinds.iter().enumerate() {
+                    let pqk = if *k == OpKind::CirConv { (16, 16, 8) } else { (0, 0, 0) };
+                    g.add(*k, &format!("op{i}"), 128, pqk);
+                }
+                for &(a, b) in edges {
+                    if a != b {
+                        g.edge(a, b);
+                    }
+                }
+                let budget = Platform::ku060().budget();
+                let s = schedule(&g, &budget);
+                let mut ids = s.op_ids();
+                ids.sort_unstable();
+                if ids != (0..g.len()).collect::<Vec<_>>() {
+                    return Err("op lost or duplicated".into());
+                }
+                let target = s.min_base_cycles();
+                if !s.resources_at_target(target).fits(&budget) {
+                    return Err("replication-balanced budget exceeded".into());
+                }
+                for (u, succs) in g.succs.iter().enumerate() {
+                    for &v in succs {
+                        if s.stage_of(u).unwrap() > s.stage_of(v).unwrap() {
+                            return Err(format!("edge {u}→{v} goes backwards"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

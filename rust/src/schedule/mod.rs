@@ -1,0 +1,16 @@
+//! Operator scheduling into coarse-grained pipeline stages (§4.3,
+//! Algorithm 1, Fig 6b).
+//!
+//! - [`algorithm1`] — the paper's scheduling algorithm: visit operators in
+//!   decreasing Eq 7 priority; keep adding to the current stage while the
+//!   intra-stage parallelism rebalance `N(v) ∝ W(v)` still satisfies the
+//!   Eq 10–12 resource constraints, else open a new stage.
+//! - [`replication`] — the post-pass that enumerates per-stage replication
+//!   factors `R(G_k)` "to maximize throughput and fully utilize FPGA
+//!   resource".
+
+pub mod algorithm1;
+pub mod replication;
+
+pub use algorithm1::{schedule, Schedule, Stage, StageOp};
+pub use replication::enumerate_replication;

@@ -1,0 +1,147 @@
+//! Replication enumeration (§4.3 end / §4.4).
+//!
+//! "To fully utilize the resources of a certain FPGA chip ... we propose to
+//! enumerate pipeline replication factor R(G_k) to get the optimal setting
+//! with the help of our analytical performance and resource models."
+//!
+//! The throughput of the coarse pipeline is `freq / max_k T_k` (Eq 8), and
+//! each stage's cycles scale as `⌈base/R⌉` (Eq 9), so the optimal setting
+//! replicates each stage just enough to meet a common target cycle count
+//! `T`, and the best `T` is the smallest feasible one. Resource use is
+//! monotone non-increasing in `T`, so we binary-search `T` and then set
+//! `R(G_k) = ⌈base_k / T⌉`.
+
+use super::algorithm1::{min_feasible_target, Schedule};
+use crate::perfmodel::resource::Resources;
+
+/// Find the optimal per-stage replication factors under `budget`. Returns
+/// the schedule with `replication` set, or the input unchanged (all R=1)
+/// if even that does not fit.
+pub fn enumerate_replication(mut sched: Schedule, budget: &Resources) -> Schedule {
+    if sched.stages.is_empty() {
+        return sched;
+    }
+    match min_feasible_target(&sched.stages, budget) {
+        Some(t_best) => {
+            for s in sched.stages.iter_mut() {
+                s.replication = s.base_cycles().div_ceil(t_best).max(1);
+            }
+        }
+        None => {
+            // Not even the unreplicated pipeline fits; leave R=1.
+            for s in sched.stages.iter_mut() {
+                s.replication = 1;
+            }
+        }
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_layer_graph;
+    use crate::lstm::config::LstmSpec;
+    use crate::perfmodel::platform::Platform;
+    use crate::schedule::algorithm1::schedule;
+
+    fn replicated(k: usize) -> Schedule {
+        let g = build_layer_graph(&LstmSpec::google(k), 0);
+        let s = schedule(&g, &Platform::ku060().budget());
+        enumerate_replication(s, &Platform::ku060().budget())
+    }
+
+    #[test]
+    fn fft8_reaches_the_table3_plateau() {
+        // Google FFT8 on KU060: Table 3 reports FPS = 195,313, i.e. a
+        // 1024-cycle initiation interval (the element-wise stage quantum).
+        // Our replication enumeration may shave slightly below it by
+        // doubling the cheap element-wise stage; assert the II lands in
+        // the [930, 1024] band around the paper's plateau.
+        let s = replicated(8);
+        let t = s.stages.iter().map(|st| st.cycles()).max().unwrap();
+        assert!((930..=1024).contains(&t), "ii {t}\n{}", s.describe());
+    }
+
+    #[test]
+    fn fft16_beats_fft8_throughput() {
+        let t8 = replicated(8)
+            .stages
+            .iter()
+            .map(|s| s.cycles())
+            .max()
+            .unwrap();
+        let t16 = replicated(16)
+            .stages
+            .iter()
+            .map(|s| s.cycles())
+            .max()
+            .unwrap();
+        assert!(
+            t16 < t8,
+            "FFT16 ({t16} cycles) must out-throughput FFT8 ({t8} cycles)"
+        );
+        // Paper: 371,095 FPS ⇒ ~539 cycles. Allow a generous band.
+        assert!(
+            (400..=700).contains(&t16),
+            "FFT16 bottleneck {t16} outside the Table 3 band"
+        );
+    }
+
+    #[test]
+    fn result_fits_budget() {
+        for k in [8usize, 16] {
+            let s = replicated(k);
+            assert!(s.resources().fits(&Platform::ku060().budget()), "k={k}");
+        }
+    }
+
+    #[test]
+    fn replication_fills_most_of_the_chip() {
+        // Table 3 shows ≥96% DSP on KU060 — the enumeration must not leave
+        // huge resources stranded (>40% idle would mean a modelling bug).
+        let s = replicated(8);
+        let used = s.resources();
+        let tot = Platform::ku060().totals();
+        assert!(
+            used.dsp / tot.dsp > 0.6,
+            "DSP fill only {:.1}%",
+            100.0 * used.dsp / tot.dsp
+        );
+    }
+
+    #[test]
+    fn infeasible_budget_leaves_r1() {
+        let g = build_layer_graph(&LstmSpec::google(8), 0);
+        let s = schedule(&g, &Platform::ku060().budget());
+        let tiny = Resources {
+            dsp: 1.0,
+            bram: 1.0,
+            lut: 10.0,
+            ff: 10.0,
+        };
+        let r = enumerate_replication(s, &tiny);
+        assert!(r.stages.iter().all(|st| st.replication == 1));
+    }
+
+    #[test]
+    fn replication_monotone_in_budget() {
+        let g = build_layer_graph(&LstmSpec::google(8), 0);
+        let s = schedule(&g, &Platform::ku060().budget());
+        let half = Platform::ku060().budget().scale(0.5);
+        let full = Platform::ku060().budget();
+        let t_half = enumerate_replication(s.clone(), &half)
+            .stages
+            .iter()
+            .map(|st| st.cycles())
+            .max()
+            .unwrap();
+        let t_full = enumerate_replication(s, &full)
+            .stages
+            .iter()
+            .map(|st| st.cycles())
+            .max()
+            .unwrap();
+        assert!(t_full <= t_half, "more budget cannot be slower");
+    }
+}

@@ -1,0 +1,236 @@
+//! Criterion-style benchmark harness (the offline stand-in for `criterion`).
+//!
+//! Every `cargo bench` target in `rust/benches/` uses this: warmup, timed
+//! iterations with outlier-robust statistics (mean / p50 / p95 / min),
+//! throughput annotations, and a machine-readable JSON dump next to the
+//! human-readable table. A `black_box` re-export prevents the optimizer from
+//! deleting measured work.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from const-folding away a benchmarked computation.
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Statistics for a single benchmark. Times are f64 nanoseconds per
+/// iteration (sub-nanosecond resolution matters for tiny hot-path ops).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    /// Per-iteration wall time, nanoseconds.
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub iters: u64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl Stats {
+    /// Elements per second at the mean time, if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / (self.mean_ns * 1e-9))
+    }
+
+    /// Mean as a `Duration` (rounded to whole nanoseconds).
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns.max(0.0) as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} K/s", r / 1e3)
+    } else {
+        format!("{r:.2} /s")
+    }
+}
+
+/// A benchmark group: configures measurement budget, collects results,
+/// prints the table on drop.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+    results: Vec<Stats>,
+    elements: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Respect a quick mode for CI: CLSTM_BENCH_FAST=1 shrinks budgets.
+        let fast = std::env::var("CLSTM_BENCH_FAST").ok().as_deref() == Some("1");
+        Self {
+            group: group.to_string(),
+            warmup: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if fast {
+                Duration::from_millis(100)
+            } else {
+                Duration::from_secs(1)
+            },
+            max_iters: 1_000_000_000,
+            results: Vec::new(),
+            elements: None,
+        }
+    }
+
+    /// Set the measurement budget.
+    pub fn measure_time(mut self, d: Duration) -> Self {
+        self.measure = d;
+        self
+    }
+
+    /// Annotate subsequent benches with a throughput element count.
+    pub fn throughput(&mut self, elements: u64) -> &mut Self {
+        self.elements = Some(elements);
+        self
+    }
+
+    /// Run one benchmark: `f` is called repeatedly; its return value is
+    /// black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // Warmup and per-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // Choose a batch size so each sample is ≥ ~50µs (timer noise floor).
+        let batch = ((50e-6 / est).ceil() as u64).clamp(1, self.max_iters);
+        let target_samples = 60u64;
+        let mut samples: Vec<f64> = Vec::with_capacity(target_samples as usize);
+        let measure_start = Instant::now();
+        let mut total_iters = 0u64;
+        while measure_start.elapsed() < self.measure || samples.len() < 10 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed();
+            samples.push(dt.as_secs_f64() * 1e9 / batch as f64);
+            total_iters += batch;
+            if samples.len() >= 4 * target_samples as usize {
+                break;
+            }
+        }
+        samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: format!("{}/{}", self.group, name),
+            mean_ns: mean,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n * 95 / 100).min(n - 1)],
+            min_ns: samples[0],
+            iters: total_iters,
+            elements: self.elements,
+        };
+        self.print_line(&stats);
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    fn print_line(&self, s: &Stats) {
+        let tp = s
+            .throughput()
+            .map(|r| format!("  [{}]", fmt_rate(r)))
+            .unwrap_or_default();
+        println!(
+            "{:<52} mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}  ({} iters){}",
+            s.name,
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.p95_ns),
+            fmt_ns(s.min_ns),
+            s.iters,
+            tp
+        );
+    }
+
+    /// All collected stats.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Dump results as JSON to `target/bench-results/<group>.json`.
+    pub fn save_json(&self) {
+        use crate::util::json::Json;
+        let arr = Json::Arr(
+            self.results
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("name", Json::str(s.name.clone())),
+                        ("mean_ns", Json::num(s.mean_ns)),
+                        ("median_ns", Json::num(s.median_ns)),
+                        ("p95_ns", Json::num(s.p95_ns)),
+                        ("min_ns", Json::num(s.min_ns)),
+                        ("iters", Json::num(s.iters as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.group.replace('/', "_")));
+        let _ = std::fs::write(path, arr.to_pretty());
+    }
+}
+
+impl Drop for Bench {
+    fn drop(&mut self) {
+        self.save_json();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        std::env::set_var("CLSTM_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest").measure_time(Duration::from_millis(50));
+        let s = b
+            .bench("sum1k", || (0..1000u64).fold(0u64, |a, x| a.wrapping_add(x)))
+            .clone();
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        std::env::set_var("CLSTM_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest2").measure_time(Duration::from_millis(30));
+        b.throughput(1000);
+        let s = b.bench("tp", || black_box(3u64) * 2).clone();
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Declarative command-line parsing (the offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options with
+//! defaults, typed accessors, positional arguments, and auto-generated
+//! `--help` text. Used by the `clstm` binary, the examples and the bench
+//! harnesses.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A simple command-line parser: register options, then parse.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub bin: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Self {
+            bin: bin.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Register a `--key value` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a `--key value` option with no default (returns None if absent).
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.bin, self.about);
+        for o in &self.opts {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else if let Some(d) = &o.default {
+                format!("  --{} <value> (default: {})", o.name, d)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            s.push_str(&format!("{head:<44} {}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse an argument list (without the binary name). Returns Err with a
+    /// message (or the help text for `--help`).
+    pub fn parse(mut self, args: &[String]) -> Result<Self, String> {
+        let known: BTreeMap<&str, bool> =
+            self.opts.iter().map(|o| (o.name, o.is_flag)).collect();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                match known.get(key) {
+                    Some(true) => {
+                        if inline_val.is_some() {
+                            return Err(format!("flag --{key} takes no value"));
+                        }
+                        self.flags.insert(key.to_string(), true);
+                    }
+                    Some(false) => {
+                        let val = if let Some(v) = inline_val {
+                            v
+                        } else {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        };
+                        self.values.insert(key.to_string(), val);
+                    }
+                    None => return Err(format!("unknown option --{key}\n\n{}", self.help())),
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse from `std::env::args`, skipping the binary name. On `--help` or
+    /// error, prints and exits.
+    pub fn parse_env(self) -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(c) => c,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.contains("OPTIONS:") { 0 } else { 2 });
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ accessors
+    pub fn get(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} not provided"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get_str(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let cli = Cli::new("t", "test")
+            .opt("model", "google", "model name")
+            .opt("steps", "100", "steps")
+            .flag("verbose", "chatty")
+            .parse(&argv("run --model small --verbose --steps=7 extra"))
+            .unwrap();
+        assert_eq!(cli.get_str("model"), "small");
+        assert_eq!(cli.get_usize("steps"), 7);
+        assert!(cli.get_flag("verbose"));
+        assert_eq!(cli.positional(), &["run", "extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cli = Cli::new("t", "test")
+            .opt("k", "8", "block size")
+            .parse(&[])
+            .unwrap();
+        assert_eq!(cli.get_usize("k"), 8);
+        assert!(!cli.get_flag("nope"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = Cli::new("t", "test").parse(&argv("--wat 3")).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let e = Cli::new("t", "about me")
+            .opt("k", "8", "block size")
+            .flag("fast", "go fast")
+            .parse(&argv("--help"))
+            .unwrap_err();
+        assert!(e.contains("about me") && e.contains("--k") && e.contains("--fast"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Cli::new("t", "t").opt("k", "8", "h").parse(&argv("--k")).unwrap_err();
+        assert!(e.contains("needs a value"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Infrastructure substrates.
+//!
+//! The offline environment ships no general-purpose crates (no `rand`,
+//! `serde`, `clap`, `criterion`, `proptest`), so this module provides the
+//! small, well-tested equivalents the rest of the crate builds on:
+//!
+//! - [`prng`] — SplitMix64 / xoshiro256** PRNGs with uniform & normal draws.
+//! - [`json`] — a strict JSON parser/emitter for configs and manifests.
+//! - [`cli`] — a declarative command-line argument parser.
+//! - [`bench`] — a criterion-style measurement harness used by `cargo bench`.
+//! - [`testing`] — property-based testing (generators + shrinking).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod testing;

@@ -1,0 +1,269 @@
+//! Property-based testing harness (the offline stand-in for `proptest`).
+//!
+//! A property is checked over many generated cases; on failure the input is
+//! greedily shrunk before reporting, so test failures show near-minimal
+//! counterexamples. Used by the FFT, circulant, fixed-point, scheduler, and
+//! PER test suites.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla_extension rpath in this env)
+//! use clstm::util::testing::{forall, Config, shrink_vec_f32, gen};
+//! forall(
+//!     Config::default().cases(64),
+//!     |rng| gen::vec_f32(rng, 1..=32, -10.0, 10.0),
+//!     shrink_vec_f32,
+//!     |xs| {
+//!         let s: f32 = xs.iter().sum();
+//!         if s.is_finite() { Ok(()) } else { Err("sum not finite".into()) }
+//!     },
+//! );
+//! ```
+
+use crate::util::prng::Xoshiro256;
+use std::fmt::Debug;
+
+/// Test configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 128,
+            seed: 0xC157,
+            max_shrink_steps: 400,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Check `prop` over `config.cases` inputs drawn by `generate`; on failure,
+/// repeatedly apply `shrink` candidates that still fail, then panic with the
+/// minimal case. `shrink` returns a list of strictly "smaller" candidates.
+pub fn forall<T, G, S, P>(config: Config, generate: G, shrink: S, prop: P)
+where
+    T: Clone + Debug,
+    G: Fn(&mut Xoshiro256) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256::seed_from_u64(config.seed);
+    for case in 0..config.cases {
+        let input = generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink.
+            let mut best = input;
+            let mut best_msg = first_msg;
+            let mut steps = 0;
+            'outer: while steps < config.max_shrink_steps {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= config.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                config.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// No shrinking.
+pub fn no_shrink<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Generators for common shapes.
+pub mod gen {
+    use super::*;
+    use std::ops::RangeInclusive;
+
+    /// Random length in `len`, values uniform in `[lo, hi)`.
+    pub fn vec_f32(
+        rng: &mut Xoshiro256,
+        len: RangeInclusive<usize>,
+        lo: f32,
+        hi: f32,
+    ) -> Vec<f32> {
+        let n = *len.start() + rng.index(len.end() - len.start() + 1);
+        (0..n)
+            .map(|_| lo + (hi - lo) * rng.next_f32())
+            .collect()
+    }
+
+    /// Random length in `len`, values uniform in `[lo, hi)`.
+    pub fn vec_f64(
+        rng: &mut Xoshiro256,
+        len: RangeInclusive<usize>,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<f64> {
+        let n = *len.start() + rng.index(len.end() - len.start() + 1);
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    /// Power-of-two size in `[2^min_log2, 2^max_log2]`.
+    pub fn pow2(rng: &mut Xoshiro256, min_log2: u32, max_log2: u32) -> usize {
+        1usize << (min_log2 + rng.index((max_log2 - min_log2 + 1) as usize) as u32)
+    }
+
+    /// Integer in an inclusive range.
+    pub fn usize_in(rng: &mut Xoshiro256, range: RangeInclusive<usize>) -> usize {
+        range.start() + rng.index(range.end() - range.start() + 1)
+    }
+}
+
+/// Shrinker for f32 vectors: tries halving the length (front/back halves)
+/// and zeroing / halving individual elements.
+pub fn shrink_vec_f32(xs: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 1 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+    }
+    if n >= 1 {
+        for i in 0..n.min(4) {
+            if xs[i] != 0.0 {
+                let mut c = xs.clone();
+                c[i] = 0.0;
+                out.push(c);
+            }
+        }
+    }
+    out
+}
+
+/// Shrinker for f64 vectors.
+pub fn shrink_vec_f64(xs: &Vec<f64>) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 1 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+    }
+    for i in 0..n.min(4) {
+        if xs[i] != 0.0 {
+            let mut c = xs.clone();
+            c[i] = 0.0;
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Assert two slices are elementwise close (absolute + relative tolerance),
+/// reporting the worst offender.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let mut worst = (0usize, 0.0f32);
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        let bound = atol + rtol * y.abs().max(x.abs());
+        let excess = err - bound;
+        if excess > worst.1 {
+            worst = (i, excess);
+        }
+    }
+    if worst.1 > 0.0 {
+        let i = worst.0;
+        panic!(
+            "{what}: allclose failed at [{i}]: {} vs {} (excess {:.3e}, atol {atol}, rtol {rtol})",
+            a[i], b[i], worst.1
+        );
+    }
+}
+
+/// f64 variant of [`assert_allclose`].
+pub fn assert_allclose64(a: &[f64], b: &[f64], atol: f64, rtol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let err = (x - y).abs();
+        assert!(
+            err <= atol + rtol * y.abs().max(x.abs()),
+            "{what}: allclose failed at [{i}]: {x} vs {y} (err {err:.3e})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            Config::default().cases(32),
+            |rng| gen::vec_f32(rng, 0..=16, -1.0, 1.0),
+            shrink_vec_f32,
+            |xs| {
+                if xs.iter().all(|x| x.abs() <= 1.0) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        forall(
+            Config::default().cases(64),
+            |rng| gen::vec_f32(rng, 1..=64, -10.0, 10.0),
+            shrink_vec_f32,
+            |xs| {
+                // Fails whenever the vector is non-empty → shrinks to len 1.
+                if xs.is_empty() {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", xs.len()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn pow2_generator_in_range() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..100 {
+            let n = gen::pow2(&mut rng, 1, 5);
+            assert!(n.is_power_of_two() && (2..=32).contains(&n));
+        }
+    }
+
+    #[test]
+    fn allclose_accepts_close() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-5, "t");
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[1.1], 1e-3, 1e-3, "t");
+    }
+}

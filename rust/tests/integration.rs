@@ -1,0 +1,221 @@
+//! Integration tests across the three layers: Rust engines vs JAX golden
+//! vectors, PJRT artifact execution, and the serving pipeline end to end.
+//!
+//! These need `make artifacts` to have run; when the artifacts directory is
+//! missing the tests are skipped (printing a notice) so `cargo test` stays
+//! green in a fresh checkout.
+
+use clstm::coordinator::pipeline::ClstmPipeline;
+use clstm::lstm::activations::ActivationMode;
+use clstm::lstm::sequence::StackF32;
+use clstm::lstm::weights::LstmWeights;
+use clstm::runtime::artifact::{ArtifactDir, SpectralBundle};
+use clstm::runtime::client::Runtime;
+use clstm::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<ArtifactDir> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactDir::open(&root).expect("manifest parses"))
+}
+
+fn load_golden(art: &ArtifactDir) -> (LstmWeights, Json) {
+    let w = LstmWeights::load(art.golden_weights.as_ref().expect("golden weights"))
+        .expect("golden weights load");
+    let vectors = Json::parse(
+        &std::fs::read_to_string(art.golden_vectors.as_ref().expect("golden vectors"))
+            .expect("golden vectors read"),
+    )
+    .expect("golden vectors parse");
+    (w, vectors)
+}
+
+/// The Rust float engine must reproduce the JAX model's step outputs from
+/// the same weights — the cross-language correctness anchor.
+#[test]
+fn rust_engine_matches_jax_golden_step() {
+    let Some(art) = artifacts() else { return };
+    let (w, vectors) = load_golden(&art);
+    assert_eq!(w.spec.k, 4);
+
+    let x: Vec<f32> = vectors.get("step_x").unwrap().to_f32_vec().unwrap();
+    let want_y: Vec<f32> = vectors.get("step_y").unwrap().to_f32_vec().unwrap();
+    let want_c: Vec<f32> = vectors.get("step_c").unwrap().to_f32_vec().unwrap();
+
+    use clstm::lstm::cell_f32::CellF32;
+    let cell = CellF32::new(&w.spec, 0, &w.layers[0][0], ActivationMode::Exact);
+    let mut st = cell.zero_state();
+    let y = cell.step(&x, &mut st);
+
+    for (i, (a, b)) in y.iter().zip(&want_y).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-4,
+            "y[{i}]: rust {a} vs jax {b}"
+        );
+    }
+    for (i, (a, b)) in st.c.iter().zip(&want_c).enumerate() {
+        assert!(
+            (a - b).abs() < 2e-4,
+            "c[{i}]: rust {a} vs jax {b}"
+        );
+    }
+}
+
+/// Full-sequence logits agreement between the Rust stack and JAX.
+#[test]
+fn rust_stack_matches_jax_golden_logits() {
+    let Some(art) = artifacts() else { return };
+    let (w, vectors) = load_golden(&art);
+    let frames: Vec<Vec<f32>> = vectors
+        .get("frames")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|f| f.to_f32_vec().unwrap())
+        .collect();
+    let want: Vec<Vec<f32>> = vectors
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|f| f.to_f32_vec().unwrap())
+        .collect();
+
+    let stack = StackF32::new(&w, ActivationMode::Exact);
+    let got = stack.logits(&frames);
+    assert_eq!(got.len(), want.len());
+    for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() < 5e-3,
+                "logits[{t}][{i}]: rust {x} vs jax {y}"
+            );
+        }
+    }
+}
+
+/// The compiled step artifact executed through PJRT must agree with the
+/// Rust engine (and hence with JAX).
+#[test]
+fn pjrt_step_artifact_matches_rust_engine() {
+    let Some(art) = artifacts() else { return };
+    let (w, vectors) = load_golden(&art);
+    let cfg = art.config("tiny_fft4").expect("tiny config in manifest");
+    let rt = Runtime::cpu().expect("client");
+    let exe = rt
+        .load_hlo_text(&art.path_of(&cfg.step))
+        .expect("compile step artifact");
+
+    let bundle = SpectralBundle::from_weights(&w, 0, 0);
+    let x: Vec<f32> = vectors.get("step_x").unwrap().to_f32_vec().unwrap();
+    let want_y: Vec<f32> = vectors.get("step_y").unwrap().to_f32_vec().unwrap();
+    let spec = &w.spec;
+    let out_pad = spec.pad(spec.out_dim());
+    let y0 = vec![0.0f32; out_pad];
+    let c0 = vec![0.0f32; spec.hidden_dim];
+
+    let gd: Vec<i64> = bundle.gates_shape.iter().map(|&d| d as i64).collect();
+    let pd: Vec<i64> = bundle.proj_shape.iter().map(|&d| d as i64).collect();
+    let h = spec.hidden_dim as i64;
+    let outs = exe
+        .run_f32(&[
+            (&bundle.gates_re, &gd),
+            (&bundle.gates_im, &gd),
+            (&bundle.bias, &[4, h]),
+            (&bundle.peep, &[3, h]),
+            (&bundle.proj_re, &pd),
+            (&bundle.proj_im, &pd),
+            (&x, &[1, spec.input_dim as i64]),
+            (&y0, &[1, out_pad as i64]),
+            (&c0, &[1, h]),
+        ])
+        .expect("execute step");
+    let y = &outs[0];
+    for (i, (a, b)) in y.iter().zip(&want_y).enumerate() {
+        assert!((a - b).abs() < 1e-4, "pjrt y[{i}]: {a} vs jax {b}");
+    }
+}
+
+/// The full 3-stage pipeline streams utterances and matches the plain
+/// engine's outputs frame for frame.
+#[test]
+fn pipeline_matches_engine_and_overlaps_streams() {
+    let Some(art) = artifacts() else { return };
+    let (w, _) = load_golden(&art);
+    let cfg = art.config("tiny_fft4").unwrap().clone();
+    let rt = Runtime::cpu().unwrap();
+    let mut pipe = ClstmPipeline::build(rt, &art, &cfg, &w).expect("pipeline");
+
+    // Three short utterances (interleaved streams).
+    use clstm::util::prng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(8);
+    let utts: Vec<Vec<Vec<f32>>> = (0..3)
+        .map(|_| {
+            (0..5)
+                .map(|_| {
+                    (0..w.spec.input_dim)
+                        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let (outs, metrics) = pipe.run_utterances(&utts).expect("pipeline run");
+    assert_eq!(metrics.frames, 15);
+    assert_eq!(outs.len(), 3);
+
+    // Reference: single-layer engine (pipeline covers layer 0 only).
+    use clstm::lstm::cell_f32::CellF32;
+    let cell = CellF32::new(&w.spec, 0, &w.layers[0][0], ActivationMode::Exact);
+    for (u, frames) in utts.iter().enumerate() {
+        let mut st = cell.zero_state();
+        for (t, x) in frames.iter().enumerate() {
+            let want = cell.step(x, &mut st);
+            let got = &outs[u][t];
+            for i in 0..want.len().min(got.len()) {
+                assert!(
+                    (want[i] - got[i]).abs() < 1e-3,
+                    "utt {u} frame {t} [{i}]: engine {} vs pipeline {}",
+                    want[i],
+                    got[i]
+                );
+            }
+        }
+    }
+}
+
+/// Weight file round trip through the artifacts dir.
+#[test]
+fn golden_weights_spec_is_tiny() {
+    let Some(art) = artifacts() else { return };
+    let (w, _) = load_golden(&art);
+    assert_eq!(w.spec.input_dim, 16);
+    assert_eq!(w.spec.hidden_dim, 32);
+    assert_eq!(w.spec.proj_dim, Some(16));
+    assert!(w.spec.peephole);
+}
+
+/// Manifest covers the four paper configs + tiny.
+#[test]
+fn manifest_lists_expected_configs() {
+    let Some(art) = artifacts() else { return };
+    for name in [
+        "tiny_fft4",
+        "google_fft8",
+        "google_fft16",
+        "small_fft8",
+        "small_fft16",
+    ] {
+        let cfg = art.config(name);
+        assert!(cfg.is_some(), "missing config {name}");
+        let cfg = cfg.unwrap();
+        assert!(Path::new(&art.path_of(&cfg.stage1)).exists());
+        assert!(Path::new(&art.path_of(&cfg.step)).exists());
+    }
+}
