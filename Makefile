@@ -1,0 +1,24 @@
+# C-LSTM top-level targets. The Rust crate is self-sufficient (native
+# serving backend); the artifact targets need the layer-1/2 Python
+# environment (jax, numpy) and are optional.
+
+.PHONY: build test bench artifacts table1-per
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && CLSTM_BENCH_FAST=1 cargo bench
+
+# JAX AOT lowering -> rust/artifacts/*.hlo.txt + manifest.json + golden
+# bundle (enables the golden-vector integration tests and the PJRT backend).
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts
+
+# Table 1 training sweep -> rust/artifacts/table1.json (PER column of
+# `clstm table1` / bench_table1).
+table1-per:
+	cd python && python -m compile.train --out ../rust/artifacts/table1.json

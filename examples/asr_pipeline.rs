@@ -1,11 +1,11 @@
-//! End-to-end ASR driver — the full-system validation run recorded in
-//! EXPERIMENTS.md.
+//! End-to-end ASR driver — the full-system validation run (see DESIGN.md
+//! for the experiment index).
 //!
-//! Pipeline: SynthTIMIT workload → Layer-3 coordinator (3-stage PJRT
-//! pipeline, Fig 7) → classifier → PER; then the same workload through the
-//! bit-accurate 16-bit fixed-point engine to measure the §4.2 quantisation
-//! cost; then the analytical/simulated FPGA numbers for the same model so
-//! all metrics of the paper appear in one report.
+//! Pipeline: SynthTIMIT workload → Layer-3 coordinator (3-stage pipeline on
+//! the native backend, Fig 7) → classifier → PER; then the same workload
+//! through the bit-accurate 16-bit fixed-point engine to measure the §4.2
+//! quantisation cost; then the analytical/simulated FPGA numbers for the
+//! same model so all metrics of the paper appear in one report.
 //!
 //! Run: `cargo run --release --example asr_pipeline`
 
@@ -20,20 +20,15 @@ use clstm::lstm::sequence::{StackF32, StackFx};
 use clstm::lstm::weights::LstmWeights;
 use clstm::num::fxp::Q;
 use clstm::perfmodel::platform::Platform;
-use clstm::runtime::artifact::ArtifactDir;
-use clstm::runtime::client::Runtime;
-use std::path::Path;
+use clstm::runtime::native::NativeBackend;
 
 fn main() -> anyhow::Result<()> {
     println!("=== C-LSTM end-to-end ASR pipeline ===\n");
-    let art = ArtifactDir::open(Path::new("artifacts"))
-        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
 
-    // ---------- Part 1: serve through the PJRT 3-stage pipeline ----------
-    let weights = LstmWeights::load(art.golden_weights.as_ref().unwrap())?;
-    let rt = Runtime::cpu()?;
-    println!("[1] serving 16 SynthTIMIT utterances through the 3-stage PJRT pipeline (tiny_fft4):");
-    let report = serve_workload(rt, &art, "tiny_fft4", &weights, 16, 4)?;
+    // ---------- Part 1: serve through the 3-stage native pipeline --------
+    let weights = LstmWeights::random(&LstmSpec::tiny(4), 1234);
+    println!("[1] serving 16 SynthTIMIT utterances through the 3-stage native pipeline (tiny, k=4):");
+    let report = serve_workload(&NativeBackend::default(), &weights, 16, 4)?;
     println!("    {}", report.metrics.summary());
     println!("    workload PER (random-init weights): {:.1}%\n", report.per);
 

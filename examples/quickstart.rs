@@ -1,94 +1,96 @@
-//! Quickstart: the three-layer stack in one page.
+//! Quickstart: the C-LSTM serving stack in one page — zero artifacts.
 //!
-//! 1. Load the AOT-compiled tiny model artifact (built by `make artifacts`
-//!    from the JAX/Pallas layers).
-//! 2. Prepare spectral weights in Rust from the golden weight file.
-//! 3. Execute one LSTM step through PJRT and check it against the JAX
-//!    golden vector.
-//! 4. Run the same step on the pure-Rust engines (float and bit-accurate
-//!    16-bit fixed point) and print the agreement.
+//! 1. Build a tiny block-circulant model with random weights.
+//! 2. Run one step on the float engine and the bit-accurate 16-bit
+//!    fixed-point engine and print their agreement (§4.2 quantisation).
+//! 3. Drive the 3-stage serving pipeline on the **native backend** over
+//!    three interleaved streams and check it against the engine frame for
+//!    frame (the Fig 7 architecture in software).
+//! 4. Serve a SynthTIMIT workload end to end (pipeline → classifier → PER).
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! (With `--features pjrt` and `make artifacts`, the same pipeline can run
+//! the AOT-compiled HLO stages instead — see `examples/serve.rs` and
+//! DESIGN.md.)
 
+use clstm::coordinator::pipeline::ClstmPipeline;
+use clstm::coordinator::server::serve_workload;
 use clstm::lstm::activations::ActivationMode;
 use clstm::lstm::cell_f32::CellF32;
 use clstm::lstm::cell_fxp::CellFx;
+use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::num::fxp::Q;
-use clstm::runtime::artifact::{ArtifactDir, SpectralBundle};
-use clstm::runtime::client::Runtime;
-use clstm::util::json::Json;
-use std::path::Path;
+use clstm::runtime::native::NativeBackend;
+use clstm::util::prng::Xoshiro256;
 
 fn main() -> anyhow::Result<()> {
-    let art = ArtifactDir::open(Path::new("artifacts"))
-        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
-    let cfg = art.config("tiny_fft4").expect("tiny config");
-    let weights = LstmWeights::load(art.golden_weights.as_ref().unwrap())?;
-    let golden = Json::parse(&std::fs::read_to_string(
-        art.golden_vectors.as_ref().unwrap(),
-    )?)
-    .map_err(|e| anyhow::anyhow!("golden: {e}"))?;
-    let spec = weights.spec.clone();
+    let spec = LstmSpec::tiny(4);
+    let weights = LstmWeights::random(&spec, 1234);
     println!(
         "model: tiny (k={}, in={}, hidden={}, proj={:?})",
         spec.k, spec.input_dim, spec.hidden_dim, spec.proj_dim
     );
 
-    // --- Layer 3 drives the Layer-2/Layer-1 artifact through PJRT.
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let exe = rt.load_hlo_text(&art.path_of(&cfg.step))?;
-    let bundle = SpectralBundle::from_weights(&weights, 0, 0);
-
-    let x: Vec<f32> = golden.get("step_x").unwrap().to_f32_vec().unwrap();
-    let want_y: Vec<f32> = golden.get("step_y").unwrap().to_f32_vec().unwrap();
-    let out_pad = spec.pad(spec.out_dim());
-    let (y0, c0) = (vec![0.0f32; out_pad], vec![0.0f32; spec.hidden_dim]);
-    let gd: Vec<i64> = bundle.gates_shape.iter().map(|&d| d as i64).collect();
-    let pd: Vec<i64> = bundle.proj_shape.iter().map(|&d| d as i64).collect();
-    let h = spec.hidden_dim as i64;
-    let outs = exe.run_f32(&[
-        (&bundle.gates_re, &gd),
-        (&bundle.gates_im, &gd),
-        (&bundle.bias, &[4, h]),
-        (&bundle.peep, &[3, h]),
-        (&bundle.proj_re, &pd),
-        (&bundle.proj_im, &pd),
-        (&x, &[1, spec.input_dim as i64]),
-        (&y0, &[1, out_pad as i64]),
-        (&c0, &[1, h]),
-    ])?;
-    let y_pjrt = &outs[0];
-    let max_err_pjrt = y_pjrt
-        .iter()
-        .zip(&want_y)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    println!("PJRT step vs JAX golden:   max |err| = {max_err_pjrt:.2e}");
-
-    // --- Same step on the pure-Rust engines.
+    // --- [1] float vs bit-accurate fixed-point engine on one step.
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let x: Vec<f32> = (0..spec.input_dim)
+        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+        .collect();
     let cell = CellF32::new(&spec, 0, &weights.layers[0][0], ActivationMode::Exact);
     let mut st = cell.zero_state();
-    let y_rust = cell.step(&x, &mut st);
-    let max_err_rust = y_rust
-        .iter()
-        .zip(&want_y)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    println!("Rust f32 engine vs golden: max |err| = {max_err_rust:.2e}");
+    let y_f32 = cell.step(&x, &mut st);
 
     let fx = CellFx::new(&spec, 0, &weights.layers[0][0], Q::new(12));
     let mut stx = fx.zero_state();
     let y_fx = fx.step_f32(&x, &mut stx);
-    let max_err_fx = y_fx
+    let max_err_fx = y_f32
         .iter()
-        .zip(&want_y)
+        .zip(&y_fx)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
-    println!("16-bit fxp engine vs golden: max |err| = {max_err_fx:.2e} (§4.2 quantisation)");
+    println!("f32 engine vs 16-bit fxp engine: max |err| = {max_err_fx:.2e} (§4.2 quantisation)");
+    assert!(max_err_fx < 0.05);
 
-    assert!(max_err_pjrt < 1e-4 && max_err_rust < 2e-4 && max_err_fx < 0.05);
-    println!("\nquickstart OK — all three execution paths agree.");
+    // --- [2] the 3-stage native pipeline over interleaved streams.
+    let backend = NativeBackend::default();
+    let mut pipe = ClstmPipeline::build(&backend, &weights)?;
+    let utts: Vec<Vec<Vec<f32>>> = (0..3)
+        .map(|_| {
+            (0..6)
+                .map(|_| {
+                    (0..spec.input_dim)
+                        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let (outs, metrics) = pipe.run_utterances(&utts)?;
+    // Reference: the plain engine, one stream at a time.
+    let mut max_err_pipe = 0.0f32;
+    for (u, frames) in utts.iter().enumerate() {
+        let mut st = cell.zero_state();
+        for (t, xf) in frames.iter().enumerate() {
+            let want = cell.step(xf, &mut st);
+            for (a, b) in want.iter().zip(&outs[u][t]) {
+                max_err_pipe = max_err_pipe.max((a - b).abs());
+            }
+        }
+    }
+    println!(
+        "native pipeline vs engine:       max |err| = {max_err_pipe:.2e}  ({})",
+        metrics.summary()
+    );
+    assert!(max_err_pipe < 1e-4);
+    drop(pipe);
+
+    // --- [3] end-to-end serving: workload → pipeline → classifier → PER.
+    let report = serve_workload(&backend, &weights, 8, 3)?;
+    println!("serve [{}]: {}", report.config, report.metrics.summary());
+    println!("workload PER (random-init weights): {:.1}%", report.per);
+
+    println!("\nquickstart OK — the serving pipeline runs end to end on the native backend.");
     Ok(())
 }

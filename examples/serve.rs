@@ -1,5 +1,6 @@
-//! Serving demo on the Google-LSTM artifacts: sustained throughput of the
-//! 3-stage PJRT pipeline with batcher-managed admission and backpressure.
+//! Serving demo at Google-LSTM scale: sustained throughput of the 3-stage
+//! pipeline with batcher-managed admission and backpressure, on the native
+//! backend (k=8 spectral weights, 1024 hidden, 672-wide fused input).
 //!
 //! Run: `cargo run --release --example serve [-- n_utts]`
 
@@ -9,31 +10,20 @@ use clstm::coordinator::pipeline::ClstmPipeline;
 use clstm::data::synth::{SynthConfig, SynthTimit};
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
-use clstm::runtime::artifact::ArtifactDir;
-use clstm::runtime::client::Runtime;
-use std::path::Path;
+use clstm::runtime::native::NativeBackend;
 
 fn main() -> anyhow::Result<()> {
     let n_utts: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(6);
-    let art = ArtifactDir::open(Path::new("artifacts"))
-        .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?;
-    let cfg = art
-        .config("google_fft8")
-        .expect("google_fft8 in manifest")
-        .clone();
     // Random weights: this demo measures the serving path, not accuracy.
     let spec = LstmSpec::google(8);
     let weights = LstmWeights::random(&spec, 42);
 
-    let rt = Runtime::cpu()?;
-    println!(
-        "compiling google_fft8 stages on {} (1024 hidden, 672-wide fused input, k=8)...",
-        rt.platform()
-    );
-    let mut pipe = ClstmPipeline::build(rt, &art, &cfg, &weights)?;
+    let backend = NativeBackend::default();
+    println!("building google k=8 stages on the native backend (precomputing spectra)...");
+    let mut pipe = ClstmPipeline::build(&backend, &weights)?;
 
     let gen = SynthTimit::new(SynthConfig::google());
     let mut batcher = Batcher::new(n_utts, 4);
@@ -64,7 +54,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\noverall: {}", total.summary());
     println!(
-        "(for the FPGA-side throughput of this design — 195k FPS on KU060 — see `clstm table3`)"
+        "(for the FPGA-side throughput of this design — 195k FPS on KU060 — see `clstm table3`; \
+         for PJRT execution of the AOT artifacts build with --features pjrt)"
     );
     Ok(())
 }

@@ -10,7 +10,7 @@ autodiff realises exactly the Eq 4–5 backward functions (the derivative of
 a circulant convolution is a circulant correlation).
 
 Output: ``artifacts/table1.json`` with per-k parameters / complexity / PER,
-consumed by the Rust ``bench_table1`` harness and EXPERIMENTS.md.
+consumed by the Rust ``bench_table1`` harness (see DESIGN.md).
 
 Run:  cd python && python -m compile.train --steps 400
 """

@@ -1,18 +1,17 @@
-//! Serving-pipeline benchmarks: the L3 hot path end to end — PJRT step
-//! execution, the 3-stage threaded pipeline (throughput and stream-
-//! interleaving effect), and the discrete-event FPGA simulation rate.
-//! Skips PJRT parts gracefully when `make artifacts` has not run.
+//! Serving-pipeline benchmarks: the L3 hot path end to end — the 3-stage
+//! pipeline on the native backend (throughput and stream-interleaving
+//! effect), the discrete-event FPGA simulation rate, and, when built with
+//! `--features pjrt` and `make artifacts` has run, the PJRT step execution
+//! and pipeline.
 
 use clstm::coordinator::pipeline::ClstmPipeline;
 use clstm::fpga_sim::simulate;
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::perfmodel::platform::Platform;
-use clstm::runtime::artifact::{ArtifactDir, SpectralBundle};
-use clstm::runtime::client::Runtime;
+use clstm::runtime::native::NativeBackend;
 use clstm::util::bench::{black_box, Bench};
 use clstm::util::prng::Xoshiro256;
-use std::path::Path;
 
 fn main() {
     let mut b = Bench::new("pipeline");
@@ -24,19 +23,79 @@ fn main() {
         black_box(simulate(&p.schedule, 256))
     });
 
+    // Native pipeline throughput vs stream count: interleaving must raise
+    // FPS (the paper's frame-interleaving argument, §6.2).
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let frames_per_utt = 64;
+    for (label, spec) in [
+        ("tiny_k4", LstmSpec::tiny(4)),
+        (
+            "proxy256_k8",
+            LstmSpec {
+                input_dim: 156,
+                hidden_dim: 256,
+                proj_dim: Some(128),
+                ..LstmSpec::google(8)
+            },
+        ),
+    ] {
+        let weights = LstmWeights::random(&spec, 9);
+        let backend = NativeBackend::default();
+        for streams in [1usize, 4] {
+            let mut pipe = ClstmPipeline::build(&backend, &weights).unwrap();
+            let utts: Vec<Vec<Vec<f32>>> = (0..streams)
+                .map(|_| {
+                    (0..frames_per_utt)
+                        .map(|_| {
+                            (0..spec.input_dim)
+                                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let (_, m) = pipe.run_utterances(&utts).unwrap();
+            println!(
+                "native pipeline {label}, {streams} stream(s): {:.0} frames/s (wall {:.1} ms for {} frames)",
+                m.fps(),
+                m.wall.as_secs_f64() * 1e3,
+                m.frames
+            );
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&mut b, &mut rng);
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt benches skipped — build with --features pjrt and run `make artifacts`)");
+}
+
+/// PJRT step execution + pipeline; skips gracefully when `make artifacts`
+/// has not run or the stub `xla` crate is linked.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &mut Bench, rng: &mut Xoshiro256) {
+    use clstm::runtime::artifact::{ArtifactDir, SpectralBundle};
+    use clstm::runtime::client::Runtime;
+    use std::path::Path;
+
     let Ok(art) = ArtifactDir::open(Path::new("artifacts")) else {
         println!("(artifacts missing — run `make artifacts` for the PJRT benches)");
         return;
     };
     let weights = LstmWeights::load(art.golden_weights.as_ref().unwrap()).unwrap();
     let cfg = art.config("tiny_fft4").unwrap().clone();
-    let rt = Runtime::cpu().unwrap();
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(PJRT client unavailable: {e:#})");
+            return;
+        }
+    };
 
     // Single-step PJRT execution (the per-frame floor).
     let exe = rt.load_hlo_text(&art.path_of(&cfg.step)).unwrap();
     let bundle = SpectralBundle::from_weights(&weights, 0, 0);
     let spec = &weights.spec;
-    let mut rng = Xoshiro256::seed_from_u64(7);
     let x: Vec<f32> = (0..spec.input_dim)
         .map(|_| rng.uniform(-1.0, 1.0) as f32)
         .collect();
@@ -63,11 +122,10 @@ fn main() {
         )
     });
 
-    // Pipeline throughput vs stream count: interleaving must raise FPS
-    // (the paper's frame-interleaving argument, §6.2).
+    // PJRT pipeline throughput vs stream count.
     let frames_per_utt = 16;
     for streams in [1usize, 4] {
-        let mut pipe = ClstmPipeline::build(rt.clone(), &art, &cfg, &weights).unwrap();
+        let mut pipe = ClstmPipeline::build_pjrt(rt.clone(), &art, &cfg, &weights).unwrap();
         let utts: Vec<Vec<Vec<f32>>> = (0..streams)
             .map(|_| {
                 (0..frames_per_utt)
@@ -81,7 +139,7 @@ fn main() {
             .collect();
         let (_, m) = pipe.run_utterances(&utts).unwrap();
         println!(
-            "pipeline tiny_fft4, {streams} stream(s): {:.0} frames/s (wall {:.1} ms for {} frames)",
+            "pjrt pipeline tiny_fft4, {streams} stream(s): {:.0} frames/s (wall {:.1} ms for {} frames)",
             m.fps(),
             m.wall.as_secs_f64() * 1e3,
             m.frames

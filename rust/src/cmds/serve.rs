@@ -1,59 +1,112 @@
-//! `clstm serve` — serve SynthTIMIT through the PJRT pipeline.
+//! `clstm serve` — serve SynthTIMIT through the 3-stage pipeline.
+//!
+//! `--backend native` (default) runs everywhere with zero artifacts;
+//! `--backend pjrt` executes the AOT artifacts and requires both the `pjrt`
+//! cargo feature and a populated artifacts directory (`make artifacts`).
 
-use anyhow::{Context, Result};
-use clstm::coordinator::server::serve_workload;
+use anyhow::Result;
+use clstm::coordinator::server::ServeReport;
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
-use clstm::runtime::artifact::ArtifactDir;
-use clstm::runtime::client::Runtime;
 use clstm::util::cli::Cli;
-use std::path::Path;
 
-pub fn serve_cmd(cli: &Cli) -> Result<()> {
-    let art_dir = cli.get_str("artifacts");
-    let art = ArtifactDir::open(Path::new(&art_dir))
-        .with_context(|| format!("opening artifacts in {art_dir} (run `make artifacts`)"))?;
-
-    // Serve the tiny config by default (its golden weights ship with the
-    // artifacts); `--model google --k 8` serves google_fft8 with random
-    // weights (throughput demo).
+/// Model spec + label for the serve run. Plain `clstm serve` uses the tiny
+/// model; an explicit `--model google|small --k <k>` serves the paper-scale
+/// models with random weights (throughput demo).
+fn serve_spec(cli: &Cli) -> (String, LstmSpec) {
     let model = cli.get_str("model");
     let k = cli.get_usize("k");
-    let (config_name, weights) = if model == "tiny" || cli.positional().len() < 2 {
-        let w = LstmWeights::load(
-            &art.golden_weights
-                .clone()
-                .context("golden weights missing from artifacts")?,
-        )?;
-        ("tiny_fft4".to_string(), w)
+    if model == "tiny" || !cli.is_set("model") {
+        ("tiny_fft4".to_string(), LstmSpec::tiny(4))
     } else {
         let spec = match model.as_str() {
             "small" => LstmSpec::small(k),
             _ => LstmSpec::google(k),
         };
-        (
-            format!("{model}_fft{k}"),
-            LstmWeights::random(&spec, cli.get_u64("seed")),
-        )
-    };
+        (format!("{model}_fft{k}"), spec)
+    }
+}
 
-    let rt = Runtime::cpu()?;
-    println!(
-        "serving {} on PJRT ({}) with {} utterances / {} streams ...",
-        config_name,
-        rt.platform(),
-        cli.get_usize("utts"),
-        cli.get_usize("streams")
-    );
-    let report = serve_workload(
-        rt,
-        &art,
-        &config_name,
-        &weights,
-        cli.get_usize("utts"),
-        cli.get_usize("streams"),
-    )?;
+/// Golden trained weights when serving the tiny config with artifacts
+/// present (gives a real PER); random init otherwise (throughput demo).
+fn load_serve_weights(cli: &Cli, label: &str, spec: &LstmSpec) -> LstmWeights {
+    if label == "tiny_fft4" {
+        use clstm::runtime::artifact::ArtifactDir;
+        use std::path::Path;
+        let art_dir = cli.get_str("artifacts");
+        if let Ok(art) = ArtifactDir::open(Path::new(&art_dir)) {
+            if let Some(golden) = art.golden_weights.as_ref() {
+                if let Ok(w) = LstmWeights::load(golden) {
+                    println!("using golden tiny weights from {art_dir}");
+                    return w;
+                }
+            }
+        }
+    }
+    LstmWeights::random(spec, cli.get_u64("seed"))
+}
+
+pub fn serve_cmd(cli: &Cli) -> Result<()> {
+    let (label, spec) = serve_spec(cli);
+    let weights = load_serve_weights(cli, &label, &spec);
+    let n_utts = cli.get_usize("utts");
+    let streams = cli.get_usize("streams");
+
+    let report: ServeReport = match cli.get_str("backend").as_str() {
+        "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, streams)?,
+        "native" => {
+            use clstm::coordinator::server::serve_workload;
+            use clstm::runtime::native::NativeBackend;
+            println!(
+                "serving {label} on the native backend with {n_utts} utterances / {streams} streams ..."
+            );
+            serve_workload(&NativeBackend::default(), &weights, n_utts, streams)?
+        }
+        other => anyhow::bail!("unknown --backend {other:?} (expected: native | pjrt)"),
+    };
+    println!("  backend: {}", report.config);
     println!("  {}", report.metrics.summary());
     println!("  workload PER: {:.2}%", report.per);
     Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(
+    cli: &Cli,
+    label: &str,
+    weights: &LstmWeights,
+    n_utts: usize,
+    streams: usize,
+) -> Result<ServeReport> {
+    use anyhow::Context;
+    use clstm::coordinator::server::serve_workload;
+    use clstm::runtime::artifact::ArtifactDir;
+    use clstm::runtime::client::Runtime;
+    use clstm::runtime::pjrt::PjrtBackend;
+    use std::path::Path;
+
+    let art_dir = cli.get_str("artifacts");
+    let art = ArtifactDir::open(Path::new(&art_dir))
+        .with_context(|| format!("opening artifacts in {art_dir} (run `make artifacts`)"))?;
+    let rt = Runtime::cpu()?;
+    println!(
+        "serving {label} on PJRT ({}) with {n_utts} utterances / {streams} streams ...",
+        rt.platform()
+    );
+    let backend = PjrtBackend::new(rt, art, label.to_string());
+    serve_workload(&backend, weights, n_utts, streams)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(
+    _cli: &Cli,
+    _label: &str,
+    _weights: &LstmWeights,
+    _n_utts: usize,
+    _streams: usize,
+) -> Result<ServeReport> {
+    anyhow::bail!(
+        "the pjrt backend requires building with `cargo build --features pjrt` \
+         (and `make artifacts`); the default build serves on the native backend"
+    )
 }

@@ -3,15 +3,16 @@
 //! The paper's accelerator is a 3-stage coarse-grained pipeline joined by
 //! double buffers, kept full by interleaving independent frames. This
 //! module is that architecture in software: three OS threads, one per
-//! stage, each owning its compiled PJRT executable and its share of the
-//! (spectral) weights; bounded two-slot channels as the double buffers;
-//! and a scheduler that interleaves multiple utterance *streams* so the
-//! recurrent dependency (frame `t+1` of a stream needs `y_t`, `c_t`) never
-//! stalls the pipeline — exactly the paper's "after three frames have been
-//! processed, the following frame could be processed at every one stage of
-//! latency".
+//! stage, each owning a backend stage executor (native engine or compiled
+//! PJRT executable) and its share of the (spectral) weights; bounded
+//! two-slot channels as the double buffers; and a scheduler that
+//! interleaves multiple utterance *streams* so the recurrent dependency
+//! (frame `t+1` of a stream needs `y_t`, `c_t`) never stalls the pipeline —
+//! exactly the paper's "after three frames have been processed, the
+//! following frame could be processed at every one stage of latency".
 //!
-//! - [`pipeline`] — the 3-stage threaded pipeline over PJRT executables.
+//! - [`pipeline`] — the 3-stage threaded pipeline over any
+//!   [`Backend`](crate::runtime::backend::Backend).
 //! - [`batcher`] — utterance admission, stream slots, backpressure.
 //! - [`metrics`] — latency/throughput accounting.
 //! - [`server`] — the end-to-end ASR serving loop (workload in, PER +

@@ -1,19 +1,23 @@
-//! The 3-stage threaded pipeline over PJRT executables (Fig 7 in software).
+//! The 3-stage threaded pipeline (Fig 7 in software), backend-agnostic.
 //!
-//! Stage threads own their executable and weights; bounded `sync_channel(2)`
-//! hops model the double buffers. The scheduler interleaves utterance
-//! streams: a stream has at most one frame in flight (its recurrence), but
-//! with ≥3 streams admitted the pipeline is always full — the software
-//! realisation of the paper's frame-interleaving argument (§6.2).
+//! Stage threads own their [`StageExecutor`] (compiled executable or native
+//! engine plus its share of the weights); bounded `sync_channel(2)` hops
+//! model the double buffers. The scheduler interleaves utterance streams: a
+//! stream has at most one frame in flight (its recurrence), but with ≥3
+//! streams admitted the pipeline is always full — the software realisation
+//! of the paper's frame-interleaving argument (§6.2).
+//!
+//! Which hardware/library executes each stage is a [`Backend`] concern: the
+//! default [`NativeBackend`](crate::runtime::native::NativeBackend) needs
+//! nothing beyond this crate; `PjrtBackend` (feature `pjrt`) runs the AOT
+//! HLO artifacts.
 
 use crate::coordinator::metrics::Metrics;
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
-use crate::runtime::client::Runtime;
+use crate::runtime::backend::{Backend, StageExecutor};
 use anyhow::{Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
 use std::time::Instant;
 
 /// A frame travelling through the pipeline.
@@ -49,25 +53,14 @@ pub struct ClstmPipeline {
 }
 
 impl ClstmPipeline {
-    /// Compile the three stage artifacts and launch the stage threads.
+    /// Build the three stage executors on `backend` and launch the stage
+    /// threads.
     ///
-    /// `weights` provides layer-0 spectral weights (the Table 3 pipeline is
-    /// the single-layer accelerator, like the paper's).
-    pub fn build(
-        rt: Arc<Runtime>,
-        art: &ArtifactDir,
-        cfg: &ConfigArtifacts,
-        weights: &LstmWeights,
-    ) -> Result<Self> {
+    /// `weights` provides layer-0 weights (the Table 3 pipeline is the
+    /// single-layer accelerator, like the paper's).
+    pub fn build(backend: &dyn Backend, weights: &LstmWeights) -> Result<Self> {
         let spec = weights.spec.clone();
-        anyhow::ensure!(spec.k == cfg.k, "weights k={} vs artifact k={}", spec.k, cfg.k);
-        let bundle = SpectralBundle::from_weights(weights, 0, 0);
-        let has_proj = spec.proj_dim.is_some();
-        let h = spec.hidden_dim;
-
-        let exe1 = rt.load_hlo_text(&art.path_of(&cfg.stage1))?;
-        let exe2 = rt.load_hlo_text(&art.path_of(&cfg.stage2))?;
-        let exe3 = rt.load_hlo_text(&art.path_of(&cfg.stage3))?;
+        let stages = backend.build_stages(weights)?;
 
         // Double buffers: two-slot bounded channels.
         let (to_s1, s1_rx) = sync_channel::<Msg>(2);
@@ -75,80 +68,44 @@ impl ClstmPipeline {
         let (s2_tx, s3_rx) = sync_channel::<Msg>(2);
         let (s3_tx, done_rx) = sync_channel::<Done>(2);
 
-        use crate::runtime::client::Executable;
-        let gs = bundle.gates_shape;
-        let g_dims: Vec<i64> = gs.iter().map(|&d| d as i64).collect();
-        let (gre, gim) = (bundle.gates_re.clone(), bundle.gates_im.clone());
+        let mut stage1: Box<dyn StageExecutor> = stages.stage1;
         let h1 = std::thread::Builder::new()
             .name("clstm-stage1".into())
             .spawn(move || {
-                // Stage 1: the four fused gate convolutions. Weight
-                // literals are built once (§Perf) — the "BRAM-resident"
-                // spectra of §4.1, software edition.
-                let wre = Executable::literal_f32(&gre, &g_dims).expect("wre literal");
-                let wim = Executable::literal_f32(&gim, &g_dims).expect("wim literal");
+                // Stage 1: the four fused gate convolutions.
                 while let Ok(mut m) = s1_rx.recv() {
-                    let fused_dims = [1i64, m.payload.len() as i64];
-                    let fused = Executable::literal_f32(&m.payload, &fused_dims)
-                        .expect("fused literal");
-                    let out = exe1
-                        .run_literals(&[&wre, &wim, &fused])
-                        .expect("stage1 execute");
-                    m.payload = out.into_iter().next().unwrap();
+                    let out = stage1.run(&[&m.payload]).expect("stage1 execute");
+                    m.payload = out.into_iter().next().expect("stage1 output");
                     if s1_tx.send(m).is_err() {
                         break;
                     }
                 }
             })?;
 
-        let bias = bundle.bias.clone();
-        let peep = bundle.peep.clone();
+        let mut stage2: Box<dyn StageExecutor> = stages.stage2;
         let h2 = std::thread::Builder::new()
             .name("clstm-stage2".into())
             .spawn(move || {
-                // Stage 2: the element-wise cluster. Bias/peephole literals
-                // prebuilt.
-                let a_dims = [1i64, 4, h as i64];
-                let c_dims = [1i64, h as i64];
-                let bias_lit =
-                    Executable::literal_f32(&bias, &[4, h as i64]).expect("bias literal");
-                let peep_lit =
-                    Executable::literal_f32(&peep, &[3, h as i64]).expect("peep literal");
+                // Stage 2: the element-wise cluster.
                 while let Ok(mut m) = s2_rx.recv() {
-                    let a = Executable::literal_f32(&m.payload, &a_dims).expect("a literal");
-                    let c = Executable::literal_f32(&m.c, &c_dims).expect("c literal");
-                    let outs = exe2
-                        .run_literals(&[&a, &c, &bias_lit, &peep_lit])
-                        .expect("stage2 execute");
+                    let outs = stage2.run(&[&m.payload, &m.c]).expect("stage2 execute");
                     let mut it = outs.into_iter();
-                    m.payload = it.next().unwrap(); // m_t
-                    m.c = it.next().unwrap(); // c_t
+                    m.payload = it.next().expect("stage2 m_t"); // m_t
+                    m.c = it.next().expect("stage2 c_t"); // c_t
                     if s2_tx.send(m).is_err() {
                         break;
                     }
                 }
             })?;
 
-        let ps = bundle.proj_shape;
-        let p_dims3: Vec<i64> = ps.iter().map(|&d| d as i64).collect();
-        let (pre, pim) = (bundle.proj_re.clone(), bundle.proj_im.clone());
+        let mut stage3: Box<dyn StageExecutor> = stages.stage3;
         let h3 = std::thread::Builder::new()
             .name("clstm-stage3".into())
             .spawn(move || {
-                // Stage 3: projection (or identity padding); spectra
-                // prebuilt.
-                let m_dims = [1i64, h as i64];
-                let pre_lit = Executable::literal_f32(&pre, &p_dims3).expect("pre literal");
-                let pim_lit = Executable::literal_f32(&pim, &p_dims3).expect("pim literal");
+                // Stage 3: projection (or identity padding).
                 while let Ok(m) = s3_rx.recv() {
-                    let mp = Executable::literal_f32(&m.payload, &m_dims).expect("m literal");
-                    let outs = if has_proj {
-                        exe3.run_literals(&[&pre_lit, &pim_lit, &mp])
-                    } else {
-                        exe3.run_literals(&[&mp])
-                    }
-                    .expect("stage3 execute");
-                    let y = outs.into_iter().next().unwrap();
+                    let outs = stage3.run(&[&m.payload]).expect("stage3 execute");
+                    let y = outs.into_iter().next().expect("stage3 output");
                     if s3_tx
                         .send(Done {
                             stream: m.stream,
@@ -172,6 +129,20 @@ impl ClstmPipeline {
             done_rx,
             handles: vec![h1, h2, h3],
         })
+    }
+
+    /// Compile the stage artifacts for `cfg` on the PJRT runtime and launch
+    /// the pipeline — convenience wrapper over [`Self::build`] with a
+    /// `PjrtBackend`.
+    #[cfg(feature = "pjrt")]
+    pub fn build_pjrt(
+        rt: std::sync::Arc<crate::runtime::client::Runtime>,
+        art: &crate::runtime::artifact::ArtifactDir,
+        cfg: &crate::runtime::artifact::ConfigArtifacts,
+        weights: &LstmWeights,
+    ) -> Result<Self> {
+        let backend = crate::runtime::pjrt::PjrtBackend::new(rt, art.clone(), cfg.name.clone());
+        Self::build(&backend, weights)
     }
 
     /// Run a set of utterances through the pipeline, interleaving them as
@@ -253,5 +224,5 @@ impl Drop for ClstmPipeline {
     }
 }
 
-// Integration tests for the pipeline live in rust/tests/integration.rs
-// (they require `make artifacts`).
+// Integration tests for the pipeline live in rust/tests/integration.rs:
+// native-backend coverage runs everywhere; PJRT coverage is feature-gated.

@@ -1,5 +1,5 @@
-//! End-to-end ASR serving: SynthTIMIT workload → pipeline → classifier →
-//! PER + throughput. The driver behind `clstm serve` and
+//! End-to-end ASR serving: SynthTIMIT workload → pipeline (any backend) →
+//! classifier → PER + throughput. The driver behind `clstm serve` and
 //! `examples/asr_pipeline.rs`.
 
 use crate::coordinator::batcher::{Batcher, QueuedUtterance};
@@ -9,10 +9,8 @@ use crate::data::per::phone_error_rate;
 use crate::data::synth::{SynthConfig, SynthTimit};
 use crate::lstm::sequence::argmax;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::artifact::ArtifactDir;
-use crate::runtime::client::Runtime;
+use crate::runtime::backend::Backend;
 use anyhow::{Context, Result};
-use std::sync::Arc;
 
 /// Result of one serving run.
 #[derive(Debug, Clone)]
@@ -21,22 +19,19 @@ pub struct ServeReport {
     /// PER of the served model on the generated workload (needs the
     /// classifier head in the weights).
     pub per: f64,
+    /// Which backend served the run (e.g. `native`, `pjrt:tiny_fft4`).
     pub config: String,
 }
 
 /// Generate `n_utts` SynthTIMIT utterances sized for `weights.spec`, run
-/// them through the PJRT pipeline, decode framewise, and score PER.
+/// them through the 3-stage pipeline on `backend`, decode framewise, and
+/// score PER.
 pub fn serve_workload(
-    rt: Arc<Runtime>,
-    art: &ArtifactDir,
-    config_name: &str,
+    backend: &dyn Backend,
     weights: &LstmWeights,
     n_utts: usize,
     max_streams: usize,
 ) -> Result<ServeReport> {
-    let cfg = art
-        .config(config_name)
-        .with_context(|| format!("config {config_name} not in manifest"))?;
     let spec = &weights.spec;
 
     // Workload generation (truncate synthetic features to the model's
@@ -61,7 +56,7 @@ pub fn serve_workload(
         }));
     }
 
-    let mut pipeline = ClstmPipeline::build(rt, art, cfg, weights)?;
+    let mut pipeline = ClstmPipeline::build(backend, weights)?;
     let (cls_w, cls_b) = weights
         .classifier
         .clone()
@@ -106,6 +101,6 @@ pub fn serve_workload(
     Ok(ServeReport {
         metrics,
         per,
-        config: config_name.to_string(),
+        config: backend.name(),
     })
 }

@@ -8,9 +8,8 @@
 //! hot sizes.
 
 use crate::num::Cplx;
-use once_cell::sync::Lazy;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 /// Precomputed FFT plan for size `n` (power of two).
 #[derive(Debug, Clone)]
@@ -91,12 +90,14 @@ impl Plan {
     }
 }
 
-static PLAN_CACHE: Lazy<Mutex<HashMap<usize, std::sync::Arc<Plan>>>> =
-    Lazy::new(|| Mutex::new(HashMap::new()));
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, std::sync::Arc<Plan>>>> = OnceLock::new();
 
 /// Fetch (or build) the cached plan for size `n`.
 pub fn plan(n: usize) -> std::sync::Arc<Plan> {
-    let mut cache = PLAN_CACHE.lock().unwrap();
+    let mut cache = PLAN_CACHE
+        .get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .unwrap();
     cache
         .entry(n)
         .or_insert_with(|| std::sync::Arc::new(Plan::new(n)))

@@ -13,10 +13,15 @@
 //!   models (Eq 7–12), design-space exploration, HLS code generation, a
 //!   cycle-approximate FPGA pipeline simulator, the ESE sparse baseline, a
 //!   bit-accurate 16-bit fixed-point inference engine, and a serving
-//!   coordinator that executes the AOT artifacts through PJRT.
+//!   coordinator over pluggable runtime backends: the default **native**
+//!   backend executes the pipeline with the crate's own engines (zero
+//!   external artifacts), while the optional `pjrt` cargo feature runs the
+//!   AOT artifacts through PJRT.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index
-//! mapping every table and figure of the paper to a module and bench target.
+//! Layers 1–2 are build-time only: a fresh checkout builds and serves with
+//! default features and no Python step. See `DESIGN.md` (repo root) for the
+//! system inventory, the `default`/`pjrt` feature matrix, and the build +
+//! `make artifacts` instructions.
 
 pub mod circulant;
 pub mod coordinator;

@@ -10,7 +10,8 @@
 //! clstm dse               # sweep block sizes, print design points
 //! clstm codegen           # emit the HLS C++ for a scheduled design
 //! clstm simulate          # discrete-event pipeline simulation
-//! clstm serve             # serve SynthTIMIT through the PJRT pipeline
+//! clstm serve             # serve SynthTIMIT through the 3-stage pipeline
+//!                         #   (--backend native | pjrt)
 //! clstm quantize          # range analysis + fxp-vs-float accuracy report
 //! ```
 
@@ -32,6 +33,11 @@ fn main() {
     .opt("k", "8", "circulant block size")
     .opt("platform", "ku060", "platform: ku060 | 7v3")
     .opt("artifacts", "artifacts", "artifacts directory (for serve/quickcheck)")
+    .opt(
+        "backend",
+        "native",
+        "serving backend: native | pjrt (pjrt needs --features pjrt + artifacts)",
+    )
     .opt("utts", "8", "utterances to serve")
     .opt("streams", "4", "interleaved streams in the pipeline")
     .opt("seed", "1234", "random seed")

@@ -90,7 +90,7 @@ pub fn table3() -> (Table, Vec<String>) {
     }
 
     let mut t = Table::new(
-        "Table 3 — C-LSTM vs ESE (model-generated; see EXPERIMENTS.md for paper deltas)",
+        "Table 3 — C-LSTM vs ESE (model-generated; see DESIGN.md for paper deltas)",
         &[
             "design",
             "params",

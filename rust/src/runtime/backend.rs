@@ -1,0 +1,94 @@
+//! The pluggable serving-backend abstraction.
+//!
+//! The coordinator's 3-stage pipeline (Fig 7 in software) is backend-agnostic:
+//! each stage thread owns one [`StageExecutor`] and the scheduler never sees
+//! what executes the math. A [`Backend`] compiles/prepares the three stage
+//! executors for a weight bundle:
+//!
+//! - [`NativeBackend`](crate::runtime::native::NativeBackend) (default) runs
+//!   the crate's own engines — precomputed [`SpectralWeights`]
+//!   (`F(w_ij)` of §4.1) through the Eq 6 circulant convolution and the
+//!   Eq 1 gate math — with zero external artifacts or libraries.
+//! - `PjrtBackend` (feature `pjrt`) executes the AOT-compiled HLO artifacts
+//!   from the JAX layer through the PJRT CPU client.
+//!
+//! ## Stage I/O contract
+//!
+//! All tensors are flat `f32` rows; `h` is `spec.hidden_dim`:
+//!
+//! | stage | inputs | outputs |
+//! |-------|--------|---------|
+//! | 1 (gate convolutions) | `[fused]` — `[x_t (padded); y_{t-1} (padded)]`, length `spec.fused_in_dim(0)` | `[a]` — gate pre-activations, length `4·h`, gate-major in `i, f, g, o` order |
+//! | 2 (element-wise cluster) | `[a, c_{t-1}]` | `[m_t, c_t]` — cell output (length `h`) and new cell state |
+//! | 3 (projection) | `[m_t]` | `[y_t]` — length `spec.pad(spec.out_dim())` |
+//!
+//! [`SpectralWeights`]: crate::circulant::spectral::SpectralWeights
+
+use crate::lstm::weights::LstmWeights;
+use anyhow::Result;
+
+/// One compiled/prepared pipeline stage. The executor owns its share of the
+/// weights (prebuilt spectra, literals, …) so the per-frame call does no
+/// setup work — the software analogue of the BRAM-resident weights of §4.1.
+///
+/// `Send` (not `Sync`) because each executor is moved into exactly one stage
+/// thread by the coordinator and mutated only there (scratch buffers).
+pub trait StageExecutor: Send {
+    /// Execute the stage; see the module docs for the per-stage I/O contract.
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// The three prepared stages of one C-LSTM serving step (layer 0, like the
+/// paper's single-layer accelerator).
+pub struct StageSet {
+    pub stage1: Box<dyn StageExecutor>,
+    pub stage2: Box<dyn StageExecutor>,
+    pub stage3: Box<dyn StageExecutor>,
+}
+
+/// A serving backend: turns a weight bundle into runnable pipeline stages.
+pub trait Backend {
+    /// Human-readable backend identifier (shown in serve reports/logs).
+    fn name(&self) -> String;
+
+    /// Compile/prepare the three pipeline stages for `weights`.
+    fn build_stages(&self, weights: &LstmWeights) -> Result<StageSet>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::config::LstmSpec;
+    use crate::runtime::native::NativeBackend;
+
+    #[test]
+    fn backend_is_object_safe_and_buildable() {
+        let backend: Box<dyn Backend> = Box::new(NativeBackend::default());
+        assert_eq!(backend.name(), "native");
+        let w = LstmWeights::random(&LstmSpec::tiny(4), 3);
+        let stages = backend.build_stages(&w).expect("native stages build");
+        // The boxed executors must be movable into threads (Send).
+        fn assert_send<T: Send>(_: &T) {}
+        assert_send(&stages.stage1);
+    }
+
+    #[test]
+    fn stage_contract_shapes_round_trip() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 5);
+        let mut stages = NativeBackend::default().build_stages(&w).unwrap();
+        let h = spec.hidden_dim;
+        let fused = vec![0.25f32; spec.fused_in_dim(0)];
+        let a = stages.stage1.run(&[&fused]).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].len(), 4 * h);
+        let c0 = vec![0.0f32; h];
+        let mc = stages.stage2.run(&[&a[0], &c0]).unwrap();
+        assert_eq!(mc.len(), 2);
+        assert_eq!(mc[0].len(), h);
+        assert_eq!(mc[1].len(), h);
+        let y = stages.stage3.run(&[&mc[0]]).unwrap();
+        assert_eq!(y.len(), 1);
+        assert_eq!(y[0].len(), spec.pad(spec.out_dim()));
+    }
+}

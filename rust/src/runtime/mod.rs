@@ -1,19 +1,38 @@
-//! PJRT runtime: load and execute the AOT artifacts from Layer 2.
+//! Runtime backends: everything that executes the serving pipeline's math.
 //!
-//! Python is build-time only; at runtime this module is the sole bridge to
-//! the compiled compute graphs: `artifacts/*.hlo.txt` (HLO **text** — the
-//! xla_extension 0.5.1 proto parser rejects jax ≥ 0.5 serialized modules)
-//! is parsed, compiled once per process on the PJRT CPU client, and
-//! executed from the serving hot path.
+//! The serving coordinator is backend-agnostic — it drives three opaque
+//! stage executors produced by a [`Backend`] (see [`backend`] for the trait
+//! and the per-stage I/O contract):
 //!
-//! - [`client`] — thin wrapper over the `xla` crate: executable cache,
-//!   literal helpers.
+//! - [`backend`] — the pluggable [`Backend`] / [`StageExecutor`] layer.
+//! - [`native`] — the default backend: pure-Rust execution through the
+//!   crate's own engines (Eq 6 spectral convolution + Eq 1 gate math), no
+//!   artifacts or external libraries required.
 //! - [`artifact`] — `manifest.json` parsing, per-config artifact bundles,
-//!   and the spectral-weight buffer preparation that matches the kernel's
-//!   `(4p, q, bins)` layout.
+//!   and the spectral-weight buffer preparation matching the AOT kernels'
+//!   `(4p, q, bins)` layout (used by the PJRT backend and by tooling).
+//! - `client` / `pjrt` (cargo feature `pjrt`) — the PJRT path: HLO-text
+//!   artifacts from the JAX layer are parsed, compiled once per process on
+//!   the PJRT CPU client (`artifacts/*.hlo.txt` — HLO **text**, because the
+//!   xla_extension 0.5.1 proto parser rejects jax ≥ 0.5 serialized
+//!   modules), and executed from the serving hot path. Without the feature
+//!   none of the `xla` surface is compiled, so a fresh checkout builds with
+//!   zero external artifacts. See DESIGN.md for the feature matrix.
 
 pub mod artifact;
+pub mod backend;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
+pub use backend::{Backend, StageExecutor, StageSet};
+pub use native::NativeBackend;
+
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;

@@ -1,0 +1,316 @@
+//! The native serving backend: the three pipeline stages executed by the
+//! crate's own engines, no artifacts, no external libraries.
+//!
+//! Stage 1 runs the four fused gate convolutions through the optimized Eq 6
+//! operator ([`matvec_eq6_into`]) over spectra precomputed at build time
+//! (the "BRAM-resident `F(w)`" of §4.1). Stage 2 is the element-wise cluster
+//! of Eq 1a–1f with the same arithmetic — term order included — as
+//! [`CellF32`](crate::lstm::cell_f32::CellF32), so pipeline outputs are
+//! bit-identical to the reference engine's. Stage 3 applies the projection
+//! convolution (Eq 1g) or identity padding.
+
+use crate::circulant::conv::{matvec_eq6_into, Eq6Scratch};
+use crate::circulant::spectral::SpectralWeights;
+use crate::circulant::BlockCirculant;
+use crate::lstm::activations::{sigmoid, tanh, ActivationMode, PwlTable};
+use crate::lstm::weights::{LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
+use crate::num::fxp::Q;
+use crate::runtime::backend::{Backend, StageExecutor, StageSet};
+use anyhow::{ensure, Result};
+
+/// The default backend: pure-Rust float execution of the serving pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBackend {
+    /// Activation implementation (exact transcendental by default; PWL for
+    /// FPGA-faithful activation error).
+    pub mode: ActivationMode,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self {
+            mode: ActivationMode::Exact,
+        }
+    }
+}
+
+impl NativeBackend {
+    pub fn new(mode: ActivationMode) -> Self {
+        Self { mode }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn build_stages(&self, weights: &LstmWeights) -> Result<StageSet> {
+        ensure!(
+            !weights.layers.is_empty() && !weights.layers[0].is_empty(),
+            "weights have no layers"
+        );
+        let spec = &weights.spec;
+        let lw = &weights.layers[0][0];
+        let h = spec.hidden_dim;
+        let hidden_pad = spec.pad(h);
+        let out_pad = spec.pad(spec.out_dim());
+        let q = Q::new(12);
+
+        // Stack the four gate matrices row-wise into one (4·p, q) circulant
+        // operator — the same fusion the AOT kernels use (the bundle's
+        // `(4p, q, bins)` layout) — so the per-frame input DFTs of the
+        // shared fused operand are computed once, not once per gate.
+        let fused_len = spec.fused_in_dim(0);
+        let stacked = {
+            let mut w = Vec::with_capacity(4 * lw.gates[0].w.len());
+            for g in [GATE_I, GATE_F, GATE_G, GATE_O] {
+                w.extend_from_slice(&lw.gates[g].w);
+            }
+            BlockCirculant::from_vectors(4 * hidden_pad, fused_len, spec.k, w)
+        };
+        let stage1 = NativeStage1 {
+            gates: SpectralWeights::precompute(&stacked),
+            h,
+            hidden_pad,
+            fused_len,
+            acc: vec![0.0; 4 * hidden_pad],
+            scratch: Eq6Scratch::default(),
+        };
+        let stage2 = NativeStage2 {
+            bias: lw.bias.clone(),
+            // Zero peepholes when the spec has none: built once here, not
+            // per frame in the hot loop.
+            peephole: lw
+                .peephole
+                .clone()
+                .unwrap_or_else(|| [vec![0.0; h], vec![0.0; h], vec![0.0; h]]),
+            h,
+            mode: self.mode,
+            pwl_sigmoid: PwlTable::sigmoid(q),
+            pwl_tanh: PwlTable::tanh(q),
+        };
+        let stage3 = NativeStage3 {
+            proj: lw.proj.as_ref().map(SpectralWeights::precompute),
+            hidden_pad,
+            out_pad,
+            padded: vec![0.0; hidden_pad],
+            scratch: Eq6Scratch::default(),
+        };
+        Ok(StageSet {
+            stage1: Box::new(stage1),
+            stage2: Box::new(stage2),
+            stage3: Box::new(stage3),
+        })
+    }
+}
+
+/// Stage 1: the four fused gate circulant convolutions (Eq 6), stacked
+/// row-wise into one operator so the input-block DFTs are shared.
+struct NativeStage1 {
+    /// Precomputed spectra of the `(4·p, q)` row-stacked gate matrices,
+    /// gates in `i, f, g, o` order.
+    gates: SpectralWeights,
+    h: usize,
+    hidden_pad: usize,
+    fused_len: usize,
+    /// Stacked output buffer (`4 · hidden_pad`), reused per frame.
+    acc: Vec<f32>,
+    scratch: Eq6Scratch,
+}
+
+impl StageExecutor for NativeStage1 {
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(inputs.len() == 1, "stage1 takes one input (fused operand)");
+        let fused = inputs[0];
+        ensure!(
+            fused.len() == self.fused_len,
+            "fused operand length {} != {}",
+            fused.len(),
+            self.fused_len
+        );
+        matvec_eq6_into(&self.gates, fused, &mut self.acc, &mut self.scratch);
+        let mut a = vec![0.0f32; 4 * self.h];
+        for g in 0..4 {
+            a[g * self.h..(g + 1) * self.h]
+                .copy_from_slice(&self.acc[g * self.hidden_pad..g * self.hidden_pad + self.h]);
+        }
+        Ok(vec![a])
+    }
+}
+
+/// Stage 2: the element-wise cluster (Eq 1a–1f), mirroring `CellF32::step`
+/// term for term so the pipeline reproduces the reference engine exactly.
+struct NativeStage2 {
+    bias: [Vec<f32>; 4],
+    /// Peephole vectors `w_ic, w_fc, w_oc` (all-zero when the spec has none).
+    peephole: [Vec<f32>; 3],
+    h: usize,
+    mode: ActivationMode,
+    pwl_sigmoid: PwlTable,
+    pwl_tanh: PwlTable,
+}
+
+impl NativeStage2 {
+    #[inline]
+    fn act_sigma(&self, x: f32) -> f32 {
+        match self.mode {
+            ActivationMode::Exact => sigmoid(x),
+            ActivationMode::Pwl => self.pwl_sigmoid.eval(x),
+        }
+    }
+
+    #[inline]
+    fn act_h(&self, x: f32) -> f32 {
+        match self.mode {
+            ActivationMode::Exact => tanh(x),
+            ActivationMode::Pwl => self.pwl_tanh.eval(x),
+        }
+    }
+}
+
+impl StageExecutor for NativeStage2 {
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(inputs.len() == 2, "stage2 takes [a, c_prev]");
+        let (a, c_prev) = (inputs[0], inputs[1]);
+        let h = self.h;
+        ensure!(a.len() >= 4 * h, "gate pre-activations too short: {}", a.len());
+        ensure!(c_prev.len() == h, "cell state length {} != {h}", c_prev.len());
+
+        let peep = &self.peephole;
+        let mut m = vec![0.0f32; h];
+        let mut c = vec![0.0f32; h];
+        for n in 0..h {
+            // Eq 1a, 1b: peepholes read c_{t-1}.
+            let i =
+                self.act_sigma(a[GATE_I * h + n] + peep[0][n] * c_prev[n] + self.bias[GATE_I][n]);
+            let f =
+                self.act_sigma(a[GATE_F * h + n] + peep[1][n] * c_prev[n] + self.bias[GATE_F][n]);
+            // Eq 1c (tanh candidate — see cell_f32 module docs).
+            let g = self.act_h(a[GATE_G * h + n] + self.bias[GATE_G][n]);
+            // Eq 1d.
+            let cn = f * c_prev[n] + g * i;
+            // Eq 1e: output peephole reads c_t.
+            let o = self.act_sigma(a[GATE_O * h + n] + peep[2][n] * cn + self.bias[GATE_O][n]);
+            // Eq 1f.
+            m[n] = o * self.act_h(cn);
+            c[n] = cn;
+        }
+        Ok(vec![m, c])
+    }
+}
+
+/// Stage 3: projection convolution (Eq 1g) or identity padding.
+struct NativeStage3 {
+    proj: Option<SpectralWeights>,
+    hidden_pad: usize,
+    out_pad: usize,
+    /// `m_t` zero-padded to the projection operand width, reused per frame.
+    padded: Vec<f32>,
+    scratch: Eq6Scratch,
+}
+
+impl StageExecutor for NativeStage3 {
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(inputs.len() == 1, "stage3 takes one input (m_t)");
+        let m = inputs[0];
+        let mut y = vec![0.0f32; self.out_pad];
+        match &self.proj {
+            Some(p) => {
+                for v in self.padded.iter_mut() {
+                    *v = 0.0;
+                }
+                let n = m.len().min(self.hidden_pad);
+                self.padded[..n].copy_from_slice(&m[..n]);
+                matvec_eq6_into(p, &self.padded, &mut y, &mut self.scratch);
+            }
+            None => {
+                let n = m.len().min(self.out_pad);
+                y[..n].copy_from_slice(&m[..n]);
+            }
+        }
+        Ok(vec![y])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::cell_f32::CellF32;
+    use crate::lstm::config::LstmSpec;
+    use crate::util::prng::Xoshiro256;
+
+    /// Run the three native stages by hand and compare against the engine.
+    fn stages_match_engine(spec: &LstmSpec, seed: u64, steps: usize) {
+        let w = LstmWeights::random(spec, seed);
+        let mut stages = NativeBackend::default().build_stages(&w).unwrap();
+        let cell = CellF32::new(spec, 0, &w.layers[0][0], ActivationMode::Exact);
+        let mut st = cell.zero_state();
+
+        let in_pad = spec.pad(spec.layer_input_dim(0));
+        let out_pad = spec.pad(spec.out_dim());
+        let mut y_prev = vec![0.0f32; out_pad];
+        let mut c_prev = vec![0.0f32; spec.hidden_dim];
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xF00D);
+        for t in 0..steps {
+            let x: Vec<f32> = (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect();
+            let want = cell.step(&x, &mut st);
+
+            let mut fused = vec![0.0f32; in_pad + out_pad];
+            fused[..x.len()].copy_from_slice(&x);
+            fused[in_pad..].copy_from_slice(&y_prev);
+            let a = stages.stage1.run(&[&fused]).unwrap().remove(0);
+            let mut mc = stages.stage2.run(&[&a, &c_prev]).unwrap();
+            let c = mc.remove(1);
+            let m = mc.remove(0);
+            let y = stages.stage3.run(&[&m]).unwrap().remove(0);
+
+            assert_eq!(y.len(), want.len(), "t={t}");
+            for i in 0..y.len() {
+                assert!(
+                    (y[i] - want[i]).abs() < 1e-5,
+                    "t={t} y[{i}]: stage {} vs engine {}",
+                    y[i],
+                    want[i]
+                );
+            }
+            for i in 0..c.len() {
+                assert!((c[i] - st.c[i]).abs() < 1e-5, "t={t} c[{i}]");
+            }
+            y_prev.copy_from_slice(&y[..out_pad]);
+            c_prev = c;
+        }
+    }
+
+    #[test]
+    fn tiny_with_peephole_and_projection_matches_engine() {
+        stages_match_engine(&LstmSpec::tiny(4), 11, 6);
+    }
+
+    #[test]
+    fn no_projection_no_peephole_matches_engine() {
+        // Small-LSTM-like layer: identity stage 3, no peepholes.
+        let spec = LstmSpec {
+            hidden_dim: 24,
+            input_dim: 8,
+            layers: 1,
+            bidirectional: false,
+            ..LstmSpec::small(4)
+        };
+        stages_match_engine(&spec, 13, 5);
+    }
+
+    #[test]
+    fn unpadded_dims_round_up() {
+        // input_dim 10 with k=4 pads to 12; exercises the padding paths.
+        let spec = LstmSpec {
+            input_dim: 10,
+            hidden_dim: 20,
+            proj_dim: Some(10),
+            ..LstmSpec::tiny(4)
+        };
+        stages_match_engine(&spec, 17, 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! The PJRT serving backend (feature `pjrt`): executes the AOT-compiled HLO
+//! artifacts from the JAX layer through the PJRT CPU client.
+//!
+//! Each stage executor owns its compiled [`Executable`] plus the prebuilt
+//! weight literals (§Perf: literal construction of the big weight tensors
+//! per frame was the serving pipeline's top cost before prebuilding).
+
+use crate::lstm::weights::LstmWeights;
+use crate::runtime::artifact::{ArtifactDir, SpectralBundle};
+use crate::runtime::backend::{Backend, StageExecutor, StageSet};
+use crate::runtime::client::{Executable, Runtime};
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+/// Backend over a compiled artifact directory and one manifest config.
+pub struct PjrtBackend {
+    rt: Arc<Runtime>,
+    art: ArtifactDir,
+    config: String,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Arc<Runtime>, art: ArtifactDir, config: impl Into<String>) -> Self {
+        Self {
+            rt,
+            art,
+            config: config.into(),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{} ({})", self.config, self.rt.platform())
+    }
+
+    fn build_stages(&self, weights: &LstmWeights) -> Result<StageSet> {
+        let cfg = self
+            .art
+            .config(&self.config)
+            .with_context(|| format!("config {} not in manifest", self.config))?;
+        let spec = &weights.spec;
+        ensure!(spec.k == cfg.k, "weights k={} vs artifact k={}", spec.k, cfg.k);
+        let bundle = SpectralBundle::from_weights(weights, 0, 0);
+        let h = spec.hidden_dim;
+
+        let exe1 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage1))?;
+        let exe2 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage2))?;
+        let exe3 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage3))?;
+
+        let gd: Vec<i64> = bundle.gates_shape.iter().map(|&d| d as i64).collect();
+        let stage1 = PjrtStage1 {
+            wre: Executable::literal_f32(&bundle.gates_re, &gd)?,
+            wim: Executable::literal_f32(&bundle.gates_im, &gd)?,
+            exe: exe1,
+        };
+        let stage2 = PjrtStage2 {
+            bias: Executable::literal_f32(&bundle.bias, &[4, h as i64])?,
+            peep: Executable::literal_f32(&bundle.peep, &[3, h as i64])?,
+            exe: exe2,
+            h,
+        };
+        let pd: Vec<i64> = bundle.proj_shape.iter().map(|&d| d as i64).collect();
+        let stage3 = PjrtStage3 {
+            pre: Executable::literal_f32(&bundle.proj_re, &pd)?,
+            pim: Executable::literal_f32(&bundle.proj_im, &pd)?,
+            exe: exe3,
+            has_proj: spec.proj_dim.is_some(),
+            h,
+        };
+        Ok(StageSet {
+            stage1: Box::new(stage1),
+            stage2: Box::new(stage2),
+            stage3: Box::new(stage3),
+        })
+    }
+}
+
+struct PjrtStage1 {
+    exe: Executable,
+    wre: xla::Literal,
+    wim: xla::Literal,
+}
+
+struct PjrtStage2 {
+    exe: Executable,
+    bias: xla::Literal,
+    peep: xla::Literal,
+    h: usize,
+}
+
+struct PjrtStage3 {
+    exe: Executable,
+    pre: xla::Literal,
+    pim: xla::Literal,
+    has_proj: bool,
+    h: usize,
+}
+
+// SAFETY: same rationale as `Executable`'s Send impl in `client` — each
+// stage executor (and hence its literals) is moved into exactly one stage
+// thread by the coordinator; there is no shared mutation, and the PJRT CPU
+// client the buffers belong to is thread-safe and outlives the executors.
+unsafe impl Send for PjrtStage1 {}
+unsafe impl Send for PjrtStage2 {}
+unsafe impl Send for PjrtStage3 {}
+
+impl StageExecutor for PjrtStage1 {
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(inputs.len() == 1, "stage1 takes one input (fused operand)");
+        let fused = inputs[0];
+        let lit = Executable::literal_f32(fused, &[1, fused.len() as i64])?;
+        self.exe.run_literals(&[&self.wre, &self.wim, &lit])
+    }
+}
+
+impl StageExecutor for PjrtStage2 {
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(inputs.len() == 2, "stage2 takes [a, c_prev]");
+        let a = Executable::literal_f32(inputs[0], &[1, 4, self.h as i64])?;
+        let c = Executable::literal_f32(inputs[1], &[1, self.h as i64])?;
+        let outs = self
+            .exe
+            .run_literals(&[&a, &c, &self.bias, &self.peep])?;
+        ensure!(outs.len() >= 2, "stage2 artifact must return (m, c)");
+        Ok(outs)
+    }
+}
+
+impl StageExecutor for PjrtStage3 {
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(inputs.len() == 1, "stage3 takes one input (m_t)");
+        let m = Executable::literal_f32(inputs[0], &[1, self.h as i64])?;
+        if self.has_proj {
+            self.exe.run_literals(&[&self.pre, &self.pim, &m])
+        } else {
+            self.exe.run_literals(&[&m])
+        }
+    }
+}

@@ -143,6 +143,12 @@ impl Cli {
     }
 
     // ------------------------------------------------------------ accessors
+    /// Whether the option was explicitly passed (vs falling back to its
+    /// default).
+    pub fn is_set(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
     pub fn get(&self, name: &str) -> Option<String> {
         if let Some(v) = self.values.get(name) {
             return Some(v.clone());
@@ -205,6 +211,7 @@ mod tests {
         assert_eq!(cli.get_usize("steps"), 7);
         assert!(cli.get_flag("verbose"));
         assert_eq!(cli.positional(), &["run", "extra"]);
+        assert!(cli.is_set("model") && cli.is_set("steps"));
     }
 
     #[test]
@@ -215,6 +222,7 @@ mod tests {
             .unwrap();
         assert_eq!(cli.get_usize("k"), 8);
         assert!(!cli.get_flag("nope"));
+        assert!(!cli.is_set("k"), "defaulted option is not explicitly set");
     }
 
     #[test]

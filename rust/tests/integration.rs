@@ -1,17 +1,24 @@
-//! Integration tests across the three layers: Rust engines vs JAX golden
-//! vectors, PJRT artifact execution, and the serving pipeline end to end.
+//! Integration tests across the three layers.
 //!
-//! These need `make artifacts` to have run; when the artifacts directory is
-//! missing the tests are skipped (printing a notice) so `cargo test` stays
-//! green in a fresh checkout.
+//! Three tiers:
+//! - **Native serving tests** — run everywhere, no artifacts, no features:
+//!   the 3-stage pipeline on the native backend vs the reference engine,
+//!   and the end-to-end serve loop.
+//! - **Golden-vector tests** — need `make artifacts` (JAX golden vectors);
+//!   when the artifacts directory is missing they are skipped with a notice
+//!   so `cargo test` stays green in a fresh checkout.
+//! - **PJRT tests** — compile-gated on the `pjrt` cargo feature (they name
+//!   the `xla`-backed runtime client, which does not exist in a default
+//!   build), and additionally runtime-skipped without artifacts.
 
-use clstm::coordinator::pipeline::ClstmPipeline;
 use clstm::lstm::activations::ActivationMode;
+use clstm::lstm::cell_f32::CellF32;
+use clstm::lstm::config::LstmSpec;
 use clstm::lstm::sequence::StackF32;
 use clstm::lstm::weights::LstmWeights;
-use clstm::runtime::artifact::{ArtifactDir, SpectralBundle};
-use clstm::runtime::client::Runtime;
+use clstm::runtime::artifact::ArtifactDir;
 use clstm::util::json::Json;
+use clstm::util::prng::Xoshiro256;
 use std::path::{Path, PathBuf};
 
 fn artifacts() -> Option<ArtifactDir> {
@@ -34,6 +41,117 @@ fn load_golden(art: &ArtifactDir) -> (LstmWeights, Json) {
     (w, vectors)
 }
 
+fn random_utts(spec: &LstmSpec, seed: u64, lens: &[usize]) -> Vec<Vec<Vec<f32>>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    lens.iter()
+        .map(|&n| {
+            (0..n)
+                .map(|_| {
+                    (0..spec.input_dim)
+                        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// ------------------------------------------------------- native serving
+
+/// The native backend drives the full 3-stage pipeline over ≥3 interleaved
+/// streams (uneven lengths) to completion, matching the plain engine frame
+/// for frame — no artifacts required.
+#[test]
+fn native_pipeline_matches_engine_over_interleaved_streams() {
+    use clstm::coordinator::pipeline::ClstmPipeline;
+    use clstm::runtime::native::NativeBackend;
+
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 21);
+    let backend = NativeBackend::default();
+    let mut pipe = ClstmPipeline::build(&backend, &w).expect("native pipeline builds");
+
+    // Four streams with uneven lengths keep the pipeline full and exercise
+    // stream retirement mid-run.
+    let lens = [5usize, 7, 4, 6];
+    let utts = random_utts(&spec, 8, &lens);
+    let (outs, metrics) = pipe.run_utterances(&utts).expect("pipeline run");
+    assert_eq!(metrics.frames, lens.iter().sum::<usize>());
+    assert_eq!(outs.len(), lens.len());
+    for (u, &n) in lens.iter().enumerate() {
+        assert_eq!(outs[u].len(), n, "stream {u} must run to completion");
+    }
+
+    // Reference: single-layer engine (the pipeline covers layer 0 only).
+    let cell = CellF32::new(&spec, 0, &w.layers[0][0], ActivationMode::Exact);
+    for (u, frames) in utts.iter().enumerate() {
+        let mut st = cell.zero_state();
+        for (t, x) in frames.iter().enumerate() {
+            let want = cell.step(x, &mut st);
+            let got = &outs[u][t];
+            assert_eq!(want.len(), got.len());
+            for i in 0..want.len() {
+                assert!(
+                    (want[i] - got[i]).abs() < 1e-4,
+                    "utt {u} frame {t} [{i}]: engine {} vs pipeline {}",
+                    want[i],
+                    got[i]
+                );
+            }
+        }
+    }
+}
+
+/// The native backend also handles a projection-free, peephole-free layer
+/// (identity stage 3).
+#[test]
+fn native_pipeline_without_projection() {
+    use clstm::coordinator::pipeline::ClstmPipeline;
+    use clstm::runtime::native::NativeBackend;
+
+    let spec = LstmSpec {
+        hidden_dim: 16,
+        input_dim: 8,
+        layers: 1,
+        bidirectional: false,
+        ..LstmSpec::small(4)
+    };
+    let w = LstmWeights::random(&spec, 5);
+    let mut pipe = ClstmPipeline::build(&NativeBackend::default(), &w).unwrap();
+    let utts = random_utts(&spec, 9, &[4, 4, 4]);
+    let (outs, _) = pipe.run_utterances(&utts).unwrap();
+
+    let cell = CellF32::new(&spec, 0, &w.layers[0][0], ActivationMode::Exact);
+    for (u, frames) in utts.iter().enumerate() {
+        let mut st = cell.zero_state();
+        for (t, x) in frames.iter().enumerate() {
+            let want = cell.step(x, &mut st);
+            for i in 0..want.len().min(outs[u][t].len()) {
+                assert!((want[i] - outs[u][t][i]).abs() < 1e-4, "utt {u} frame {t} [{i}]");
+            }
+        }
+    }
+}
+
+/// End-to-end serve loop on the native backend: workload generation,
+/// batcher waves, pipeline, classifier decode, PER.
+#[test]
+fn native_serve_workload_end_to_end() {
+    use clstm::coordinator::server::serve_workload;
+    use clstm::runtime::native::NativeBackend;
+
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 77);
+    let report = serve_workload(&NativeBackend::default(), &w, 6, 3).expect("serve");
+    assert_eq!(report.config, "native");
+    assert_eq!(report.metrics.utterances, 6);
+    assert!(report.metrics.frames > 0);
+    assert!(report.per.is_finite() && report.per >= 0.0, "per {}", report.per);
+    assert!(report.metrics.latency_p95_us() >= report.metrics.latency_p50_us());
+}
+
+// ------------------------------------------------------- golden vectors
+
 /// The Rust float engine must reproduce the JAX model's step outputs from
 /// the same weights — the cross-language correctness anchor.
 #[test]
@@ -46,7 +164,6 @@ fn rust_engine_matches_jax_golden_step() {
     let want_y: Vec<f32> = vectors.get("step_y").unwrap().to_f32_vec().unwrap();
     let want_c: Vec<f32> = vectors.get("step_c").unwrap().to_f32_vec().unwrap();
 
-    use clstm::lstm::cell_f32::CellF32;
     let cell = CellF32::new(&w.spec, 0, &w.layers[0][0], ActivationMode::Exact);
     let mut st = cell.zero_state();
     let y = cell.step(&x, &mut st);
@@ -100,91 +217,27 @@ fn rust_stack_matches_jax_golden_logits() {
     }
 }
 
-/// The compiled step artifact executed through PJRT must agree with the
-/// Rust engine (and hence with JAX).
+/// The golden pipeline path works on the native backend too: golden weights
+/// through the 3-stage pipeline agree with the engine.
 #[test]
-fn pjrt_step_artifact_matches_rust_engine() {
-    let Some(art) = artifacts() else { return };
-    let (w, vectors) = load_golden(&art);
-    let cfg = art.config("tiny_fft4").expect("tiny config in manifest");
-    let rt = Runtime::cpu().expect("client");
-    let exe = rt
-        .load_hlo_text(&art.path_of(&cfg.step))
-        .expect("compile step artifact");
+fn golden_weights_serve_on_native_backend() {
+    use clstm::coordinator::pipeline::ClstmPipeline;
+    use clstm::runtime::native::NativeBackend;
 
-    let bundle = SpectralBundle::from_weights(&w, 0, 0);
-    let x: Vec<f32> = vectors.get("step_x").unwrap().to_f32_vec().unwrap();
-    let want_y: Vec<f32> = vectors.get("step_y").unwrap().to_f32_vec().unwrap();
-    let spec = &w.spec;
-    let out_pad = spec.pad(spec.out_dim());
-    let y0 = vec![0.0f32; out_pad];
-    let c0 = vec![0.0f32; spec.hidden_dim];
-
-    let gd: Vec<i64> = bundle.gates_shape.iter().map(|&d| d as i64).collect();
-    let pd: Vec<i64> = bundle.proj_shape.iter().map(|&d| d as i64).collect();
-    let h = spec.hidden_dim as i64;
-    let outs = exe
-        .run_f32(&[
-            (&bundle.gates_re, &gd),
-            (&bundle.gates_im, &gd),
-            (&bundle.bias, &[4, h]),
-            (&bundle.peep, &[3, h]),
-            (&bundle.proj_re, &pd),
-            (&bundle.proj_im, &pd),
-            (&x, &[1, spec.input_dim as i64]),
-            (&y0, &[1, out_pad as i64]),
-            (&c0, &[1, h]),
-        ])
-        .expect("execute step");
-    let y = &outs[0];
-    for (i, (a, b)) in y.iter().zip(&want_y).enumerate() {
-        assert!((a - b).abs() < 1e-4, "pjrt y[{i}]: {a} vs jax {b}");
-    }
-}
-
-/// The full 3-stage pipeline streams utterances and matches the plain
-/// engine's outputs frame for frame.
-#[test]
-fn pipeline_matches_engine_and_overlaps_streams() {
     let Some(art) = artifacts() else { return };
     let (w, _) = load_golden(&art);
-    let cfg = art.config("tiny_fft4").unwrap().clone();
-    let rt = Runtime::cpu().unwrap();
-    let mut pipe = ClstmPipeline::build(rt, &art, &cfg, &w).expect("pipeline");
-
-    // Three short utterances (interleaved streams).
-    use clstm::util::prng::Xoshiro256;
-    let mut rng = Xoshiro256::seed_from_u64(8);
-    let utts: Vec<Vec<Vec<f32>>> = (0..3)
-        .map(|_| {
-            (0..5)
-                .map(|_| {
-                    (0..w.spec.input_dim)
-                        .map(|_| rng.uniform(-1.0, 1.0) as f32)
-                        .collect()
-                })
-                .collect()
-        })
-        .collect();
-    let (outs, metrics) = pipe.run_utterances(&utts).expect("pipeline run");
+    let mut pipe = ClstmPipeline::build(&NativeBackend::default(), &w).expect("pipeline");
+    let utts = random_utts(&w.spec, 8, &[5, 5, 5]);
+    let (outs, metrics) = pipe.run_utterances(&utts).expect("run");
     assert_eq!(metrics.frames, 15);
-    assert_eq!(outs.len(), 3);
 
-    // Reference: single-layer engine (pipeline covers layer 0 only).
-    use clstm::lstm::cell_f32::CellF32;
     let cell = CellF32::new(&w.spec, 0, &w.layers[0][0], ActivationMode::Exact);
     for (u, frames) in utts.iter().enumerate() {
         let mut st = cell.zero_state();
         for (t, x) in frames.iter().enumerate() {
             let want = cell.step(x, &mut st);
-            let got = &outs[u][t];
-            for i in 0..want.len().min(got.len()) {
-                assert!(
-                    (want[i] - got[i]).abs() < 1e-3,
-                    "utt {u} frame {t} [{i}]: engine {} vs pipeline {}",
-                    want[i],
-                    got[i]
-                );
+            for i in 0..want.len().min(outs[u][t].len()) {
+                assert!((want[i] - outs[u][t][i]).abs() < 1e-3, "utt {u} frame {t} [{i}]");
             }
         }
     }
@@ -217,5 +270,93 @@ fn manifest_lists_expected_configs() {
         let cfg = cfg.unwrap();
         assert!(Path::new(&art.path_of(&cfg.stage1)).exists());
         assert!(Path::new(&art.path_of(&cfg.step)).exists());
+    }
+}
+
+// ------------------------------------------------------------ PJRT-only
+//
+// These name the `xla`-backed runtime client, so they are compile-gated on
+// the `pjrt` feature (a default build has no such symbols to link), and
+// still runtime-skip when artifacts are missing.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use clstm::coordinator::pipeline::ClstmPipeline;
+    use clstm::runtime::artifact::SpectralBundle;
+    use clstm::runtime::client::Runtime;
+
+    /// The compiled step artifact executed through PJRT must agree with the
+    /// Rust engine (and hence with JAX).
+    #[test]
+    fn pjrt_step_artifact_matches_rust_engine() {
+        let Some(art) = artifacts() else { return };
+        let (w, vectors) = load_golden(&art);
+        let cfg = art.config("tiny_fft4").expect("tiny config in manifest");
+        let rt = Runtime::cpu().expect("client");
+        let exe = rt
+            .load_hlo_text(&art.path_of(&cfg.step))
+            .expect("compile step artifact");
+
+        let bundle = SpectralBundle::from_weights(&w, 0, 0);
+        let x: Vec<f32> = vectors.get("step_x").unwrap().to_f32_vec().unwrap();
+        let want_y: Vec<f32> = vectors.get("step_y").unwrap().to_f32_vec().unwrap();
+        let spec = &w.spec;
+        let out_pad = spec.pad(spec.out_dim());
+        let y0 = vec![0.0f32; out_pad];
+        let c0 = vec![0.0f32; spec.hidden_dim];
+
+        let gd: Vec<i64> = bundle.gates_shape.iter().map(|&d| d as i64).collect();
+        let pd: Vec<i64> = bundle.proj_shape.iter().map(|&d| d as i64).collect();
+        let h = spec.hidden_dim as i64;
+        let outs = exe
+            .run_f32(&[
+                (&bundle.gates_re, &gd),
+                (&bundle.gates_im, &gd),
+                (&bundle.bias, &[4, h]),
+                (&bundle.peep, &[3, h]),
+                (&bundle.proj_re, &pd),
+                (&bundle.proj_im, &pd),
+                (&x, &[1, spec.input_dim as i64]),
+                (&y0, &[1, out_pad as i64]),
+                (&c0, &[1, h]),
+            ])
+            .expect("execute step");
+        let y = &outs[0];
+        for (i, (a, b)) in y.iter().zip(&want_y).enumerate() {
+            assert!((a - b).abs() < 1e-4, "pjrt y[{i}]: {a} vs jax {b}");
+        }
+    }
+
+    /// The full 3-stage PJRT pipeline streams utterances and matches the
+    /// plain engine's outputs frame for frame.
+    #[test]
+    fn pipeline_matches_engine_and_overlaps_streams() {
+        let Some(art) = artifacts() else { return };
+        let (w, _) = load_golden(&art);
+        let cfg = art.config("tiny_fft4").unwrap().clone();
+        let rt = Runtime::cpu().unwrap();
+        let mut pipe = ClstmPipeline::build_pjrt(rt, &art, &cfg, &w).expect("pipeline");
+
+        let utts = random_utts(&w.spec, 8, &[5, 5, 5]);
+        let (outs, metrics) = pipe.run_utterances(&utts).expect("pipeline run");
+        assert_eq!(metrics.frames, 15);
+        assert_eq!(outs.len(), 3);
+
+        let cell = CellF32::new(&w.spec, 0, &w.layers[0][0], ActivationMode::Exact);
+        for (u, frames) in utts.iter().enumerate() {
+            let mut st = cell.zero_state();
+            for (t, x) in frames.iter().enumerate() {
+                let want = cell.step(x, &mut st);
+                let got = &outs[u][t];
+                for i in 0..want.len().min(got.len()) {
+                    assert!(
+                        (want[i] - got[i]).abs() < 1e-3,
+                        "utt {u} frame {t} [{i}]: engine {} vs pipeline {}",
+                        want[i],
+                        got[i]
+                    );
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,190 @@
+//! Property tests for the circulant-convolution operator family.
+//!
+//! The three float implementations (`matvec_direct` oracle, Eq 3, Eq 6)
+//! must agree across the paper's block sizes — including the large-k tail
+//! (`k = 64`) no unit test covered — and across non-square `p×q` block
+//! grids. The bit-accurate fixed-point path (`FxConvPlan`) must track the
+//! float oracle within its quantisation budget.
+
+use clstm::circulant::conv::{matvec_direct, matvec_eq3, matvec_eq6};
+use clstm::circulant::fxp_conv::FxConvPlan;
+use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+use clstm::circulant::BlockCirculant;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::util::prng::Xoshiro256;
+use clstm::util::testing::{forall, gen, no_shrink, Config};
+
+/// The block sizes under test: the paper's k ∈ {2,4,8,16} plus the k=64
+/// stress point (6 FFT stages).
+const KS: [usize; 5] = [2, 4, 8, 16, 64];
+
+/// Non-square (and one square control) block grids.
+const SHAPES: [(usize, usize); 5] = [(1, 3), (3, 1), (2, 5), (5, 2), (3, 3)];
+
+fn rand_x(rng: &mut Xoshiro256, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn eq6_matches_direct_across_block_sizes_and_shapes() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    for &k in &KS {
+        for &(p, q) in &SHAPES {
+            let m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+            let spec = SpectralWeights::precompute(&m);
+            let x = rand_x(&mut rng, q * k);
+            let a = matvec_direct(&m, &x);
+            let b = matvec_eq6(&spec, &x);
+            let err = max_abs_diff(&a, &b);
+            assert!(err < 2e-3, "k={k} p={p} q={q}: max |err| {err}");
+        }
+    }
+}
+
+#[test]
+fn eq3_matches_direct_across_block_sizes_and_shapes() {
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    for &k in &KS {
+        for &(p, q) in &SHAPES {
+            let m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+            let x = rand_x(&mut rng, q * k);
+            let a = matvec_direct(&m, &x);
+            let b = matvec_eq3(&m, &x);
+            let err = max_abs_diff(&a, &b);
+            assert!(err < 2e-3, "k={k} p={p} q={q}: max |err| {err}");
+        }
+    }
+}
+
+#[test]
+fn property_eq3_and_eq6_agree_with_oracle_on_random_shapes() {
+    forall(
+        Config::default().cases(40),
+        |rng| {
+            let k = KS[rng.index(KS.len())];
+            let p = gen::usize_in(rng, 1..=4);
+            let q = gen::usize_in(rng, 1..=4);
+            let m = BlockCirculant::random_init(p * k, q * k, k, rng);
+            let x = rand_x(rng, q * k);
+            (m, x)
+        },
+        no_shrink,
+        |(m, x)| {
+            let oracle = matvec_direct(m, x);
+            let spec = SpectralWeights::precompute(m);
+            let e6 = matvec_eq6(&spec, x);
+            let e3 = matvec_eq3(m, x);
+            for i in 0..oracle.len() {
+                if (oracle[i] - e6[i]).abs() > 2e-3 {
+                    return Err(format!(
+                        "eq6 idx {i} (k={}): {} vs {}",
+                        m.k, e6[i], oracle[i]
+                    ));
+                }
+                if (oracle[i] - e3[i]).abs() > 2e-3 {
+                    return Err(format!(
+                        "eq3 idx {i} (k={}): {} vs {}",
+                        m.k, e3[i], oracle[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Linearity of the Eq 6 operator — a structural property the FFT path must
+/// preserve exactly (up to float rounding): `W(αx + y) = αWx + Wy`.
+#[test]
+fn property_eq6_is_linear() {
+    forall(
+        Config::default().cases(40),
+        |rng| {
+            let k = KS[rng.index(4)]; // up to 16 keeps the case fast
+            let p = gen::usize_in(rng, 1..=3);
+            let q = gen::usize_in(rng, 1..=3);
+            let m = BlockCirculant::random_init(p * k, q * k, k, rng);
+            let x = rand_x(rng, q * k);
+            let y = rand_x(rng, q * k);
+            let alpha = rng.uniform(-2.0, 2.0) as f32;
+            (m, x, y, alpha)
+        },
+        no_shrink,
+        |(m, x, y, alpha)| {
+            let spec = SpectralWeights::precompute(m);
+            let combined: Vec<f32> = x.iter().zip(y).map(|(&a, &b)| alpha * a + b).collect();
+            let lhs = matvec_eq6(&spec, &combined);
+            let wx = matvec_eq6(&spec, x);
+            let wy = matvec_eq6(&spec, y);
+            for i in 0..lhs.len() {
+                let rhs = alpha * wx[i] + wy[i];
+                if (lhs[i] - rhs).abs() > 5e-3 {
+                    return Err(format!("idx {i}: {} vs {}", lhs[i], rhs));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The bit-accurate fixed-point convolution tracks the float oracle within
+/// a quantisation budget that scales with the datapath format — the §4.2
+/// "16 bits is accurate enough" contract as a test over shapes and sizes.
+#[test]
+fn fxp_conv_plan_tracks_float_oracle_within_budget() {
+    const QD: Q = Q::new(12);
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    for &k in &KS {
+        for &(p, q) in &[(2usize, 3usize), (3, 2)] {
+            let mut m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+            // Trained-scale weights: small, like a converged LSTM.
+            for v in m.w.iter_mut() {
+                *v *= 0.5;
+            }
+            let spec = SpectralWeights::precompute(&m);
+            let fx = SpectralWeightsFx::quantize_auto(&spec);
+            let plan = FxConvPlan::new(fx, QD, Rounding::Nearest);
+            let x = rand_x(&mut rng, q * k);
+            let float = matvec_direct(&m, &x);
+            let fxp = plan.matvec_f32(&x);
+            let rms = {
+                let se: f32 = float
+                    .iter()
+                    .zip(&fxp)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (se / float.len() as f32).sqrt()
+            };
+            // Error grows with the number of FFT shift stages (log2 k) and
+            // the accumulation length q; 0.02 ≈ 80 LSB of Q3.12 is a
+            // generous envelope for k ≤ 16, doubled for the k=64 tail.
+            let budget = if k <= 16 { 0.02 } else { 0.04 };
+            assert!(
+                rms < budget,
+                "k={k} p={p} q={q}: fxp rms {rms} exceeds budget {budget}"
+            );
+        }
+    }
+}
+
+/// Fixed-point determinism across repeated runs and scratch reuse.
+#[test]
+fn fxp_conv_plan_is_deterministic_across_shapes() {
+    const QD: Q = Q::new(12);
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    for &k in &[4usize, 16] {
+        let m = BlockCirculant::random_init(2 * k, 3 * k, k, &mut rng);
+        let spec = SpectralWeights::precompute(&m);
+        let plan = FxConvPlan::new(SpectralWeightsFx::quantize_auto(&spec), QD, Rounding::Nearest);
+        let x: Vec<i16> = (0..3 * k).map(|i| (i as i16).wrapping_mul(211)).collect();
+        assert_eq!(plan.matvec(&x), plan.matvec(&x), "k={k}");
+    }
+}
