@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench artifacts table1-per
+.PHONY: build test bench serve-bench artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -12,6 +12,10 @@ test:
 
 bench:
 	cd rust && CLSTM_BENCH_FAST=1 cargo bench
+
+# Replica-scaling serving benchmark (engine lanes 1/2/4, CI-sized budgets).
+serve-bench:
+	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_pipeline
 
 # JAX AOT lowering -> rust/artifacts/*.hlo.txt + manifest.json + golden
 # bundle (enables the golden-vector integration tests and the PJRT backend).

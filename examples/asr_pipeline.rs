@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --release --example asr_pipeline`
 
-use clstm::coordinator::server::serve_workload;
+use clstm::coordinator::server::{serve_workload, ServeOptions};
 use clstm::data::per::phone_error_rate;
 use clstm::data::synth::{SynthConfig, SynthTimit};
 use clstm::dse::DesignPoint;
@@ -25,11 +25,18 @@ use clstm::runtime::native::NativeBackend;
 fn main() -> anyhow::Result<()> {
     println!("=== C-LSTM end-to-end ASR pipeline ===\n");
 
-    // ---------- Part 1: serve through the 3-stage native pipeline --------
+    // ---------- Part 1: serve through the replicated native engine -------
     let weights = LstmWeights::random(&LstmSpec::tiny(4), 1234);
-    println!("[1] serving 16 SynthTIMIT utterances through the 3-stage native pipeline (tiny, k=4):");
-    let report = serve_workload(&NativeBackend::default(), &weights, 16, 4)?;
-    println!("    {}", report.metrics.summary());
+    println!(
+        "[1] serving 16 SynthTIMIT utterances through the replicated native engine \
+         (tiny, k=4, 2 lanes):"
+    );
+    let opts = ServeOptions {
+        replicas: 2,
+        ..ServeOptions::default()
+    };
+    let report = serve_workload(&NativeBackend::default(), &weights, 16, &opts)?;
+    println!("    {} ({} lanes)", report.metrics.summary(), report.replicas);
     println!("    workload PER (random-init weights): {:.1}%\n", report.per);
 
     // ---------- Part 2: quantisation study on a trained-scale model ------

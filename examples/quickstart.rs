@@ -15,7 +15,7 @@
 //! DESIGN.md.)
 
 use clstm::coordinator::pipeline::ClstmPipeline;
-use clstm::coordinator::server::serve_workload;
+use clstm::coordinator::server::{serve_workload, ServeOptions};
 use clstm::lstm::activations::ActivationMode;
 use clstm::lstm::cell_f32::CellF32;
 use clstm::lstm::cell_fxp::CellFx;
@@ -86,8 +86,12 @@ fn main() -> anyhow::Result<()> {
     assert!(max_err_pipe < 1e-4);
     drop(pipe);
 
-    // --- [3] end-to-end serving: workload → pipeline → classifier → PER.
-    let report = serve_workload(&backend, &weights, 8, 3)?;
+    // --- [3] end-to-end serving: workload → engine → classifier → PER.
+    let opts = ServeOptions {
+        streams_per_lane: 3,
+        ..ServeOptions::default()
+    };
+    let report = serve_workload(&backend, &weights, 8, &opts)?;
     println!("serve [{}]: {}", report.config, report.metrics.summary());
     println!("workload PER (random-init weights): {:.1}%", report.per);
 

@@ -1,58 +1,83 @@
-//! Serving demo at Google-LSTM scale: sustained throughput of the 3-stage
-//! pipeline with batcher-managed admission and backpressure, on the native
-//! backend (k=8 spectral weights, 1024 hidden, 672-wide fused input).
+//! Serving demo at Google-LSTM scale: the replicated engine under sustained
+//! load on the native backend (k=8 spectral weights, 1024 hidden, 672-wide
+//! fused input). The spectra are prepared **once** and shared by every
+//! lane; admission is continuous (no wave barrier), so the same workload is
+//! served with 1 lane and with N lanes and the speedup printed.
 //!
-//! Run: `cargo run --release --example serve [-- n_utts]`
+//! Run: `cargo run --release --example serve [-- n_utts [replicas]]`
 
-use clstm::coordinator::batcher::{Batcher, QueuedUtterance};
+use clstm::coordinator::batcher::QueuedUtterance;
+use clstm::coordinator::engine::{EngineConfig, ServeEngine};
 use clstm::coordinator::metrics::Metrics;
-use clstm::coordinator::pipeline::ClstmPipeline;
 use clstm::data::synth::{SynthConfig, SynthTimit};
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::runtime::native::NativeBackend;
 
+/// Serve `utts` through an engine with `replicas` lanes; return metrics.
+fn run_engine(
+    backend: &NativeBackend,
+    weights: &LstmWeights,
+    utts: &[QueuedUtterance],
+    replicas: usize,
+) -> anyhow::Result<Metrics> {
+    let mut engine = ServeEngine::build(
+        backend,
+        weights,
+        EngineConfig {
+            replicas,
+            ..EngineConfig::default()
+        },
+    )?;
+    let mut metrics = Metrics::default();
+    let t0 = std::time::Instant::now();
+    // Continuous admission: keep every lane fed, drain as streams retire.
+    for c in engine.serve_all(utts.iter().cloned())? {
+        metrics.record_completion(&c);
+    }
+    metrics.wall = t0.elapsed();
+    Ok(metrics)
+}
+
 fn main() -> anyhow::Result<()> {
     let n_utts: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(6);
+        .unwrap_or(8);
+    let replicas: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
     // Random weights: this demo measures the serving path, not accuracy.
     let spec = LstmSpec::google(8);
     let weights = LstmWeights::random(&spec, 42);
 
     let backend = NativeBackend::default();
-    println!("building google k=8 stages on the native backend (precomputing spectra)...");
-    let mut pipe = ClstmPipeline::build(&backend, &weights)?;
+    println!("google k=8 on the native backend (spectra prepared once, shared by all lanes)");
 
     let gen = SynthTimit::new(SynthConfig::google());
-    let mut batcher = Batcher::new(n_utts, 4);
-    for i in 0..n_utts {
-        let mut u = gen.utterance(3, i as u64);
-        u.frames.truncate(24); // short utterances: demo-sized
-        for f in u.frames.iter_mut() {
-            f.truncate(spec.input_dim);
-            f.resize(spec.input_dim, 0.0);
-        }
-        batcher.offer(QueuedUtterance {
-            id: i as u64,
-            frames: u.frames,
-        });
-    }
+    let utts: Vec<QueuedUtterance> = (0..n_utts)
+        .map(|i| {
+            let mut u = gen.utterance(3, i as u64);
+            u.frames.truncate(24); // short utterances: demo-sized
+            for f in u.frames.iter_mut() {
+                f.truncate(spec.input_dim);
+                f.resize(spec.input_dim, 0.0);
+            }
+            QueuedUtterance::new(i as u64, u.frames)
+        })
+        .collect();
 
-    let mut total = Metrics::default();
-    while !batcher.is_empty() {
-        let wave = batcher.next_wave();
-        let frames: Vec<_> = wave.iter().map(|u| u.frames.clone()).collect();
-        println!("  wave of {} utterances ...", frames.len());
-        let (_outs, m) = pipe.run_utterances(&frames)?;
-        println!("    {}", m.summary());
-        total.frames += m.frames;
-        total.utterances += m.utterances;
-        total.wall += m.wall;
-        total.frame_latency_us.extend(m.frame_latency_us);
+    let single = run_engine(&backend, &weights, &utts, 1)?;
+    println!("  1 lane : {}", single.summary());
+    let multi = run_engine(&backend, &weights, &utts, replicas)?;
+    println!("  {replicas} lanes: {}", multi.summary());
+    if single.fps() > 0.0 {
+        println!(
+            "\nreplica scaling: {:.2}× throughput with {replicas} lanes",
+            multi.fps() / single.fps()
+        );
     }
-    println!("\noverall: {}", total.summary());
     println!(
         "(for the FPGA-side throughput of this design — 195k FPS on KU060 — see `clstm table3`; \
          for PJRT execution of the AOT artifacts build with --features pjrt)"

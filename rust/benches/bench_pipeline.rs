@@ -1,8 +1,9 @@
 //! Serving-pipeline benchmarks: the L3 hot path end to end — the 3-stage
 //! pipeline on the native backend (throughput and stream-interleaving
-//! effect), the discrete-event FPGA simulation rate, and, when built with
-//! `--features pjrt` and `make artifacts` has run, the PJRT step execution
-//! and pipeline.
+//! effect), replica scaling of the serving engine (1/2/4 lanes over one
+//! shared weight preparation), the discrete-event FPGA simulation rate,
+//! and, when built with `--features pjrt` and `make artifacts` has run,
+//! the PJRT step execution and pipeline.
 
 use clstm::coordinator::pipeline::ClstmPipeline;
 use clstm::fpga_sim::simulate;
@@ -64,10 +65,78 @@ fn main() {
         }
     }
 
+    // Engine replica scaling: the same workload through 1, 2, 4 lanes over
+    // ONE shared weight preparation (`make serve-bench` runs this with
+    // CLSTM_BENCH_FAST=1). ≥1.5× at 4 lanes on a multi-core host is the
+    // acceptance bar.
+    replica_scaling_bench(&mut rng);
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b, &mut rng);
     #[cfg(not(feature = "pjrt"))]
     println!("(pjrt benches skipped — build with --features pjrt and run `make artifacts`)");
+}
+
+/// Serve a fixed workload through the replicated engine at 1, 2, 4 lanes
+/// and print throughput + speedup vs the single lane.
+fn replica_scaling_bench(rng: &mut Xoshiro256) {
+    use clstm::coordinator::batcher::QueuedUtterance;
+    use clstm::coordinator::engine::{EngineConfig, ServeEngine};
+
+    let fast = std::env::var("CLSTM_BENCH_FAST").is_ok();
+    let (n_utts, frames_per_utt) = if fast { (16usize, 24usize) } else { (32, 48) };
+    let spec = LstmSpec {
+        input_dim: 156,
+        hidden_dim: 256,
+        proj_dim: Some(128),
+        ..LstmSpec::google(8)
+    };
+    let weights = LstmWeights::random(&spec, 11);
+    let backend = NativeBackend::default();
+    let utts: Vec<QueuedUtterance> = (0..n_utts)
+        .map(|i| {
+            let frames: Vec<Vec<f32>> = (0..frames_per_utt)
+                .map(|_| {
+                    (0..spec.input_dim)
+                        .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                        .collect()
+                })
+                .collect();
+            QueuedUtterance::new(i as u64, frames)
+        })
+        .collect();
+
+    let mut base_fps = 0.0f64;
+    for replicas in [1usize, 2, 4] {
+        let mut engine = ServeEngine::build(
+            &backend,
+            &weights,
+            EngineConfig {
+                replicas,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let frames_done: usize = engine
+            .serve_all(utts.iter().cloned())
+            .unwrap()
+            .iter()
+            .map(|c| c.outputs.len())
+            .sum();
+        let wall = t0.elapsed();
+        let fps = frames_done as f64 / wall.as_secs_f64();
+        if replicas == 1 {
+            base_fps = fps;
+        }
+        println!(
+            "engine replica-scaling proxy256_k8, {replicas} lane(s): {:.0} frames/s \
+             ({:.2}× vs 1 lane, wall {:.1} ms for {frames_done} frames)",
+            fps,
+            if base_fps > 0.0 { fps / base_fps } else { 1.0 },
+            wall.as_secs_f64() * 1e3
+        );
+    }
 }
 
 /// PJRT step execution + pipeline; skips gracefully when `make artifacts`

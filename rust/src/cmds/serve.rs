@@ -1,11 +1,19 @@
-//! `clstm serve` — serve SynthTIMIT through the 3-stage pipeline.
+//! `clstm serve` — serve SynthTIMIT through the replicated engine.
 //!
 //! `--backend native` (default) runs everywhere with zero artifacts;
 //! `--backend pjrt` executes the AOT artifacts and requires both the `pjrt`
 //! cargo feature and a populated artifacts directory (`make artifacts`).
+//!
+//! Replication and load shape:
+//!
+//! - `--replicas N` — pipeline lanes sharing one prepared-weights copy;
+//! - `--streams S` — utterance streams interleaved per lane;
+//! - `--arrival closed|poisson` + `--rate R` — closed-loop (whole workload
+//!   at t = 0) or open-loop Poisson arrivals at R utterances/second, which
+//!   makes the queue-wait vs service split in the report meaningful.
 
 use anyhow::Result;
-use clstm::coordinator::server::ServeReport;
+use clstm::coordinator::server::{Arrival, ServeOptions, ServeReport};
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::util::cli::Cli;
@@ -46,25 +54,45 @@ fn load_serve_weights(cli: &Cli, label: &str, spec: &LstmSpec) -> LstmWeights {
     LstmWeights::random(spec, cli.get_u64("seed"))
 }
 
+/// Translate the CLI flags into engine/serve options.
+fn serve_options(cli: &Cli) -> Result<ServeOptions> {
+    let arrival = match cli.get_str("arrival").as_str() {
+        "closed" => Arrival::Closed,
+        "poisson" => Arrival::Poisson {
+            rate: cli.get_f64("rate"),
+        },
+        other => anyhow::bail!("unknown --arrival {other:?} (expected: closed | poisson)"),
+    };
+    Ok(ServeOptions {
+        replicas: cli.get_usize("replicas"),
+        streams_per_lane: cli.get_usize("streams"),
+        arrival,
+        seed: cli.get_u64("seed"),
+        ..ServeOptions::default()
+    })
+}
+
 pub fn serve_cmd(cli: &Cli) -> Result<()> {
     let (label, spec) = serve_spec(cli);
     let weights = load_serve_weights(cli, &label, &spec);
     let n_utts = cli.get_usize("utts");
-    let streams = cli.get_usize("streams");
+    let opts = serve_options(cli)?;
 
     let report: ServeReport = match cli.get_str("backend").as_str() {
-        "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, streams)?,
+        "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, &opts)?,
         "native" => {
             use clstm::coordinator::server::serve_workload;
             use clstm::runtime::native::NativeBackend;
             println!(
-                "serving {label} on the native backend with {n_utts} utterances / {streams} streams ..."
+                "serving {label} on the native backend: {n_utts} utterances, \
+                 {} replica(s) × {} streams, {:?} arrivals ...",
+                opts.replicas, opts.streams_per_lane, opts.arrival
             );
-            serve_workload(&NativeBackend::default(), &weights, n_utts, streams)?
+            serve_workload(&NativeBackend::default(), &weights, n_utts, &opts)?
         }
         other => anyhow::bail!("unknown --backend {other:?} (expected: native | pjrt)"),
     };
-    println!("  backend: {}", report.config);
+    println!("  backend: {} ({} replicas)", report.config, report.replicas);
     println!("  {}", report.metrics.summary());
     println!("  workload PER: {:.2}%", report.per);
     Ok(())
@@ -76,7 +104,7 @@ fn serve_pjrt(
     label: &str,
     weights: &LstmWeights,
     n_utts: usize,
-    streams: usize,
+    opts: &ServeOptions,
 ) -> Result<ServeReport> {
     use anyhow::Context;
     use clstm::coordinator::server::serve_workload;
@@ -90,11 +118,12 @@ fn serve_pjrt(
         .with_context(|| format!("opening artifacts in {art_dir} (run `make artifacts`)"))?;
     let rt = Runtime::cpu()?;
     println!(
-        "serving {label} on PJRT ({}) with {n_utts} utterances / {streams} streams ...",
-        rt.platform()
+        "serving {label} on PJRT ({}) with {n_utts} utterances / {} replica(s) ...",
+        rt.platform(),
+        opts.replicas
     );
     let backend = PjrtBackend::new(rt, art, label.to_string());
-    serve_workload(&backend, weights, n_utts, streams)
+    serve_workload(&backend, weights, n_utts, opts)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -103,7 +132,7 @@ fn serve_pjrt(
     _label: &str,
     _weights: &LstmWeights,
     _n_utts: usize,
-    _streams: usize,
+    _opts: &ServeOptions,
 ) -> Result<ServeReport> {
     anyhow::bail!(
         "the pjrt backend requires building with `cargo build --features pjrt` \

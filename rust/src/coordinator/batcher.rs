@@ -1,25 +1,50 @@
 //! Utterance admission and stream management.
 //!
-//! The pipeline keeps `max_streams` utterances interleaved; the batcher is
-//! the bounded waiting room in front of it: FIFO admission, backpressure
-//! when full (callers block/observe), and chunking of large workloads into
-//! pipeline-sized waves. This is deliberately simple — the paper's system
-//! serves a fixed batch of ASR streams — but it is the seam where a
-//! production deployment would plug arrival processes and SLAs.
+//! The batcher is the bounded waiting room in front of the serving engine:
+//! FIFO admission, backpressure when full (callers block/observe), and
+//! continuous draining — the engine pops utterances one at a time the
+//! moment it has room, so a straggler never holds a wave hostage. This is
+//! deliberately simple — the paper's system serves a fixed batch of ASR
+//! streams — but it is the seam where a production deployment would plug
+//! arrival processes and SLAs (see `server::Arrival`).
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
-/// A queued utterance: opaque id + frames.
+/// A queued utterance: opaque id, frames, and the reference phone sequence
+/// (carried along so scorers never regenerate the workload).
 #[derive(Debug, Clone)]
 pub struct QueuedUtterance {
     pub id: u64,
     pub frames: Vec<Vec<f32>>,
+    /// Reference phone sequence for PER scoring; empty when the caller has
+    /// no labels (e.g. throughput-only runs).
+    pub phone_seq: Vec<usize>,
 }
 
-/// Bounded FIFO with admission statistics.
+impl QueuedUtterance {
+    /// An unlabeled utterance (throughput runs, tests).
+    pub fn new(id: u64, frames: Vec<Vec<f32>>) -> Self {
+        Self {
+            id,
+            frames,
+            phone_seq: Vec::new(),
+        }
+    }
+
+    /// Attach the reference phone sequence.
+    pub fn with_phone_seq(mut self, phone_seq: Vec<usize>) -> Self {
+        self.phone_seq = phone_seq;
+        self
+    }
+}
+
+/// Bounded FIFO with admission statistics. Each entry is stamped with its
+/// admission instant so queue-wait metrics cover waiting-room time, not
+/// just the engine's lane queues.
 #[derive(Debug)]
 pub struct Batcher {
-    queue: VecDeque<QueuedUtterance>,
+    queue: VecDeque<(QueuedUtterance, Instant)>,
     pub capacity: usize,
     pub max_streams: usize,
     pub rejected: u64,
@@ -44,7 +69,7 @@ impl Batcher {
             return false;
         }
         self.admitted += 1;
-        self.queue.push_back(utt);
+        self.queue.push_back((utt, Instant::now()));
         true
     }
 
@@ -56,10 +81,23 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Drain the next wave of up to `max_streams` utterances.
+    /// Pop the next utterance (continuous admission: the engine takes one
+    /// whenever it has room, freeing queue capacity immediately).
+    pub fn pop(&mut self) -> Option<QueuedUtterance> {
+        self.queue.pop_front().map(|(u, _)| u)
+    }
+
+    /// Pop the next utterance together with its admission instant, so the
+    /// engine's queue-wait split starts at the waiting room, not the lane.
+    pub fn pop_admitted(&mut self) -> Option<(QueuedUtterance, Instant)> {
+        self.queue.pop_front()
+    }
+
+    /// Drain the next wave of up to `max_streams` utterances (legacy
+    /// wave-at-a-time callers; the engine path uses [`Self::pop`]).
     pub fn next_wave(&mut self) -> Vec<QueuedUtterance> {
         let take = self.max_streams.min(self.queue.len());
-        self.queue.drain(..take).collect()
+        self.queue.drain(..take).map(|(u, _)| u).collect()
     }
 
     /// Occupancy in [0, 1] — exported as a backpressure signal.
@@ -73,10 +111,7 @@ mod tests {
     use super::*;
 
     fn utt(id: u64) -> QueuedUtterance {
-        QueuedUtterance {
-            id,
-            frames: vec![vec![0.0; 4]; 3],
-        }
+        QueuedUtterance::new(id, vec![vec![0.0; 4]; 3])
     }
 
     #[test]
@@ -112,5 +147,46 @@ mod tests {
         assert_eq!(b.occupancy(), 0.0);
         b.offer(utt(0));
         assert_eq!(b.occupancy(), 0.25);
+    }
+
+    #[test]
+    fn continuous_admission_pops_one_at_a_time() {
+        // No waves: each pop frees capacity immediately, so offers and pops
+        // interleave while FIFO order is preserved end to end.
+        let mut b = Batcher::new(2, 4);
+        assert!(b.offer(utt(0)));
+        assert!(b.offer(utt(1)));
+        assert!(!b.offer(utt(2)), "full");
+        let mut served = Vec::new();
+        let mut next_id = 2u64;
+        while !b.is_empty() {
+            served.push(b.pop().unwrap().id);
+            // Backfill one the moment a slot frees — no wave barrier.
+            if next_id < 6 {
+                assert!(b.offer(utt(next_id)), "pop freed a slot");
+                next_id += 1;
+            }
+        }
+        assert_eq!(served, vec![0, 1, 2, 3, 4, 5], "FIFO across backfills");
+        assert_eq!(b.admitted, 6);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn admission_instants_ride_along() {
+        let mut b = Batcher::new(2, 1);
+        b.offer(utt(0));
+        let (u, at) = b.pop_admitted().unwrap();
+        assert_eq!(u.id, 0);
+        // The stamp is from offer time, so it is already in the past.
+        assert!(at.elapsed().as_secs_f64() >= 0.0);
+    }
+
+    #[test]
+    fn phone_seq_rides_along() {
+        let u = utt(9).with_phone_seq(vec![1, 2, 2, 3]);
+        let mut b = Batcher::new(2, 1);
+        b.offer(u);
+        assert_eq!(b.pop().unwrap().phone_seq, vec![1, 2, 2, 3]);
     }
 }

@@ -1,0 +1,489 @@
+//! The replicated serving engine: N pipeline lanes behind a non-blocking
+//! submit/completion API.
+//!
+//! The paper scales throughput by replicating the pipeline hardware under
+//! Algorithm 1 (§5, Fig 6–7) and keeps every copy full by frame
+//! interleaving (§6.2). [`ServeEngine`] is that design in software:
+//!
+//! - the backend's [`prepare`](crate::runtime::backend::Backend::prepare)
+//!   step runs **once**, so all lanes share one copy of the precomputed
+//!   `F(w)` spectra through an `Arc` (the BRAM-resident weights of §4.1,
+//!   read by every replica);
+//! - each **lane** is one [`ClstmPipeline`] owned by a worker thread that
+//!   interleaves up to `streams_per_lane` utterances and backfills from its
+//!   queue the moment a stream retires — continuous admission, no wave
+//!   barrier;
+//! - [`ServeEngine::submit`] never blocks: it routes the utterance to the
+//!   least-loaded lane (outstanding frames) and returns a [`Ticket`];
+//!   completions are drained from a channel via [`ServeEngine::recv`] /
+//!   [`ServeEngine::try_recv`].
+
+use crate::coordinator::batcher::QueuedUtterance;
+use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig};
+use crate::lstm::weights::LstmWeights;
+use crate::runtime::backend::Backend;
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Engine shape knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Pipeline lanes (replicas). Clamped to ≥ 1.
+    pub replicas: usize,
+    /// Utterance streams interleaved per lane (≥ 3 keeps a lane's 3-stage
+    /// pipeline full, §6.2). Clamped to ≥ 1.
+    pub streams_per_lane: usize,
+    /// Per-lane pipeline channel depth (see
+    /// [`PipelineConfig::channel_depth`]).
+    pub channel_depth: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            streams_per_lane: 4,
+            channel_depth: 2,
+        }
+    }
+}
+
+/// Receipt for a submitted utterance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    /// The utterance id, echoed back.
+    pub utt_id: u64,
+    /// Lane the utterance was routed to.
+    pub lane: usize,
+}
+
+/// A finished utterance, drained from the completion channel.
+#[derive(Debug)]
+pub struct CompletedUtterance {
+    /// The submitted utterance (frames + reference phone sequence ride
+    /// along, so callers never regenerate the workload).
+    pub utt: QueuedUtterance,
+    /// Per-frame padded outputs `y_t`.
+    pub outputs: Vec<Vec<f32>>,
+    /// Lane that served it.
+    pub lane: usize,
+    /// Admission → first frame dispatched, µs (time spent queued).
+    pub queue_wait_us: f64,
+    /// First dispatch → last frame completed, µs (time spent in service).
+    pub service_us: f64,
+    /// Per-frame dispatch → stage-3 latency, µs.
+    pub frame_latency_us: Vec<f64>,
+}
+
+/// One utterance queued to a lane.
+struct LaneJob {
+    utt: QueuedUtterance,
+    submitted: Instant,
+}
+
+struct LaneHandle {
+    tx: Option<Sender<LaneJob>>,
+    /// Outstanding frames routed to this lane (least-loaded dispatch key).
+    load: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// N pipeline lanes over one shared weight preparation.
+pub struct ServeEngine {
+    lanes: Vec<LaneHandle>,
+    done_rx: Receiver<CompletedUtterance>,
+    submitted: usize,
+    completed: usize,
+    backend_name: String,
+    streams_per_lane: usize,
+    /// Padded input dim — frames are validated at submit so a bad frame is
+    /// an error here, not a panic inside a lane.
+    in_pad: usize,
+}
+
+impl ServeEngine {
+    /// Prepare `weights` once on `backend` and launch `cfg.replicas` lanes
+    /// over the shared prepared weights.
+    pub fn build(backend: &dyn Backend, weights: &LstmWeights, cfg: EngineConfig) -> Result<Self> {
+        let prepared = backend.prepare(weights)?;
+        let in_pad = prepared.spec.pad(prepared.spec.layer_input_dim(0));
+        let (done_tx, done_rx) = channel::<CompletedUtterance>();
+        let replicas = cfg.replicas.max(1);
+        let streams = cfg.streams_per_lane.max(1);
+        let mut lanes = Vec::with_capacity(replicas);
+        for lane in 0..replicas {
+            let pipe = ClstmPipeline::with_prepared(
+                backend,
+                &prepared,
+                PipelineConfig {
+                    channel_depth: cfg.channel_depth,
+                },
+            )?;
+            let (tx, rx) = channel::<LaneJob>();
+            let load = Arc::new(AtomicUsize::new(0));
+            let worker_load = Arc::clone(&load);
+            let worker_done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("clstm-lane{lane}"))
+                .spawn(move || lane_worker(lane, pipe, rx, worker_done, worker_load, streams))?;
+            lanes.push(LaneHandle {
+                tx: Some(tx),
+                load,
+                handle: Some(handle),
+            });
+        }
+        Ok(Self {
+            lanes,
+            done_rx,
+            submitted: 0,
+            completed: 0,
+            backend_name: backend.name(),
+            streams_per_lane: streams,
+            in_pad,
+        })
+    }
+
+    /// Number of lanes.
+    pub fn replicas(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Name of the backend serving the lanes.
+    pub fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+
+    /// Utterances submitted but not yet drained.
+    pub fn pending(&self) -> usize {
+        self.submitted - self.completed
+    }
+
+    /// Outstanding frames across all lanes (load snapshot).
+    pub fn load(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.load.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Whether every lane worker is still alive (a dead lane means a bug —
+    /// drivers should bail rather than wait forever on its completions).
+    pub fn healthy(&self) -> bool {
+        self.lanes
+            .iter()
+            .all(|l| l.handle.as_ref().is_some_and(|h| !h.is_finished()))
+    }
+
+    /// Admission bound used by the drive loops: roughly two utterance
+    /// generations in flight per stream slot, so lanes backfill instantly
+    /// while a bounded waiting room keeps its backpressure signal.
+    pub fn admit_limit(&self) -> usize {
+        2 * self.replicas() * self.streams_per_lane
+    }
+
+    /// Non-blocking submit: route `utt` to the least-loaded lane. The lane
+    /// queues it and backfills its pipeline the moment a stream retires.
+    /// The queue-wait clock starts now; use [`Self::submit_arrived`] when
+    /// the utterance already waited upstream (e.g. in a [`Batcher`]).
+    ///
+    /// [`Batcher`]: crate::coordinator::batcher::Batcher
+    pub fn submit(&mut self, utt: QueuedUtterance) -> Result<Ticket> {
+        self.submit_arrived(utt, Instant::now())
+    }
+
+    /// Submit with an explicit arrival instant, so the reported queue-wait
+    /// split covers upstream waiting-room time too — under open-loop
+    /// overload the unbounded part of the wait is exactly there.
+    pub fn submit_arrived(&mut self, utt: QueuedUtterance, arrived: Instant) -> Result<Ticket> {
+        ensure!(
+            utt.frames.iter().all(|f| f.len() <= self.in_pad),
+            "utterance {} has a frame longer than the padded input dim {}",
+            utt.id,
+            self.in_pad
+        );
+        let lane = self
+            .lanes
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .context("engine has no lanes")?;
+        let utt_id = utt.id;
+        let cost = utt.frames.len().max(1);
+        let lane_ref = &self.lanes[lane];
+        let tx = lane_ref.tx.as_ref().context("engine already shut down")?;
+        // Count the load before the send (the lane decrements it at
+        // completion, so adding after could race to underflow) and roll it
+        // back if the send fails, so a dead lane cannot permanently skew
+        // least-loaded routing.
+        lane_ref.load.fetch_add(cost, Ordering::Relaxed);
+        let sent = tx.send(LaneJob {
+            utt,
+            submitted: arrived,
+        });
+        if sent.is_err() {
+            lane_ref.load.fetch_sub(cost, Ordering::Relaxed);
+            anyhow::bail!("lane {lane} worker is gone");
+        }
+        self.submitted += 1;
+        Ok(Ticket { utt_id, lane })
+    }
+
+    /// Block for the next completed utterance; `None` when nothing is
+    /// pending or a lane died (a dead lane's utterances can never
+    /// complete, so blocking on them would hang forever).
+    pub fn recv(&mut self) -> Option<CompletedUtterance> {
+        while self.pending() > 0 {
+            match self.done_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(c) => {
+                    self.completed += 1;
+                    return Some(c);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.healthy() {
+                        return None;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+        None
+    }
+
+    /// Drain one completed utterance without blocking.
+    pub fn try_recv(&mut self) -> Option<CompletedUtterance> {
+        match self.done_rx.try_recv() {
+            Ok(c) => {
+                self.completed += 1;
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Block up to `timeout` for the next completion (open-loop drivers
+    /// interleave draining with arrival generation).
+    pub fn recv_timeout(&mut self, timeout: std::time::Duration) -> Option<CompletedUtterance> {
+        if self.pending() == 0 {
+            return None;
+        }
+        match self.done_rx.recv_timeout(timeout) {
+            Ok(c) => {
+                self.completed += 1;
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Closed-loop convenience driver: submit every utterance with bounded
+    /// admission, drain until all complete, and return the completions.
+    /// Errors instead of hanging if a lane dies mid-run.
+    pub fn serve_all(
+        &mut self,
+        utts: impl IntoIterator<Item = QueuedUtterance>,
+    ) -> Result<Vec<CompletedUtterance>> {
+        let mut queue: VecDeque<QueuedUtterance> = utts.into_iter().collect();
+        let total = queue.len();
+        let limit = self.admit_limit();
+        let mut done = Vec::with_capacity(total);
+        while done.len() < total {
+            while self.pending() < limit {
+                let Some(u) = queue.pop_front() else { break };
+                self.submit(u)?;
+            }
+            match self.recv_timeout(Duration::from_millis(50)) {
+                Some(c) => done.push(c),
+                None => ensure!(
+                    self.healthy(),
+                    "engine lane died with {} utterances outstanding",
+                    self.pending()
+                ),
+            }
+        }
+        Ok(done)
+    }
+
+    /// Collect every outstanding completion, then shut the lanes down.
+    pub fn finish(mut self) -> Vec<CompletedUtterance> {
+        let mut out = Vec::new();
+        while let Some(c) = self.recv() {
+            out.push(c);
+        }
+        self.shutdown_lanes();
+        out
+    }
+
+    fn shutdown_lanes(&mut self) {
+        for l in self.lanes.iter_mut() {
+            l.tx = None; // closes the lane queue
+        }
+        for l in self.lanes.iter_mut() {
+            if let Some(h) = l.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown_lanes();
+    }
+}
+
+/// One utterance being interleaved through a lane's pipeline.
+struct ActiveUtt {
+    utt: QueuedUtterance,
+    submitted: Instant,
+    first_dispatch: Option<Instant>,
+    outputs: Vec<Vec<f32>>,
+    frame_latency_us: Vec<f64>,
+    y_state: Vec<f32>,
+    c_state: Vec<f32>,
+    /// Next frame to dispatch.
+    next_t: usize,
+    /// Whether a frame of this stream is in the pipeline (recurrence:
+    /// at most one).
+    in_flight: bool,
+}
+
+/// Lane scheduler: interleave up to `max_streams` utterances through one
+/// pipeline, admitting from `rx` the moment a slot frees (no wave barrier).
+fn lane_worker(
+    lane: usize,
+    mut pipe: ClstmPipeline,
+    rx: Receiver<LaneJob>,
+    done_tx: Sender<CompletedUtterance>,
+    load: Arc<AtomicUsize>,
+    max_streams: usize,
+) {
+    let out_pad = pipe.out_pad();
+    let hidden = pipe.hidden();
+    let mut slots: Vec<Option<ActiveUtt>> = (0..max_streams).map(|_| None).collect();
+    let mut active = 0usize;
+    let mut rx_open = true;
+
+    loop {
+        // Continuous admission into free stream slots. Blocks only when the
+        // lane is fully idle; otherwise drains whatever is queued.
+        while rx_open && active < max_streams {
+            let job = if active == 0 {
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => {
+                        rx_open = false;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        rx_open = false;
+                        break;
+                    }
+                }
+            };
+            if job.utt.frames.is_empty() {
+                // Degenerate zero-frame utterance: completes immediately.
+                load.fetch_sub(1, Ordering::Relaxed);
+                let _ = done_tx.send(CompletedUtterance {
+                    queue_wait_us: job.submitted.elapsed().as_secs_f64() * 1e6,
+                    service_us: 0.0,
+                    outputs: Vec::new(),
+                    frame_latency_us: Vec::new(),
+                    lane,
+                    utt: job.utt,
+                });
+                continue;
+            }
+            let slot = slots
+                .iter()
+                .position(Option::is_none)
+                .expect("active < max_streams implies a free slot");
+            let n = job.utt.frames.len();
+            slots[slot] = Some(ActiveUtt {
+                outputs: Vec::with_capacity(n),
+                frame_latency_us: Vec::with_capacity(n),
+                y_state: vec![0.0; out_pad],
+                c_state: vec![0.0; hidden],
+                next_t: 0,
+                in_flight: false,
+                submitted: job.submitted,
+                first_dispatch: None,
+                utt: job.utt,
+            });
+            active += 1;
+        }
+        if active == 0 {
+            if !rx_open {
+                break;
+            }
+            continue;
+        }
+
+        // Dispatch every stream with a ready frame, window permitting.
+        for slot in 0..max_streams {
+            if !pipe.has_capacity() {
+                break;
+            }
+            let Some(au) = slots[slot].as_mut() else {
+                continue;
+            };
+            if au.in_flight || au.next_t >= au.utt.frames.len() {
+                continue;
+            }
+            let t = au.next_t;
+            pipe.dispatch(slot, t, &au.utt.frames[t], &au.y_state, &au.c_state)
+                .expect("lane dispatch");
+            if au.first_dispatch.is_none() {
+                au.first_dispatch = Some(Instant::now());
+            }
+            au.in_flight = true;
+            au.next_t += 1;
+        }
+        if pipe.in_flight() == 0 {
+            continue;
+        }
+
+        // Harvest at least one completion (block), then drain what's ready.
+        let mut done = Some(pipe.recv_done().expect("lane recv"));
+        while let Some(d) = done {
+            let slot = d.stream();
+            let finished = {
+                let au = slots[slot].as_mut().expect("completion for empty slot");
+                au.frame_latency_us.push(d.latency_us());
+                au.y_state.copy_from_slice(d.y());
+                au.c_state.copy_from_slice(d.c());
+                au.outputs.push(d.y().to_vec());
+                au.in_flight = false;
+                au.outputs.len() == au.utt.frames.len()
+            };
+            pipe.recycle(d);
+            if finished {
+                let au = slots[slot].take().expect("finished slot");
+                active -= 1;
+                let first = au.first_dispatch.unwrap_or(au.submitted);
+                load.fetch_sub(au.utt.frames.len().max(1), Ordering::Relaxed);
+                // If the engine has been dropped, keep draining so the lane
+                // (and its pipeline threads) still shuts down cleanly.
+                let _ = done_tx.send(CompletedUtterance {
+                    queue_wait_us: (first - au.submitted).as_secs_f64() * 1e6,
+                    service_us: first.elapsed().as_secs_f64() * 1e6,
+                    outputs: au.outputs,
+                    frame_latency_us: au.frame_latency_us,
+                    lane,
+                    utt: au.utt,
+                });
+            }
+            done = pipe.try_recv_done().expect("lane try_recv");
+        }
+    }
+    pipe.shutdown();
+}

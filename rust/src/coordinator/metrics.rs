@@ -1,12 +1,72 @@
 //! Latency and throughput accounting for the serving pipeline.
+//!
+//! Three latency populations are tracked so open-loop runs can report
+//! SLA-style numbers:
+//!
+//! - **frame latency** — dispatch → stage-3 completion, per frame;
+//! - **queue wait** — utterance admission → first frame dispatched;
+//! - **service time** — first dispatch → last frame completed.
+//!
+//! Percentiles are computed over sorted snapshots cached per population
+//! (invalidated on write), so repeated `p50/p95/p99` calls — the summary
+//! line alone makes several — sort each vector once instead of per call.
 
+use std::cell::OnceCell;
 use std::time::Duration;
+
+/// One latency population with a lazily sorted snapshot for percentiles.
+#[derive(Debug, Clone, Default)]
+struct LatencySeries {
+    samples: Vec<f64>,
+    sorted: OnceCell<Vec<f64>>,
+}
+
+impl LatencySeries {
+    fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted.take();
+    }
+
+    fn extend(&mut self, vs: impl IntoIterator<Item = f64>) {
+        self.samples.extend(vs);
+        self.sorted.take();
+    }
+
+    fn sorted(&self) -> &[f64] {
+        self.sorted.get_or_init(|| {
+            let mut xs = self.samples.clone();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs
+        })
+    }
+
+    /// Nearest-rank percentile over the cached sorted snapshot (no re-sort).
+    fn percentile(&self, p: f64) -> f64 {
+        let xs = self.sorted();
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
+        xs[idx]
+    }
+
+    fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
 
 /// Collected per-run metrics.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     /// Per-frame end-to-end latency (dispatch → stage-3 completion), µs.
-    pub frame_latency_us: Vec<f64>,
+    frame_latency: LatencySeries,
+    /// Per-utterance admission → first-dispatch wait, µs.
+    queue_wait: LatencySeries,
+    /// Per-utterance first-dispatch → completion service time, µs.
+    service: LatencySeries,
     /// Total wall time of the run.
     pub wall: Duration,
     /// Frames processed.
@@ -16,6 +76,62 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// A metrics record pre-sized for a run (no samples yet).
+    pub fn sized(frames: usize, utterances: usize) -> Self {
+        Self {
+            frames,
+            utterances,
+            ..Self::default()
+        }
+    }
+
+    /// Record one frame's dispatch → completion latency (µs).
+    pub fn record_frame_latency(&mut self, us: f64) {
+        self.frame_latency.push(us);
+    }
+
+    /// Record many frame latencies (µs).
+    pub fn extend_frame_latency(&mut self, us: impl IntoIterator<Item = f64>) {
+        self.frame_latency.extend(us);
+    }
+
+    /// Record one utterance's queue-wait and service-time split (µs):
+    /// admission → dispatch vs dispatch → done.
+    pub fn record_utterance_split(&mut self, queue_wait_us: f64, service_us: f64) {
+        self.queue_wait.push(queue_wait_us);
+        self.service.push(service_us);
+    }
+
+    /// Raw frame-latency samples (µs), insertion order.
+    pub fn frame_latencies_us(&self) -> &[f64] {
+        &self.frame_latency.samples
+    }
+
+    /// Fold one completed utterance's accounting into this record — the
+    /// single point of truth for completion bookkeeping (CLI serve loop and
+    /// examples share it).
+    pub fn record_completion(&mut self, c: &crate::coordinator::engine::CompletedUtterance) {
+        self.frames += c.outputs.len();
+        self.utterances += 1;
+        self.extend_frame_latency(c.frame_latency_us.iter().copied());
+        self.record_utterance_split(c.queue_wait_us, c.service_us);
+    }
+
+    /// Fold another run's counters and samples into this one. Wall times
+    /// are **summed**, so this models sequential runs; for concurrent lanes
+    /// measure one wall clock around the whole engine instead (as
+    /// `serve_workload` does) or `fps()` will understate throughput.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.frames += other.frames;
+        self.utterances += other.utterances;
+        self.wall += other.wall;
+        self.frame_latency
+            .extend(other.frame_latency.samples.iter().copied());
+        self.queue_wait
+            .extend(other.queue_wait.samples.iter().copied());
+        self.service.extend(other.service.samples.iter().copied());
+    }
+
     /// Steady-state frames per second.
     pub fn fps(&self) -> f64 {
         if self.wall.as_secs_f64() == 0.0 {
@@ -24,42 +140,68 @@ impl Metrics {
         self.frames as f64 / self.wall.as_secs_f64()
     }
 
-    fn percentile(&self, p: f64) -> f64 {
-        if self.frame_latency_us.is_empty() {
-            return 0.0;
-        }
-        let mut xs = self.frame_latency_us.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
-        xs[idx]
-    }
-
     pub fn latency_p50_us(&self) -> f64 {
-        self.percentile(0.50)
+        self.frame_latency.percentile(0.50)
     }
 
     pub fn latency_p95_us(&self) -> f64 {
-        self.percentile(0.95)
+        self.frame_latency.percentile(0.95)
+    }
+
+    pub fn latency_p99_us(&self) -> f64 {
+        self.frame_latency.percentile(0.99)
     }
 
     pub fn latency_mean_us(&self) -> f64 {
-        if self.frame_latency_us.is_empty() {
-            return 0.0;
-        }
-        self.frame_latency_us.iter().sum::<f64>() / self.frame_latency_us.len() as f64
+        self.frame_latency.mean()
+    }
+
+    pub fn queue_wait_p50_us(&self) -> f64 {
+        self.queue_wait.percentile(0.50)
+    }
+
+    pub fn queue_wait_p99_us(&self) -> f64 {
+        self.queue_wait.percentile(0.99)
+    }
+
+    pub fn queue_wait_mean_us(&self) -> f64 {
+        self.queue_wait.mean()
+    }
+
+    pub fn service_p50_us(&self) -> f64 {
+        self.service.percentile(0.50)
+    }
+
+    pub fn service_p99_us(&self) -> f64 {
+        self.service.percentile(0.99)
+    }
+
+    pub fn service_mean_us(&self) -> f64 {
+        self.service.mean()
     }
 
     /// One-line summary.
     pub fn summary(&self) -> String {
-        format!(
-            "{} frames / {} utts in {:.3}s  ->  {:.0} FPS, frame latency p50 {:.0}µs p95 {:.0}µs",
+        let mut s = format!(
+            "{} frames / {} utts in {:.3}s  ->  {:.0} FPS, frame latency p50 {:.0}µs p95 {:.0}µs p99 {:.0}µs",
             self.frames,
             self.utterances,
             self.wall.as_secs_f64(),
             self.fps(),
             self.latency_p50_us(),
-            self.latency_p95_us()
-        )
+            self.latency_p95_us(),
+            self.latency_p99_us()
+        );
+        if !self.queue_wait.samples.is_empty() {
+            s.push_str(&format!(
+                "; queue wait p50 {:.0}µs p99 {:.0}µs, service p50 {:.0}µs p99 {:.0}µs",
+                self.queue_wait_p50_us(),
+                self.queue_wait_p99_us(),
+                self.service_p50_us(),
+                self.service_p99_us()
+            ));
+        }
+        s
     }
 }
 
@@ -69,15 +211,13 @@ mod tests {
 
     #[test]
     fn percentiles_and_fps() {
-        let m = Metrics {
-            frame_latency_us: (1..=100).map(|i| i as f64).collect(),
-            wall: Duration::from_secs(2),
-            frames: 100,
-            utterances: 4,
-        };
+        let mut m = Metrics::sized(100, 4);
+        m.wall = Duration::from_secs(2);
+        m.extend_frame_latency((1..=100).map(|i| i as f64));
         assert_eq!(m.fps(), 50.0);
         assert!((m.latency_p50_us() - 50.0).abs() <= 1.0);
         assert!((m.latency_p95_us() - 95.0).abs() <= 1.0);
+        assert!((m.latency_p99_us() - 99.0).abs() <= 1.0);
         assert!((m.latency_mean_us() - 50.5).abs() < 1e-9);
         assert!(m.summary().contains("FPS"));
     }
@@ -87,5 +227,50 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.fps(), 0.0);
         assert_eq!(m.latency_p50_us(), 0.0);
+        assert_eq!(m.latency_p99_us(), 0.0);
+        assert_eq!(m.queue_wait_p99_us(), 0.0);
+    }
+
+    #[test]
+    fn sorted_cache_invalidates_on_write() {
+        let mut m = Metrics::default();
+        m.record_frame_latency(10.0);
+        assert_eq!(m.latency_p99_us(), 10.0);
+        // A later, larger sample must be visible after the cached read.
+        m.record_frame_latency(90.0);
+        assert_eq!(m.latency_p99_us(), 90.0);
+        m.extend_frame_latency([200.0]);
+        assert_eq!(m.latency_p99_us(), 200.0);
+    }
+
+    #[test]
+    fn queue_wait_and_service_split() {
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record_utterance_split(i as f64, 100.0 + i as f64);
+        }
+        assert!((m.queue_wait_mean_us() - 4.5).abs() < 1e-9);
+        assert!((m.service_mean_us() - 104.5).abs() < 1e-9);
+        assert!(m.queue_wait_p99_us() <= 9.0 + 1e-9);
+        assert!(m.service_p50_us() >= 100.0);
+        assert!(m.summary().contains("queue wait"));
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::sized(5, 1);
+        a.wall = Duration::from_secs(1);
+        a.extend_frame_latency([1.0, 2.0, 3.0, 4.0, 5.0]);
+        a.record_utterance_split(7.0, 70.0);
+        let mut b = Metrics::sized(5, 1);
+        b.wall = Duration::from_secs(1);
+        b.extend_frame_latency([6.0, 7.0, 8.0, 9.0, 10.0]);
+        b.record_utterance_split(9.0, 90.0);
+        a.merge(&b);
+        assert_eq!(a.frames, 10);
+        assert_eq!(a.utterances, 2);
+        assert_eq!(a.wall, Duration::from_secs(2));
+        assert!((a.latency_mean_us() - 5.5).abs() < 1e-9);
+        assert!((a.queue_wait_mean_us() - 8.0).abs() < 1e-9);
     }
 }

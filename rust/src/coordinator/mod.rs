@@ -1,29 +1,35 @@
 //! The serving coordinator — Layer 3's runtime counterpart of Fig 7.
 //!
 //! The paper's accelerator is a 3-stage coarse-grained pipeline joined by
-//! double buffers, kept full by interleaving independent frames. This
-//! module is that architecture in software: three OS threads, one per
-//! stage, each owning a backend stage executor (native engine or compiled
-//! PJRT executable) and its share of the (spectral) weights; bounded
-//! two-slot channels as the double buffers; and a scheduler that
-//! interleaves multiple utterance *streams* so the recurrent dependency
-//! (frame `t+1` of a stream needs `y_t`, `c_t`) never stalls the pipeline —
-//! exactly the paper's "after three frames have been processed, the
-//! following frame could be processed at every one stage of latency".
+//! double buffers, kept full by interleaving independent frames, and scaled
+//! by *replicating* the pipeline under Algorithm 1 (§5). This module is
+//! that architecture in software: per lane, three OS threads (one per
+//! stage), each owning a backend stage executor over the **shared**
+//! prepared weights (`F(w)` spectra precomputed once, read by every
+//! replica); bounded channels as the double buffers; recycled frame-message
+//! buffers so the hot path never allocates; and a replicated engine that
+//! routes utterances to the least-loaded lane and backfills the moment a
+//! stream retires — continuous admission, no wave barrier.
 //!
-//! - [`pipeline`] — the 3-stage threaded pipeline over any
+//! - [`pipeline`] — one 3-stage threaded pipeline lane over any
 //!   [`Backend`](crate::runtime::backend::Backend).
-//! - [`batcher`] — utterance admission, stream slots, backpressure.
-//! - [`metrics`] — latency/throughput accounting.
+//! - [`engine`] — the replicated [`ServeEngine`]: N lanes, non-blocking
+//!   submit, completion channel.
+//! - [`batcher`] — utterance admission, backpressure, the bounded waiting
+//!   room in front of the engine.
+//! - [`metrics`] — latency/throughput accounting (queue-wait vs service
+//!   split, percentiles).
 //! - [`server`] — the end-to-end ASR serving loop (workload in, PER +
-//!   throughput out).
+//!   throughput out), closed-loop or open-loop Poisson arrivals.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
 
-pub use batcher::Batcher;
+pub use batcher::{Batcher, QueuedUtterance};
+pub use engine::{CompletedUtterance, EngineConfig, ServeEngine, Ticket};
 pub use metrics::Metrics;
-pub use pipeline::ClstmPipeline;
-pub use server::{serve_workload, ServeReport};
+pub use pipeline::{ClstmPipeline, PipelineConfig};
+pub use server::{serve_workload, Arrival, ServeOptions, ServeReport};

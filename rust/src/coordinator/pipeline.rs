@@ -1,11 +1,19 @@
 //! The 3-stage threaded pipeline (Fig 7 in software), backend-agnostic.
 //!
 //! Stage threads own their [`StageExecutor`] (compiled executable or native
-//! engine plus its share of the weights); bounded `sync_channel(2)` hops
-//! model the double buffers. The scheduler interleaves utterance streams: a
-//! stream has at most one frame in flight (its recurrence), but with ≥3
-//! streams admitted the pipeline is always full — the software realisation
-//! of the paper's frame-interleaving argument (§6.2).
+//! engine over the shared prepared weights); bounded `sync_channel` hops
+//! model the double buffers. Frames travel in recycled [`FrameMsg`] buffers
+//! that loop scheduler → S1 → S2 → S3 → scheduler, so the per-frame hot
+//! path performs **no heap allocation**: every stage writes into the
+//! message's preallocated buffers through the write-into
+//! [`StageExecutor::run_into`] convention.
+//!
+//! The admission window is a function of the stage count and the configured
+//! channel depth ([`PipelineConfig::window`]) — the total capacity of the
+//! stage threads plus every double buffer — rather than a hardcoded
+//! constant. A stream has at most one frame in flight (its recurrence), but
+//! with ≥3 streams admitted the pipeline is always full — the software
+//! realisation of the paper's frame-interleaving argument (§6.2).
 //!
 //! Which hardware/library executes each stage is a [`Backend`] concern: the
 //! default [`NativeBackend`](crate::runtime::native::NativeBackend) needs
@@ -15,68 +23,165 @@
 use crate::coordinator::metrics::Metrics;
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::{Backend, StageExecutor};
-use anyhow::{Context, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use crate::runtime::backend::{Backend, PreparedWeights, StageExecutor};
+use anyhow::{ensure, Context, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
 use std::time::Instant;
 
-/// A frame travelling through the pipeline.
-struct Msg {
+/// Stages in the pipeline (Fig 7: gate convolutions, element-wise cluster,
+/// projection).
+pub const STAGES: usize = 3;
+
+/// Pipeline shape knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Capacity of each inter-stage channel (the "double buffer" depth of
+    /// Fig 7 is 2). Clamped to ≥ 1.
+    pub channel_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { channel_depth: 2 }
+    }
+}
+
+impl PipelineConfig {
+    /// Admission window: the maximum frames in flight, derived from the
+    /// stage count and channel depth — one slot per stage thread plus the
+    /// capacity of the `STAGES + 1` channels around them. Replaces the old
+    /// hardcoded `in_flight < 4`.
+    pub fn window(&self) -> usize {
+        let depth = self.channel_depth.max(1);
+        STAGES + (STAGES + 1) * depth
+    }
+}
+
+/// A frame travelling through the pipeline. All buffers are allocated once
+/// at pipeline build time and recycled through the message loop.
+struct FrameMsg {
     stream: usize,
     /// Frame index within the stream.
     t: usize,
-    /// Stage payload: fused input (→S1), gate pre-activations (→S2),
-    /// cell output m (→S3).
-    payload: Vec<f32>,
-    /// Cell state rides along (written by S2).
+    /// Stage-1 input: fused operand `[x_t (padded); y_{t-1} (padded)]`.
+    fused: Vec<f32>,
+    /// Stage-1 output / stage-2 input: gate pre-activations (`4·h`).
+    a: Vec<f32>,
+    /// Stage-2 output / stage-3 input: cell output `m_t` (`h`).
+    m: Vec<f32>,
+    /// Previous cell state (read by stage 2).
+    c_prev: Vec<f32>,
+    /// New cell state (written by stage 2).
     c: Vec<f32>,
-    dispatched: Instant,
-}
-
-/// Completion record returned to the scheduler.
-struct Done {
-    stream: usize,
-    t: usize,
+    /// Stage-3 output `y_t` (`out_pad`).
     y: Vec<f32>,
-    c: Vec<f32>,
     dispatched: Instant,
 }
 
-/// The running pipeline (threads + channel endpoints).
+/// A completed frame borrowed out of the pipeline's recycled buffers.
+/// Read `y`/`c`, then return the buffers with [`ClstmPipeline::recycle`].
+pub struct DoneFrame {
+    latency_us: f64,
+    msg: FrameMsg,
+}
+
+impl DoneFrame {
+    pub fn stream(&self) -> usize {
+        self.msg.stream
+    }
+
+    pub fn t(&self) -> usize {
+        self.msg.t
+    }
+
+    /// Padded output `y_t` (length `spec.pad(spec.out_dim())`).
+    pub fn y(&self) -> &[f32] {
+        &self.msg.y
+    }
+
+    /// New cell state `c_t` (length `spec.hidden_dim`).
+    pub fn c(&self) -> &[f32] {
+        &self.msg.c
+    }
+
+    /// Dispatch → stage-3 completion latency, µs.
+    pub fn latency_us(&self) -> f64 {
+        self.latency_us
+    }
+}
+
+/// The running pipeline (threads + channel endpoints + recycled buffers).
 pub struct ClstmPipeline {
     spec: LstmSpec,
-    to_s1: Option<SyncSender<Msg>>,
-    done_rx: Receiver<Done>,
+    to_s1: Option<SyncSender<FrameMsg>>,
+    done_rx: Receiver<FrameMsg>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Free message buffers (capacity = admission window).
+    free: Vec<FrameMsg>,
+    in_flight: usize,
+    window: usize,
     in_pad: usize,
     out_pad: usize,
+    hidden: usize,
 }
 
 impl ClstmPipeline {
-    /// Build the three stage executors on `backend` and launch the stage
-    /// threads.
-    ///
-    /// `weights` provides layer-0 weights (the Table 3 pipeline is the
-    /// single-layer accelerator, like the paper's).
+    /// Prepare `weights` on `backend` and launch a single pipeline with the
+    /// default configuration — convenience for one-replica callers. For a
+    /// replicated engine, call [`Backend::prepare`] once and build each
+    /// lane with [`Self::with_prepared`].
     pub fn build(backend: &dyn Backend, weights: &LstmWeights) -> Result<Self> {
-        let spec = weights.spec.clone();
-        let stages = backend.build_stages(weights)?;
+        let prepared = backend.prepare(weights)?;
+        Self::with_prepared(backend, &prepared, PipelineConfig::default())
+    }
 
-        // Double buffers: two-slot bounded channels.
-        let (to_s1, s1_rx) = sync_channel::<Msg>(2);
-        let (s1_tx, s2_rx) = sync_channel::<Msg>(2);
-        let (s2_tx, s3_rx) = sync_channel::<Msg>(2);
-        let (s3_tx, done_rx) = sync_channel::<Done>(2);
+    /// Build one replica's stage executors over the shared prepared weights
+    /// and launch the stage threads.
+    pub fn with_prepared(
+        backend: &dyn Backend,
+        prepared: &Arc<PreparedWeights>,
+        cfg: PipelineConfig,
+    ) -> Result<Self> {
+        let spec = prepared.spec.clone();
+        let stages = backend.build_stages(prepared)?;
+        let depth = cfg.channel_depth.max(1);
+        let window = cfg.window();
+
+        // Buffer sizes come from the executors' declared output lengths, so
+        // the pipeline stays backend-agnostic.
+        let s1_lens = stages.stage1.out_lens();
+        let s2_lens = stages.stage2.out_lens();
+        let s3_lens = stages.stage3.out_lens();
+        ensure!(s1_lens.len() == 1, "stage1 must declare one output");
+        ensure!(s2_lens.len() == 2, "stage2 must declare two outputs");
+        ensure!(s3_lens.len() == 1, "stage3 must declare one output");
+        let (a_len, m_len, c_len, y_len) = (s1_lens[0], s2_lens[0], s2_lens[1], s3_lens[0]);
+
+        let in_pad = spec.pad(spec.layer_input_dim(0));
+        let out_pad = spec.pad(spec.out_dim());
+        ensure!(y_len == out_pad, "stage3 output {} != out_pad {}", y_len, out_pad);
+        let fused_len = in_pad + out_pad;
+
+        // Double buffers: bounded channels of the configured depth.
+        let (to_s1, s1_rx) = sync_channel::<FrameMsg>(depth);
+        let (s1_tx, s2_rx) = sync_channel::<FrameMsg>(depth);
+        let (s2_tx, s3_rx) = sync_channel::<FrameMsg>(depth);
+        let (s3_tx, done_rx) = sync_channel::<FrameMsg>(depth);
 
         let mut stage1: Box<dyn StageExecutor> = stages.stage1;
         let h1 = std::thread::Builder::new()
             .name("clstm-stage1".into())
             .spawn(move || {
                 // Stage 1: the four fused gate convolutions.
-                while let Ok(mut m) = s1_rx.recv() {
-                    let out = stage1.run(&[&m.payload]).expect("stage1 execute");
-                    m.payload = out.into_iter().next().expect("stage1 output");
-                    if s1_tx.send(m).is_err() {
+                while let Ok(mut msg) = s1_rx.recv() {
+                    {
+                        let FrameMsg { fused, a, .. } = &mut msg;
+                        stage1
+                            .run_into(&[fused.as_slice()], &mut [a.as_mut_slice()])
+                            .expect("stage1 execute");
+                    }
+                    if s1_tx.send(msg).is_err() {
                         break;
                     }
                 }
@@ -87,12 +192,17 @@ impl ClstmPipeline {
             .name("clstm-stage2".into())
             .spawn(move || {
                 // Stage 2: the element-wise cluster.
-                while let Ok(mut m) = s2_rx.recv() {
-                    let outs = stage2.run(&[&m.payload, &m.c]).expect("stage2 execute");
-                    let mut it = outs.into_iter();
-                    m.payload = it.next().expect("stage2 m_t"); // m_t
-                    m.c = it.next().expect("stage2 c_t"); // c_t
-                    if s2_tx.send(m).is_err() {
+                while let Ok(mut msg) = s2_rx.recv() {
+                    {
+                        let FrameMsg { a, c_prev, m, c, .. } = &mut msg;
+                        stage2
+                            .run_into(
+                                &[a.as_slice(), c_prev.as_slice()],
+                                &mut [m.as_mut_slice(), c.as_mut_slice()],
+                            )
+                            .expect("stage2 execute");
+                    }
+                    if s2_tx.send(msg).is_err() {
                         break;
                     }
                 }
@@ -103,37 +213,51 @@ impl ClstmPipeline {
             .name("clstm-stage3".into())
             .spawn(move || {
                 // Stage 3: projection (or identity padding).
-                while let Ok(m) = s3_rx.recv() {
-                    let outs = stage3.run(&[&m.payload]).expect("stage3 execute");
-                    let y = outs.into_iter().next().expect("stage3 output");
-                    if s3_tx
-                        .send(Done {
-                            stream: m.stream,
-                            t: m.t,
-                            y,
-                            c: m.c,
-                            dispatched: m.dispatched,
-                        })
-                        .is_err()
+                while let Ok(mut msg) = s3_rx.recv() {
                     {
+                        let FrameMsg { m, y, .. } = &mut msg;
+                        stage3
+                            .run_into(&[m.as_slice()], &mut [y.as_mut_slice()])
+                            .expect("stage3 execute");
+                    }
+                    if s3_tx.send(msg).is_err() {
                         break;
                     }
                 }
             })?;
 
+        // One set of recycled buffers per window slot, allocated once.
+        let free: Vec<FrameMsg> = (0..window)
+            .map(|_| FrameMsg {
+                stream: 0,
+                t: 0,
+                fused: vec![0.0; fused_len],
+                a: vec![0.0; a_len],
+                m: vec![0.0; m_len],
+                c_prev: vec![0.0; c_len],
+                c: vec![0.0; c_len],
+                y: vec![0.0; y_len],
+                dispatched: Instant::now(),
+            })
+            .collect();
+
         Ok(Self {
-            in_pad: spec.pad(spec.layer_input_dim(0)),
-            out_pad: spec.pad(spec.out_dim()),
             spec,
             to_s1: Some(to_s1),
             done_rx,
             handles: vec![h1, h2, h3],
+            free,
+            in_flight: 0,
+            window,
+            in_pad,
+            out_pad,
+            hidden: c_len,
         })
     }
 
     /// Compile the stage artifacts for `cfg` on the PJRT runtime and launch
-    /// the pipeline — convenience wrapper over [`Self::build`] with a
-    /// `PjrtBackend`.
+    /// the pipeline — convenience wrapper over [`Self::with_prepared`] with
+    /// a `PjrtBackend`.
     #[cfg(feature = "pjrt")]
     pub fn build_pjrt(
         rt: std::sync::Arc<crate::runtime::client::Runtime>,
@@ -145,61 +269,156 @@ impl ClstmPipeline {
         Self::build(&backend, weights)
     }
 
+    /// The model spec this pipeline serves.
+    pub fn spec(&self) -> &LstmSpec {
+        &self.spec
+    }
+
+    /// Padded output length of [`DoneFrame::y`].
+    pub fn out_pad(&self) -> usize {
+        self.out_pad
+    }
+
+    /// Cell-state length of [`DoneFrame::c`].
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Maximum frames in flight (see [`PipelineConfig::window`]).
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Frames currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Whether another frame can be dispatched right now.
+    pub fn has_capacity(&self) -> bool {
+        !self.free.is_empty()
+    }
+
+    /// Dispatch one frame of `stream`: raw input `x` plus the stream's
+    /// recurrent state (`y_prev` padded to `out_pad`, `c_prev` of length
+    /// `hidden`). Fails when the window is full — check
+    /// [`Self::has_capacity`] first.
+    pub fn dispatch(
+        &mut self,
+        stream: usize,
+        t: usize,
+        x: &[f32],
+        y_prev: &[f32],
+        c_prev: &[f32],
+    ) -> Result<()> {
+        ensure!(x.len() <= self.in_pad, "input frame longer than padded dim");
+        ensure!(
+            y_prev.len() == self.out_pad,
+            "y_prev length {} != {}",
+            y_prev.len(),
+            self.out_pad
+        );
+        ensure!(
+            c_prev.len() == self.hidden,
+            "c_prev length {} != {}",
+            c_prev.len(),
+            self.hidden
+        );
+        let mut msg = self
+            .free
+            .pop()
+            .context("admission window full (no free frame slot)")?;
+        msg.stream = stream;
+        msg.t = t;
+        msg.fused[..x.len()].copy_from_slice(x);
+        msg.fused[x.len()..self.in_pad].fill(0.0); // zero only the padding tail
+        msg.fused[self.in_pad..].copy_from_slice(y_prev);
+        msg.c_prev.copy_from_slice(c_prev);
+        msg.dispatched = Instant::now();
+        let sent = self
+            .to_s1
+            .as_ref()
+            .context("pipeline already shut down")?
+            .send(msg);
+        if sent.is_err() {
+            anyhow::bail!("pipeline stage threads are gone");
+        }
+        self.in_flight += 1;
+        Ok(())
+    }
+
+    /// Block for the next completed frame.
+    pub fn recv_done(&mut self) -> Result<DoneFrame> {
+        let msg = self.done_rx.recv().context("pipeline recv")?;
+        self.in_flight -= 1;
+        Ok(DoneFrame {
+            latency_us: msg.dispatched.elapsed().as_secs_f64() * 1e6,
+            msg,
+        })
+    }
+
+    /// Harvest a completed frame without blocking; `Ok(None)` when nothing
+    /// has finished yet.
+    pub fn try_recv_done(&mut self) -> Result<Option<DoneFrame>> {
+        match self.done_rx.try_recv() {
+            Ok(msg) => {
+                self.in_flight -= 1;
+                Ok(Some(DoneFrame {
+                    latency_us: msg.dispatched.elapsed().as_secs_f64() * 1e6,
+                    msg,
+                }))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => anyhow::bail!("pipeline stage threads are gone"),
+        }
+    }
+
+    /// Return a completed frame's buffers to the free list.
+    pub fn recycle(&mut self, done: DoneFrame) {
+        self.free.push(done.msg);
+    }
+
     /// Run a set of utterances through the pipeline, interleaving them as
     /// streams. Returns per-utterance per-frame outputs `y` and metrics.
-    pub fn run_utterances(&mut self, utts: &[Vec<Vec<f32>>]) -> Result<(Vec<Vec<Vec<f32>>>, Metrics)> {
+    ///
+    /// This is the closed-loop convenience driver; the replicated
+    /// [`ServeEngine`](crate::coordinator::engine::ServeEngine) drives the
+    /// same [`Self::dispatch`]/[`Self::recv_done`] primitives with
+    /// continuous admission instead.
+    pub fn run_utterances(
+        &mut self,
+        utts: &[Vec<Vec<f32>>],
+    ) -> Result<(Vec<Vec<Vec<f32>>>, Metrics)> {
         let n = utts.len();
-        let h = self.spec.hidden_dim;
         let mut y_state = vec![vec![0.0f32; self.out_pad]; n];
-        let mut c_state = vec![vec![0.0f32; h]; n];
+        let mut c_state = vec![vec![0.0f32; self.hidden]; n];
         let mut next_t = vec![0usize; n];
         let mut outputs: Vec<Vec<Vec<f32>>> =
             utts.iter().map(|u| Vec::with_capacity(u.len())).collect();
-        let mut metrics = Metrics {
-            utterances: n,
-            ..Default::default()
-        };
 
-        let to_s1 = self.to_s1.as_ref().context("pipeline already shut down")?;
         let t0 = Instant::now();
-        let mut in_flight = 0usize;
-        let mut ready: std::collections::VecDeque<usize> = (0..n).collect();
+        let mut ready: std::collections::VecDeque<usize> =
+            (0..n).filter(|&s| !utts[s].is_empty()).collect();
         let mut remaining: usize = utts.iter().map(Vec::len).sum();
-        metrics.frames = remaining;
+        let mut metrics = Metrics::sized(remaining, n);
 
         while remaining > 0 {
-            // Admit as many ready streams as the double buffers allow.
-            while in_flight < 4 {
+            // Admit as many ready streams as the window allows.
+            while self.has_capacity() {
                 let Some(s) = ready.pop_front() else { break };
                 let t = next_t[s];
-                let x = &utts[s][t];
-                let mut fused = vec![0.0f32; self.in_pad + self.out_pad];
-                fused[..x.len()].copy_from_slice(x);
-                fused[self.in_pad..].copy_from_slice(&y_state[s]);
-                to_s1
-                    .send(Msg {
-                        stream: s,
-                        t,
-                        payload: fused,
-                        c: c_state[s].clone(),
-                        dispatched: Instant::now(),
-                    })
-                    .context("pipeline send")?;
-                in_flight += 1;
+                self.dispatch(s, t, &utts[s][t], &y_state[s], &c_state[s])?;
             }
             // Harvest one completion.
-            let done = self.done_rx.recv().context("pipeline recv")?;
-            in_flight -= 1;
+            let done = self.recv_done()?;
             remaining -= 1;
-            metrics
-                .frame_latency_us
-                .push(done.dispatched.elapsed().as_secs_f64() * 1e6);
-            let s = done.stream;
-            debug_assert_eq!(done.t, next_t[s], "frames must complete in order per stream");
-            y_state[s][..done.y.len().min(self.out_pad)]
-                .copy_from_slice(&done.y[..done.y.len().min(self.out_pad)]);
-            c_state[s] = done.c;
-            outputs[s].push(done.y);
+            metrics.record_frame_latency(done.latency_us());
+            let s = done.stream();
+            debug_assert_eq!(done.t(), next_t[s], "frames must complete in order per stream");
+            y_state[s].copy_from_slice(done.y());
+            c_state[s].copy_from_slice(done.c());
+            outputs[s].push(done.y().to_vec());
+            self.recycle(done);
             next_t[s] += 1;
             if next_t[s] < utts[s].len() {
                 ready.push_back(s);
@@ -212,6 +431,18 @@ impl ClstmPipeline {
     /// Shut the pipeline down (joins stage threads).
     pub fn shutdown(&mut self) {
         self.to_s1 = None; // closes the channel chain
+        // Drain unharvested completions: with frames still in flight the
+        // bounded done channel could fill and leave stage 3 blocked in
+        // `send` forever while we join it.
+        while self.in_flight > 0 {
+            match self.done_rx.recv() {
+                Ok(msg) => {
+                    self.in_flight -= 1;
+                    self.free.push(msg);
+                }
+                Err(_) => break, // stage threads already gone
+            }
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -224,5 +455,20 @@ impl Drop for ClstmPipeline {
     }
 }
 
-// Integration tests for the pipeline live in rust/tests/integration.rs:
-// native-backend coverage runs everywhere; PJRT coverage is feature-gated.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_scales_with_channel_depth() {
+        assert_eq!(PipelineConfig::default().window(), 3 + 4 * 2);
+        assert_eq!(PipelineConfig { channel_depth: 1 }.window(), 7);
+        assert_eq!(PipelineConfig { channel_depth: 4 }.window(), 19);
+        // Degenerate depth is clamped.
+        assert_eq!(PipelineConfig { channel_depth: 0 }.window(), 7);
+    }
+}
+
+// Integration tests for the pipeline live in rust/tests/integration.rs and
+// rust/tests/engine.rs: native-backend coverage runs everywhere; PJRT
+// coverage is feature-gated.

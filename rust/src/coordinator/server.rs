@@ -1,16 +1,62 @@
-//! End-to-end ASR serving: SynthTIMIT workload → pipeline (any backend) →
-//! classifier → PER + throughput. The driver behind `clstm serve` and
-//! `examples/asr_pipeline.rs`.
+//! End-to-end ASR serving: SynthTIMIT workload → replicated engine (any
+//! backend) → classifier → PER + throughput. The driver behind
+//! `clstm serve` and `examples/asr_pipeline.rs`.
+//!
+//! Admission is **continuous**: utterances flow batcher → engine the moment
+//! a lane has room and completions are drained as they land, so a straggler
+//! utterance never stalls the rest of the workload (the old wave barrier is
+//! gone). Arrivals are either closed-loop (the whole workload queued up
+//! front) or an open-loop Poisson process ([`Arrival::Poisson`]) for
+//! SLA-style queue-wait/service measurements.
 
 use crate::coordinator::batcher::{Batcher, QueuedUtterance};
+use crate::coordinator::engine::{CompletedUtterance, EngineConfig, ServeEngine};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::pipeline::ClstmPipeline;
 use crate::data::per::phone_error_rate;
 use crate::data::synth::{SynthConfig, SynthTimit};
 use crate::lstm::sequence::argmax;
 use crate::lstm::weights::LstmWeights;
 use crate::runtime::backend::Backend;
-use anyhow::{Context, Result};
+use crate::util::prng::Xoshiro256;
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Utterance arrival process for a serving run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Closed loop: the whole workload is queued at t = 0.
+    Closed,
+    /// Open loop: Poisson arrivals at `rate` utterances/second.
+    Poisson { rate: f64 },
+}
+
+/// Knobs for [`serve_workload`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Pipeline lanes (replicas).
+    pub replicas: usize,
+    /// Utterance streams interleaved per lane.
+    pub streams_per_lane: usize,
+    /// Per-lane pipeline channel depth.
+    pub channel_depth: usize,
+    /// Arrival process.
+    pub arrival: Arrival,
+    /// Workload/arrival seed.
+    pub seed: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            streams_per_lane: 4,
+            channel_depth: 2,
+            arrival: Arrival::Closed,
+            seed: 0x17c5,
+        }
+    }
+}
 
 /// Result of one serving run.
 #[derive(Debug, Clone)]
@@ -21,21 +67,25 @@ pub struct ServeReport {
     pub per: f64,
     /// Which backend served the run (e.g. `native`, `pjrt:tiny_fft4`).
     pub config: String,
+    /// Lanes the engine served with.
+    pub replicas: usize,
 }
 
-/// Generate `n_utts` SynthTIMIT utterances sized for `weights.spec`, run
-/// them through the 3-stage pipeline on `backend`, decode framewise, and
-/// score PER.
+/// Generate `n_utts` SynthTIMIT utterances sized for `weights.spec`, serve
+/// them through a replicated engine on `backend` with continuous admission,
+/// decode framewise, and score PER.
 pub fn serve_workload(
     backend: &dyn Backend,
     weights: &LstmWeights,
     n_utts: usize,
-    max_streams: usize,
+    opts: &ServeOptions,
 ) -> Result<ServeReport> {
     let spec = &weights.spec;
 
     // Workload generation (truncate synthetic features to the model's
-    // input dim — the generator emits (base+1)*3 ≥ input_dim).
+    // input dim — the generator emits (base+1)*3 ≥ input_dim). The
+    // reference phone sequence rides on the queued utterance so scoring
+    // never regenerates the workload.
     let synth_cfg = SynthConfig {
         n_phones: spec.num_classes.max(2),
         base_dim: (spec.input_dim / 3).max(2),
@@ -43,64 +93,131 @@ pub fn serve_workload(
         ..SynthConfig::tiny()
     };
     let gen = SynthTimit::new(synth_cfg);
-    let mut batcher = Batcher::new(n_utts, max_streams);
+    let mut workload: VecDeque<(Duration, QueuedUtterance)> = VecDeque::with_capacity(n_utts);
+    let mut arrival_rng = Xoshiro256::seed_from_u64(opts.seed ^ 0xA551_7E5C);
+    let mut at = Duration::ZERO;
     for i in 0..n_utts {
-        let mut u = gen.utterance(0x17c5, i as u64);
+        let mut u = gen.utterance(opts.seed, i as u64);
         for f in u.frames.iter_mut() {
             f.truncate(spec.input_dim);
             f.resize(spec.input_dim, 0.0);
         }
-        assert!(batcher.offer(QueuedUtterance {
-            id: i as u64,
-            frames: u.frames.clone(),
-        }));
+        let phone_seq = u.phone_seq();
+        if let Arrival::Poisson { rate } = opts.arrival {
+            ensure!(rate > 0.0, "--rate must be positive for poisson arrivals");
+            let dt = -(1.0 - arrival_rng.next_f64()).ln() / rate;
+            at += Duration::from_secs_f64(dt);
+        }
+        let utt = QueuedUtterance::new(i as u64, u.frames).with_phone_seq(phone_seq);
+        workload.push_back((at, utt));
     }
 
-    let mut pipeline = ClstmPipeline::build(backend, weights)?;
     let (cls_w, cls_b) = weights
         .classifier
         .clone()
         .context("weights have no classifier head")?;
     let out_dim = spec.out_dim();
     let n_cls = cls_b.len();
+    let decode = |outputs: &[Vec<f32>]| -> Vec<usize> {
+        // Classifier + greedy decode on the host (as in ESE).
+        outputs
+            .iter()
+            .map(|y| {
+                let logits: Vec<f32> = (0..n_cls)
+                    .map(|c| {
+                        cls_b[c]
+                            + (0..out_dim)
+                                .map(|j| cls_w[c * out_dim + j] * y[j])
+                                .sum::<f32>()
+                    })
+                    .collect();
+                argmax(&logits)
+            })
+            .collect()
+    };
+
+    let engine_cfg = EngineConfig {
+        replicas: opts.replicas,
+        streams_per_lane: opts.streams_per_lane,
+        channel_depth: opts.channel_depth,
+    };
+    let mut engine = ServeEngine::build(backend, weights, engine_cfg)?;
+    let replicas = engine.replicas();
+    // The engine takes ~two utterance generations per stream slot; the
+    // batcher holds the rest so its occupancy stays a meaningful
+    // backpressure signal.
+    let admit_limit = engine.admit_limit();
+    let mut batcher = Batcher::new(n_utts.max(1), replicas * opts.streams_per_lane.max(1));
 
     let mut metrics = Metrics::default();
-    let mut hyps: Vec<Vec<usize>> = Vec::new();
-    let mut refs: Vec<Vec<usize>> = Vec::new();
-    while !batcher.is_empty() {
-        let wave = batcher.next_wave();
-        let frames: Vec<Vec<Vec<f32>>> = wave.iter().map(|u| u.frames.clone()).collect();
-        let (outputs, m) = pipeline.run_utterances(&frames)?;
-        metrics.frames += m.frames;
-        metrics.utterances += m.utterances;
-        metrics.wall += m.wall;
-        metrics.frame_latency_us.extend(m.frame_latency_us);
-        // Classifier + greedy decode on the host (as in ESE).
-        for (u, outs) in wave.iter().zip(outputs) {
-            let hyp: Vec<usize> = outs
-                .iter()
-                .map(|y| {
-                    let logits: Vec<f32> = (0..n_cls)
-                        .map(|c| {
-                            cls_b[c]
-                                + (0..out_dim)
-                                    .map(|j| cls_w[c * out_dim + j] * y[j])
-                                    .sum::<f32>()
-                        })
-                        .collect();
-                    argmax(&logits)
-                })
-                .collect();
-            hyps.push(hyp);
-            let synth_u = gen.utterance(0x17c5, u.id);
-            refs.push(synth_u.phone_seq());
+    let mut hyps: Vec<Vec<usize>> = Vec::with_capacity(n_utts);
+    let mut refs: Vec<Vec<usize>> = Vec::with_capacity(n_utts);
+    let mut completed = 0usize;
+    let t0 = Instant::now();
+
+    let mut handle = |c: CompletedUtterance, metrics: &mut Metrics| {
+        metrics.record_completion(&c);
+        hyps.push(decode(&c.outputs));
+        refs.push(c.utt.phone_seq);
+    };
+
+    while completed < n_utts {
+        // Arrived utterances enter the bounded waiting room.
+        while workload
+            .front()
+            .is_some_and(|(at, _)| *at <= t0.elapsed())
+        {
+            let (_, utt) = workload.pop_front().expect("front checked");
+            let accepted = batcher.offer(utt);
+            debug_assert!(accepted, "batcher sized for the whole workload");
+        }
+        // Continuous admission: feed the engine the moment it has room —
+        // finished streams are backfilled immediately, no wave barrier. The
+        // queue-wait clock starts at batcher admission, so waiting-room
+        // time under overload is part of the reported split.
+        while engine.pending() < admit_limit {
+            let Some((u, admitted)) = batcher.pop_admitted() else { break };
+            engine.submit_arrived(u, admitted)?;
+        }
+        // Drain whatever has finished.
+        let mut drained = false;
+        while let Some(c) = engine.try_recv() {
+            handle(c, &mut metrics);
+            completed += 1;
+            drained = true;
+        }
+        if drained || completed >= n_utts {
+            continue;
+        }
+        if engine.pending() > 0 {
+            // Wait briefly for service; short timeout so open-loop arrivals
+            // keep flowing while the engine works.
+            if let Some(c) = engine.recv_timeout(Duration::from_micros(500)) {
+                handle(c, &mut metrics);
+                completed += 1;
+            } else {
+                ensure!(
+                    engine.healthy(),
+                    "serving engine lane died with {} utterances outstanding",
+                    engine.pending()
+                );
+            }
+        } else if let Some((at, _)) = workload.front() {
+            // Idle under open loop: sleep until the next arrival.
+            let now = t0.elapsed();
+            if *at > now {
+                std::thread::sleep((*at - now).min(Duration::from_millis(1)));
+            }
         }
     }
+    metrics.wall = t0.elapsed();
+    drop(engine);
 
     let per = phone_error_rate(&hyps, &refs);
     Ok(ServeReport {
         metrics,
         per,
         config: backend.name(),
+        replicas,
     })
 }

@@ -12,11 +12,12 @@
 //!   generation, Algorithm-1 scheduling, analytical performance/resource
 //!   models (Eq 7–12), design-space exploration, HLS code generation, a
 //!   cycle-approximate FPGA pipeline simulator, the ESE sparse baseline, a
-//!   bit-accurate 16-bit fixed-point inference engine, and a serving
-//!   coordinator over pluggable runtime backends: the default **native**
-//!   backend executes the pipeline with the crate's own engines (zero
-//!   external artifacts), while the optional `pjrt` cargo feature runs the
-//!   AOT artifacts through PJRT.
+//!   bit-accurate 16-bit fixed-point inference engine, and a replicated
+//!   serving engine (N pipeline lanes sharing one prepared-weights copy,
+//!   continuous admission) over pluggable runtime backends: the default
+//!   **native** backend executes the pipeline with the crate's own engines
+//!   (zero external artifacts), while the optional `pjrt` cargo feature
+//!   runs the AOT artifacts through PJRT.
 //!
 //! Layers 1–2 are build-time only: a fresh checkout builds and serves with
 //! default features and no Python step. See `DESIGN.md` (repo root) for the

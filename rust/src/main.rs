@@ -10,8 +10,9 @@
 //! clstm dse               # sweep block sizes, print design points
 //! clstm codegen           # emit the HLS C++ for a scheduled design
 //! clstm simulate          # discrete-event pipeline simulation
-//! clstm serve             # serve SynthTIMIT through the 3-stage pipeline
-//!                         #   (--backend native | pjrt)
+//! clstm serve             # serve SynthTIMIT through the replicated engine
+//!                         #   (--backend native | pjrt, --replicas N,
+//!                         #    --arrival closed|poisson --rate R)
 //! clstm quantize          # range analysis + fxp-vs-float accuracy report
 //! ```
 
@@ -39,7 +40,10 @@ fn main() {
         "serving backend: native | pjrt (pjrt needs --features pjrt + artifacts)",
     )
     .opt("utts", "8", "utterances to serve")
-    .opt("streams", "4", "interleaved streams in the pipeline")
+    .opt("streams", "4", "interleaved streams per pipeline lane")
+    .opt("replicas", "1", "replicated pipeline lanes in the serving engine")
+    .opt("arrival", "closed", "arrival process: closed | poisson")
+    .opt("rate", "8.0", "poisson arrival rate, utterances/second")
     .opt("seed", "1234", "random seed")
     .opt("out", "", "optional output file for generated code/reports")
     .flag("verbose", "chatty logging")

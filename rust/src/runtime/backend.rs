@@ -2,8 +2,21 @@
 //!
 //! The coordinator's 3-stage pipeline (Fig 7 in software) is backend-agnostic:
 //! each stage thread owns one [`StageExecutor`] and the scheduler never sees
-//! what executes the math. A [`Backend`] compiles/prepares the three stage
-//! executors for a weight bundle:
+//! what executes the math. Preparation is split in two so a replicated
+//! engine can share one copy of the heavy precomputed state:
+//!
+//! 1. [`Backend::prepare`] runs **once per weight bundle** and produces an
+//!    [`Arc<PreparedWeights>`]: everything derived from the weights — the
+//!    `F(w_ij)` spectra of §4.1, literals, activation tables. This is the
+//!    expensive step (FFTs over every weight block).
+//! 2. [`Backend::build_stages`] runs **once per replica** over the shared
+//!    prepared weights and is cheap: executors hold `Arc` references plus
+//!    their own scratch buffers, so N replicas never clone or recompute the
+//!    spectra — the software analogue of the paper's Algorithm-1 hardware
+//!    replication (§5), where every replica reads the same BRAM-resident
+//!    weights.
+//!
+//! Backends:
 //!
 //! - [`NativeBackend`](crate::runtime::native::NativeBackend) (default) runs
 //!   the crate's own engines — precomputed [`SpectralWeights`]
@@ -22,20 +35,92 @@
 //! | 2 (element-wise cluster) | `[a, c_{t-1}]` | `[m_t, c_t]` — cell output (length `h`) and new cell state |
 //! | 3 (projection) | `[m_t]` | `[y_t]` — length `spec.pad(spec.out_dim())` |
 //!
+//! Executors use a *write-into* calling convention
+//! ([`StageExecutor::run_into`]): the caller provides the output buffers,
+//! which the pipeline recycles through its message loop so the per-frame hot
+//! path performs no heap allocation.
+//!
 //! [`SpectralWeights`]: crate::circulant::spectral::SpectralWeights
 
+use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
+use std::any::Any;
+use std::sync::Arc;
 
-/// One compiled/prepared pipeline stage. The executor owns its share of the
-/// weights (prebuilt spectra, literals, …) so the per-frame call does no
-/// setup work — the software analogue of the BRAM-resident weights of §4.1.
+/// Weights prepared once by a [`Backend`] and shared read-only by every
+/// replica's stage executors. The payload is backend-specific (spectra,
+/// literals, …) and recovered via [`Self::downcast`].
+pub struct PreparedWeights {
+    /// Spec of the prepared model (replicas size their buffers from this).
+    pub spec: LstmSpec,
+    /// Name of the backend that prepared the payload (misuse diagnostics).
+    pub backend: String,
+    payload: Box<dyn Any + Send + Sync>,
+}
+
+impl PreparedWeights {
+    /// Wrap a backend-specific payload.
+    pub fn new(
+        spec: LstmSpec,
+        backend: impl Into<String>,
+        payload: Box<dyn Any + Send + Sync>,
+    ) -> Self {
+        Self {
+            spec,
+            backend: backend.into(),
+            payload,
+        }
+    }
+
+    /// Recover the backend-specific payload; `None` when the prepared
+    /// weights came from a different backend.
+    pub fn downcast<T: 'static>(&self) -> Option<&T> {
+        self.payload.downcast_ref::<T>()
+    }
+}
+
+impl std::fmt::Debug for PreparedWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PreparedWeights")
+            .field("backend", &self.backend)
+            .field("spec", &self.spec)
+            .finish_non_exhaustive()
+    }
+}
+
+/// One compiled/prepared pipeline stage. The executor shares the heavy
+/// weight state through its [`PreparedWeights`] and owns only scratch
+/// buffers, so the per-frame call does no setup work — the software
+/// analogue of the BRAM-resident weights of §4.1.
 ///
 /// `Send` (not `Sync`) because each executor is moved into exactly one stage
 /// thread by the coordinator and mutated only there (scratch buffers).
 pub trait StageExecutor: Send {
-    /// Execute the stage; see the module docs for the per-stage I/O contract.
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+    /// Execute the stage, writing each output into the caller-provided
+    /// buffer; see the module docs for the per-stage I/O contract. Buffer
+    /// lengths must match [`Self::out_lens`]. Implementations must fully
+    /// overwrite every output buffer (buffers are recycled between frames).
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()>;
+
+    /// Output buffer lengths, in output order — callers size their recycled
+    /// buffers from this once, at pipeline build time.
+    fn out_lens(&self) -> Vec<usize>;
+
+    /// Allocating convenience wrapper over [`Self::run_into`] (tests,
+    /// one-shot callers). The pipeline hot path never calls this.
+    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let mut outs: Vec<Vec<f32>> = self
+            .out_lens()
+            .into_iter()
+            .map(|n| vec![0.0f32; n])
+            .collect();
+        {
+            let mut refs: Vec<&mut [f32]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            self.run_into(inputs, &mut refs)?;
+        }
+        Ok(outs)
+    }
 }
 
 /// The three prepared stages of one C-LSTM serving step (layer 0, like the
@@ -46,13 +131,44 @@ pub struct StageSet {
     pub stage3: Box<dyn StageExecutor>,
 }
 
-/// A serving backend: turns a weight bundle into runnable pipeline stages.
+/// A serving backend: prepares a weight bundle once, then turns the shared
+/// prepared weights into runnable pipeline stages, once per replica.
 pub trait Backend {
     /// Human-readable backend identifier (shown in serve reports/logs).
     fn name(&self) -> String;
 
-    /// Compile/prepare the three pipeline stages for `weights`.
-    fn build_stages(&self, weights: &LstmWeights) -> Result<StageSet>;
+    /// One-time preparation: precompute everything derived from `weights`
+    /// (spectra, literals, tables). The result is shared across replicas.
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>>;
+
+    /// Cheap per-replica step: build the three stage executors over the
+    /// shared prepared weights (scratch buffers only — no recomputation).
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet>;
+
+    /// Convenience for single-replica callers: prepare + one stage set.
+    fn build_single(&self, weights: &LstmWeights) -> Result<StageSet> {
+        let prepared = self.prepare(weights)?;
+        self.build_stages(&prepared)
+    }
+}
+
+/// Shared guard for [`Backend::build_stages`] implementations: checks the
+/// prepared weights came from the named backend.
+pub fn ensure_backend(prepared: &PreparedWeights, expect: &str) -> Result<()> {
+    ensure!(
+        prepared.backend == expect,
+        "prepared weights were built by backend {:?}, not {expect:?}",
+        prepared.backend
+    );
+    Ok(())
+}
+
+/// Shared downcast helper with a uniform error message.
+pub fn downcast_prepared<T: 'static>(prepared: &PreparedWeights, expect: &str) -> Result<&T> {
+    ensure_backend(prepared, expect)?;
+    prepared
+        .downcast::<T>()
+        .with_context(|| format!("prepared-weights payload is not the {expect} payload type"))
 }
 
 #[cfg(test)]
@@ -66,18 +182,34 @@ mod tests {
         let backend: Box<dyn Backend> = Box::new(NativeBackend::default());
         assert_eq!(backend.name(), "native");
         let w = LstmWeights::random(&LstmSpec::tiny(4), 3);
-        let stages = backend.build_stages(&w).expect("native stages build");
+        let stages = backend.build_single(&w).expect("native stages build");
         // The boxed executors must be movable into threads (Send).
         fn assert_send<T: Send>(_: &T) {}
         assert_send(&stages.stage1);
     }
 
     #[test]
+    fn prepare_is_shared_across_replicas() {
+        let backend = NativeBackend::default();
+        let w = LstmWeights::random(&LstmSpec::tiny(4), 3);
+        let prepared = backend.prepare(&w).expect("prepare");
+        assert_eq!(prepared.backend, "native");
+        assert_eq!(prepared.spec, w.spec);
+        // Many replicas from one preparation.
+        for _ in 0..4 {
+            backend.build_stages(&prepared).expect("replica stages");
+        }
+    }
+
+    #[test]
     fn stage_contract_shapes_round_trip() {
         let spec = LstmSpec::tiny(4);
         let w = LstmWeights::random(&spec, 5);
-        let mut stages = NativeBackend::default().build_stages(&w).unwrap();
+        let mut stages = NativeBackend::default().build_single(&w).unwrap();
         let h = spec.hidden_dim;
+        assert_eq!(stages.stage1.out_lens(), vec![4 * h]);
+        assert_eq!(stages.stage2.out_lens(), vec![h, h]);
+        assert_eq!(stages.stage3.out_lens(), vec![spec.pad(spec.out_dim())]);
         let fused = vec![0.25f32; spec.fused_in_dim(0)];
         let a = stages.stage1.run(&[&fused]).unwrap();
         assert_eq!(a.len(), 1);
@@ -90,5 +222,16 @@ mod tests {
         let y = stages.stage3.run(&[&mc[0]]).unwrap();
         assert_eq!(y.len(), 1);
         assert_eq!(y[0].len(), spec.pad(spec.out_dim()));
+    }
+
+    #[test]
+    fn mismatched_prepared_weights_are_rejected() {
+        let prepared = Arc::new(PreparedWeights::new(
+            LstmSpec::tiny(4),
+            "somewhere-else",
+            Box::new(()),
+        ));
+        let err = NativeBackend::default().build_stages(&prepared);
+        assert!(err.is_err(), "foreign prepared weights must be rejected");
     }
 }

@@ -1,8 +1,11 @@
 //! Runtime backends: everything that executes the serving pipeline's math.
 //!
 //! The serving coordinator is backend-agnostic — it drives three opaque
-//! stage executors produced by a [`Backend`] (see [`backend`] for the trait
-//! and the per-stage I/O contract):
+//! stage executors produced by a [`Backend`]. Preparation is split:
+//! [`Backend::prepare`] precomputes the heavy per-weight-bundle state once
+//! ([`PreparedWeights`], shared via `Arc`), and [`Backend::build_stages`]
+//! cheaply builds one replica's executors over it (see [`backend`] for the
+//! traits and the per-stage I/O contract):
 //!
 //! - [`backend`] — the pluggable [`Backend`] / [`StageExecutor`] layer.
 //! - [`native`] — the default backend: pure-Rust execution through the
@@ -29,7 +32,7 @@ pub mod client;
 pub mod pjrt;
 
 pub use artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
-pub use backend::{Backend, StageExecutor, StageSet};
+pub use backend::{Backend, PreparedWeights, StageExecutor, StageSet};
 pub use native::NativeBackend;
 
 #[cfg(feature = "pjrt")]

@@ -1,13 +1,19 @@
 //! The native serving backend: the three pipeline stages executed by the
 //! crate's own engines, no artifacts, no external libraries.
 //!
+//! [`NativeBackend::prepare`] precomputes the heavy state once per weight
+//! bundle — the stacked gate spectra and projection spectra of §4.1 (the
+//! "BRAM-resident `F(w)`") plus bias/peephole vectors and PWL tables — into
+//! one [`NativePrepared`] shared by every replica through an `Arc`.
+//! [`NativeBackend::build_stages`] is then cheap: each replica's executors
+//! hold an `Arc` reference plus their own scratch buffers.
+//!
 //! Stage 1 runs the four fused gate convolutions through the optimized Eq 6
-//! operator ([`matvec_eq6_into`]) over spectra precomputed at build time
-//! (the "BRAM-resident `F(w)`" of §4.1). Stage 2 is the element-wise cluster
-//! of Eq 1a–1f with the same arithmetic — term order included — as
-//! [`CellF32`](crate::lstm::cell_f32::CellF32), so pipeline outputs are
-//! bit-identical to the reference engine's. Stage 3 applies the projection
-//! convolution (Eq 1g) or identity padding.
+//! operator ([`matvec_eq6_into`]) over the precomputed spectra. Stage 2 is
+//! the element-wise cluster of Eq 1a–1f with the same arithmetic — term
+//! order included — as [`CellF32`](crate::lstm::cell_f32::CellF32), so
+//! pipeline outputs are bit-identical to the reference engine's. Stage 3
+//! applies the projection convolution (Eq 1g) or identity padding.
 
 use crate::circulant::conv::{matvec_eq6_into, Eq6Scratch};
 use crate::circulant::spectral::SpectralWeights;
@@ -15,8 +21,11 @@ use crate::circulant::BlockCirculant;
 use crate::lstm::activations::{sigmoid, tanh, ActivationMode, PwlTable};
 use crate::lstm::weights::{LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
 use crate::num::fxp::Q;
-use crate::runtime::backend::{Backend, StageExecutor, StageSet};
+use crate::runtime::backend::{
+    downcast_prepared, Backend, PreparedWeights, StageExecutor, StageSet,
+};
 use anyhow::{ensure, Result};
+use std::sync::Arc;
 
 /// The default backend: pure-Rust float execution of the serving pipeline.
 #[derive(Debug, Clone, Copy)]
@@ -40,12 +49,33 @@ impl NativeBackend {
     }
 }
 
+/// Everything stage construction derives from the weights, computed once by
+/// [`NativeBackend::prepare`] and shared read-only across replicas.
+pub struct NativePrepared {
+    /// Precomputed spectra of the `(4·p, q)` row-stacked gate matrices,
+    /// gates in `i, f, g, o` order (input-block DFTs shared across gates).
+    gates: SpectralWeights,
+    /// Projection spectra (Eq 1g), when the spec has a projection.
+    proj: Option<SpectralWeights>,
+    bias: [Vec<f32>; 4],
+    /// Peephole vectors `w_ic, w_fc, w_oc` (all-zero when the spec has
+    /// none: built once here, not per frame in the hot loop).
+    peephole: [Vec<f32>; 3],
+    pwl_sigmoid: PwlTable,
+    pwl_tanh: PwlTable,
+    mode: ActivationMode,
+    h: usize,
+    hidden_pad: usize,
+    out_pad: usize,
+    fused_len: usize,
+}
+
 impl Backend for NativeBackend {
     fn name(&self) -> String {
         "native".to_string()
     }
 
-    fn build_stages(&self, weights: &LstmWeights) -> Result<StageSet> {
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
         ensure!(
             !weights.layers.is_empty() && !weights.layers[0].is_empty(),
             "weights have no layers"
@@ -69,32 +99,40 @@ impl Backend for NativeBackend {
             }
             BlockCirculant::from_vectors(4 * hidden_pad, fused_len, spec.k, w)
         };
-        let stage1 = NativeStage1 {
+        let prepared = NativePrepared {
             gates: SpectralWeights::precompute(&stacked),
-            h,
-            hidden_pad,
-            fused_len,
-            acc: vec![0.0; 4 * hidden_pad],
-            scratch: Eq6Scratch::default(),
-        };
-        let stage2 = NativeStage2 {
+            proj: lw.proj.as_ref().map(SpectralWeights::precompute),
             bias: lw.bias.clone(),
-            // Zero peepholes when the spec has none: built once here, not
-            // per frame in the hot loop.
             peephole: lw
                 .peephole
                 .clone()
                 .unwrap_or_else(|| [vec![0.0; h], vec![0.0; h], vec![0.0; h]]),
-            h,
-            mode: self.mode,
             pwl_sigmoid: PwlTable::sigmoid(q),
             pwl_tanh: PwlTable::tanh(q),
-        };
-        let stage3 = NativeStage3 {
-            proj: lw.proj.as_ref().map(SpectralWeights::precompute),
+            mode: self.mode,
+            h,
             hidden_pad,
             out_pad,
-            padded: vec![0.0; hidden_pad],
+            fused_len,
+        };
+        Ok(Arc::new(PreparedWeights::new(
+            spec.clone(),
+            self.name(),
+            Box::new(Arc::new(prepared)),
+        )))
+    }
+
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet> {
+        let w: &Arc<NativePrepared> = downcast_prepared(prepared, "native")?;
+        let stage1 = NativeStage1 {
+            w: Arc::clone(w),
+            acc: vec![0.0; 4 * w.hidden_pad],
+            scratch: Eq6Scratch::default(),
+        };
+        let stage2 = NativeStage2 { w: Arc::clone(w) };
+        let stage3 = NativeStage3 {
+            w: Arc::clone(w),
+            padded: vec![0.0; w.hidden_pad],
             scratch: Eq6Scratch::default(),
         };
         Ok(StageSet {
@@ -108,128 +146,134 @@ impl Backend for NativeBackend {
 /// Stage 1: the four fused gate circulant convolutions (Eq 6), stacked
 /// row-wise into one operator so the input-block DFTs are shared.
 struct NativeStage1 {
-    /// Precomputed spectra of the `(4·p, q)` row-stacked gate matrices,
-    /// gates in `i, f, g, o` order.
-    gates: SpectralWeights,
-    h: usize,
-    hidden_pad: usize,
-    fused_len: usize,
+    w: Arc<NativePrepared>,
     /// Stacked output buffer (`4 · hidden_pad`), reused per frame.
     acc: Vec<f32>,
     scratch: Eq6Scratch,
 }
 
 impl StageExecutor for NativeStage1 {
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
         ensure!(inputs.len() == 1, "stage1 takes one input (fused operand)");
+        ensure!(outputs.len() == 1, "stage1 writes one output (a)");
+        let w = &self.w;
         let fused = inputs[0];
         ensure!(
-            fused.len() == self.fused_len,
+            fused.len() == w.fused_len,
             "fused operand length {} != {}",
             fused.len(),
-            self.fused_len
+            w.fused_len
         );
-        matvec_eq6_into(&self.gates, fused, &mut self.acc, &mut self.scratch);
-        let mut a = vec![0.0f32; 4 * self.h];
+        let a = &mut *outputs[0];
+        ensure!(a.len() == 4 * w.h, "a length {} != {}", a.len(), 4 * w.h);
+        matvec_eq6_into(&w.gates, fused, &mut self.acc, &mut self.scratch);
         for g in 0..4 {
-            a[g * self.h..(g + 1) * self.h]
-                .copy_from_slice(&self.acc[g * self.hidden_pad..g * self.hidden_pad + self.h]);
+            a[g * w.h..(g + 1) * w.h]
+                .copy_from_slice(&self.acc[g * w.hidden_pad..g * w.hidden_pad + w.h]);
         }
-        Ok(vec![a])
+        Ok(())
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![4 * self.w.h]
     }
 }
 
 /// Stage 2: the element-wise cluster (Eq 1a–1f), mirroring `CellF32::step`
 /// term for term so the pipeline reproduces the reference engine exactly.
 struct NativeStage2 {
-    bias: [Vec<f32>; 4],
-    /// Peephole vectors `w_ic, w_fc, w_oc` (all-zero when the spec has none).
-    peephole: [Vec<f32>; 3],
-    h: usize,
-    mode: ActivationMode,
-    pwl_sigmoid: PwlTable,
-    pwl_tanh: PwlTable,
+    w: Arc<NativePrepared>,
 }
 
 impl NativeStage2 {
     #[inline]
     fn act_sigma(&self, x: f32) -> f32 {
-        match self.mode {
+        match self.w.mode {
             ActivationMode::Exact => sigmoid(x),
-            ActivationMode::Pwl => self.pwl_sigmoid.eval(x),
+            ActivationMode::Pwl => self.w.pwl_sigmoid.eval(x),
         }
     }
 
     #[inline]
     fn act_h(&self, x: f32) -> f32 {
-        match self.mode {
+        match self.w.mode {
             ActivationMode::Exact => tanh(x),
-            ActivationMode::Pwl => self.pwl_tanh.eval(x),
+            ActivationMode::Pwl => self.w.pwl_tanh.eval(x),
         }
     }
 }
 
 impl StageExecutor for NativeStage2 {
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
         ensure!(inputs.len() == 2, "stage2 takes [a, c_prev]");
         let (a, c_prev) = (inputs[0], inputs[1]);
-        let h = self.h;
+        let h = self.w.h;
         ensure!(a.len() >= 4 * h, "gate pre-activations too short: {}", a.len());
         ensure!(c_prev.len() == h, "cell state length {} != {h}", c_prev.len());
+        let (m, c) = match outputs {
+            [m, c] => (m, c),
+            _ => anyhow::bail!("stage2 writes [m, c]"),
+        };
+        ensure!(m.len() == h && c.len() == h, "stage2 outputs must be length {h}");
 
-        let peep = &self.peephole;
-        let mut m = vec![0.0f32; h];
-        let mut c = vec![0.0f32; h];
+        let peep = &self.w.peephole;
+        let bias = &self.w.bias;
         for n in 0..h {
             // Eq 1a, 1b: peepholes read c_{t-1}.
-            let i =
-                self.act_sigma(a[GATE_I * h + n] + peep[0][n] * c_prev[n] + self.bias[GATE_I][n]);
-            let f =
-                self.act_sigma(a[GATE_F * h + n] + peep[1][n] * c_prev[n] + self.bias[GATE_F][n]);
+            let i = self.act_sigma(a[GATE_I * h + n] + peep[0][n] * c_prev[n] + bias[GATE_I][n]);
+            let f = self.act_sigma(a[GATE_F * h + n] + peep[1][n] * c_prev[n] + bias[GATE_F][n]);
             // Eq 1c (tanh candidate — see cell_f32 module docs).
-            let g = self.act_h(a[GATE_G * h + n] + self.bias[GATE_G][n]);
+            let g = self.act_h(a[GATE_G * h + n] + bias[GATE_G][n]);
             // Eq 1d.
             let cn = f * c_prev[n] + g * i;
             // Eq 1e: output peephole reads c_t.
-            let o = self.act_sigma(a[GATE_O * h + n] + peep[2][n] * cn + self.bias[GATE_O][n]);
+            let o = self.act_sigma(a[GATE_O * h + n] + peep[2][n] * cn + bias[GATE_O][n]);
             // Eq 1f.
             m[n] = o * self.act_h(cn);
             c[n] = cn;
         }
-        Ok(vec![m, c])
+        Ok(())
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![self.w.h, self.w.h]
     }
 }
 
 /// Stage 3: projection convolution (Eq 1g) or identity padding.
 struct NativeStage3 {
-    proj: Option<SpectralWeights>,
-    hidden_pad: usize,
-    out_pad: usize,
+    w: Arc<NativePrepared>,
     /// `m_t` zero-padded to the projection operand width, reused per frame.
     padded: Vec<f32>,
     scratch: Eq6Scratch,
 }
 
 impl StageExecutor for NativeStage3 {
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
         ensure!(inputs.len() == 1, "stage3 takes one input (m_t)");
+        ensure!(outputs.len() == 1, "stage3 writes one output (y)");
+        let w = &self.w;
         let m = inputs[0];
-        let mut y = vec![0.0f32; self.out_pad];
-        match &self.proj {
+        let y = &mut *outputs[0];
+        ensure!(y.len() == w.out_pad, "y length {} != {}", y.len(), w.out_pad);
+        match &w.proj {
             Some(p) => {
-                for v in self.padded.iter_mut() {
-                    *v = 0.0;
-                }
-                let n = m.len().min(self.hidden_pad);
+                self.padded.fill(0.0);
+                let n = m.len().min(w.hidden_pad);
                 self.padded[..n].copy_from_slice(&m[..n]);
-                matvec_eq6_into(p, &self.padded, &mut y, &mut self.scratch);
+                matvec_eq6_into(p, &self.padded, y, &mut self.scratch);
             }
             None => {
-                let n = m.len().min(self.out_pad);
+                y.fill(0.0);
+                let n = m.len().min(w.out_pad);
                 y[..n].copy_from_slice(&m[..n]);
             }
         }
-        Ok(vec![y])
+        Ok(())
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![self.w.out_pad]
     }
 }
 
@@ -243,7 +287,7 @@ mod tests {
     /// Run the three native stages by hand and compare against the engine.
     fn stages_match_engine(spec: &LstmSpec, seed: u64, steps: usize) {
         let w = LstmWeights::random(spec, seed);
-        let mut stages = NativeBackend::default().build_stages(&w).unwrap();
+        let mut stages = NativeBackend::default().build_single(&w).unwrap();
         let cell = CellF32::new(spec, 0, &w.layers[0][0], ActivationMode::Exact);
         let mut st = cell.zero_state();
 
@@ -312,5 +356,40 @@ mod tests {
             ..LstmSpec::tiny(4)
         };
         stages_match_engine(&spec, 17, 4);
+    }
+
+    #[test]
+    fn replicas_share_prepared_spectra_and_agree() {
+        // Two replicas built from ONE preparation produce identical outputs
+        // (the spectra are shared, not recomputed).
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 23);
+        let backend = NativeBackend::default();
+        let prepared = backend.prepare(&w).unwrap();
+        let mut r1 = backend.build_stages(&prepared).unwrap();
+        let mut r2 = backend.build_stages(&prepared).unwrap();
+        let fused = vec![0.5f32; spec.fused_in_dim(0)];
+        let a1 = r1.stage1.run(&[&fused]).unwrap().remove(0);
+        let a2 = r2.stage1.run(&[&fused]).unwrap().remove(0);
+        assert_eq!(a1, a2, "replicas over shared spectra must agree exactly");
+    }
+
+    #[test]
+    fn write_into_reuses_buffers_and_fully_overwrites() {
+        // Poisoned recycled buffers must be fully overwritten by run_into.
+        let spec = LstmSpec {
+            proj_dim: None,
+            ..LstmSpec::tiny(4)
+        };
+        let w = LstmWeights::random(&spec, 31);
+        let mut stages = NativeBackend::default().build_single(&w).unwrap();
+        let out_pad = spec.pad(spec.out_dim());
+        let m = vec![0.0f32; spec.hidden_dim];
+        let mut y = vec![f32::NAN; out_pad];
+        stages
+            .stage3
+            .run_into(&[&m], &mut [y.as_mut_slice()])
+            .unwrap();
+        assert!(y.iter().all(|v| v.is_finite()), "stale buffer bytes leaked");
     }
 }

@@ -1,13 +1,19 @@
 //! The PJRT serving backend (feature `pjrt`): executes the AOT-compiled HLO
 //! artifacts from the JAX layer through the PJRT CPU client.
 //!
-//! Each stage executor owns its compiled [`Executable`] plus the prebuilt
-//! weight literals (§Perf: literal construction of the big weight tensors
-//! per frame was the serving pipeline's top cost before prebuilding).
+//! [`PjrtBackend::prepare`] computes the spectral-weight bundle (the FFTs of
+//! every weight block — the expensive part) once per weight bundle;
+//! [`PjrtBackend::build_stages`] then loads the three stage executables and
+//! wraps the shared buffers as literals per replica (§Perf: literal
+//! construction of the big weight tensors per frame was the serving
+//! pipeline's top cost before prebuilding; recomputing the bundle per
+//! replica would be the analogous cost at replication time).
 
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::artifact::{ArtifactDir, SpectralBundle};
-use crate::runtime::backend::{Backend, StageExecutor, StageSet};
+use crate::runtime::artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
+use crate::runtime::backend::{
+    downcast_prepared, Backend, PreparedWeights, StageExecutor, StageSet,
+};
 use crate::runtime::client::{Executable, Runtime};
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
@@ -29,20 +35,46 @@ impl PjrtBackend {
     }
 }
 
+/// Shared per-weight-bundle state: the precomputed spectral buffers plus the
+/// resolved artifact config. Plain flat data — `Send + Sync`.
+pub struct PjrtPrepared {
+    cfg: ConfigArtifacts,
+    bundle: SpectralBundle,
+    h: usize,
+    out_pad: usize,
+    has_proj: bool,
+}
+
 impl Backend for PjrtBackend {
     fn name(&self) -> String {
         format!("pjrt:{} ({})", self.config, self.rt.platform())
     }
 
-    fn build_stages(&self, weights: &LstmWeights) -> Result<StageSet> {
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
         let cfg = self
             .art
             .config(&self.config)
-            .with_context(|| format!("config {} not in manifest", self.config))?;
+            .with_context(|| format!("config {} not in manifest", self.config))?
+            .clone();
         let spec = &weights.spec;
         ensure!(spec.k == cfg.k, "weights k={} vs artifact k={}", spec.k, cfg.k);
-        let bundle = SpectralBundle::from_weights(weights, 0, 0);
-        let h = spec.hidden_dim;
+        let prepared = PjrtPrepared {
+            cfg,
+            bundle: SpectralBundle::from_weights(weights, 0, 0),
+            h: spec.hidden_dim,
+            out_pad: spec.pad(spec.out_dim()),
+            has_proj: spec.proj_dim.is_some(),
+        };
+        Ok(Arc::new(PreparedWeights::new(
+            spec.clone(),
+            "pjrt",
+            Box::new(prepared),
+        )))
+    }
+
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet> {
+        let p: &PjrtPrepared = downcast_prepared(prepared, "pjrt")?;
+        let (cfg, bundle, h) = (&p.cfg, &p.bundle, p.h);
 
         let exe1 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage1))?;
         let exe2 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage2))?;
@@ -53,6 +85,7 @@ impl Backend for PjrtBackend {
             wre: Executable::literal_f32(&bundle.gates_re, &gd)?,
             wim: Executable::literal_f32(&bundle.gates_im, &gd)?,
             exe: exe1,
+            h,
         };
         let stage2 = PjrtStage2 {
             bias: Executable::literal_f32(&bundle.bias, &[4, h as i64])?,
@@ -65,8 +98,9 @@ impl Backend for PjrtBackend {
             pre: Executable::literal_f32(&bundle.proj_re, &pd)?,
             pim: Executable::literal_f32(&bundle.proj_im, &pd)?,
             exe: exe3,
-            has_proj: spec.proj_dim.is_some(),
+            has_proj: p.has_proj,
             h,
+            out_pad: p.out_pad,
         };
         Ok(StageSet {
             stage1: Box::new(stage1),
@@ -80,6 +114,7 @@ struct PjrtStage1 {
     exe: Executable,
     wre: xla::Literal,
     wim: xla::Literal,
+    h: usize,
 }
 
 struct PjrtStage2 {
@@ -95,6 +130,7 @@ struct PjrtStage3 {
     pim: xla::Literal,
     has_proj: bool,
     h: usize,
+    out_pad: usize,
 }
 
 // SAFETY: same rationale as `Executable`'s Send impl in `client` — each
@@ -105,36 +141,71 @@ unsafe impl Send for PjrtStage1 {}
 unsafe impl Send for PjrtStage2 {}
 unsafe impl Send for PjrtStage3 {}
 
+/// Copy an executable's output row into a recycled buffer (artifact outputs
+/// may carry extra padding past the contract length).
+fn copy_out(src: &[f32], dst: &mut [f32]) -> Result<()> {
+    ensure!(
+        src.len() >= dst.len(),
+        "stage output length {} < buffer length {}",
+        src.len(),
+        dst.len()
+    );
+    dst.copy_from_slice(&src[..dst.len()]);
+    Ok(())
+}
+
 impl StageExecutor for PjrtStage1 {
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
         ensure!(inputs.len() == 1, "stage1 takes one input (fused operand)");
+        ensure!(outputs.len() == 1, "stage1 writes one output (a)");
         let fused = inputs[0];
         let lit = Executable::literal_f32(fused, &[1, fused.len() as i64])?;
-        self.exe.run_literals(&[&self.wre, &self.wim, &lit])
+        let outs = self.exe.run_literals(&[&self.wre, &self.wim, &lit])?;
+        ensure!(!outs.is_empty(), "stage1 artifact must return a");
+        copy_out(&outs[0], &mut *outputs[0])
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![4 * self.h]
     }
 }
 
 impl StageExecutor for PjrtStage2 {
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
         ensure!(inputs.len() == 2, "stage2 takes [a, c_prev]");
+        ensure!(outputs.len() == 2, "stage2 writes [m, c]");
         let a = Executable::literal_f32(inputs[0], &[1, 4, self.h as i64])?;
         let c = Executable::literal_f32(inputs[1], &[1, self.h as i64])?;
-        let outs = self
-            .exe
-            .run_literals(&[&a, &c, &self.bias, &self.peep])?;
+        let outs = self.exe.run_literals(&[&a, &c, &self.bias, &self.peep])?;
         ensure!(outs.len() >= 2, "stage2 artifact must return (m, c)");
-        Ok(outs)
+        let (m_out, c_out) = match outputs {
+            [m, c] => (m, c),
+            _ => anyhow::bail!("stage2 writes [m, c]"),
+        };
+        copy_out(&outs[0], &mut **m_out)?;
+        copy_out(&outs[1], &mut **c_out)
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![self.h, self.h]
     }
 }
 
 impl StageExecutor for PjrtStage3 {
-    fn run(&mut self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
         ensure!(inputs.len() == 1, "stage3 takes one input (m_t)");
+        ensure!(outputs.len() == 1, "stage3 writes one output (y)");
         let m = Executable::literal_f32(inputs[0], &[1, self.h as i64])?;
-        if self.has_proj {
-            self.exe.run_literals(&[&self.pre, &self.pim, &m])
+        let outs = if self.has_proj {
+            self.exe.run_literals(&[&self.pre, &self.pim, &m])?
         } else {
-            self.exe.run_literals(&[&m])
-        }
+            self.exe.run_literals(&[&m])?
+        };
+        ensure!(!outs.is_empty(), "stage3 artifact must return y");
+        copy_out(&outs[0], &mut *outputs[0])
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![self.out_pad]
     }
 }

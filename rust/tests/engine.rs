@@ -1,0 +1,215 @@
+//! Replicated serving-engine tests — native backend, no artifacts.
+//!
+//! The engine must be a pure throughput transform: whatever the replica
+//! count, lane routing, or interleaving order, every utterance's outputs
+//! are bit-identical to the `CellF32` reference engine, and no frame is
+//! ever lost or duplicated.
+
+use clstm::coordinator::batcher::QueuedUtterance;
+use clstm::coordinator::engine::{EngineConfig, ServeEngine};
+use clstm::lstm::activations::ActivationMode;
+use clstm::lstm::cell_f32::CellF32;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::runtime::native::NativeBackend;
+use clstm::util::prng::Xoshiro256;
+
+fn random_frames(spec: &LstmSpec, rng: &mut Xoshiro256, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Reference outputs from the plain engine, one stream at a time.
+fn reference_outputs(
+    spec: &LstmSpec,
+    w: &LstmWeights,
+    utts: &[Vec<Vec<f32>>],
+) -> Vec<Vec<Vec<f32>>> {
+    let cell = CellF32::new(spec, 0, &w.layers[0][0], ActivationMode::Exact);
+    utts.iter()
+        .map(|frames| {
+            let mut st = cell.zero_state();
+            frames.iter().map(|x| cell.step(x, &mut st)).collect()
+        })
+        .collect()
+}
+
+/// Outputs are bit-identical to `CellF32` for 1, 2, and 4 replicas — the
+/// replica count and interleaving order must not perturb a single ULP.
+#[test]
+fn engine_bit_identical_to_cell_f32_across_replica_counts() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 77);
+    let mut rng = Xoshiro256::seed_from_u64(41);
+    let lens = [5usize, 9, 4, 7, 6, 8, 3, 10];
+    let frames: Vec<Vec<Vec<f32>>> = lens
+        .iter()
+        .map(|&n| random_frames(&spec, &mut rng, n))
+        .collect();
+    let want = reference_outputs(&spec, &w, &frames);
+
+    for replicas in [1usize, 2, 4] {
+        let mut engine = ServeEngine::build(
+            &NativeBackend::default(),
+            &w,
+            EngineConfig {
+                replicas,
+                ..EngineConfig::default()
+            },
+        )
+        .expect("engine builds");
+        assert_eq!(engine.replicas(), replicas);
+        let utts: Vec<QueuedUtterance> = frames
+            .iter()
+            .enumerate()
+            .map(|(i, f)| QueuedUtterance::new(i as u64, f.clone()))
+            .collect();
+        let completions = engine.serve_all(utts).expect("serve_all");
+        assert_eq!(completions.len(), lens.len());
+        for c in &completions {
+            assert!(c.lane < replicas, "lane {} out of range", c.lane);
+            let id = c.utt.id as usize;
+            assert_eq!(c.outputs.len(), lens[id], "utt {id} frame count");
+            for (t, y) in c.outputs.iter().enumerate() {
+                let wy = &want[id][t];
+                assert_eq!(y.len(), wy.len());
+                for i in 0..y.len() {
+                    assert!(
+                        y[i].to_bits() == wy[i].to_bits(),
+                        "replicas={replicas} utt {id} frame {t} [{i}]: \
+                         engine {} vs reference {}",
+                        y[i],
+                        wy[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property test: across random utterance lengths and ≥2 replicas, total
+/// frames out == frames in, and every utterance completes exactly once
+/// with exactly its own frame count.
+#[test]
+fn frames_conserved_under_random_lengths_and_replication() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 5);
+    let mut rng = Xoshiro256::seed_from_u64(0xBEEF);
+    for (round, &replicas) in [2usize, 3, 2].iter().enumerate() {
+        let n = 6 + rng.index(8);
+        let lens: Vec<usize> = (0..n).map(|_| 1 + rng.index(12)).collect();
+        let frames_in: usize = lens.iter().sum();
+        let utts: Vec<QueuedUtterance> = lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| {
+                QueuedUtterance::new(i as u64, random_frames(&spec, &mut rng, len))
+            })
+            .collect();
+        let mut engine = ServeEngine::build(
+            &NativeBackend::default(),
+            &w,
+            EngineConfig {
+                replicas,
+                streams_per_lane: 3,
+                ..EngineConfig::default()
+            },
+        )
+        .expect("engine builds");
+        let completions = engine.serve_all(utts).expect("serve_all");
+        assert_eq!(completions.len(), n, "round {round}: one completion per utterance");
+        let mut seen = vec![false; n];
+        let mut frames_out = 0usize;
+        for c in &completions {
+            let id = c.utt.id as usize;
+            assert!(!seen[id], "round {round}: utt {id} completed twice");
+            seen[id] = true;
+            assert_eq!(c.outputs.len(), lens[id], "round {round}: utt {id}");
+            assert_eq!(c.frame_latency_us.len(), lens[id]);
+            frames_out += c.outputs.len();
+        }
+        assert_eq!(frames_out, frames_in, "round {round}: frame conservation");
+    }
+}
+
+/// Continuous admission: a straggler utterance must not hold back short
+/// ones submitted after it — the old wave barrier would have.
+#[test]
+fn straggler_does_not_stall_backfilled_streams() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 9);
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let mut utts = vec![QueuedUtterance::new(0, random_frames(&spec, &mut rng, 48))];
+    for i in 1..=6 {
+        utts.push(QueuedUtterance::new(i, random_frames(&spec, &mut rng, 4)));
+    }
+    let mut engine = ServeEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig {
+            replicas: 1,
+            streams_per_lane: 4,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine builds");
+    let completions = engine.serve_all(utts).expect("serve_all");
+    assert_eq!(completions.len(), 7);
+    // All six short utterances retire (and are backfilled) while the
+    // 48-frame straggler is still in flight; it completes last.
+    assert_eq!(
+        completions.last().unwrap().utt.id,
+        0,
+        "straggler must finish last; completion order: {:?}",
+        completions.iter().map(|c| c.utt.id).collect::<Vec<_>>()
+    );
+    // Queue-wait/service split is populated and sane.
+    for c in &completions {
+        assert!(c.queue_wait_us >= 0.0);
+        assert!(c.service_us > 0.0);
+    }
+}
+
+/// A frame longer than the padded input dim is rejected at submit time —
+/// an error to the caller, not a panic inside a lane.
+#[test]
+fn overlong_frame_is_rejected_at_submit() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 3);
+    let mut engine = ServeEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig::default(),
+    )
+    .expect("engine builds");
+    let in_pad = spec.pad(spec.layer_input_dim(0));
+    let bad = QueuedUtterance::new(7, vec![vec![0.0; in_pad + 1]]);
+    assert!(engine.submit(bad).is_err(), "overlong frame must be rejected");
+    assert!(engine.healthy(), "no lane died");
+    assert_eq!(engine.pending(), 0);
+}
+
+/// Zero-frame utterances complete immediately instead of wedging a lane.
+#[test]
+fn zero_frame_utterance_completes_empty() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 3);
+    let mut engine = ServeEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig::default(),
+    )
+    .expect("engine builds");
+    let ticket = engine.submit(QueuedUtterance::new(42, Vec::new())).unwrap();
+    assert_eq!(ticket.utt_id, 42);
+    let c = engine.recv().expect("completion");
+    assert_eq!(c.utt.id, 42);
+    assert!(c.outputs.is_empty());
+    assert_eq!(engine.pending(), 0);
+    assert!(engine.recv().is_none(), "nothing pending");
+}

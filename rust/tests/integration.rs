@@ -134,20 +134,51 @@ fn native_pipeline_without_projection() {
 }
 
 /// End-to-end serve loop on the native backend: workload generation,
-/// batcher waves, pipeline, classifier decode, PER.
+/// continuous admission through the engine, classifier decode, PER.
 #[test]
 fn native_serve_workload_end_to_end() {
-    use clstm::coordinator::server::serve_workload;
+    use clstm::coordinator::server::{serve_workload, ServeOptions};
     use clstm::runtime::native::NativeBackend;
 
     let spec = LstmSpec::tiny(4);
     let w = LstmWeights::random(&spec, 77);
-    let report = serve_workload(&NativeBackend::default(), &w, 6, 3).expect("serve");
+    let opts = ServeOptions {
+        streams_per_lane: 3,
+        ..ServeOptions::default()
+    };
+    let report = serve_workload(&NativeBackend::default(), &w, 6, &opts).expect("serve");
     assert_eq!(report.config, "native");
+    assert_eq!(report.replicas, 1);
     assert_eq!(report.metrics.utterances, 6);
     assert!(report.metrics.frames > 0);
     assert!(report.per.is_finite() && report.per >= 0.0, "per {}", report.per);
     assert!(report.metrics.latency_p95_us() >= report.metrics.latency_p50_us());
+    assert!(report.metrics.latency_p99_us() >= report.metrics.latency_p95_us());
+}
+
+/// The same workload served with 2 replicas and open-loop Poisson arrivals:
+/// the SLA split (queue wait vs service) is populated and PER is unchanged
+/// territory (same decode path).
+#[test]
+fn native_serve_workload_replicated_poisson() {
+    use clstm::coordinator::server::{serve_workload, Arrival, ServeOptions};
+    use clstm::runtime::native::NativeBackend;
+
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 77);
+    let opts = ServeOptions {
+        replicas: 2,
+        streams_per_lane: 3,
+        arrival: Arrival::Poisson { rate: 200.0 },
+        ..ServeOptions::default()
+    };
+    let report = serve_workload(&NativeBackend::default(), &w, 6, &opts).expect("serve");
+    assert_eq!(report.replicas, 2);
+    assert_eq!(report.metrics.utterances, 6);
+    assert!(report.metrics.service_mean_us() > 0.0);
+    assert!(report.metrics.queue_wait_mean_us() >= 0.0);
+    assert!(report.metrics.summary().contains("queue wait"));
+    assert!(report.per.is_finite() && report.per >= 0.0);
 }
 
 // ------------------------------------------------------- golden vectors
