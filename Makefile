@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench artifacts table1-per
+.PHONY: build test bench serve-bench serve-fxp artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -16,6 +16,14 @@ bench:
 # Replica-scaling serving benchmark (engine lanes 1/2/4, CI-sized budgets).
 serve-bench:
 	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_pipeline
+
+# Fixed-point serving smoke test: a few utterances through the 16-bit
+# datapath on 2 lanes; asserts the report prints a nonzero workload PER.
+serve-fxp:
+	cd rust && cargo run --release -- serve --backend fxp --replicas 2 --utts 4 \
+		| tee /tmp/clstm-serve-fxp.out
+	grep -E "workload PER: [0-9]+\.[0-9]+%" /tmp/clstm-serve-fxp.out
+	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-fxp.out
 
 # JAX AOT lowering -> rust/artifacts/*.hlo.txt + manifest.json + golden
 # bundle (enables the golden-vector integration tests and the PJRT backend).

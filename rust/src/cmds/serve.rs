@@ -1,6 +1,10 @@
 //! `clstm serve` — serve SynthTIMIT through the replicated engine.
 //!
 //! `--backend native` (default) runs everywhere with zero artifacts;
+//! `--backend fxp` serves on the bit-accurate 16-bit datapath (§4.2) and
+//! also serves the same workload on the float engine, so one command
+//! reproduces the paper's float-vs-fixed accuracy comparison (`--q-format`
+//! overrides the range-analysis data format);
 //! `--backend pjrt` executes the AOT artifacts and requires both the `pjrt`
 //! cargo feature and a populated artifacts directory (`make artifacts`).
 //!
@@ -78,7 +82,16 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     let n_utts = cli.get_usize("utts");
     let opts = serve_options(cli)?;
 
-    let report: ServeReport = match cli.get_str("backend").as_str() {
+    // --q-format drives the fxp datapath only; validate it up front so a
+    // typo'd or misplaced format errors on every backend instead of being
+    // silently ignored.
+    let backend_name = cli.get_str("backend");
+    let q_override = cli.get_q_format("q-format").map_err(anyhow::Error::msg)?;
+    if q_override.is_some() && backend_name != "fxp" {
+        anyhow::bail!("--q-format applies to --backend fxp only (got --backend {backend_name})");
+    }
+
+    let report: ServeReport = match backend_name.as_str() {
         "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, &opts)?,
         "native" => {
             use clstm::coordinator::server::serve_workload;
@@ -90,12 +103,65 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
             );
             serve_workload(&NativeBackend::default(), &weights, n_utts, &opts)?
         }
-        other => anyhow::bail!("unknown --backend {other:?} (expected: native | pjrt)"),
+        "fxp" => serve_fxp(q_override, &label, &weights, n_utts, &opts)?,
+        other => anyhow::bail!(
+            "unknown --backend {other:?} (expected: {})",
+            clstm::runtime::backend::backend_names()
+        ),
     };
     println!("  backend: {} ({} replicas)", report.config, report.replicas);
     println!("  {}", report.metrics.summary());
     println!("  workload PER: {:.2}%", report.per);
     Ok(())
+}
+
+/// Serve on the 16-bit fixed-point backend, then serve the identical
+/// workload (same seed) on the float engine — the §4.2 float-vs-fixed
+/// accuracy comparison in one command.
+fn serve_fxp(
+    q_override: Option<clstm::num::fxp::Q>,
+    label: &str,
+    weights: &LstmWeights,
+    n_utts: usize,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    use clstm::coordinator::server::serve_workload;
+    use clstm::runtime::fxp::{FxpBackend, FXP_PER_DEGRADATION_BUDGET_PTS};
+    use clstm::runtime::native::NativeBackend;
+
+    // Resolve the data format once (the auto path scans every weight
+    // tensor) and hand the backend the resolved format, so `prepare`
+    // doesn't repeat the range analysis.
+    let q = q_override.unwrap_or_else(|| FxpBackend::recommend_q(weights));
+    let backend = FxpBackend {
+        q: Some(q),
+        ..FxpBackend::default()
+    };
+    println!(
+        "serving {label} on the fxp backend (Q{}.{} 16-bit datapath{}): \
+         {n_utts} utterances, {} replica(s) × {} streams, {:?} arrivals ...",
+        15 - q.frac,
+        q.frac,
+        if q_override.is_some() {
+            ""
+        } else {
+            ", range-analysis recommendation"
+        },
+        opts.replicas,
+        opts.streams_per_lane,
+        opts.arrival
+    );
+    let report = serve_workload(&backend, weights, n_utts, opts)?;
+
+    // §4.2 comparison: the same seeded workload through the float engine.
+    let float = serve_workload(&NativeBackend::default(), weights, n_utts, opts)?;
+    println!("  float-vs-fixed (§4.2):");
+    println!("    f32 PER: {:.2}%   fxp PER: {:.2}%", float.per, report.per);
+    println!(
+        "    degradation: {:+.2} points (budget: ≤ {FXP_PER_DEGRADATION_BUDGET_PTS})",
+        report.per - float.per
+    );
+    Ok(report)
 }
 
 #[cfg(feature = "pjrt")]

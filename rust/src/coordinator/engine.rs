@@ -8,7 +8,9 @@
 //! - the backend's [`prepare`](crate::runtime::backend::Backend::prepare)
 //!   step runs **once**, so all lanes share one copy of the precomputed
 //!   `F(w)` spectra through an `Arc` (the BRAM-resident weights of §4.1,
-//!   read by every replica);
+//!   read by every replica — for the `fxp` backend that shared copy is the
+//!   quantised `SpectralWeightsFx` bundle plus PWL tables, so N lanes
+//!   never re-quantise the weights);
 //! - each **lane** is one [`ClstmPipeline`] owned by a worker thread that
 //!   interleaves up to `streams_per_lane` utterances and backfills from its
 //!   queue the moment a stream retires — continuous admission, no wave

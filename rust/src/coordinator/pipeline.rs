@@ -17,8 +17,12 @@
 //!
 //! Which hardware/library executes each stage is a [`Backend`] concern: the
 //! default [`NativeBackend`](crate::runtime::native::NativeBackend) needs
-//! nothing beyond this crate; `PjrtBackend` (feature `pjrt`) runs the AOT
-//! HLO artifacts.
+//! nothing beyond this crate; [`FxpBackend`](crate::runtime::fxp::FxpBackend)
+//! runs the bit-accurate 16-bit datapath of §4.2 behind the same f32 frame
+//! buffers (Q-format values round-trip losslessly through `f32`, so the
+//! recycled-buffer loop carries the fixed-point recurrent state without
+//! perturbing a bit); `PjrtBackend` (feature `pjrt`) runs the AOT HLO
+//! artifacts.
 
 use crate::coordinator::metrics::Metrics;
 use crate::lstm::config::LstmSpec;

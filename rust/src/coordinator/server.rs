@@ -2,6 +2,13 @@
 //! backend) → classifier → PER + throughput. The driver behind
 //! `clstm serve` and `examples/asr_pipeline.rs`.
 //!
+//! The [`ServeReport`] carries PER alongside the throughput metrics for
+//! every backend, so running the same seeded workload on two backends
+//! compares their accuracy directly — `clstm serve --backend fxp` uses
+//! exactly this to reproduce the §4.2 float-vs-fixed comparison (the fxp
+//! backend's outputs are dequantised i16s, decoded by the same host-side
+//! classifier as the float engines', mirroring ESE's host softmax).
+//!
 //! Admission is **continuous**: utterances flow batcher → engine the moment
 //! a lane has room and completions are drained as they land, so a straggler
 //! utterance never stalls the rest of the workload (the old wave barrier is

@@ -11,8 +11,10 @@
 //! clstm codegen           # emit the HLS C++ for a scheduled design
 //! clstm simulate          # discrete-event pipeline simulation
 //! clstm serve             # serve SynthTIMIT through the replicated engine
-//!                         #   (--backend native | pjrt, --replicas N,
-//!                         #    --arrival closed|poisson --rate R)
+//!                         #   (--backend native | fxp | pjrt, --replicas N,
+//!                         #    --arrival closed|poisson --rate R;
+//!                         #    fxp runs the §4.2 16-bit datapath and prints
+//!                         #    the float-vs-fixed PER comparison)
 //! clstm quantize          # range analysis + fxp-vs-float accuracy report
 //! ```
 
@@ -37,9 +39,14 @@ fn main() {
     .opt(
         "backend",
         "native",
-        "serving backend: native | pjrt (pjrt needs --features pjrt + artifacts)",
+        "serving backend: native | fxp | pjrt (pjrt needs --features pjrt + artifacts)",
     )
-    .opt("utts", "8", "utterances to serve")
+    .opt(
+        "q-format",
+        "auto",
+        "fxp data format: auto (range analysis) | <frac bits> | qI.F (e.g. q3.12)",
+    )
+    .opt("utts", "24", "utterances to serve (sized so the PER comparison is meaningful)")
     .opt("streams", "4", "interleaved streams per pipeline lane")
     .opt("replicas", "1", "replicated pipeline lanes in the serving engine")
     .opt("arrival", "closed", "arrival process: closed | poisson")

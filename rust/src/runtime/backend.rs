@@ -22,8 +22,16 @@
 //!   the crate's own engines — precomputed [`SpectralWeights`]
 //!   (`F(w_ij)` of §4.1) through the Eq 6 circulant convolution and the
 //!   Eq 1 gate math — with zero external artifacts or libraries.
+//! - [`FxpBackend`](crate::runtime::fxp::FxpBackend) runs the bit-accurate
+//!   16-bit fixed-point datapath of §4.2 (quantised spectra, PWL
+//!   activations, Q-format element-wise ops), bit-identical to the `CellFx`
+//!   oracle at any replica count.
 //! - `PjrtBackend` (feature `pjrt`) executes the AOT-compiled HLO artifacts
 //!   from the JAX layer through the PJRT CPU client.
+//!
+//! The full backend name set is [`BACKEND_NAMES`]; diagnostics that reject
+//! a backend name (or mismatched prepared weights) list it so the error
+//! names every valid choice.
 //!
 //! ## Stage I/O contract
 //!
@@ -152,13 +160,24 @@ pub trait Backend {
     }
 }
 
+/// Every backend name the crate can serve with (the `pjrt` entry needs the
+/// cargo feature of the same name at build time). Error messages quote this
+/// set so a typo'd or mismatched backend name names every valid choice.
+pub const BACKEND_NAMES: [&str; 3] = ["native", "fxp", "pjrt"];
+
+/// `BACKEND_NAMES` rendered for diagnostics: `native | fxp | pjrt`.
+pub fn backend_names() -> String {
+    BACKEND_NAMES.join(" | ")
+}
+
 /// Shared guard for [`Backend::build_stages`] implementations: checks the
 /// prepared weights came from the named backend.
 pub fn ensure_backend(prepared: &PreparedWeights, expect: &str) -> Result<()> {
     ensure!(
         prepared.backend == expect,
-        "prepared weights were built by backend {:?}, not {expect:?}",
-        prepared.backend
+        "prepared weights were built by backend {:?}, not {expect:?} (valid backends: {})",
+        prepared.backend,
+        backend_names()
     );
     Ok(())
 }
@@ -166,9 +185,13 @@ pub fn ensure_backend(prepared: &PreparedWeights, expect: &str) -> Result<()> {
 /// Shared downcast helper with a uniform error message.
 pub fn downcast_prepared<T: 'static>(prepared: &PreparedWeights, expect: &str) -> Result<&T> {
     ensure_backend(prepared, expect)?;
-    prepared
-        .downcast::<T>()
-        .with_context(|| format!("prepared-weights payload is not the {expect} payload type"))
+    prepared.downcast::<T>().with_context(|| {
+        format!(
+            "prepared-weights payload is not the {expect} payload type \
+             (valid backends: {})",
+            backend_names()
+        )
+    })
 }
 
 #[cfg(test)]

@@ -1,0 +1,551 @@
+//! The fixed-point serving backend: the three pipeline stages executed on
+//! the bit-accurate 16-bit datapath of §4.2 (the arithmetic the generated
+//! FPGA design performs), behind the same [`Backend`] contract as the
+//! float backends.
+//!
+//! [`FxpBackend::prepare`] quantises the weight bundle once — per-gate
+//! [`FxConvPlan`]s over range-analysed [`SpectralWeightsFx`] spectra,
+//! Q-format biases/peepholes, and the quantised 22-segment PWL tables —
+//! into one [`FxpPrepared`] shared read-only by every replica lane.
+//! [`FxpBackend::build_stages`] is cheap: each replica's executors hold an
+//! `Arc` reference plus their own i16 scratch buffers.
+//!
+//! ## Boundary quantisation (why the f32 pipeline stays bit-exact)
+//!
+//! The coordinator's frame buffers are `f32`, but every value a stage
+//! emits is the *dequantisation of an i16*: `i / 2^frac` with `|i| < 2^15`
+//! is exactly representable in `f32`, and round-to-nearest re-quantisation
+//! recovers the identical raw `i16`. So quantise/dequantise at the stage
+//! boundary frames is lossless for values already on the Q-grid — the
+//! recurrent `y_{t-1}`/`c_{t-1}` state loops through the scheduler without
+//! perturbing a single bit, and the only true quantisation happens where
+//! the FPGA quantises too: raw input features entering stage 1. The
+//! serving pipeline is therefore **bit-identical to the single-threaded
+//! [`CellFx`](crate::lstm::cell_fxp::CellFx) oracle** at any replica count
+//! (`rust/tests/fxp_backend.rs` pins this).
+//!
+//! ## Q-format selection
+//!
+//! The data format is either passed explicitly (CLI `--q-format`) or
+//! recommended by the §4.2 range analysis ([`FxpBackend::recommend_q`]):
+//! the weight tensors are tracked through [`RangeTracker`] together with
+//! the ±8 gate pre-activation envelope the PWL tables are fitted over, and
+//! the widest-range class picks the shared datapath format — Q3.12 for
+//! every model in this repo, matching the paper.
+
+use crate::circulant::fxp_conv::{FxConvPlan, FxConvScratch};
+use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+use crate::lstm::activations::PwlTable;
+use crate::lstm::weights::{LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
+use crate::num::fxp::{Q, Rounding};
+use crate::quant::range::RangeTracker;
+use crate::runtime::backend::{
+    downcast_prepared, Backend, PreparedWeights, StageExecutor, StageSet,
+};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// §4.2 accuracy budget: the fxp datapath may degrade workload PER by at
+/// most this many absolute points over the f32 engine (the paper's "very
+/// small" degradation claim, pinned by the PER regression test).
+pub const FXP_PER_DEGRADATION_BUDGET_PTS: f64 = 0.5;
+
+/// The 16-bit fixed-point backend: serve the pipeline on the bit-accurate
+/// §4.2 datapath.
+#[derive(Debug, Clone, Copy)]
+pub struct FxpBackend {
+    /// Data Q-format (activations, cell state, inputs, outputs). `None` ⇒
+    /// recommend from the weight-bundle range analysis at `prepare` time.
+    pub q: Option<Q>,
+    /// Narrowing behaviour of every multiply in the datapath.
+    pub rounding: Rounding,
+}
+
+impl Default for FxpBackend {
+    fn default() -> Self {
+        Self {
+            q: None,
+            rounding: Rounding::Nearest,
+        }
+    }
+}
+
+impl FxpBackend {
+    /// Backend with an explicit data format.
+    pub fn new(q: Q) -> Self {
+        Self {
+            q: Some(q),
+            rounding: Rounding::Nearest,
+        }
+    }
+
+    /// Range-analysis recommendation (§4.2) for `weights`: track every
+    /// weight tensor class plus the ±8 pre-activation envelope the PWL
+    /// tables cover, and take the widest-range class's format as the shared
+    /// datapath format.
+    pub fn recommend_q(weights: &LstmWeights) -> Q {
+        let mut t = RangeTracker::new();
+        for dirs in &weights.layers {
+            for lw in dirs {
+                for g in &lw.gates {
+                    t.observe("gate_w", &g.w);
+                }
+                for b in &lw.bias {
+                    t.observe("bias", b);
+                }
+                if let Some(p) = &lw.peephole {
+                    for v in p {
+                        t.observe("peephole", v);
+                    }
+                }
+                if let Some(p) = &lw.proj {
+                    t.observe("proj_w", &p.w);
+                }
+            }
+        }
+        // Gate pre-activations can reach the edge of the PWL fitted range
+        // (σ over [−8, 8], Fig 4); the datapath format must cover it.
+        t.observe("preact_envelope", &[-8.0, 8.0]);
+        t.report(0).datapath_format()
+    }
+
+    /// The format `prepare` will use for `weights`.
+    pub fn resolve_q(&self, weights: &LstmWeights) -> Q {
+        self.q.unwrap_or_else(|| Self::recommend_q(weights))
+    }
+}
+
+/// Everything stage construction derives from the weights, quantised once
+/// by [`FxpBackend::prepare`] and shared read-only across replicas.
+pub struct FxpPrepared {
+    /// Data Q-format of every i16 the stages exchange.
+    pub q: Q,
+    rounding: Rounding,
+    /// Per-gate conv plans in `i, f, g, o` order — the same per-matrix
+    /// `quantize_auto` spectra as [`CellFx`](crate::lstm::cell_fxp::CellFx)
+    /// builds, so the serving datapath is bit-identical to the oracle.
+    gates: [FxConvPlan; 4],
+    proj: Option<FxConvPlan>,
+    bias: [Vec<i16>; 4],
+    peephole: Option<[Vec<i16>; 3]>,
+    pwl_sigmoid: PwlTable,
+    pwl_tanh: PwlTable,
+    h: usize,
+    /// Gate mat-vec output length (`hidden_pad`) — also the projection
+    /// operand length.
+    hidden_pad: usize,
+    out_pad: usize,
+    fused_len: usize,
+}
+
+impl Backend for FxpBackend {
+    fn name(&self) -> String {
+        "fxp".to_string()
+    }
+
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
+        ensure!(
+            !weights.layers.is_empty() && !weights.layers[0].is_empty(),
+            "weights have no layers"
+        );
+        let spec = &weights.spec;
+        let lw = &weights.layers[0][0];
+        let q = self.resolve_q(weights);
+        let rounding = self.rounding;
+        // Mirror CellFx::new operation-for-operation: per-matrix spectra
+        // quantised with their own auto format, data values in `q`.
+        let mk_plan = |m: &crate::circulant::BlockCirculant| {
+            let spec_f = SpectralWeights::precompute(m);
+            let fx = SpectralWeightsFx::quantize_auto(&spec_f);
+            FxConvPlan::new(fx, q, rounding)
+        };
+        let gates = [
+            mk_plan(&lw.gates[GATE_I]),
+            mk_plan(&lw.gates[GATE_F]),
+            mk_plan(&lw.gates[GATE_G]),
+            mk_plan(&lw.gates[GATE_O]),
+        ];
+        let hidden_pad = gates[0].weights.p * gates[0].weights.k;
+        let proj = lw.proj.as_ref().map(&mk_plan);
+        let out_pad = spec.pad(spec.out_dim());
+        if let Some(p) = &proj {
+            ensure!(
+                p.weights.p * p.weights.k == out_pad,
+                "projection rows {} != padded out dim {out_pad}",
+                p.weights.p * p.weights.k
+            );
+            ensure!(
+                p.weights.q * p.weights.k == hidden_pad,
+                "projection cols {} != padded hidden dim {hidden_pad}",
+                p.weights.q * p.weights.k
+            );
+        }
+        let prepared = FxpPrepared {
+            q,
+            rounding,
+            gates,
+            proj,
+            bias: [
+                q.quantize_slice(&lw.bias[GATE_I]),
+                q.quantize_slice(&lw.bias[GATE_F]),
+                q.quantize_slice(&lw.bias[GATE_G]),
+                q.quantize_slice(&lw.bias[GATE_O]),
+            ],
+            peephole: lw.peephole.as_ref().map(|p| {
+                [
+                    q.quantize_slice(&p[0]),
+                    q.quantize_slice(&p[1]),
+                    q.quantize_slice(&p[2]),
+                ]
+            }),
+            pwl_sigmoid: PwlTable::sigmoid(q),
+            pwl_tanh: PwlTable::tanh(q),
+            h: spec.hidden_dim,
+            hidden_pad,
+            out_pad,
+            fused_len: spec.fused_in_dim(0),
+        };
+        Ok(Arc::new(PreparedWeights::new(
+            spec.clone(),
+            self.name(),
+            Box::new(Arc::new(prepared)),
+        )))
+    }
+
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet> {
+        let w: &Arc<FxpPrepared> = downcast_prepared(prepared, "fxp")?;
+        let stage1 = FxpStage1 {
+            fused_q: vec![0; w.fused_len],
+            gate_out: std::array::from_fn(|_| vec![0i16; w.hidden_pad]),
+            scratch: FxConvScratch::for_plan(&w.gates[0]),
+            w: Arc::clone(w),
+        };
+        let stage2 = FxpStage2 {
+            a_q: vec![0; 4 * w.h],
+            c_q: vec![0; w.h],
+            w: Arc::clone(w),
+        };
+        let stage3 = FxpStage3 {
+            padded_q: vec![0; w.hidden_pad],
+            out_q: vec![0; w.out_pad],
+            scratch: w.proj.as_ref().map(FxConvScratch::for_plan),
+            w: Arc::clone(w),
+        };
+        Ok(StageSet {
+            stage1: Box::new(stage1),
+            stage2: Box::new(stage2),
+            stage3: Box::new(stage3),
+        })
+    }
+}
+
+/// Stage 1: quantise the fused operand and run the four per-gate
+/// fixed-point circulant convolutions (FFT with DFT-side distributed
+/// shifts, saturating frequency-domain accumulation).
+struct FxpStage1 {
+    w: Arc<FxpPrepared>,
+    /// Quantised fused operand, reused per frame.
+    fused_q: Vec<i16>,
+    /// Raw gate mat-vec outputs (`hidden_pad` each), reused per frame.
+    gate_out: [Vec<i16>; 4],
+    scratch: FxConvScratch,
+}
+
+impl StageExecutor for FxpStage1 {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
+        ensure!(inputs.len() == 1, "stage1 takes one input (fused operand)");
+        ensure!(outputs.len() == 1, "stage1 writes one output (a)");
+        let w = &self.w;
+        let fused = inputs[0];
+        ensure!(
+            fused.len() == w.fused_len,
+            "fused operand length {} != {}",
+            fused.len(),
+            w.fused_len
+        );
+        let a = &mut *outputs[0];
+        ensure!(a.len() == 4 * w.h, "a length {} != {}", a.len(), 4 * w.h);
+        // Boundary quantisation: raw features quantise here (lossy, as on
+        // the FPGA); recurrent y_{t-1} values are already on the Q-grid and
+        // recover their exact i16 representation.
+        for (qv, &fv) in self.fused_q.iter_mut().zip(fused) {
+            *qv = w.q.from_f32(fv);
+        }
+        for g in [GATE_I, GATE_F, GATE_G, GATE_O] {
+            w.gates[g].matvec_into(&self.fused_q, &mut self.gate_out[g], &mut self.scratch);
+            for n in 0..w.h {
+                a[g * w.h + n] = w.q.to_f32(self.gate_out[g][n]);
+            }
+        }
+        Ok(())
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![4 * self.w.h]
+    }
+}
+
+/// Stage 2: the element-wise cluster on the 16-bit datapath — saturating
+/// adds, quantised PWL activations, single Q-format multiplies with
+/// round-to-nearest narrowing — mirroring `CellFx::step` term for term.
+struct FxpStage2 {
+    w: Arc<FxpPrepared>,
+    /// Quantised gate pre-activations (`4·h`), reused per frame.
+    a_q: Vec<i16>,
+    /// Quantised previous cell state (`h`), reused per frame.
+    c_q: Vec<i16>,
+}
+
+impl StageExecutor for FxpStage2 {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
+        ensure!(inputs.len() == 2, "stage2 takes [a, c_prev]");
+        let (a, c_prev) = (inputs[0], inputs[1]);
+        let w = &self.w;
+        let h = w.h;
+        let q = w.q;
+        let r = w.rounding;
+        ensure!(a.len() >= 4 * h, "gate pre-activations too short: {}", a.len());
+        ensure!(c_prev.len() == h, "cell state length {} != {h}", c_prev.len());
+        let (m, c) = match outputs {
+            [m, c] => (m, c),
+            _ => anyhow::bail!("stage2 writes [m, c]"),
+        };
+        ensure!(m.len() == h && c.len() == h, "stage2 outputs must be length {h}");
+        // Lossless re-quantisation: both a and c_prev are dequantised i16s.
+        for (qv, &fv) in self.a_q.iter_mut().zip(&a[..4 * h]) {
+            *qv = q.from_f32(fv);
+        }
+        for (qv, &fv) in self.c_q.iter_mut().zip(c_prev) {
+            *qv = q.from_f32(fv);
+        }
+        let peep = w.peephole.as_ref();
+        for n in 0..h {
+            let peep_term = |idx: usize, c_val: i16| -> i16 {
+                match peep {
+                    Some(p) => q.mul(p[idx][n], c_val, r),
+                    None => 0,
+                }
+            };
+            // Pre-activations: saturating 16-bit adds (FPGA adder tree).
+            let zi = self.a_q[GATE_I * h + n]
+                .saturating_add(peep_term(0, self.c_q[n]))
+                .saturating_add(w.bias[GATE_I][n]);
+            let zf = self.a_q[GATE_F * h + n]
+                .saturating_add(peep_term(1, self.c_q[n]))
+                .saturating_add(w.bias[GATE_F][n]);
+            let zg = self.a_q[GATE_G * h + n].saturating_add(w.bias[GATE_G][n]);
+
+            let i = w.pwl_sigmoid.eval_fx(zi, r);
+            let f = w.pwl_sigmoid.eval_fx(zf, r);
+            let g = w.pwl_tanh.eval_fx(zg, r);
+
+            // Eq 1d: c = f⊙c_prev + g⊙i, two Q multiplies + saturating add.
+            let cn = q.mul(f, self.c_q[n], r).saturating_add(q.mul(g, i, r));
+
+            let zo = self.a_q[GATE_O * h + n]
+                .saturating_add(peep_term(2, cn))
+                .saturating_add(w.bias[GATE_O][n]);
+            let o = w.pwl_sigmoid.eval_fx(zo, r);
+
+            // Eq 1f.
+            m[n] = q.to_f32(q.mul(o, w.pwl_tanh.eval_fx(cn, r), r));
+            c[n] = q.to_f32(cn);
+        }
+        Ok(())
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![self.w.h, self.w.h]
+    }
+}
+
+/// Stage 3: the fixed-point projection convolution (Eq 1g) or identity
+/// padding, then dequantise into the pipeline's output frame.
+struct FxpStage3 {
+    w: Arc<FxpPrepared>,
+    /// `m_t` quantised and zero-padded to the projection operand width.
+    padded_q: Vec<i16>,
+    /// Raw projection output (`out_pad`), reused per frame.
+    out_q: Vec<i16>,
+    scratch: Option<FxConvScratch>,
+}
+
+impl StageExecutor for FxpStage3 {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
+        ensure!(inputs.len() == 1, "stage3 takes one input (m_t)");
+        ensure!(outputs.len() == 1, "stage3 writes one output (y)");
+        let w = &self.w;
+        let m = inputs[0];
+        let y = &mut *outputs[0];
+        ensure!(y.len() == w.out_pad, "y length {} != {}", y.len(), w.out_pad);
+        match &w.proj {
+            Some(p) => {
+                // m carries dequantised i16s for n < h; the padding tail is
+                // zero, exactly like the oracle's `m` working vector.
+                self.padded_q.fill(0);
+                let n = m.len().min(w.hidden_pad);
+                for i in 0..n {
+                    self.padded_q[i] = w.q.from_f32(m[i]);
+                }
+                let scratch = self.scratch.as_mut().expect("proj scratch");
+                p.matvec_into(&self.padded_q, &mut self.out_q, scratch);
+                for (yv, &qv) in y.iter_mut().zip(&self.out_q) {
+                    *yv = w.q.to_f32(qv);
+                }
+            }
+            None => {
+                // Identity: m values are already on the Q-grid; pad with
+                // exact zeros.
+                y.fill(0.0);
+                let n = m.len().min(w.out_pad);
+                y[..n].copy_from_slice(&m[..n]);
+            }
+        }
+        Ok(())
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        vec![self.w.out_pad]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::cell_fxp::CellFx;
+    use crate::lstm::config::LstmSpec;
+    use crate::util::prng::Xoshiro256;
+
+    const QD: Q = Q::new(12);
+
+    /// Hand-run the three fxp stages against the CellFx oracle, comparing
+    /// raw i16 representations (recovered by re-quantising the f32 frames).
+    fn stages_match_cell_fx(spec: &LstmSpec, seed: u64, steps: usize) {
+        let w = LstmWeights::random(spec, seed);
+        let backend = FxpBackend::new(QD);
+        let mut stages = backend.build_single(&w).unwrap();
+        let cell = CellFx::new(spec, 0, &w.layers[0][0], QD);
+        let mut st = cell.zero_state();
+
+        let in_pad = spec.pad(spec.layer_input_dim(0));
+        let out_pad = spec.pad(spec.out_dim());
+        let h = spec.hidden_dim;
+        let mut y_prev = vec![0.0f32; out_pad];
+        let mut c_prev = vec![0.0f32; h];
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xF00D);
+        for t in 0..steps {
+            let x: Vec<f32> = (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect();
+            let xq = QD.quantize_slice(&x);
+            let want = cell.step(&xq, &mut st);
+
+            let mut fused = vec![0.0f32; in_pad + out_pad];
+            fused[..x.len()].copy_from_slice(&x);
+            fused[in_pad..].copy_from_slice(&y_prev);
+            let a = stages.stage1.run(&[&fused]).unwrap().remove(0);
+            let mut mc = stages.stage2.run(&[&a, &c_prev]).unwrap();
+            let c = mc.remove(1);
+            let m = mc.remove(0);
+            let y = stages.stage3.run(&[&m]).unwrap().remove(0);
+
+            let got = QD.quantize_slice(&y);
+            assert_eq!(got, want[..out_pad], "t={t}: y mismatch");
+            let got_c = QD.quantize_slice(&c);
+            assert_eq!(got_c, st.c, "t={t}: c mismatch");
+            y_prev.copy_from_slice(&y);
+            c_prev = c;
+        }
+    }
+
+    #[test]
+    fn tiny_with_peephole_and_projection_matches_cell_fx() {
+        stages_match_cell_fx(&LstmSpec::tiny(4), 11, 8);
+    }
+
+    #[test]
+    fn no_projection_no_peephole_matches_cell_fx() {
+        let spec = LstmSpec {
+            hidden_dim: 24,
+            input_dim: 8,
+            layers: 1,
+            bidirectional: false,
+            ..LstmSpec::small(4)
+        };
+        stages_match_cell_fx(&spec, 13, 6);
+    }
+
+    #[test]
+    fn unpadded_dims_round_up() {
+        let spec = LstmSpec {
+            input_dim: 10,
+            hidden_dim: 20,
+            proj_dim: Some(10),
+            ..LstmSpec::tiny(4)
+        };
+        stages_match_cell_fx(&spec, 17, 5);
+    }
+
+    #[test]
+    fn recommended_format_is_q3_12_for_trained_scale_weights() {
+        // Weights well inside ±8: the pre-activation envelope dominates and
+        // the recommendation lands on the paper's Q3.12.
+        let w = LstmWeights::random(&LstmSpec::tiny(4), 3);
+        let q = FxpBackend::recommend_q(&w);
+        assert_eq!(q, Q::new(12), "got Q{}.{}", 15 - q.frac, q.frac);
+        assert_eq!(FxpBackend::default().resolve_q(&w), q);
+        assert_eq!(FxpBackend::new(Q::new(10)).resolve_q(&w), Q::new(10));
+    }
+
+    #[test]
+    fn replicas_share_prepared_plans_and_agree() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 23);
+        let backend = FxpBackend::new(QD);
+        let prepared = backend.prepare(&w).unwrap();
+        assert_eq!(prepared.backend, "fxp");
+        let mut r1 = backend.build_stages(&prepared).unwrap();
+        let mut r2 = backend.build_stages(&prepared).unwrap();
+        let fused = vec![0.5f32; spec.fused_in_dim(0)];
+        let a1 = r1.stage1.run(&[&fused]).unwrap().remove(0);
+        let a2 = r2.stage1.run(&[&fused]).unwrap().remove(0);
+        assert_eq!(a1, a2, "replicas over shared quantised plans must agree");
+    }
+
+    #[test]
+    fn foreign_prepared_weights_are_rejected() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 29);
+        let native = crate::runtime::native::NativeBackend::default();
+        let prepared = native.prepare(&w).unwrap();
+        let err = match FxpBackend::new(QD).build_stages(&prepared) {
+            Ok(_) => panic!("foreign prepared weights must be rejected"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fxp") && msg.contains("native"), "msg: {msg}");
+    }
+
+    #[test]
+    fn outputs_are_on_the_q_grid() {
+        // Every f32 a stage emits must be an exact dequantised i16 — the
+        // invariant the bit-exact pipeline rests on.
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 41);
+        let mut stages = FxpBackend::new(QD).build_single(&w).unwrap();
+        let fused = vec![0.37f32; spec.fused_in_dim(0)];
+        let a = stages.stage1.run(&[&fused]).unwrap().remove(0);
+        for &v in &a {
+            assert_eq!(v, QD.to_f32(QD.from_f32(v)), "off-grid stage1 output {v}");
+        }
+        let c0 = vec![0.0f32; spec.hidden_dim];
+        let mc = stages.stage2.run(&[&a, &c0]).unwrap();
+        for &v in mc[0].iter().chain(&mc[1]) {
+            assert_eq!(v, QD.to_f32(QD.from_f32(v)), "off-grid stage2 output {v}");
+        }
+        let y = stages.stage3.run(&[&mc[0]]).unwrap().remove(0);
+        for &v in &y {
+            assert_eq!(v, QD.to_f32(QD.from_f32(v)), "off-grid stage3 output {v}");
+        }
+    }
+}

@@ -11,6 +11,10 @@
 //! - [`native`] — the default backend: pure-Rust execution through the
 //!   crate's own engines (Eq 6 spectral convolution + Eq 1 gate math), no
 //!   artifacts or external libraries required.
+//! - [`fxp`] — the bit-accurate 16-bit fixed-point backend (§4.2): gate
+//!   mat-vecs through `FxConvPlan`, quantised PWL activations, Q-format
+//!   element-wise ops; bit-identical to the `CellFx` oracle at any replica
+//!   count, quantise/dequantise only at the stage boundary frames.
 //! - [`artifact`] — `manifest.json` parsing, per-config artifact bundles,
 //!   and the spectral-weight buffer preparation matching the AOT kernels'
 //!   `(4p, q, bins)` layout (used by the PJRT backend and by tooling).
@@ -24,6 +28,7 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod fxp;
 pub mod native;
 
 #[cfg(feature = "pjrt")]
@@ -33,6 +38,7 @@ pub mod pjrt;
 
 pub use artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
 pub use backend::{Backend, PreparedWeights, StageExecutor, StageSet};
+pub use fxp::FxpBackend;
 pub use native::NativeBackend;
 
 #[cfg(feature = "pjrt")]

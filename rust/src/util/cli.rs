@@ -5,7 +5,42 @@
 //! `--help` text. Used by the `clstm` binary, the examples and the bench
 //! harnesses.
 
+use crate::num::fxp::Q;
 use std::collections::BTreeMap;
+
+/// Parse a `--q-format` style value: `auto` (⇒ `None`, let the range
+/// analysis pick), a fractional-bit count (`12`), or an explicit 16-bit
+/// split (`q3.12` / `Q3.12`, integer + fractional bits summing to 15 plus
+/// the sign bit).
+pub fn parse_q_format(s: &str) -> Result<Option<Q>, String> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("auto") || s.is_empty() {
+        return Ok(None);
+    }
+    let body = s.strip_prefix('q').or_else(|| s.strip_prefix('Q')).unwrap_or(s);
+    let frac: u32 = if let Some((int_part, frac_part)) = body.split_once('.') {
+        let i: u32 = int_part
+            .parse()
+            .map_err(|_| format!("bad Q-format {s:?} (expected: auto | <frac bits> | qI.F)"))?;
+        let f: u32 = frac_part
+            .parse()
+            .map_err(|_| format!("bad Q-format {s:?} (expected: auto | <frac bits> | qI.F)"))?;
+        if i > 15 || f > 15 || i + f != 15 {
+            return Err(format!(
+                "Q-format {s:?} needs integer + fractional bits = 15 (a \
+                 16-bit word has 15 value bits plus the sign bit, e.g. q3.12)"
+            ));
+        }
+        f
+    } else {
+        body.parse()
+            .map_err(|_| format!("bad Q-format {s:?} (expected: auto | <frac bits> | qI.F)"))?
+    };
+    if frac > 15 {
+        return Err(format!("Q-format {s:?}: at most 15 fractional bits"));
+    }
+    Ok(Some(Q::new(frac)))
+}
 
 /// Specification of one option.
 #[derive(Debug, Clone)]
@@ -189,6 +224,12 @@ impl Cli {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+
+    /// Typed accessor for a Q-format option (see [`parse_q_format`]):
+    /// `Ok(None)` for `auto`, `Ok(Some(q))` for an explicit format.
+    pub fn get_q_format(&self, name: &str) -> Result<Option<Q>, String> {
+        parse_q_format(&self.get_str(name)).map_err(|e| format!("--{name}: {e}"))
+    }
 }
 
 #[cfg(test)]
@@ -245,5 +286,34 @@ mod tests {
     fn missing_value_errors() {
         let e = Cli::new("t", "t").opt("k", "8", "h").parse(&argv("--k")).unwrap_err();
         assert!(e.contains("needs a value"));
+    }
+
+    #[test]
+    fn q_format_parses_auto_frac_and_split_forms() {
+        assert_eq!(parse_q_format("auto").unwrap(), None);
+        assert_eq!(parse_q_format("AUTO").unwrap(), None);
+        assert_eq!(parse_q_format("12").unwrap(), Some(Q::new(12)));
+        assert_eq!(parse_q_format("q3.12").unwrap(), Some(Q::new(12)));
+        assert_eq!(parse_q_format("Q1.14").unwrap(), Some(Q::new(14)));
+        // Bits must sum to 15 in the split form; frac capped at 15.
+        assert!(parse_q_format("q4.12").unwrap_err().contains("15"));
+        assert!(parse_q_format("16").is_err());
+        assert!(parse_q_format("nope").is_err());
+    }
+
+    #[test]
+    fn q_format_accessor_reads_option() {
+        let cli = Cli::new("t", "t")
+            .opt("q-format", "auto", "h")
+            .parse(&argv("--q-format q2.13"))
+            .unwrap();
+        assert_eq!(cli.get_q_format("q-format").unwrap(), Some(Q::new(13)));
+        let cli = Cli::new("t", "t").opt("q-format", "auto", "h").parse(&[]).unwrap();
+        assert_eq!(cli.get_q_format("q-format").unwrap(), None);
+        let cli = Cli::new("t", "t")
+            .opt("q-format", "auto", "h")
+            .parse(&argv("--q-format wat"))
+            .unwrap();
+        assert!(cli.get_q_format("q-format").unwrap_err().contains("--q-format"));
     }
 }

@@ -1,0 +1,179 @@
+//! The fxp serving backend: bit-exactness goldens + the §4.2 PER
+//! regression.
+//!
+//! The serving engine must be a pure throughput transform over the 16-bit
+//! datapath: whatever the replica count, lane routing, or interleaving
+//! order, re-quantising every utterance's outputs recovers i16 vectors
+//! identical to the single-threaded [`CellFx`] oracle (the engine-level
+//! mirror of the `CellF32` bit-identity tests in `tests/engine.rs`). On
+//! the synthetic serve workload, the fxp datapath's PER must stay within
+//! the §4.2 accuracy budget of the float engine.
+
+use clstm::coordinator::batcher::QueuedUtterance;
+use clstm::coordinator::engine::{EngineConfig, ServeEngine};
+use clstm::coordinator::server::{serve_workload, ServeOptions};
+use clstm::lstm::cell_fxp::CellFx;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::Q;
+use clstm::runtime::fxp::{FxpBackend, FXP_PER_DEGRADATION_BUDGET_PTS};
+use clstm::runtime::native::NativeBackend;
+use clstm::util::prng::Xoshiro256;
+
+const QD: Q = Q::new(12);
+
+fn random_frames(spec: &LstmSpec, rng: &mut Xoshiro256, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Reference i16 outputs from the single-threaded fixed-point oracle,
+/// quantising each float frame exactly like the backend's stage 1 does.
+fn oracle_outputs(
+    spec: &LstmSpec,
+    w: &LstmWeights,
+    utts: &[Vec<Vec<f32>>],
+) -> Vec<Vec<Vec<i16>>> {
+    let cell = CellFx::new(spec, 0, &w.layers[0][0], QD);
+    let out_pad = spec.pad(spec.out_dim());
+    utts.iter()
+        .map(|frames| {
+            let mut st = cell.zero_state();
+            frames
+                .iter()
+                .map(|x| {
+                    let xq = QD.quantize_slice(x);
+                    let y = cell.step(&xq, &mut st);
+                    y[..out_pad.min(y.len())].to_vec()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Golden bit-exactness: the fxp backend through 1, 2, and 4 replica lanes
+/// produces i16 outputs identical to the `CellFx` oracle on the same
+/// utterances — the replica count and interleaving order must not perturb
+/// a single bit of the 16-bit datapath.
+#[test]
+fn fxp_engine_bit_identical_to_cell_fx_across_replica_counts() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 77);
+    let mut rng = Xoshiro256::seed_from_u64(41);
+    let lens = [5usize, 9, 4, 7, 6, 8, 3, 10];
+    let frames: Vec<Vec<Vec<f32>>> = lens
+        .iter()
+        .map(|&n| random_frames(&spec, &mut rng, n))
+        .collect();
+    let want = oracle_outputs(&spec, &w, &frames);
+
+    for replicas in [1usize, 2, 4] {
+        let mut engine = ServeEngine::build(
+            &FxpBackend::new(QD),
+            &w,
+            EngineConfig {
+                replicas,
+                ..EngineConfig::default()
+            },
+        )
+        .expect("fxp engine builds");
+        assert_eq!(engine.replicas(), replicas);
+        assert_eq!(engine.backend_name(), "fxp");
+        let utts: Vec<QueuedUtterance> = frames
+            .iter()
+            .enumerate()
+            .map(|(i, f)| QueuedUtterance::new(i as u64, f.clone()))
+            .collect();
+        let completions = engine.serve_all(utts).expect("serve_all");
+        assert_eq!(completions.len(), lens.len());
+        for c in &completions {
+            let id = c.utt.id as usize;
+            assert_eq!(c.outputs.len(), lens[id], "utt {id} frame count");
+            for (t, y) in c.outputs.iter().enumerate() {
+                let got = QD.quantize_slice(y);
+                assert_eq!(
+                    got, want[id][t],
+                    "replicas={replicas} utt {id} frame {t}: engine i16s \
+                     diverge from the CellFx oracle"
+                );
+            }
+        }
+    }
+}
+
+/// An explicit `--q-format`-style override flows through to the datapath:
+/// the engine must stay bit-identical to a `CellFx` oracle built with the
+/// same (non-default) data format.
+#[test]
+fn explicit_q_format_matches_its_oracle() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 3);
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let frames = vec![random_frames(&spec, &mut rng, 6)];
+    for frac in [10u32, 12] {
+        let q = Q::new(frac);
+        let cell = CellFx::new(&spec, 0, &w.layers[0][0], q);
+        let out_pad = spec.pad(spec.out_dim());
+        let mut st = cell.zero_state();
+        let mut engine = ServeEngine::build(&FxpBackend::new(q), &w, EngineConfig::default())
+            .expect("engine builds");
+        let completions = engine
+            .serve_all(vec![QueuedUtterance::new(0, frames[0].clone())])
+            .expect("serve_all");
+        for (t, y) in completions[0].outputs.iter().enumerate() {
+            let want = cell.step(&q.quantize_slice(&frames[0][t]), &mut st);
+            assert_eq!(
+                q.quantize_slice(y),
+                want[..out_pad.min(want.len())],
+                "frac={frac} frame {t}"
+            );
+        }
+    }
+}
+
+/// §4.2 PER regression: on the synthetic serve workload (the `clstm serve`
+/// default scenario — tiny model, seed 1234, 24 utterances), the 16-bit
+/// datapath may degrade PER by at most [`FXP_PER_DEGRADATION_BUDGET_PTS`]
+/// absolute points over the float engine. Everything is seeded, so this is
+/// a deterministic regression bound, not a statistical one.
+#[test]
+fn fxp_per_within_budget_of_f32_on_synth_workload() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 1234);
+    let opts = ServeOptions {
+        replicas: 2,
+        seed: 1234,
+        ..ServeOptions::default()
+    };
+    let n_utts = 24;
+    let float = serve_workload(&NativeBackend::default(), &w, n_utts, &opts).expect("float serve");
+    let fxp = serve_workload(&FxpBackend::default(), &w, n_utts, &opts).expect("fxp serve");
+    assert!(float.per.is_finite() && float.per > 0.0, "f32 PER {}", float.per);
+    assert!(fxp.per.is_finite() && fxp.per > 0.0, "fxp PER {}", fxp.per);
+    let degradation = fxp.per - float.per;
+    assert!(
+        degradation <= FXP_PER_DEGRADATION_BUDGET_PTS,
+        "fxp PER {:.3}% degrades {degradation:+.3} points over f32 PER {:.3}% \
+         (budget: {FXP_PER_DEGRADATION_BUDGET_PTS})",
+        fxp.per,
+        float.per
+    );
+}
+
+/// The serve report carries the fxp backend name so the CLI's
+/// float-vs-fixed comparison labels the right engine.
+#[test]
+fn serve_report_names_the_fxp_backend() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 7);
+    let report = serve_workload(&FxpBackend::default(), &w, 3, &ServeOptions::default())
+        .expect("serve");
+    assert_eq!(report.config, "fxp");
+    assert_eq!(report.replicas, 1);
+    assert_eq!(report.metrics.utterances, 3);
+}

@@ -188,3 +188,135 @@ fn fxp_conv_plan_is_deterministic_across_shapes() {
         assert_eq!(plan.matvec(&x), plan.matvec(&x), "k={k}");
     }
 }
+
+// --------------------------------------------------------------------------
+// fxp datapath edges (the §4.2 overflow/rounding contract as properties)
+// --------------------------------------------------------------------------
+
+/// Inputs at ±absmax through all-positive weights: the true mat-vec is far
+/// outside the 16-bit range, so every frequency-domain accumulator pins at
+/// its rail. Saturation keeps all outputs at the input's sign; a wrapping
+/// add would flip the rail to the opposite sign (±32767 + ±32767 wraps to
+/// ∓2). Deterministic case plus a property over random positive scales.
+#[test]
+fn fxp_accumulation_saturates_never_wraps_at_absmax() {
+    const QD: Q = Q::new(12);
+    let (k, p, q) = (8usize, 2usize, 4usize);
+    let m = BlockCirculant::from_vectors(p * k, q * k, k, vec![0.5f32; p * q * k]);
+    let spec = SpectralWeights::precompute(&m);
+    let plan = FxConvPlan::new(SpectralWeightsFx::quantize_auto(&spec), QD, Rounding::Nearest);
+    for raw in [i16::MAX, i16::MIN + 1] {
+        let x = vec![raw; q * k];
+        let out = plan.matvec(&x);
+        for (i, &v) in out.iter().enumerate() {
+            assert!(
+                (v as i32) * (raw as i32) > 0,
+                "input rail {raw}: out[{i}] = {v} flipped sign (wrap-around)"
+            );
+        }
+        // The rail actually pins: positive weights × rail input saturate.
+        assert!(
+            out.iter().any(|&v| v.unsigned_abs() > i16::MAX as u16 / 2),
+            "input rail {raw}: no output anywhere near the rail {out:?}"
+        );
+    }
+}
+
+/// Same wrap check over random positive weight scales, block sizes, and
+/// accumulation depths.
+#[test]
+fn property_fxp_saturation_keeps_sign_on_hot_inputs() {
+    const QD: Q = Q::new(12);
+    forall(
+        Config::default().cases(32),
+        |rng| {
+            let k = gen::pow2(rng, 1, 4);
+            let p = gen::usize_in(rng, 1..=3);
+            let q = gen::usize_in(rng, 2..=4);
+            // All-positive defining vectors, large enough that every
+            // block's DC product saturates on a rail input.
+            let w: Vec<f32> = (0..p * q * k)
+                .map(|_| rng.uniform(0.3, 0.9) as f32)
+                .collect();
+            let positive = rng.next_u64() % 2 == 0;
+            (k, p, q, w, positive)
+        },
+        no_shrink,
+        |&(k, p, q, ref w, positive)| {
+            let m = BlockCirculant::from_vectors(p * k, q * k, k, w.clone());
+            let spec = SpectralWeights::precompute(&m);
+            let plan =
+                FxConvPlan::new(SpectralWeightsFx::quantize_auto(&spec), QD, Rounding::Nearest);
+            let raw = if positive { i16::MAX } else { i16::MIN + 1 };
+            let x = vec![raw; q * k];
+            let out = plan.matvec(&x);
+            for (i, &v) in out.iter().enumerate() {
+                if (v as i32) * (raw as i32) <= 0 {
+                    return Err(format!(
+                        "k={k} p={p} q={q} rail {raw}: out[{i}] = {v} crossed zero"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `Rounding::Nearest` narrowing must equal the widened-reference result:
+/// round the exact i64 quotient half away from zero, then saturate to i16 —
+/// the definition the DSP-slice shifter implements.
+#[test]
+fn property_nearest_narrowing_matches_widened_i64_reference() {
+    use clstm::num::fxp::narrow;
+    forall(
+        Config::default().cases(500),
+        |rng| {
+            // mul_wide of two i16s spans ±2^30; cover that full range.
+            let wide = (rng.next_u64() as i64 % (1i64 << 30)) as i32;
+            let shift = gen::usize_in(rng, 0..=15) as u32;
+            (wide, shift)
+        },
+        no_shrink,
+        |&(wide, shift)| {
+            let got = narrow(wide, shift, Rounding::Nearest) as i64;
+            let w = wide as i64;
+            let denom = 1i64 << shift;
+            let q = w.abs() / denom;
+            let r = w.abs() % denom;
+            let mag = q + i64::from(2 * r >= denom);
+            let want = (w.signum() * mag).clamp(i16::MIN as i64, i16::MAX as i64);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("narrow({wide}, {shift}) = {got}, reference {want}"))
+            }
+        },
+    );
+}
+
+/// Scratch reuse across frames is state-free: running the same frame twice
+/// through one `FxConvScratch` — with a different frame in between to dirty
+/// every buffer — must reproduce the first output bit for bit.
+#[test]
+fn fx_conv_scratch_reuse_is_state_free() {
+    use clstm::circulant::fxp_conv::FxConvScratch;
+    const QD: Q = Q::new(12);
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    for &k in &[2usize, 8, 16] {
+        let (p, q) = (2usize, 3usize);
+        let m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+        let spec = SpectralWeights::precompute(&m);
+        let plan = FxConvPlan::new(SpectralWeightsFx::quantize_auto(&spec), QD, Rounding::Nearest);
+        let mut scratch = FxConvScratch::for_plan(&plan);
+        let frame_a: Vec<i16> = (0..q * k).map(|i| (i as i16).wrapping_mul(997)).collect();
+        let frame_b: Vec<i16> = (0..q * k).map(|i| (i as i16).wrapping_mul(-403)).collect();
+        let mut out1 = vec![0i16; p * k];
+        let mut dirty = vec![0i16; p * k];
+        let mut out2 = vec![0i16; p * k];
+        plan.matvec_into(&frame_a, &mut out1, &mut scratch);
+        plan.matvec_into(&frame_b, &mut dirty, &mut scratch);
+        plan.matvec_into(&frame_a, &mut out2, &mut scratch);
+        assert_eq!(out1, out2, "k={k}: scratch carried state between frames");
+        assert_ne!(out1, dirty, "k={k}: distinct frames should differ");
+    }
+}
