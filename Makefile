@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench serve-fxp artifacts table1-per
+.PHONY: build test bench serve-bench serve-fxp serve-stack artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -24,6 +24,17 @@ serve-fxp:
 		| tee /tmp/clstm-serve-fxp.out
 	grep -E "workload PER: [0-9]+\.[0-9]+%" /tmp/clstm-serve-fxp.out
 	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-fxp.out
+
+# Stack-topology serving smoke test: the full bidirectional 2-layer Small
+# model (4 chained segments) on the fxp datapath through 2 replicated
+# topology instances; asserts PER is reported over the full stack and is
+# nonzero.
+serve-stack:
+	cd rust && cargo run --release -- serve --model small --k 8 --backend fxp \
+		--replicas 2 --utts 8 | tee /tmp/clstm-serve-stack.out
+	grep -q "topology: 4 segment(s)" /tmp/clstm-serve-stack.out
+	grep -E "workload PER: [0-9]+\.[0-9]+% \(full 2-layer stack\)" /tmp/clstm-serve-stack.out
+	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-stack.out
 
 # JAX AOT lowering -> rust/artifacts/*.hlo.txt + manifest.json + golden
 # bundle (enables the golden-vector integration tests and the PJRT backend).

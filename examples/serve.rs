@@ -1,27 +1,31 @@
-//! Serving demo at Google-LSTM scale: the replicated engine under sustained
-//! load on the native backend (k=8 spectral weights, 1024 hidden, 672-wide
-//! fused input). The spectra are prepared **once** and shared by every
-//! lane; admission is continuous (no wave barrier), so the same workload is
-//! served with 1 lane and with N lanes and the speedup printed.
+//! Serving demo at Google-LSTM scale: the replicated **stack** engine
+//! under sustained load on the native backend (k=8 spectral weights, 1024
+//! hidden, both stacked layers chained per Fig 6b — layer 1 consumes frame
+//! t while layer 0 computes t+1). The spectra of every segment are
+//! prepared **once** and shared by every topology instance; admission is
+//! continuous (no wave barrier), so the same workload is served with 1
+//! instance and with N instances and the speedup printed.
 //!
 //! Run: `cargo run --release --example serve [-- n_utts [replicas]]`
 
 use clstm::coordinator::batcher::QueuedUtterance;
-use clstm::coordinator::engine::{EngineConfig, ServeEngine};
+use clstm::coordinator::engine::EngineConfig;
 use clstm::coordinator::metrics::Metrics;
+use clstm::coordinator::topology::StackEngine;
 use clstm::data::synth::{SynthConfig, SynthTimit};
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::runtime::native::NativeBackend;
 
-/// Serve `utts` through an engine with `replicas` lanes; return metrics.
+/// Serve `utts` through a stack engine with `replicas` topology instances;
+/// return metrics (including per-segment occupancy).
 fn run_engine(
     backend: &NativeBackend,
     weights: &LstmWeights,
     utts: &[QueuedUtterance],
     replicas: usize,
 ) -> anyhow::Result<Metrics> {
-    let mut engine = ServeEngine::build(
+    let mut engine = StackEngine::build(
         backend,
         weights,
         EngineConfig {
@@ -31,11 +35,13 @@ fn run_engine(
     )?;
     let mut metrics = Metrics::default();
     let t0 = std::time::Instant::now();
-    // Continuous admission: keep every lane fed, drain as streams retire.
+    // Continuous admission: keep every instance fed, drain as streams
+    // retire.
     for c in engine.serve_all(utts.iter().cloned())? {
         metrics.record_completion(&c);
     }
     metrics.wall = t0.elapsed();
+    metrics.set_segments(engine.segment_stats());
     Ok(metrics)
 }
 
@@ -53,7 +59,11 @@ fn main() -> anyhow::Result<()> {
     let weights = LstmWeights::random(&spec, 42);
 
     let backend = NativeBackend::default();
-    println!("google k=8 on the native backend (spectra prepared once, shared by all lanes)");
+    println!("google k=8 on the native backend (spectra prepared once, shared by all instances)");
+    println!(
+        "topology: {}",
+        clstm::coordinator::topology::StackTopology::compile(&spec).describe()
+    );
 
     let gen = SynthTimit::new(SynthConfig::google());
     let utts: Vec<QueuedUtterance> = (0..n_utts)

@@ -1,9 +1,11 @@
 //! Serving-pipeline benchmarks: the L3 hot path end to end — the 3-stage
 //! pipeline on the native backend (throughput and stream-interleaving
 //! effect), replica scaling of the serving engine (1/2/4 lanes over one
-//! shared weight preparation), the discrete-event FPGA simulation rate,
-//! and, when built with `--features pjrt` and `make artifacts` has run,
-//! the PJRT step execution and pipeline.
+//! shared weight preparation), stack-topology scaling (1/2/3 chained
+//! layers + the bidirectional small shape, recorded into the BENCH json),
+//! the discrete-event FPGA simulation rate, and, when built with
+//! `--features pjrt` and `make artifacts` has run, the PJRT step execution
+//! and pipeline.
 
 use clstm::coordinator::pipeline::ClstmPipeline;
 use clstm::fpga_sim::simulate;
@@ -31,11 +33,14 @@ fn main() {
     for (label, spec) in [
         ("tiny_k4", LstmSpec::tiny(4)),
         (
-            "proxy256_k8",
+            // One google-shaped layer (a single ClstmPipeline serves one
+            // segment; the stack sweep below chains several).
+            "proxy256_k8_l1",
             LstmSpec {
                 input_dim: 156,
                 hidden_dim: 256,
                 proj_dim: Some(128),
+                layers: 1,
                 ..LstmSpec::google(8)
             },
         ),
@@ -71,6 +76,11 @@ fn main() {
     // acceptance bar.
     replica_scaling_bench(&mut rng);
 
+    // Stack-topology scaling: layers-vs-throughput through the chained
+    // engine, recorded into the BENCH json (target/bench-results) so stack
+    // scaling is tracked run over run.
+    stack_scaling_bench(&mut b, &mut rng);
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b, &mut rng);
     #[cfg(not(feature = "pjrt"))]
@@ -85,10 +95,13 @@ fn replica_scaling_bench(rng: &mut Xoshiro256) {
 
     let fast = std::env::var("CLSTM_BENCH_FAST").is_ok();
     let (n_utts, frames_per_utt) = if fast { (16usize, 24usize) } else { (32, 48) };
+    // One google-shaped segment: the single-segment ServeEngine refuses
+    // stacks (the stack sweep below covers those).
     let spec = LstmSpec {
         input_dim: 156,
         hidden_dim: 256,
         proj_dim: Some(128),
+        layers: 1,
         ..LstmSpec::google(8)
     };
     let weights = LstmWeights::random(&spec, 11);
@@ -136,6 +149,68 @@ fn replica_scaling_bench(rng: &mut Xoshiro256) {
             if base_fps > 0.0 { fps / base_fps } else { 1.0 },
             wall.as_secs_f64() * 1e3
         );
+    }
+}
+
+/// Serve a fixed workload through the stack engine at 1, 2, and 3 chained
+/// layers (google-shaped proxy) plus the bidirectional small shape, via
+/// `Bench` so frames/s lands in the BENCH json. Fig 6b's claim is that a
+/// deep stack streams at roughly the throughput of one layer (each
+/// chained segment adds its own pipeline threads).
+fn stack_scaling_bench(b: &mut Bench, rng: &mut Xoshiro256) {
+    use clstm::coordinator::batcher::QueuedUtterance;
+    use clstm::coordinator::engine::EngineConfig;
+    use clstm::coordinator::topology::StackEngine;
+
+    let fast = std::env::var("CLSTM_BENCH_FAST").is_ok();
+    let (n_utts, frames_per_utt) = if fast { (6usize, 16usize) } else { (12, 32) };
+    let backend = NativeBackend::default();
+
+    let mut cases: Vec<(String, LstmSpec)> = (1..=3usize)
+        .map(|layers| {
+            (
+                format!("proxy128_k8_l{layers}"),
+                LstmSpec {
+                    input_dim: 156,
+                    hidden_dim: 128,
+                    proj_dim: Some(64),
+                    layers,
+                    ..LstmSpec::google(8)
+                },
+            )
+        })
+        .collect();
+    cases.push((
+        "small128_k8_bidi_l2".to_string(),
+        LstmSpec {
+            input_dim: 39,
+            hidden_dim: 128,
+            layers: 2,
+            ..LstmSpec::small(8)
+        },
+    ));
+
+    b.throughput((n_utts * frames_per_utt) as u64);
+    for (label, spec) in cases {
+        let weights = LstmWeights::random(&spec, 11);
+        let utts: Vec<QueuedUtterance> = (0..n_utts)
+            .map(|i| {
+                let frames: Vec<Vec<f32>> = (0..frames_per_utt)
+                    .map(|_| {
+                        (0..spec.input_dim)
+                            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                            .collect()
+                    })
+                    .collect();
+                QueuedUtterance::new(i as u64, frames)
+            })
+            .collect();
+        let mut engine = StackEngine::build(&backend, &weights, EngineConfig::default()).unwrap();
+        b.bench(&format!("stack_serve/{label}"), || {
+            let done = engine.serve_all(utts.iter().cloned()).unwrap();
+            assert_eq!(done.len(), n_utts);
+            done.len()
+        });
     }
 }
 

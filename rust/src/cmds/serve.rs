@@ -1,10 +1,17 @@
-//! `clstm serve` — serve SynthTIMIT through the replicated engine.
+//! `clstm serve` — serve SynthTIMIT through the replicated stack engine.
+//!
+//! Serving always runs the **full stack topology**: `--model google`
+//! chains both stacked layers, `--model small` chains two bidirectional
+//! layers with concat joins (Fig 6b) — PER is computed over the complete
+//! model, never a silently truncated layer 0.
 //!
 //! `--backend native` (default) runs everywhere with zero artifacts;
 //! `--backend fxp` serves on the bit-accurate 16-bit datapath (§4.2) and
 //! also serves the same workload on the float engine, so one command
 //! reproduces the paper's float-vs-fixed accuracy comparison (`--q-format`
-//! overrides the range-analysis data format);
+//! overrides the range-analysis data format; `--rounding truncate` swaps
+//! every narrowing multiply to plain truncation for the §4.2 shift-policy
+//! ablation at serve scale);
 //! `--backend pjrt` executes the AOT artifacts and requires both the `pjrt`
 //! cargo feature and a populated artifacts directory (`make artifacts`).
 //!
@@ -18,8 +25,10 @@
 
 use anyhow::Result;
 use clstm::coordinator::server::{Arrival, ServeOptions, ServeReport};
+use clstm::coordinator::topology::StackTopology;
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::Rounding;
 use clstm::util::cli::Cli;
 
 /// Model spec + label for the serve run. Plain `clstm serve` uses the tiny
@@ -76,20 +85,38 @@ fn serve_options(cli: &Cli) -> Result<ServeOptions> {
     })
 }
 
+/// Parse `--rounding nearest|truncate` (fxp-only, like `--q-format`).
+fn parse_rounding(cli: &Cli) -> Result<Rounding> {
+    match cli.get_str("rounding").as_str() {
+        "nearest" => Ok(Rounding::Nearest),
+        "truncate" => Ok(Rounding::Truncate),
+        other => anyhow::bail!("unknown --rounding {other:?} (expected: nearest | truncate)"),
+    }
+}
+
 pub fn serve_cmd(cli: &Cli) -> Result<()> {
     let (label, spec) = serve_spec(cli);
     let weights = load_serve_weights(cli, &label, &spec);
     let n_utts = cli.get_usize("utts");
     let opts = serve_options(cli)?;
 
-    // --q-format drives the fxp datapath only; validate it up front so a
-    // typo'd or misplaced format errors on every backend instead of being
-    // silently ignored.
+    // --q-format/--rounding drive the fxp datapath only; validate them up
+    // front so a typo'd or misplaced option errors on every backend
+    // instead of being silently ignored.
     let backend_name = cli.get_str("backend");
     let q_override = cli.get_q_format("q-format").map_err(anyhow::Error::msg)?;
     if q_override.is_some() && backend_name != "fxp" {
         anyhow::bail!("--q-format applies to --backend fxp only (got --backend {backend_name})");
     }
+    let rounding = parse_rounding(cli)?;
+    if rounding != Rounding::Nearest && backend_name != "fxp" {
+        anyhow::bail!("--rounding applies to --backend fxp only (got --backend {backend_name})");
+    }
+
+    // Every serve path runs the complete stack topology — print the DAG so
+    // multi-layer / bidirectional runs say exactly what is being chained.
+    let topo = StackTopology::compile(&spec);
+    println!("  topology: {}", topo.describe());
 
     let report: ServeReport = match backend_name.as_str() {
         "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, &opts)?,
@@ -103,7 +130,7 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
             );
             serve_workload(&NativeBackend::default(), &weights, n_utts, &opts)?
         }
-        "fxp" => serve_fxp(q_override, &label, &weights, n_utts, &opts)?,
+        "fxp" => serve_fxp(q_override, rounding, &label, &weights, n_utts, &opts)?,
         other => anyhow::bail!(
             "unknown --backend {other:?} (expected: {})",
             clstm::runtime::backend::backend_names()
@@ -111,7 +138,7 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     };
     println!("  backend: {} ({} replicas)", report.config, report.replicas);
     println!("  {}", report.metrics.summary());
-    println!("  workload PER: {:.2}%", report.per);
+    println!("  workload PER: {:.2}% (full {}-layer stack)", report.per, spec.layers);
     Ok(())
 }
 
@@ -120,6 +147,7 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
 /// accuracy comparison in one command.
 fn serve_fxp(
     q_override: Option<clstm::num::fxp::Q>,
+    rounding: Rounding,
     label: &str,
     weights: &LstmWeights,
     n_utts: usize,
@@ -135,10 +163,10 @@ fn serve_fxp(
     let q = q_override.unwrap_or_else(|| FxpBackend::recommend_q(weights));
     let backend = FxpBackend {
         q: Some(q),
-        ..FxpBackend::default()
+        rounding,
     };
     println!(
-        "serving {label} on the fxp backend (Q{}.{} 16-bit datapath{}): \
+        "serving {label} on the fxp backend (Q{}.{} 16-bit datapath{}, {} narrowing): \
          {n_utts} utterances, {} replica(s) × {} streams, {:?} arrivals ...",
         15 - q.frac,
         q.frac,
@@ -146,6 +174,10 @@ fn serve_fxp(
             ""
         } else {
             ", range-analysis recommendation"
+        },
+        match rounding {
+            Rounding::Nearest => "round-to-nearest",
+            Rounding::Truncate => "truncate",
         },
         opts.replicas,
         opts.streams_per_lane,

@@ -23,7 +23,7 @@
 use crate::coordinator::batcher::QueuedUtterance;
 use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig};
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, SegmentId};
 use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -110,7 +110,20 @@ pub struct ServeEngine {
 impl ServeEngine {
     /// Prepare `weights` once on `backend` and launch `cfg.replicas` lanes
     /// over the shared prepared weights.
+    ///
+    /// Errors on stacked/bidirectional specs: a `ServeEngine` lane is one
+    /// 3-stage pipeline, so serving such a model here would silently
+    /// truncate it to layer 0 forward. Use
+    /// [`StackEngine`](crate::coordinator::topology::StackEngine), which
+    /// chains one pipeline per `(layer, direction)` segment.
     pub fn build(backend: &dyn Backend, weights: &LstmWeights, cfg: EngineConfig) -> Result<Self> {
+        ensure!(
+            weights.spec.layers == 1 && !weights.spec.bidirectional,
+            "spec has {} layer(s) × {} direction(s): ServeEngine would truncate the \
+             stack to layer 0 forward — serve it with StackEngine (coordinator::topology)",
+            weights.spec.layers,
+            weights.spec.directions()
+        );
         let prepared = backend.prepare(weights)?;
         let in_pad = prepared.spec.pad(prepared.spec.layer_input_dim(0));
         let (done_tx, done_rx) = channel::<CompletedUtterance>();
@@ -124,6 +137,7 @@ impl ServeEngine {
                 PipelineConfig {
                     channel_depth: cfg.channel_depth,
                 },
+                SegmentId::LAYER0_FWD,
             )?;
             let (tx, rx) = channel::<LaneJob>();
             let load = Arc::new(AtomicUsize::new(0));

@@ -58,10 +58,24 @@ impl LatencySeries {
     }
 }
 
+/// Serving occupancy of one `(layer, direction)` pipeline segment of a
+/// stack topology: how many frames it completed and how full it ran.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentOccupancy {
+    /// Segment label (`l0.fwd`, `l1.bwd`, …).
+    pub label: String,
+    /// Frames the segment completed across all replicas.
+    pub frames: u64,
+    /// Mean frames in flight inside the segment's pipeline while its
+    /// workers were scheduling (0 = idle; ≥ 1 = continuously busy).
+    pub mean_in_flight: f64,
+}
+
 /// Collected per-run metrics.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
-    /// Per-frame end-to-end latency (dispatch → stage-3 completion), µs.
+    /// Per-frame end-to-end latency (dispatch → stage-3 completion; for a
+    /// stack topology, layer-0 dispatch → final concat), µs.
     frame_latency: LatencySeries,
     /// Per-utterance admission → first-dispatch wait, µs.
     queue_wait: LatencySeries,
@@ -73,6 +87,9 @@ pub struct Metrics {
     pub frames: usize,
     /// Utterances processed.
     pub utterances: usize,
+    /// Per-segment occupancy of a stack-topology run (empty for
+    /// single-segment engines).
+    pub segments: Vec<SegmentOccupancy>,
 }
 
 impl Metrics {
@@ -117,10 +134,18 @@ impl Metrics {
         self.record_utterance_split(c.queue_wait_us, c.service_us);
     }
 
+    /// Attach the per-segment occupancy snapshot of a stack-topology run
+    /// (shown in [`Self::summary`]).
+    pub fn set_segments(&mut self, segments: Vec<SegmentOccupancy>) {
+        self.segments = segments;
+    }
+
     /// Fold another run's counters and samples into this one. Wall times
     /// are **summed**, so this models sequential runs; for concurrent lanes
     /// measure one wall clock around the whole engine instead (as
     /// `serve_workload` does) or `fps()` will understate throughput.
+    /// Segment occupancies merge by label: frame counts add, mean
+    /// in-flight averages weighted by frames.
     pub fn merge(&mut self, other: &Metrics) {
         self.frames += other.frames;
         self.utterances += other.utterances;
@@ -130,6 +155,18 @@ impl Metrics {
         self.queue_wait
             .extend(other.queue_wait.samples.iter().copied());
         self.service.extend(other.service.samples.iter().copied());
+        for seg in &other.segments {
+            match self.segments.iter_mut().find(|s| s.label == seg.label) {
+                Some(mine) => {
+                    let total = (mine.frames + seg.frames).max(1) as f64;
+                    mine.mean_in_flight = (mine.mean_in_flight * mine.frames as f64
+                        + seg.mean_in_flight * seg.frames as f64)
+                        / total;
+                    mine.frames += seg.frames;
+                }
+                None => self.segments.push(seg.clone()),
+            }
+        }
     }
 
     /// Steady-state frames per second.
@@ -201,6 +238,19 @@ impl Metrics {
                 self.service_p99_us()
             ));
         }
+        if !self.segments.is_empty() {
+            let segs: Vec<String> = self
+                .segments
+                .iter()
+                .map(|sg| {
+                    format!(
+                        "{} {}f ({:.2} in-flight)",
+                        sg.label, sg.frames, sg.mean_in_flight
+                    )
+                })
+                .collect();
+            s.push_str(&format!("; segments: {}", segs.join(" | ")));
+        }
         s
     }
 }
@@ -254,6 +304,30 @@ mod tests {
         assert!(m.queue_wait_p99_us() <= 9.0 + 1e-9);
         assert!(m.service_p50_us() >= 100.0);
         assert!(m.summary().contains("queue wait"));
+    }
+
+    #[test]
+    fn segment_occupancy_in_summary_and_merge() {
+        let seg = |label: &str, frames: u64, mif: f64| SegmentOccupancy {
+            label: label.to_string(),
+            frames,
+            mean_in_flight: mif,
+        };
+        let mut a = Metrics::default();
+        a.set_segments(vec![seg("l0.fwd", 10, 1.0), seg("l0.bwd", 10, 0.5)]);
+        assert!(a.summary().contains("segments: l0.fwd 10f"));
+        let mut b = Metrics::default();
+        b.set_segments(vec![seg("l0.fwd", 30, 2.0), seg("l1.fwd", 40, 1.5)]);
+        a.merge(&b);
+        assert_eq!(a.segments.len(), 3);
+        let fwd = a.segments.iter().find(|s| s.label == "l0.fwd").unwrap();
+        assert_eq!(fwd.frames, 40);
+        // Weighted mean: (1.0·10 + 2.0·30) / 40 = 1.75.
+        assert!((fwd.mean_in_flight - 1.75).abs() < 1e-9);
+        assert_eq!(
+            a.segments.iter().find(|s| s.label == "l1.fwd").unwrap().frames,
+            40
+        );
     }
 
     #[test]

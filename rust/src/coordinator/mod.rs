@@ -11,25 +11,34 @@
 //! routes utterances to the least-loaded lane and backfills the moment a
 //! stream retires — continuous admission, no wave barrier.
 //!
-//! - [`pipeline`] — one 3-stage threaded pipeline lane over any
+//! - [`pipeline`] — one 3-stage threaded pipeline executing a single
+//!   `(layer, direction)` segment over any
 //!   [`Backend`](crate::runtime::backend::Backend).
-//! - [`engine`] — the replicated [`ServeEngine`]: N lanes, non-blocking
-//!   submit, completion channel.
+//! - [`topology`] — the stack topology engine: the compiled segment DAG
+//!   ([`StackTopology`]) and the replicated [`StackEngine`] that chains
+//!   segment pipelines to serve full multi-layer / bidirectional models
+//!   (Fig 6b inter-layer pipelining).
+//! - [`engine`] — the replicated single-segment [`ServeEngine`]: N lanes,
+//!   non-blocking submit, completion channel (errors on stacked specs —
+//!   the stack engine owns those).
 //! - [`batcher`] — utterance admission, backpressure, the bounded waiting
 //!   room in front of the engine.
 //! - [`metrics`] — latency/throughput accounting (queue-wait vs service
-//!   split, percentiles).
+//!   split, percentiles, per-segment occupancy).
 //! - [`server`] — the end-to-end ASR serving loop (workload in, PER +
-//!   throughput out), closed-loop or open-loop Poisson arrivals.
+//!   throughput out), closed-loop or open-loop Poisson arrivals, always
+//!   over the full stack.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
+pub mod topology;
 
 pub use batcher::{Batcher, QueuedUtterance};
 pub use engine::{CompletedUtterance, EngineConfig, ServeEngine, Ticket};
 pub use metrics::Metrics;
 pub use pipeline::{ClstmPipeline, PipelineConfig};
 pub use server::{serve_workload, Arrival, ServeOptions, ServeReport};
+pub use topology::{StackEngine, StackTopology};

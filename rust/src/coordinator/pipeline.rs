@@ -27,11 +27,11 @@
 use crate::coordinator::metrics::Metrics;
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::{Backend, PreparedWeights, StageExecutor};
+use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor};
 use anyhow::{ensure, Context, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Stages in the pipeline (Fig 7: gate convolutions, element-wise cluster,
 /// projection).
@@ -118,6 +118,7 @@ impl DoneFrame {
 /// The running pipeline (threads + channel endpoints + recycled buffers).
 pub struct ClstmPipeline {
     spec: LstmSpec,
+    seg: SegmentId,
     to_s1: Option<SyncSender<FrameMsg>>,
     done_rx: Receiver<FrameMsg>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -132,23 +133,42 @@ pub struct ClstmPipeline {
 
 impl ClstmPipeline {
     /// Prepare `weights` on `backend` and launch a single pipeline with the
-    /// default configuration — convenience for one-replica callers. For a
+    /// default configuration — convenience for one-replica callers serving
+    /// a **single-segment** model (one layer, one direction). For a
     /// replicated engine, call [`Backend::prepare`] once and build each
-    /// lane with [`Self::with_prepared`].
+    /// lane with [`Self::with_prepared`]; for stacked/bidirectional models
+    /// use the [`StackEngine`](crate::coordinator::topology::StackEngine),
+    /// which chains one pipeline per segment.
     pub fn build(backend: &dyn Backend, weights: &LstmWeights) -> Result<Self> {
+        let spec = &weights.spec;
+        ensure!(
+            spec.layers == 1 && !spec.bidirectional,
+            "spec has {} layer(s) × {} direction(s): a single ClstmPipeline serves one \
+             (layer, direction) segment — serve the full stack with StackEngine \
+             (coordinator::topology), or name the segment via with_prepared",
+            spec.layers,
+            spec.directions()
+        );
         let prepared = backend.prepare(weights)?;
-        Self::with_prepared(backend, &prepared, PipelineConfig::default())
+        Self::with_prepared(
+            backend,
+            &prepared,
+            PipelineConfig::default(),
+            SegmentId::LAYER0_FWD,
+        )
     }
 
-    /// Build one replica's stage executors over the shared prepared weights
-    /// and launch the stage threads.
+    /// Build one replica's stage executors for segment `seg` over the
+    /// shared prepared weights and launch the stage threads. The pipeline's
+    /// input width follows the segment's layer (`spec.layer_input_dim`).
     pub fn with_prepared(
         backend: &dyn Backend,
         prepared: &Arc<PreparedWeights>,
         cfg: PipelineConfig,
+        seg: SegmentId,
     ) -> Result<Self> {
         let spec = prepared.spec.clone();
-        let stages = backend.build_stages(prepared)?;
+        let stages = backend.build_stages(prepared, seg)?;
         let depth = cfg.channel_depth.max(1);
         let window = cfg.window();
 
@@ -162,7 +182,7 @@ impl ClstmPipeline {
         ensure!(s3_lens.len() == 1, "stage3 must declare one output");
         let (a_len, m_len, c_len, y_len) = (s1_lens[0], s2_lens[0], s2_lens[1], s3_lens[0]);
 
-        let in_pad = spec.pad(spec.layer_input_dim(0));
+        let in_pad = spec.pad(spec.layer_input_dim(seg.layer));
         let out_pad = spec.pad(spec.out_dim());
         ensure!(y_len == out_pad, "stage3 output {} != out_pad {}", y_len, out_pad);
         let fused_len = in_pad + out_pad;
@@ -247,6 +267,7 @@ impl ClstmPipeline {
 
         Ok(Self {
             spec,
+            seg,
             to_s1: Some(to_s1),
             done_rx,
             handles: vec![h1, h2, h3],
@@ -276,6 +297,17 @@ impl ClstmPipeline {
     /// The model spec this pipeline serves.
     pub fn spec(&self) -> &LstmSpec {
         &self.spec
+    }
+
+    /// Which `(layer, direction)` segment this pipeline executes.
+    pub fn segment(&self) -> SegmentId {
+        self.seg
+    }
+
+    /// Padded input width of [`Self::dispatch`] frames (this segment's
+    /// layer input dim, block-padded).
+    pub fn in_pad(&self) -> usize {
+        self.in_pad
     }
 
     /// Padded output length of [`DoneFrame::y`].
@@ -359,6 +391,23 @@ impl ClstmPipeline {
             latency_us: msg.dispatched.elapsed().as_secs_f64() * 1e6,
             msg,
         })
+    }
+
+    /// Block up to `timeout` for the next completed frame; `Ok(None)` on
+    /// timeout (multi-pipeline schedulers park briefly on one pipeline and
+    /// re-poll the others).
+    pub fn recv_done_timeout(&mut self, timeout: Duration) -> Result<Option<DoneFrame>> {
+        match self.done_rx.recv_timeout(timeout) {
+            Ok(msg) => {
+                self.in_flight -= 1;
+                Ok(Some(DoneFrame {
+                    latency_us: msg.dispatched.elapsed().as_secs_f64() * 1e6,
+                    msg,
+                }))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => anyhow::bail!("pipeline stage threads are gone"),
+        }
     }
 
     /// Harvest a completed frame without blocking; `Ok(None)` when nothing

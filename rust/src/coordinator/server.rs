@@ -1,6 +1,13 @@
-//! End-to-end ASR serving: SynthTIMIT workload → replicated engine (any
-//! backend) → classifier → PER + throughput. The driver behind
+//! End-to-end ASR serving: SynthTIMIT workload → replicated stack engine
+//! (any backend) → classifier → PER + throughput. The driver behind
 //! `clstm serve` and `examples/asr_pipeline.rs`.
+//!
+//! Serving always runs the **full stack topology** — every layer, every
+//! direction, chained per Fig 6b — so `clstm serve --model google|small`
+//! reports PER computed over the complete model, never a silently
+//! truncated layer 0. The per-frame outputs the classifier sees are the
+//! direction-concatenated final-layer frames, exactly
+//! [`StackF32::run`](crate::lstm::sequence::StackF32)'s.
 //!
 //! The [`ServeReport`] carries PER alongside the throughput metrics for
 //! every backend, so running the same seeded workload on two backends
@@ -17,8 +24,9 @@
 //! SLA-style queue-wait/service measurements.
 
 use crate::coordinator::batcher::{Batcher, QueuedUtterance};
-use crate::coordinator::engine::{CompletedUtterance, EngineConfig, ServeEngine};
+use crate::coordinator::engine::{CompletedUtterance, EngineConfig};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::topology::StackEngine;
 use crate::data::per::phone_error_rate;
 use crate::data::synth::{SynthConfig, SynthTimit};
 use crate::lstm::sequence::argmax;
@@ -123,7 +131,10 @@ pub fn serve_workload(
         .classifier
         .clone()
         .context("weights have no classifier head")?;
-    let out_dim = spec.out_dim();
+    // The stack engine emits direction-concatenated final-layer frames
+    // (`out_dim · directions` wide) — the width the classifier is trained
+    // over, so a bidirectional model is decoded over both directions.
+    let final_out = spec.out_dim() * spec.directions();
     let n_cls = cls_b.len();
     let decode = |outputs: &[Vec<f32>]| -> Vec<usize> {
         // Classifier + greedy decode on the host (as in ESE).
@@ -133,8 +144,8 @@ pub fn serve_workload(
                 let logits: Vec<f32> = (0..n_cls)
                     .map(|c| {
                         cls_b[c]
-                            + (0..out_dim)
-                                .map(|j| cls_w[c * out_dim + j] * y[j])
+                            + (0..final_out)
+                                .map(|j| cls_w[c * final_out + j] * y[j])
                                 .sum::<f32>()
                     })
                     .collect();
@@ -148,7 +159,7 @@ pub fn serve_workload(
         streams_per_lane: opts.streams_per_lane,
         channel_depth: opts.channel_depth,
     };
-    let mut engine = ServeEngine::build(backend, weights, engine_cfg)?;
+    let mut engine = StackEngine::build(backend, weights, engine_cfg)?;
     let replicas = engine.replicas();
     // The engine takes ~two utterance generations per stream slot; the
     // batcher holds the rest so its occupancy stays a meaningful
@@ -218,6 +229,7 @@ pub fn serve_workload(
         }
     }
     metrics.wall = t0.elapsed();
+    metrics.set_segments(engine.segment_stats());
     drop(engine);
 
     let per = phone_error_rate(&hyps, &refs);

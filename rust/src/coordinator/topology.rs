@@ -1,0 +1,873 @@
+//! The stack topology engine: serve full multi-layer / bidirectional
+//! models through chained pipeline lanes (Fig 6b).
+//!
+//! The paper pipelines LSTM *layers* against each other — layer *l+1*
+//! consumes frame *t* while layer *l* computes *t+1* — so a deep stack
+//! streams at the throughput of one layer. [`StackTopology`] compiles an
+//! [`LstmSpec`] into the DAG that realises this in software: one pipeline
+//! **segment** per `(layer, direction)` cell, forward segments chained
+//! head-to-tail through inter-layer frame hand-off, backward segments fed
+//! the time-reversed frame stream, and the two directions of a
+//! bidirectional layer joined by a concat node before the next layer:
+//!
+//! ```text
+//!   Google (2 stacked):   l0.fwd ──► l1.fwd ──► out
+//!
+//!   Small (2 bidi):       l0.fwd ─┐         l1.fwd ─┐
+//!               frames ─┤         ├─⊕─► ────┤        ├─⊕─► out
+//!   (reversed) frames ─► l0.bwd ─┘  (concat) l1.bwd ─┘
+//! ```
+//!
+//! [`StackEngine`] replicates whole topology *instances* — every segment's
+//! 3-stage [`ClstmPipeline`] — behind the same non-blocking
+//! `submit`/`recv` ticket API as the single-segment
+//! [`ServeEngine`](crate::coordinator::engine::ServeEngine). All replicas
+//! share one [`Backend::prepare`] result, so N topology instances read a
+//! single copy of every segment's spectra.
+//!
+//! ## Scheduling
+//!
+//! Each replica is one worker thread owning a `Vec<ClstmPipeline>` (one
+//! per segment; each pipeline runs its own three stage threads, so layer
+//! compute genuinely overlaps). The worker interleaves up to
+//! `streams_per_lane` utterances and moves frames between segments:
+//!
+//! - a **forward** segment of layer `l` consumes layer-`l` input frames in
+//!   time order, the moment each becomes available — for `l = 0`
+//!   immediately, for `l > 0` as the concat of layer `l−1` lands (the
+//!   Fig 6b overlap: frame `t` enters layer `l+1` while layer `l` works on
+//!   `t+1`);
+//! - a **backward** segment consumes them newest-first (the reversed
+//!   stream), so in a bidirectional stack layer `l+1` can only start once
+//!   layer `l` has finished the utterance — inter-layer overlap then comes
+//!   from *different* utterances occupying different layers;
+//! - per `(stream, segment)` at most one frame is in flight (the
+//!   recurrence), and a segment's recurrent `y`/`c` state lives in the
+//!   scheduler exactly as in the single-segment engine;
+//! - frames never block across segments: a completed frame is staged until
+//!   every direction of its layer has produced time `t`, then concatenated
+//!   (`y[..out_dim]` per direction, the same truncation as
+//!   [`StackF32`](crate::lstm::sequence::StackF32)) and handed to the next
+//!   layer, so engine outputs are **bit-identical to the
+//!   `StackF32`/`StackFx` oracles** at any replica count.
+//!
+//! Per-segment occupancy (frames served + mean frames in flight) is
+//! tracked across all replicas and surfaces through
+//! [`StackEngine::segment_stats`] → [`Metrics`](crate::coordinator::metrics).
+
+use crate::coordinator::batcher::QueuedUtterance;
+use crate::coordinator::engine::{CompletedUtterance, EngineConfig, Ticket};
+use crate::coordinator::metrics::SegmentOccupancy;
+use crate::coordinator::pipeline::{ClstmPipeline, DoneFrame, PipelineConfig};
+use crate::lstm::config::LstmSpec;
+use crate::lstm::weights::LstmWeights;
+use crate::runtime::backend::{Backend, SegmentId};
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One node of the compiled stack DAG: a `(layer, direction)` pipeline
+/// segment.
+#[derive(Debug, Clone)]
+pub struct TopoSegment {
+    pub id: SegmentId,
+    /// Raw (unpadded) input dim this segment consumes
+    /// (`spec.layer_input_dim(layer)`).
+    pub input_dim: usize,
+    /// Backward segments consume the layer's frame stream newest-first.
+    pub reversed: bool,
+}
+
+/// The compiled segment DAG of a (possibly stacked, possibly
+/// bidirectional) model: segments in layer-major order (forward before
+/// backward within a layer), with an implicit concat join per layer.
+#[derive(Debug, Clone)]
+pub struct StackTopology {
+    pub spec: LstmSpec,
+    pub segments: Vec<TopoSegment>,
+}
+
+impl StackTopology {
+    /// Compile `spec` into its segment DAG.
+    pub fn compile(spec: &LstmSpec) -> Self {
+        let mut segments = Vec::with_capacity(spec.layers * spec.directions());
+        for layer in 0..spec.layers {
+            for dir in 0..spec.directions() {
+                segments.push(TopoSegment {
+                    id: SegmentId::new(layer, dir),
+                    input_dim: spec.layer_input_dim(layer),
+                    reversed: dir == 1,
+                });
+            }
+        }
+        Self {
+            spec: spec.clone(),
+            segments,
+        }
+    }
+
+    /// Number of segments (`layers × directions`).
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Whether the DAG has no segments at all (only a pathological
+    /// zero-layer spec compiles to this; a single-segment chain has
+    /// `len() == 1`).
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// Width of the final per-frame output: one direction's `out_dim`, or
+    /// both concatenated — exactly the `StackF32::run` frame width.
+    pub fn final_out_dim(&self) -> usize {
+        self.spec.out_dim() * self.spec.directions()
+    }
+
+    /// One-line ASCII rendering of the DAG (serve logs, docs).
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::with_capacity(self.spec.layers);
+        for l in 0..self.spec.layers {
+            if self.spec.directions() == 2 {
+                parts.push(format!("[l{l}.fwd || l{l}.bwd]->concat"));
+            } else {
+                parts.push(format!("l{l}.fwd"));
+            }
+        }
+        format!(
+            "{} segment(s): {} -> out[{}]",
+            self.len(),
+            parts.join(" -> "),
+            self.final_out_dim()
+        )
+    }
+}
+
+/// Per-segment counters shared by every replica worker (occupancy +
+/// conservation accounting).
+struct SegStat {
+    /// Frames this segment completed, across all replicas.
+    frames: AtomicU64,
+    /// Sum of in-flight snapshots (occupancy numerator).
+    inflight_sum: AtomicU64,
+    /// Number of snapshots (occupancy denominator).
+    samples: AtomicU64,
+}
+
+impl SegStat {
+    fn new() -> Self {
+        Self {
+            frames: AtomicU64::new(0),
+            inflight_sum: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Worker-local accumulator for one segment's statistics, folded into the
+/// shared [`SegStat`] atomics only when an utterance completes (and at
+/// worker exit) — the scheduling hot loop never touches cross-replica
+/// cache lines.
+#[derive(Default, Clone, Copy)]
+struct LocalSegStats {
+    frames: u64,
+    inflight_sum: u64,
+    samples: u64,
+}
+
+/// Fold the worker-local counters into the shared per-segment atomics.
+/// Called before an utterance's completion is sent, so a driver that has
+/// drained all completions observes fully-flushed statistics.
+fn flush_stats(local: &mut [LocalSegStats], shared: &[SegStat]) {
+    for (l, s) in local.iter_mut().zip(shared) {
+        if l.frames > 0 {
+            s.frames.fetch_add(l.frames, Ordering::Relaxed);
+        }
+        if l.samples > 0 {
+            s.inflight_sum.fetch_add(l.inflight_sum, Ordering::Relaxed);
+            s.samples.fetch_add(l.samples, Ordering::Relaxed);
+        }
+        *l = LocalSegStats::default();
+    }
+}
+
+/// One utterance queued to a topology instance.
+struct StackJob {
+    utt: QueuedUtterance,
+    submitted: Instant,
+}
+
+struct StackLane {
+    tx: Option<Sender<StackJob>>,
+    /// Outstanding frames routed to this instance (least-loaded key).
+    load: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// N replicated topology instances over one shared weight preparation,
+/// behind the `submit`/`recv` ticket API.
+pub struct StackEngine {
+    topo: StackTopology,
+    lanes: Vec<StackLane>,
+    done_rx: Receiver<CompletedUtterance>,
+    submitted: usize,
+    completed: usize,
+    backend_name: String,
+    streams_per_lane: usize,
+    /// Padded layer-0 input dim — frames are validated at submit so a bad
+    /// frame is an error here, not a panic inside a worker.
+    in_pad: usize,
+    seg_stats: Arc<Vec<SegStat>>,
+}
+
+impl StackEngine {
+    /// Prepare `weights` once on `backend` (every segment) and launch
+    /// `cfg.replicas` topology instances over the shared prepared weights.
+    pub fn build(backend: &dyn Backend, weights: &LstmWeights, cfg: EngineConfig) -> Result<Self> {
+        let topo = StackTopology::compile(&weights.spec);
+        ensure!(!topo.is_empty(), "spec compiles to an empty topology");
+        ensure!(
+            weights.layers.len() == weights.spec.layers
+                && weights
+                    .layers
+                    .iter()
+                    .all(|dirs| dirs.len() == weights.spec.directions()),
+            "weight bundle shape does not match the spec's {} layer(s) × {} direction(s)",
+            weights.spec.layers,
+            weights.spec.directions()
+        );
+        let prepared = backend.prepare(weights)?;
+        let in_pad = prepared.spec.pad(prepared.spec.layer_input_dim(0));
+        let seg_stats: Arc<Vec<SegStat>> =
+            Arc::new((0..topo.len()).map(|_| SegStat::new()).collect());
+        let (done_tx, done_rx) = channel::<CompletedUtterance>();
+        let replicas = cfg.replicas.max(1);
+        let streams = cfg.streams_per_lane.max(1);
+        let mut lanes = Vec::with_capacity(replicas);
+        for lane in 0..replicas {
+            let mut pipes = Vec::with_capacity(topo.len());
+            for seg in &topo.segments {
+                pipes.push(ClstmPipeline::with_prepared(
+                    backend,
+                    &prepared,
+                    PipelineConfig {
+                        channel_depth: cfg.channel_depth,
+                    },
+                    seg.id,
+                )?);
+            }
+            let (tx, rx) = channel::<StackJob>();
+            let load = Arc::new(AtomicUsize::new(0));
+            let worker_load = Arc::clone(&load);
+            let worker_done = done_tx.clone();
+            let worker_topo = topo.clone();
+            let worker_stats = Arc::clone(&seg_stats);
+            let handle = std::thread::Builder::new()
+                .name(format!("clstm-stack{lane}"))
+                .spawn(move || {
+                    stack_worker(
+                        lane,
+                        worker_topo,
+                        pipes,
+                        rx,
+                        worker_done,
+                        worker_load,
+                        streams,
+                        worker_stats,
+                    )
+                })?;
+            lanes.push(StackLane {
+                tx: Some(tx),
+                load,
+                handle: Some(handle),
+            });
+        }
+        Ok(Self {
+            topo,
+            lanes,
+            done_rx,
+            submitted: 0,
+            completed: 0,
+            backend_name: backend.name(),
+            streams_per_lane: streams,
+            in_pad,
+            seg_stats,
+        })
+    }
+
+    /// The compiled topology the engine serves.
+    pub fn topology(&self) -> &StackTopology {
+        &self.topo
+    }
+
+    /// Number of replicated topology instances.
+    pub fn replicas(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Name of the backend serving the instances.
+    pub fn backend_name(&self) -> &str {
+        &self.backend_name
+    }
+
+    /// Utterances submitted but not yet drained.
+    pub fn pending(&self) -> usize {
+        self.submitted - self.completed
+    }
+
+    /// Outstanding frames across all instances (load snapshot).
+    pub fn load(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.load.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Whether every instance worker is still alive (a dead worker means a
+    /// bug — drivers should bail rather than wait forever).
+    pub fn healthy(&self) -> bool {
+        self.lanes
+            .iter()
+            .all(|l| l.handle.as_ref().is_some_and(|h| !h.is_finished()))
+    }
+
+    /// Admission bound used by the drive loops: roughly two utterance
+    /// generations in flight per stream slot.
+    pub fn admit_limit(&self) -> usize {
+        2 * self.replicas() * self.streams_per_lane
+    }
+
+    /// Per-segment serving statistics across all replicas: frames
+    /// completed and mean frames in flight (occupancy).
+    pub fn segment_stats(&self) -> Vec<SegmentOccupancy> {
+        self.topo
+            .segments
+            .iter()
+            .zip(self.seg_stats.iter())
+            .map(|(seg, st)| {
+                let samples = st.samples.load(Ordering::Relaxed);
+                SegmentOccupancy {
+                    label: seg.id.to_string(),
+                    frames: st.frames.load(Ordering::Relaxed),
+                    mean_in_flight: if samples == 0 {
+                        0.0
+                    } else {
+                        st.inflight_sum.load(Ordering::Relaxed) as f64 / samples as f64
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Non-blocking submit: route `utt` to the least-loaded instance. The
+    /// queue-wait clock starts now; use [`Self::submit_arrived`] when the
+    /// utterance already waited upstream.
+    pub fn submit(&mut self, utt: QueuedUtterance) -> Result<Ticket> {
+        self.submit_arrived(utt, Instant::now())
+    }
+
+    /// Submit with an explicit arrival instant, so the reported queue-wait
+    /// split covers upstream waiting-room time too.
+    pub fn submit_arrived(&mut self, utt: QueuedUtterance, arrived: Instant) -> Result<Ticket> {
+        ensure!(
+            utt.frames.iter().all(|f| f.len() <= self.in_pad),
+            "utterance {} has a frame longer than the padded input dim {}",
+            utt.id,
+            self.in_pad
+        );
+        let lane = self
+            .lanes
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .context("engine has no instances")?;
+        let utt_id = utt.id;
+        let cost = utt.frames.len().max(1);
+        let lane_ref = &self.lanes[lane];
+        let tx = lane_ref.tx.as_ref().context("engine already shut down")?;
+        // Count the load before the send and roll back on failure, exactly
+        // as in the single-segment engine.
+        lane_ref.load.fetch_add(cost, Ordering::Relaxed);
+        let sent = tx.send(StackJob {
+            utt,
+            submitted: arrived,
+        });
+        if sent.is_err() {
+            lane_ref.load.fetch_sub(cost, Ordering::Relaxed);
+            anyhow::bail!("stack instance {lane} worker is gone");
+        }
+        self.submitted += 1;
+        Ok(Ticket { utt_id, lane })
+    }
+
+    /// Block for the next completed utterance; `None` when nothing is
+    /// pending or an instance died.
+    pub fn recv(&mut self) -> Option<CompletedUtterance> {
+        while self.pending() > 0 {
+            match self.done_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(c) => {
+                    self.completed += 1;
+                    return Some(c);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.healthy() {
+                        return None;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+        None
+    }
+
+    /// Drain one completed utterance without blocking.
+    pub fn try_recv(&mut self) -> Option<CompletedUtterance> {
+        match self.done_rx.try_recv() {
+            Ok(c) => {
+                self.completed += 1;
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Block up to `timeout` for the next completion.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<CompletedUtterance> {
+        if self.pending() == 0 {
+            return None;
+        }
+        match self.done_rx.recv_timeout(timeout) {
+            Ok(c) => {
+                self.completed += 1;
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Closed-loop convenience driver: submit every utterance with bounded
+    /// admission, drain until all complete, and return the completions.
+    pub fn serve_all(
+        &mut self,
+        utts: impl IntoIterator<Item = QueuedUtterance>,
+    ) -> Result<Vec<CompletedUtterance>> {
+        let mut queue: VecDeque<QueuedUtterance> = utts.into_iter().collect();
+        let total = queue.len();
+        let limit = self.admit_limit();
+        let mut done = Vec::with_capacity(total);
+        while done.len() < total {
+            while self.pending() < limit {
+                let Some(u) = queue.pop_front() else { break };
+                self.submit(u)?;
+            }
+            match self.recv_timeout(Duration::from_millis(50)) {
+                Some(c) => done.push(c),
+                None => ensure!(
+                    self.healthy(),
+                    "stack instance died with {} utterances outstanding",
+                    self.pending()
+                ),
+            }
+        }
+        Ok(done)
+    }
+
+    /// Collect every outstanding completion, then shut the instances down.
+    pub fn finish(mut self) -> Vec<CompletedUtterance> {
+        let mut out = Vec::new();
+        while let Some(c) = self.recv() {
+            out.push(c);
+        }
+        self.shutdown_lanes();
+        out
+    }
+
+    fn shutdown_lanes(&mut self) {
+        for l in self.lanes.iter_mut() {
+            l.tx = None; // closes the instance queue
+        }
+        for l in self.lanes.iter_mut() {
+            if let Some(h) = l.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for StackEngine {
+    fn drop(&mut self) {
+        self.shutdown_lanes();
+    }
+}
+
+/// Per-segment progress of one utterance through one topology instance.
+struct SegRun {
+    /// Recurrent output state (padded, `out_pad`).
+    y: Vec<f32>,
+    /// Recurrent cell state (`hidden`).
+    c: Vec<f32>,
+    /// Consumption steps dispatched so far (0..=T; the time index is
+    /// reversed for backward segments).
+    next: usize,
+    /// Whether a frame of this (stream, segment) is in the pipeline
+    /// (recurrence: at most one).
+    in_flight: bool,
+}
+
+/// One utterance being streamed through the segment DAG.
+struct ActiveStack {
+    utt: QueuedUtterance,
+    submitted: Instant,
+    first_dispatch: Option<Instant>,
+    /// Utterance length T.
+    frames: usize,
+    /// `inputs[layer][t]`: the layer's input frame at time `t`, when ready.
+    /// Layer 0 is filled at admission; layer `l+1` as layer `l` concats.
+    inputs: Vec<Vec<Option<Vec<f32>>>>,
+    /// `staged[layer][dir][t]`: a direction's truncated output awaiting
+    /// the layer's concat join.
+    staged: Vec<Vec<Vec<Option<Vec<f32>>>>>,
+    /// Per-segment recurrence state, indexed like the topology.
+    segs: Vec<SegRun>,
+    /// Final per-frame outputs (`final_out_dim` each), assembled per time.
+    outputs: Vec<Option<Vec<f32>>>,
+    /// When each frame first entered a layer-0 segment (latency clock).
+    frame_start: Vec<Option<Instant>>,
+    /// End-to-end per-frame latency through the whole DAG, µs, by time.
+    frame_latency_us: Vec<f64>,
+    /// Final frames assembled so far.
+    assembled: usize,
+}
+
+/// One topology instance's scheduler: interleave up to `max_streams`
+/// utterances through all segment pipelines, moving frames across the DAG
+/// the moment they become ready.
+#[allow(clippy::too_many_arguments)]
+fn stack_worker(
+    lane: usize,
+    topo: StackTopology,
+    mut pipes: Vec<ClstmPipeline>,
+    rx: Receiver<StackJob>,
+    done_tx: Sender<CompletedUtterance>,
+    load: Arc<AtomicUsize>,
+    max_streams: usize,
+    seg_stats: Arc<Vec<SegStat>>,
+) {
+    /// How long to park on one busy segment's completion channel before
+    /// re-polling the others (each pipeline owns a private done channel, so
+    /// an "any segment" wakeup is not available; this bounds the
+    /// head-of-line wait when a *different* segment completes first).
+    const POLL_PARK: Duration = Duration::from_micros(100);
+
+    let layers = topo.spec.layers;
+    let dirs = topo.spec.directions();
+    let nseg = topo.len();
+    let mut slots: Vec<Option<ActiveStack>> = (0..max_streams).map(|_| None).collect();
+    let mut local_stats = vec![LocalSegStats::default(); nseg];
+    let mut active = 0usize;
+    let mut rx_open = true;
+
+    loop {
+        // Continuous admission into free stream slots. Blocks only when the
+        // instance is fully idle; otherwise drains whatever is queued.
+        while rx_open && active < max_streams {
+            let job = if active == 0 {
+                match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => {
+                        rx_open = false;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(j) => j,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        rx_open = false;
+                        break;
+                    }
+                }
+            };
+            if job.utt.frames.is_empty() {
+                // Degenerate zero-frame utterance: completes immediately.
+                load.fetch_sub(1, Ordering::Relaxed);
+                let _ = done_tx.send(CompletedUtterance {
+                    queue_wait_us: job.submitted.elapsed().as_secs_f64() * 1e6,
+                    service_us: 0.0,
+                    outputs: Vec::new(),
+                    frame_latency_us: Vec::new(),
+                    lane,
+                    utt: job.utt,
+                });
+                continue;
+            }
+            let slot = slots
+                .iter()
+                .position(Option::is_none)
+                .expect("active < max_streams implies a free slot");
+            let t_frames = job.utt.frames.len();
+            let mut inputs: Vec<Vec<Option<Vec<f32>>>> =
+                (0..layers).map(|_| vec![None; t_frames]).collect();
+            for (t, f) in job.utt.frames.iter().enumerate() {
+                inputs[0][t] = Some(f.clone());
+            }
+            slots[slot] = Some(ActiveStack {
+                submitted: job.submitted,
+                first_dispatch: None,
+                frames: t_frames,
+                inputs,
+                staged: (0..layers)
+                    .map(|_| (0..dirs).map(|_| vec![None; t_frames]).collect())
+                    .collect(),
+                segs: pipes
+                    .iter()
+                    .map(|p| SegRun {
+                        y: vec![0.0; p.out_pad()],
+                        c: vec![0.0; p.hidden()],
+                        next: 0,
+                        in_flight: false,
+                    })
+                    .collect(),
+                outputs: vec![None; t_frames],
+                frame_start: vec![None; t_frames],
+                frame_latency_us: vec![0.0; t_frames],
+                assembled: 0,
+                utt: job.utt,
+            });
+            active += 1;
+        }
+        if active == 0 {
+            if !rx_open {
+                break;
+            }
+            continue;
+        }
+
+        // Scheduling rounds: dispatch every ready (stream, segment) frame,
+        // harvest every completion, repeat until quiescent.
+        loop {
+            let mut progress = false;
+            for slot in 0..max_streams {
+                let Some(au) = slots[slot].as_mut() else {
+                    continue;
+                };
+                for (seg_idx, seg) in topo.segments.iter().enumerate() {
+                    let sr = &au.segs[seg_idx];
+                    if sr.in_flight || sr.next >= au.frames {
+                        continue;
+                    }
+                    let t = if seg.reversed {
+                        au.frames - 1 - sr.next
+                    } else {
+                        sr.next
+                    };
+                    let layer = seg.id.layer;
+                    if au.inputs[layer][t].is_none() || !pipes[seg_idx].has_capacity() {
+                        continue;
+                    }
+                    {
+                        let x = au.inputs[layer][t].as_ref().expect("readiness checked");
+                        let sr = &au.segs[seg_idx];
+                        pipes[seg_idx]
+                            .dispatch(slot, t, x, &sr.y, &sr.c)
+                            .expect("stack dispatch");
+                    }
+                    if layer == 0 && au.frame_start[t].is_none() {
+                        au.frame_start[t] = Some(Instant::now());
+                    }
+                    if au.first_dispatch.is_none() {
+                        au.first_dispatch = Some(Instant::now());
+                    }
+                    let sr = &mut au.segs[seg_idx];
+                    sr.in_flight = true;
+                    sr.next += 1;
+                    progress = true;
+                }
+            }
+            for seg_idx in 0..nseg {
+                while let Some(d) = pipes[seg_idx].try_recv_done().expect("stack try_recv") {
+                    complete_frame(
+                        seg_idx, d, &mut pipes, &mut slots, &topo, &mut local_stats, &seg_stats,
+                        &done_tx, &load, lane, &mut active,
+                    );
+                    progress = true;
+                }
+            }
+            // Occupancy snapshot per round — worker-local, flushed to the
+            // shared atomics only at utterance completion / worker exit.
+            for (seg_idx, l) in local_stats.iter_mut().enumerate() {
+                l.inflight_sum += pipes[seg_idx].in_flight() as u64;
+                l.samples += 1;
+            }
+            if !progress {
+                break;
+            }
+        }
+
+        // Quiescent: if frames are in flight, park briefly on one busy
+        // segment instead of spinning. A completion on ANY segment re-opens
+        // dispatch, but each pipeline owns a private done channel, so the
+        // bounded timeout caps the head-of-line wait when a different
+        // segment finishes first; the next scheduling round re-polls all.
+        let busy = (0..nseg).find(|&i| pipes[i].in_flight() > 0);
+        match busy {
+            Some(seg_idx) => {
+                if let Some(d) = pipes[seg_idx]
+                    .recv_done_timeout(POLL_PARK)
+                    .expect("stack recv")
+                {
+                    complete_frame(
+                        seg_idx, d, &mut pipes, &mut slots, &topo, &mut local_stats, &seg_stats,
+                        &done_tx, &load, lane, &mut active,
+                    );
+                }
+            }
+            None => {
+                // Invariant: an incomplete utterance always has either a
+                // frame in flight or a dispatchable frame (the first
+                // incomplete segment in topology order has all its layer
+                // inputs ready). Reaching here with active streams is a
+                // scheduler bug; die loudly so `healthy()` trips.
+                assert!(
+                    active == 0,
+                    "stack scheduler wedged: {active} active stream(s), nothing in flight"
+                );
+            }
+        }
+    }
+    flush_stats(&mut local_stats, &seg_stats);
+    for p in pipes.iter_mut() {
+        p.shutdown();
+    }
+}
+
+/// Fold one completed segment frame back into its utterance: update the
+/// segment's recurrent state, stage the truncated output, run the concat
+/// join when every direction of the layer has time `t`, hand the concat to
+/// the next layer (or assemble the final output), and emit the utterance's
+/// completion when its last frame lands.
+#[allow(clippy::too_many_arguments)]
+fn complete_frame(
+    seg_idx: usize,
+    done: DoneFrame,
+    pipes: &mut [ClstmPipeline],
+    slots: &mut [Option<ActiveStack>],
+    topo: &StackTopology,
+    local_stats: &mut [LocalSegStats],
+    seg_stats: &[SegStat],
+    done_tx: &Sender<CompletedUtterance>,
+    load: &AtomicUsize,
+    lane: usize,
+    active: &mut usize,
+) {
+    let slot = done.stream();
+    let t = done.t();
+    let out_dim = topo.spec.out_dim();
+    let dirs = topo.spec.directions();
+    let id = topo.segments[seg_idx].id;
+    let finished = {
+        let au = slots[slot].as_mut().expect("completion for empty slot");
+        let sr = &mut au.segs[seg_idx];
+        sr.y.copy_from_slice(done.y());
+        sr.c.copy_from_slice(done.c());
+        sr.in_flight = false;
+        au.staged[id.layer][id.dir][t] = Some(done.y()[..out_dim].to_vec());
+        local_stats[seg_idx].frames += 1;
+
+        // Concat join: once every direction of this layer has time t.
+        if (0..dirs).all(|d| au.staged[id.layer][d][t].is_some()) {
+            let mut concat = Vec::with_capacity(out_dim * dirs);
+            for d in 0..dirs {
+                let part = au.staged[id.layer][d][t].take().expect("staged checked");
+                concat.extend_from_slice(&part);
+            }
+            if id.layer + 1 < topo.spec.layers {
+                au.inputs[id.layer + 1][t] = Some(concat);
+            } else {
+                debug_assert!(au.outputs[t].is_none(), "final frame {t} assembled twice");
+                au.outputs[t] = Some(concat);
+                let start = au.frame_start[t].unwrap_or(au.submitted);
+                au.frame_latency_us[t] = start.elapsed().as_secs_f64() * 1e6;
+                au.assembled += 1;
+            }
+        }
+        au.assembled == au.frames
+    };
+    pipes[seg_idx].recycle(done);
+    if finished {
+        let au = slots[slot].take().expect("finished slot");
+        *active -= 1;
+        let first = au.first_dispatch.unwrap_or(au.submitted);
+        load.fetch_sub(au.frames.max(1), Ordering::Relaxed);
+        // Publish statistics before the completion becomes visible, so a
+        // driver that drained everything reads fully-flushed counters.
+        flush_stats(local_stats, seg_stats);
+        // If the engine has been dropped, keep draining so the instance
+        // (and its pipelines) still shuts down cleanly.
+        let _ = done_tx.send(CompletedUtterance {
+            queue_wait_us: (first - au.submitted).as_secs_f64() * 1e6,
+            service_us: first.elapsed().as_secs_f64() * 1e6,
+            outputs: au
+                .outputs
+                .into_iter()
+                .map(|o| o.expect("all frames assembled"))
+                .collect(),
+            frame_latency_us: au.frame_latency_us,
+            lane,
+            utt: au.utt,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unidirectional_stack_compiles_to_a_chain() {
+        let spec = LstmSpec::google(8);
+        let topo = StackTopology::compile(&spec);
+        assert_eq!(topo.len(), 2);
+        assert!(!topo.is_empty());
+        assert_eq!(topo.segments[0].id, SegmentId::new(0, 0));
+        assert_eq!(topo.segments[1].id, SegmentId::new(1, 0));
+        assert!(topo.segments.iter().all(|s| !s.reversed));
+        assert_eq!(topo.segments[0].input_dim, spec.input_dim);
+        assert_eq!(topo.segments[1].input_dim, spec.out_dim());
+        assert_eq!(topo.final_out_dim(), spec.out_dim());
+        assert_eq!(topo.describe(), "2 segment(s): l0.fwd -> l1.fwd -> out[512]");
+    }
+
+    #[test]
+    fn bidirectional_stack_compiles_with_reversed_and_concat() {
+        let spec = LstmSpec::small(8);
+        let topo = StackTopology::compile(&spec);
+        assert_eq!(topo.len(), 4);
+        let ids: Vec<(usize, usize, bool)> = topo
+            .segments
+            .iter()
+            .map(|s| (s.id.layer, s.id.dir, s.reversed))
+            .collect();
+        assert_eq!(
+            ids,
+            vec![(0, 0, false), (0, 1, true), (1, 0, false), (1, 1, true)]
+        );
+        // Layer 1 consumes the concat of both layer-0 directions.
+        assert_eq!(topo.segments[2].input_dim, 2 * spec.out_dim());
+        assert_eq!(topo.final_out_dim(), 2 * spec.out_dim());
+        assert!(topo.describe().contains("[l0.fwd || l0.bwd]->concat"));
+    }
+
+    #[test]
+    fn single_segment_topology_is_degenerate_chain() {
+        let spec = LstmSpec::tiny(4);
+        let topo = StackTopology::compile(&spec);
+        assert_eq!(topo.len(), 1);
+        assert_eq!(topo.final_out_dim(), spec.out_dim());
+    }
+}

@@ -13,7 +13,9 @@
 //!   models (Eq 7–12), design-space exploration, HLS code generation, a
 //!   cycle-approximate FPGA pipeline simulator, the ESE sparse baseline, a
 //!   bit-accurate 16-bit fixed-point inference engine, and a replicated
-//!   serving engine (N pipeline lanes sharing one prepared-weights copy,
+//!   stack-topology serving engine (full multi-layer / bidirectional
+//!   models as chained per-(layer, direction) pipeline segments — Fig 6b —
+//!   with N topology instances sharing one prepared-weights copy,
 //!   continuous admission) over pluggable runtime backends: the default
 //!   **native** backend executes the pipeline with the crate's own engines
 //!   (zero external artifacts), while the optional `pjrt` cargo feature

@@ -16,6 +16,72 @@ use std::cell::RefCell;
 use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
 use crate::num::fxp::{Q, Rounding};
 
+/// The §4.2 element-wise cluster (Eq 1a–1f) on the 16-bit datapath:
+/// saturating pre-activation adds (the FPGA adder tree), quantised PWL
+/// activations, single Q-format multiplies with configurable narrowing.
+///
+/// This is the **single implementation** shared by the [`CellFx`] oracle
+/// and the serving backend's stage-2 executor
+/// ([`FxpStage2`](crate::runtime::fxp)), so backend/oracle bit-identity is
+/// true by construction across every layer and direction — not merely
+/// pinned by golden tests.
+pub struct FxElementwise<'a> {
+    pub q: Q,
+    pub rounding: Rounding,
+    /// Gate biases in `i, f, g, o` order (length ≥ `h` each).
+    pub bias: &'a [Vec<i16>; 4],
+    /// Peephole vectors `w_ic, w_fc, w_oc`, when the spec has them.
+    pub peephole: Option<&'a [Vec<i16>; 3]>,
+    pub pwl_sigmoid: &'a PwlTable,
+    pub pwl_tanh: &'a PwlTable,
+}
+
+impl FxElementwise<'_> {
+    /// One frame of the element-wise cluster over `h` cells: gate
+    /// pre-activations `a` (in `i, f, g, o` order, length ≥ `h` each) in,
+    /// cell output written to `m[..h]`, and the cell state `c` updated **in
+    /// place** — read as `c_{t-1}`, left as `c_t` (each element is read
+    /// before it is written, so no separate output buffer is needed).
+    pub fn step(&self, h: usize, a: [&[i16]; 4], m: &mut [i16], c: &mut [i16]) {
+        let q = self.q;
+        let r = self.rounding;
+        let [a_i, a_f, a_g, a_o] = a;
+        for n in 0..h {
+            let peep_term = |idx: usize, c_val: i16| -> i16 {
+                match self.peephole {
+                    Some(p) => q.mul(p[idx][n], c_val, r),
+                    None => 0,
+                }
+            };
+            let c_prev = c[n];
+            // Pre-activations: saturating 16-bit adds (FPGA adder tree).
+            let zi = a_i[n]
+                .saturating_add(peep_term(0, c_prev))
+                .saturating_add(self.bias[GATE_I][n]);
+            let zf = a_f[n]
+                .saturating_add(peep_term(1, c_prev))
+                .saturating_add(self.bias[GATE_F][n]);
+            let zg = a_g[n].saturating_add(self.bias[GATE_G][n]);
+
+            let i = self.pwl_sigmoid.eval_fx(zi, r);
+            let f = self.pwl_sigmoid.eval_fx(zf, r);
+            let g = self.pwl_tanh.eval_fx(zg, r);
+
+            // Eq 1d: c = f⊙c_prev + g⊙i, two Q multiplies + saturating add.
+            let cn = q.mul(f, c_prev, r).saturating_add(q.mul(g, i, r));
+
+            let zo = a_o[n]
+                .saturating_add(peep_term(2, cn))
+                .saturating_add(self.bias[GATE_O][n]);
+            let o = self.pwl_sigmoid.eval_fx(zo, r);
+
+            // Eq 1f.
+            m[n] = q.mul(o, self.pwl_tanh.eval_fx(cn, r), r);
+            c[n] = cn;
+        }
+    }
+}
+
 /// Fixed-point cell: one direction of one layer.
 pub struct CellFx {
     pub spec: LstmSpec,
@@ -45,12 +111,25 @@ pub struct CellStateFx {
 }
 
 impl CellFx {
-    /// Quantise layer weights into a ready-to-run fixed-point cell.
+    /// Quantise layer weights into a ready-to-run fixed-point cell with the
+    /// default round-to-nearest narrowing.
     ///
     /// `q` is the data format (Q3.12 by default from the range analysis);
     /// spectral weight formats are chosen per matrix by range analysis.
     pub fn new(spec: &LstmSpec, layer: usize, w: &LayerWeights, q: Q) -> Self {
-        let rounding = Rounding::Nearest;
+        Self::with_rounding(spec, layer, w, q, Rounding::Nearest)
+    }
+
+    /// As [`Self::new`] with an explicit narrowing policy — the §4.2
+    /// shift-policy ablation (`Rounding::Truncate` drops the rounding add
+    /// after every distributed shift, as a plain `>>` datapath would).
+    pub fn with_rounding(
+        spec: &LstmSpec,
+        layer: usize,
+        w: &LayerWeights,
+        q: Q,
+        rounding: Rounding,
+    ) -> Self {
         let mk_plan = |m: &crate::circulant::BlockCirculant| {
             let spec_f = SpectralWeights::precompute(m);
             let fx = SpectralWeightsFx::quantize_auto(&spec_f);
@@ -128,45 +207,30 @@ impl CellFx {
             self.gates[GATE_G].matvec_into(&fused, &mut third[0], &mut scratch);
             self.gates[GATE_O].matvec_into(&fused, &mut fourth[0], &mut scratch);
         }
-        let a_i = &gate_out[GATE_I];
-        let a_f = &gate_out[GATE_F];
-        let a_g = &gate_out[GATE_G];
-        let a_o = &gate_out[GATE_O];
-
-        let peep = self.peephole.as_ref();
+        // The element-wise cluster — the one implementation shared with the
+        // serving backend's stage 2 ([`FxElementwise`]); updates state.c in
+        // place. (`m` is a fresh vector because it becomes the return value
+        // on the no-projection path, exactly as before.)
         let mut m = vec![0i16; self.gates[GATE_I].weights.p * self.gates[GATE_I].weights.k];
-        for n in 0..h {
-            let peep_term = |idx: usize, c_val: i16| -> i16 {
-                match peep {
-                    Some(p) => q.mul(p[idx][n], c_val, r),
-                    None => 0,
-                }
-            };
-            // Pre-activations: saturating 16-bit adds (FPGA adder tree).
-            let zi = a_i[n]
-                .saturating_add(peep_term(0, state.c[n]))
-                .saturating_add(self.bias[GATE_I][n]);
-            let zf = a_f[n]
-                .saturating_add(peep_term(1, state.c[n]))
-                .saturating_add(self.bias[GATE_F][n]);
-            let zg = a_g[n].saturating_add(self.bias[GATE_G][n]);
-
-            let i = self.pwl_sigmoid.eval_fx(zi, r);
-            let f = self.pwl_sigmoid.eval_fx(zf, r);
-            let g = self.pwl_tanh.eval_fx(zg, r);
-
-            // Eq 1d: c = f⊙c_prev + g⊙i, two Q multiplies + saturating add.
-            let c = q.mul(f, state.c[n], r).saturating_add(q.mul(g, i, r));
-
-            let zo = a_o[n]
-                .saturating_add(peep_term(2, c))
-                .saturating_add(self.bias[GATE_O][n]);
-            let o = self.pwl_sigmoid.eval_fx(zo, r);
-
-            // Eq 1f.
-            m[n] = q.mul(o, self.pwl_tanh.eval_fx(c, r), r);
-            state.c[n] = c;
+        FxElementwise {
+            q,
+            rounding: r,
+            bias: &self.bias,
+            peephole: self.peephole.as_ref(),
+            pwl_sigmoid: &self.pwl_sigmoid,
+            pwl_tanh: &self.pwl_tanh,
         }
+        .step(
+            h,
+            [
+                &gate_out[GATE_I][..],
+                &gate_out[GATE_F][..],
+                &gate_out[GATE_G][..],
+                &gate_out[GATE_O][..],
+            ],
+            &mut m,
+            &mut state.c,
+        );
 
         let y = match &self.proj {
             Some(p) => {

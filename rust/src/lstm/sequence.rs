@@ -6,7 +6,7 @@ use super::cell_f32::CellF32;
 use super::cell_fxp::CellFx;
 use super::config::LstmSpec;
 use super::weights::LstmWeights;
-use crate::num::fxp::Q;
+use crate::num::fxp::{Q, Rounding};
 
 /// A ready-to-run float model: all layers/directions with precomputed
 /// spectra, plus the classifier head.
@@ -113,13 +113,20 @@ pub struct StackFx {
 
 impl StackFx {
     pub fn new(w: &LstmWeights, q: Q) -> Self {
+        Self::with_rounding(w, q, Rounding::Nearest)
+    }
+
+    /// As [`Self::new`] with an explicit narrowing policy (§4.2 shift-policy
+    /// ablation) — the oracle counterpart of serving with
+    /// `clstm serve --backend fxp --rounding truncate`.
+    pub fn with_rounding(w: &LstmWeights, q: Q, rounding: Rounding) -> Self {
         let cells = w
             .layers
             .iter()
             .enumerate()
             .map(|(l, dirs)| {
                 dirs.iter()
-                    .map(|lw| CellFx::new(&w.spec, l, lw, q))
+                    .map(|lw| CellFx::with_rounding(&w.spec, l, lw, q, rounding))
                     .collect()
             })
             .collect();

@@ -10,11 +10,15 @@
 //! clstm dse               # sweep block sizes, print design points
 //! clstm codegen           # emit the HLS C++ for a scheduled design
 //! clstm simulate          # discrete-event pipeline simulation
-//! clstm serve             # serve SynthTIMIT through the replicated engine
+//! clstm serve             # serve SynthTIMIT through the replicated stack
+//!                         #   engine — the FULL topology: --model google
+//!                         #   chains 2 stacked layers, --model small runs
+//!                         #   2 bidirectional layers with concat joins
 //!                         #   (--backend native | fxp | pjrt, --replicas N,
 //!                         #    --arrival closed|poisson --rate R;
-//!                         #    fxp runs the §4.2 16-bit datapath and prints
-//!                         #    the float-vs-fixed PER comparison)
+//!                         #    fxp runs the §4.2 16-bit datapath, prints
+//!                         #    the float-vs-fixed PER comparison, and takes
+//!                         #    --rounding nearest|truncate)
 //! clstm quantize          # range analysis + fxp-vs-float accuracy report
 //! ```
 
@@ -45,6 +49,11 @@ fn main() {
         "q-format",
         "auto",
         "fxp data format: auto (range analysis) | <frac bits> | qI.F (e.g. q3.12)",
+    )
+    .opt(
+        "rounding",
+        "nearest",
+        "fxp narrowing policy: nearest | truncate (§4.2 shift-policy ablation)",
     )
     .opt("utts", "24", "utterances to serve (sized so the PER comparison is meaningful)")
     .opt("streams", "4", "interleaved streams per pipeline lane")

@@ -7,14 +7,19 @@
 //!
 //! 1. [`Backend::prepare`] runs **once per weight bundle** and produces an
 //!    [`Arc<PreparedWeights>`]: everything derived from the weights — the
-//!    `F(w_ij)` spectra of §4.1, literals, activation tables. This is the
-//!    expensive step (FFTs over every weight block).
-//! 2. [`Backend::build_stages`] runs **once per replica** over the shared
-//!    prepared weights and is cheap: executors hold `Arc` references plus
-//!    their own scratch buffers, so N replicas never clone or recompute the
-//!    spectra — the software analogue of the paper's Algorithm-1 hardware
-//!    replication (§5), where every replica reads the same BRAM-resident
-//!    weights.
+//!    `F(w_ij)` spectra of §4.1, literals, activation tables — for **every**
+//!    `(layer, direction)` segment of the model, not just layer 0. This is
+//!    the expensive step (FFTs over every weight block of every layer).
+//! 2. [`Backend::build_stages`] runs **once per replica per segment** over
+//!    the shared prepared weights and is cheap: executors hold `Arc`
+//!    references plus their own scratch buffers, so N replicas never clone
+//!    or recompute the spectra — the software analogue of the paper's
+//!    Algorithm-1 hardware replication (§5), where every replica reads the
+//!    same BRAM-resident weights. The segment is named explicitly by a
+//!    [`SegmentId`], so there is no silent layer-0 fallback anywhere: a
+//!    stacked/bidirectional model is served by chaining one stage set per
+//!    segment (see [`StackEngine`](crate::coordinator::topology::StackEngine),
+//!    the Fig 6b inter-layer pipelining).
 //!
 //! Backends:
 //!
@@ -55,6 +60,51 @@ use crate::lstm::weights::LstmWeights;
 use anyhow::{ensure, Context, Result};
 use std::any::Any;
 use std::sync::Arc;
+
+/// One `(layer, direction)` cell of a (possibly stacked, possibly
+/// bidirectional) model — the unit a backend builds stage executors for.
+/// Direction 0 is forward; direction 1 is the time-reversed backward cell
+/// of a bidirectional layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SegmentId {
+    pub layer: usize,
+    pub dir: usize,
+}
+
+impl SegmentId {
+    /// Layer 0, forward — the segment single-layer callers serve.
+    pub const LAYER0_FWD: SegmentId = SegmentId { layer: 0, dir: 0 };
+
+    pub const fn new(layer: usize, dir: usize) -> Self {
+        Self { layer, dir }
+    }
+}
+
+impl std::fmt::Display for SegmentId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "l{}.{}",
+            self.layer,
+            if self.dir == 0 { "fwd" } else { "bwd" }
+        )
+    }
+}
+
+/// Look up a per-segment entry in a `[layer][dir]` table with a uniform
+/// out-of-range diagnostic (shared by the backend implementations).
+pub fn segment_entry<'a, T>(segs: &'a [Vec<T>], seg: SegmentId, backend: &str) -> Result<&'a T> {
+    segs.get(seg.layer)
+        .and_then(|dirs| dirs.get(seg.dir))
+        .with_context(|| {
+            format!(
+                "{backend} prepared weights have no segment {seg}: the bundle covers \
+                 {} layer(s) × {} direction(s)",
+                segs.len(),
+                segs.first().map(Vec::len).unwrap_or(0)
+            )
+        })
+}
 
 /// Weights prepared once by a [`Backend`] and shared read-only by every
 /// replica's stage executors. The payload is backend-specific (spectra,
@@ -131,32 +181,36 @@ pub trait StageExecutor: Send {
     }
 }
 
-/// The three prepared stages of one C-LSTM serving step (layer 0, like the
-/// paper's single-layer accelerator).
+/// The three prepared stages of one C-LSTM serving step for one
+/// `(layer, direction)` segment of the model.
 pub struct StageSet {
     pub stage1: Box<dyn StageExecutor>,
     pub stage2: Box<dyn StageExecutor>,
     pub stage3: Box<dyn StageExecutor>,
 }
 
-/// A serving backend: prepares a weight bundle once, then turns the shared
-/// prepared weights into runnable pipeline stages, once per replica.
+/// A serving backend: prepares a weight bundle once (every segment), then
+/// turns the shared prepared weights into runnable pipeline stages — once
+/// per replica per segment.
 pub trait Backend {
     /// Human-readable backend identifier (shown in serve reports/logs).
     fn name(&self) -> String;
 
     /// One-time preparation: precompute everything derived from `weights`
-    /// (spectra, literals, tables). The result is shared across replicas.
+    /// (spectra, literals, tables) for **every** `(layer, direction)`
+    /// segment. The result is shared across replicas.
     fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>>;
 
-    /// Cheap per-replica step: build the three stage executors over the
-    /// shared prepared weights (scratch buffers only — no recomputation).
-    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet>;
+    /// Cheap per-replica step: build the three stage executors of segment
+    /// `seg` over the shared prepared weights (scratch buffers only — no
+    /// recomputation). Errors when the prepared bundle has no such segment.
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>, seg: SegmentId) -> Result<StageSet>;
 
-    /// Convenience for single-replica callers: prepare + one stage set.
+    /// Convenience for single-replica single-segment callers: prepare + the
+    /// layer-0 forward stage set.
     fn build_single(&self, weights: &LstmWeights) -> Result<StageSet> {
         let prepared = self.prepare(weights)?;
-        self.build_stages(&prepared)
+        self.build_stages(&prepared, SegmentId::LAYER0_FWD)
     }
 }
 
@@ -220,8 +274,40 @@ mod tests {
         assert_eq!(prepared.spec, w.spec);
         // Many replicas from one preparation.
         for _ in 0..4 {
-            backend.build_stages(&prepared).expect("replica stages");
+            backend
+                .build_stages(&prepared, SegmentId::LAYER0_FWD)
+                .expect("replica stages");
         }
+    }
+
+    #[test]
+    fn every_segment_of_a_stack_is_buildable() {
+        // A 2-layer bidirectional spec prepares 4 segments, all buildable;
+        // a segment past the bundle is a helpful error, not a panic.
+        let mut spec = LstmSpec::small(4);
+        spec.hidden_dim = 16;
+        spec.input_dim = 8;
+        let w = LstmWeights::random(&spec, 13);
+        let backend = NativeBackend::default();
+        let prepared = backend.prepare(&w).expect("prepare");
+        for layer in 0..2 {
+            for dir in 0..2 {
+                backend
+                    .build_stages(&prepared, SegmentId::new(layer, dir))
+                    .unwrap_or_else(|e| panic!("segment l{layer}.d{dir}: {e:#}"));
+            }
+        }
+        let err = backend
+            .build_stages(&prepared, SegmentId::new(2, 0))
+            .expect_err("segment past the stack must error");
+        assert!(format!("{err:#}").contains("no segment"), "{err:#}");
+    }
+
+    #[test]
+    fn segment_id_display_names_layer_and_direction() {
+        assert_eq!(SegmentId::new(0, 0).to_string(), "l0.fwd");
+        assert_eq!(SegmentId::new(1, 1).to_string(), "l1.bwd");
+        assert_eq!(SegmentId::LAYER0_FWD, SegmentId::new(0, 0));
     }
 
     #[test]
@@ -254,7 +340,7 @@ mod tests {
             "somewhere-else",
             Box::new(()),
         ));
-        let err = NativeBackend::default().build_stages(&prepared);
+        let err = NativeBackend::default().build_stages(&prepared, SegmentId::LAYER0_FWD);
         assert!(err.is_err(), "foreign prepared weights must be rejected");
     }
 }

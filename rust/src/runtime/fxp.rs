@@ -3,12 +3,13 @@
 //! FPGA design performs), behind the same [`Backend`] contract as the
 //! float backends.
 //!
-//! [`FxpBackend::prepare`] quantises the weight bundle once — per-gate
-//! [`FxConvPlan`]s over range-analysed [`SpectralWeightsFx`] spectra,
-//! Q-format biases/peepholes, and the quantised 22-segment PWL tables —
-//! into one [`FxpPrepared`] shared read-only by every replica lane.
+//! [`FxpBackend::prepare`] quantises the weight bundle once — for **every**
+//! `(layer, direction)` segment: per-gate [`FxConvPlan`]s over
+//! range-analysed [`SpectralWeightsFx`] spectra, Q-format biases/peepholes,
+//! and the quantised 22-segment PWL tables — into one [`FxpPrepared`]
+//! shared read-only by every replica lane.
 //! [`FxpBackend::build_stages`] is cheap: each replica's executors hold an
-//! `Arc` reference plus their own i16 scratch buffers.
+//! `Arc` reference to their segment plus their own i16 scratch buffers.
 //!
 //! ## Boundary quantisation (why the f32 pipeline stays bit-exact)
 //!
@@ -27,20 +28,28 @@
 //! ## Q-format selection
 //!
 //! The data format is either passed explicitly (CLI `--q-format`) or
-//! recommended by the §4.2 range analysis ([`FxpBackend::recommend_q`]):
-//! the weight tensors are tracked through [`RangeTracker`] together with
-//! the ±8 gate pre-activation envelope the PWL tables are fitted over, and
-//! the widest-range class picks the shared datapath format — Q3.12 for
-//! every model in this repo, matching the paper.
+//! recommended by the §4.2 range analysis: each **layer's** weight tensors
+//! are tracked through their own [`RangeTracker`] together with the ±8
+//! gate pre-activation envelope the PWL tables are fitted over
+//! ([`FxpBackend::recommend_q_per_layer`]), and the widest per-layer
+//! recommendation picks the shared datapath format
+//! ([`FxpBackend::recommend_q`]) — Q3.12 for every model in this repo,
+//! matching the paper. The format must be *shared* across layers because
+//! layer boundaries exchange raw Q-grid values (exactly as the
+//! [`StackFx`](crate::lstm::sequence::StackFx) oracle passes i16 outputs
+//! straight into the next layer); the per-layer reports are kept on
+//! [`FxpPrepared::layer_q`] for diagnostics and the per-*matrix* spectral
+//! formats are still chosen independently by `quantize_auto`.
 
 use crate::circulant::fxp_conv::{FxConvPlan, FxConvScratch};
 use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
 use crate::lstm::activations::PwlTable;
-use crate::lstm::weights::{LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
+use crate::lstm::cell_fxp::FxElementwise;
+use crate::lstm::weights::{LayerWeights, LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
 use crate::num::fxp::{Q, Rounding};
 use crate::quant::range::RangeTracker;
 use crate::runtime::backend::{
-    downcast_prepared, Backend, PreparedWeights, StageExecutor, StageSet,
+    downcast_prepared, segment_entry, Backend, PreparedWeights, SegmentId, StageExecutor, StageSet,
 };
 use anyhow::{ensure, Result};
 use std::sync::Arc;
@@ -79,34 +88,55 @@ impl FxpBackend {
         }
     }
 
-    /// Range-analysis recommendation (§4.2) for `weights`: track every
-    /// weight tensor class plus the ±8 pre-activation envelope the PWL
-    /// tables cover, and take the widest-range class's format as the shared
-    /// datapath format.
-    pub fn recommend_q(weights: &LstmWeights) -> Q {
-        let mut t = RangeTracker::new();
-        for dirs in &weights.layers {
-            for lw in dirs {
-                for g in &lw.gates {
-                    t.observe("gate_w", &g.w);
-                }
-                for b in &lw.bias {
-                    t.observe("bias", b);
-                }
-                if let Some(p) = &lw.peephole {
-                    for v in p {
-                        t.observe("peephole", v);
+    /// Per-layer range-analysis recommendations (§4.2): each layer's weight
+    /// tensor classes are tracked through their own [`RangeTracker`]
+    /// together with the ±8 pre-activation envelope the PWL tables cover,
+    /// and each layer's widest-range class picks that layer's format.
+    pub fn recommend_q_per_layer(weights: &LstmWeights) -> Vec<Q> {
+        weights
+            .layers
+            .iter()
+            .map(|dirs| {
+                let mut t = RangeTracker::new();
+                for lw in dirs {
+                    for g in &lw.gates {
+                        t.observe("gate_w", &g.w);
+                    }
+                    for b in &lw.bias {
+                        t.observe("bias", b);
+                    }
+                    if let Some(p) = &lw.peephole {
+                        for v in p {
+                            t.observe("peephole", v);
+                        }
+                    }
+                    if let Some(p) = &lw.proj {
+                        t.observe("proj_w", &p.w);
                     }
                 }
-                if let Some(p) = &lw.proj {
-                    t.observe("proj_w", &p.w);
-                }
-            }
-        }
-        // Gate pre-activations can reach the edge of the PWL fitted range
-        // (σ over [−8, 8], Fig 4); the datapath format must cover it.
-        t.observe("preact_envelope", &[-8.0, 8.0]);
-        t.report(0).datapath_format()
+                // Gate pre-activations can reach the edge of the PWL fitted
+                // range (σ over [−8, 8], Fig 4); the format must cover it.
+                t.observe("preact_envelope", &[-8.0, 8.0]);
+                t.report(0).datapath_format()
+            })
+            .collect()
+    }
+
+    /// The widest (fewest fractional bits) of a set of per-layer formats.
+    fn widest_q(layer_q: &[Q]) -> Q {
+        layer_q
+            .iter()
+            .copied()
+            .min_by_key(|q| q.frac)
+            .unwrap_or(Q::new(12))
+    }
+
+    /// Range-analysis recommendation (§4.2) for the whole stack: the widest
+    /// of the per-layer recommendations, because layer boundaries exchange
+    /// raw Q-grid values and the `StackFx` oracle runs one shared data
+    /// format.
+    pub fn recommend_q(weights: &LstmWeights) -> Q {
+        Self::widest_q(&Self::recommend_q_per_layer(weights))
     }
 
     /// The format `prepare` will use for `weights`.
@@ -115,11 +145,12 @@ impl FxpBackend {
     }
 }
 
-/// Everything stage construction derives from the weights, quantised once
-/// by [`FxpBackend::prepare`] and shared read-only across replicas.
-pub struct FxpPrepared {
-    /// Data Q-format of every i16 the stages exchange.
-    pub q: Q,
+/// One `(layer, direction)` segment's quantised state, shared read-only by
+/// every replica's executors through an `Arc`.
+struct FxpSegment {
+    /// Data Q-format of every i16 this segment's stages exchange (shared
+    /// across the whole stack).
+    q: Q,
     rounding: Rounding,
     /// Per-gate conv plans in `i, f, g, o` order — the same per-matrix
     /// `quantize_auto` spectra as [`CellFx`](crate::lstm::cell_fxp::CellFx)
@@ -138,22 +169,33 @@ pub struct FxpPrepared {
     fused_len: usize,
 }
 
-impl Backend for FxpBackend {
-    fn name(&self) -> String {
-        "fxp".to_string()
-    }
+/// Everything stage construction derives from the weights — one
+/// [`FxpSegment`] per `(layer, direction)` — quantised once by
+/// [`FxpBackend::prepare`] and shared read-only across replicas.
+pub struct FxpPrepared {
+    /// Data Q-format of every i16 the stages exchange (shared across the
+    /// stack — the widest per-layer recommendation, or the explicit
+    /// override).
+    pub q: Q,
+    /// Per-layer range-analysis recommendations (diagnostics: what each
+    /// layer would have picked on its own).
+    pub layer_q: Vec<Q>,
+    /// `segs[layer][dir]`.
+    segs: Vec<Vec<Arc<FxpSegment>>>,
+}
 
-    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
-        ensure!(
-            !weights.layers.is_empty() && !weights.layers[0].is_empty(),
-            "weights have no layers"
-        );
-        let spec = &weights.spec;
-        let lw = &weights.layers[0][0];
-        let q = self.resolve_q(weights);
+impl FxpBackend {
+    /// Quantise one segment, mirroring `CellFx::with_rounding`
+    /// operation-for-operation: per-matrix spectra quantised with their own
+    /// auto format, data values in the shared `q`.
+    fn prepare_segment(
+        &self,
+        spec: &crate::lstm::config::LstmSpec,
+        layer: usize,
+        lw: &LayerWeights,
+        q: Q,
+    ) -> Result<FxpSegment> {
         let rounding = self.rounding;
-        // Mirror CellFx::new operation-for-operation: per-matrix spectra
-        // quantised with their own auto format, data values in `q`.
         let mk_plan = |m: &crate::circulant::BlockCirculant| {
             let spec_f = SpectralWeights::precompute(m);
             let fx = SpectralWeightsFx::quantize_auto(&spec_f);
@@ -171,16 +213,16 @@ impl Backend for FxpBackend {
         if let Some(p) = &proj {
             ensure!(
                 p.weights.p * p.weights.k == out_pad,
-                "projection rows {} != padded out dim {out_pad}",
+                "layer {layer} projection rows {} != padded out dim {out_pad}",
                 p.weights.p * p.weights.k
             );
             ensure!(
                 p.weights.q * p.weights.k == hidden_pad,
-                "projection cols {} != padded hidden dim {hidden_pad}",
+                "layer {layer} projection cols {} != padded hidden dim {hidden_pad}",
                 p.weights.q * p.weights.k
             );
         }
-        let prepared = FxpPrepared {
+        Ok(FxpSegment {
             q,
             rounding,
             gates,
@@ -203,17 +245,44 @@ impl Backend for FxpBackend {
             h: spec.hidden_dim,
             hidden_pad,
             out_pad,
-            fused_len: spec.fused_in_dim(0),
-        };
+            fused_len: spec.fused_in_dim(layer),
+        })
+    }
+}
+
+impl Backend for FxpBackend {
+    fn name(&self) -> String {
+        "fxp".to_string()
+    }
+
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
+        ensure!(
+            !weights.layers.is_empty() && !weights.layers[0].is_empty(),
+            "weights have no layers"
+        );
+        let spec = &weights.spec;
+        // One per-layer range scan serves both the diagnostics field and
+        // the auto data format (explicit `--q-format` overrides the latter).
+        let layer_q = Self::recommend_q_per_layer(weights);
+        let q = self.q.unwrap_or_else(|| Self::widest_q(&layer_q));
+        let mut segs = Vec::with_capacity(weights.layers.len());
+        for (l, dirs) in weights.layers.iter().enumerate() {
+            let mut seg_dirs = Vec::with_capacity(dirs.len());
+            for lw in dirs {
+                seg_dirs.push(Arc::new(self.prepare_segment(spec, l, lw, q)?));
+            }
+            segs.push(seg_dirs);
+        }
         Ok(Arc::new(PreparedWeights::new(
             spec.clone(),
             self.name(),
-            Box::new(Arc::new(prepared)),
+            Box::new(FxpPrepared { q, layer_q, segs }),
         )))
     }
 
-    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet> {
-        let w: &Arc<FxpPrepared> = downcast_prepared(prepared, "fxp")?;
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>, seg: SegmentId) -> Result<StageSet> {
+        let p: &FxpPrepared = downcast_prepared(prepared, "fxp")?;
+        let w = segment_entry(&p.segs, seg, "fxp")?;
         let stage1 = FxpStage1 {
             fused_q: vec![0; w.fused_len],
             gate_out: std::array::from_fn(|_| vec![0i16; w.hidden_pad]),
@@ -223,6 +292,7 @@ impl Backend for FxpBackend {
         let stage2 = FxpStage2 {
             a_q: vec![0; 4 * w.h],
             c_q: vec![0; w.h],
+            m_q: vec![0; w.h],
             w: Arc::clone(w),
         };
         let stage3 = FxpStage3 {
@@ -243,7 +313,7 @@ impl Backend for FxpBackend {
 /// fixed-point circulant convolutions (FFT with DFT-side distributed
 /// shifts, saturating frequency-domain accumulation).
 struct FxpStage1 {
-    w: Arc<FxpPrepared>,
+    w: Arc<FxpSegment>,
     /// Quantised fused operand, reused per frame.
     fused_q: Vec<i16>,
     /// Raw gate mat-vec outputs (`hidden_pad` each), reused per frame.
@@ -285,15 +355,19 @@ impl StageExecutor for FxpStage1 {
     }
 }
 
-/// Stage 2: the element-wise cluster on the 16-bit datapath — saturating
-/// adds, quantised PWL activations, single Q-format multiplies with
-/// round-to-nearest narrowing — mirroring `CellFx::step` term for term.
+/// Stage 2: the element-wise cluster on the 16-bit datapath — the shared
+/// [`FxElementwise`] implementation, so this executor is the *same code* as
+/// `CellFx::step`'s cluster (bit-identity by construction).
 struct FxpStage2 {
-    w: Arc<FxpPrepared>,
+    w: Arc<FxpSegment>,
     /// Quantised gate pre-activations (`4·h`), reused per frame.
     a_q: Vec<i16>,
-    /// Quantised previous cell state (`h`), reused per frame.
+    /// Quantised cell state (`h`), reused per frame — `c_{t-1}` in,
+    /// updated in place to `c_t` by the element-wise cluster.
     c_q: Vec<i16>,
+    /// Raw cell-output result (`h`), reused per frame and dequantised
+    /// into the f32 frame buffer.
+    m_q: Vec<i16>,
 }
 
 impl StageExecutor for FxpStage2 {
@@ -303,7 +377,6 @@ impl StageExecutor for FxpStage2 {
         let w = &self.w;
         let h = w.h;
         let q = w.q;
-        let r = w.rounding;
         ensure!(a.len() >= 4 * h, "gate pre-activations too short: {}", a.len());
         ensure!(c_prev.len() == h, "cell state length {} != {h}", c_prev.len());
         let (m, c) = match outputs {
@@ -318,38 +391,28 @@ impl StageExecutor for FxpStage2 {
         for (qv, &fv) in self.c_q.iter_mut().zip(c_prev) {
             *qv = q.from_f32(fv);
         }
-        let peep = w.peephole.as_ref();
+        FxElementwise {
+            q,
+            rounding: w.rounding,
+            bias: &w.bias,
+            peephole: w.peephole.as_ref(),
+            pwl_sigmoid: &w.pwl_sigmoid,
+            pwl_tanh: &w.pwl_tanh,
+        }
+        .step(
+            h,
+            [
+                &self.a_q[GATE_I * h..(GATE_I + 1) * h],
+                &self.a_q[GATE_F * h..(GATE_F + 1) * h],
+                &self.a_q[GATE_G * h..(GATE_G + 1) * h],
+                &self.a_q[GATE_O * h..(GATE_O + 1) * h],
+            ],
+            &mut self.m_q,
+            &mut self.c_q,
+        );
         for n in 0..h {
-            let peep_term = |idx: usize, c_val: i16| -> i16 {
-                match peep {
-                    Some(p) => q.mul(p[idx][n], c_val, r),
-                    None => 0,
-                }
-            };
-            // Pre-activations: saturating 16-bit adds (FPGA adder tree).
-            let zi = self.a_q[GATE_I * h + n]
-                .saturating_add(peep_term(0, self.c_q[n]))
-                .saturating_add(w.bias[GATE_I][n]);
-            let zf = self.a_q[GATE_F * h + n]
-                .saturating_add(peep_term(1, self.c_q[n]))
-                .saturating_add(w.bias[GATE_F][n]);
-            let zg = self.a_q[GATE_G * h + n].saturating_add(w.bias[GATE_G][n]);
-
-            let i = w.pwl_sigmoid.eval_fx(zi, r);
-            let f = w.pwl_sigmoid.eval_fx(zf, r);
-            let g = w.pwl_tanh.eval_fx(zg, r);
-
-            // Eq 1d: c = f⊙c_prev + g⊙i, two Q multiplies + saturating add.
-            let cn = q.mul(f, self.c_q[n], r).saturating_add(q.mul(g, i, r));
-
-            let zo = self.a_q[GATE_O * h + n]
-                .saturating_add(peep_term(2, cn))
-                .saturating_add(w.bias[GATE_O][n]);
-            let o = w.pwl_sigmoid.eval_fx(zo, r);
-
-            // Eq 1f.
-            m[n] = q.to_f32(q.mul(o, w.pwl_tanh.eval_fx(cn, r), r));
-            c[n] = q.to_f32(cn);
+            m[n] = q.to_f32(self.m_q[n]);
+            c[n] = q.to_f32(self.c_q[n]);
         }
         Ok(())
     }
@@ -362,7 +425,7 @@ impl StageExecutor for FxpStage2 {
 /// Stage 3: the fixed-point projection convolution (Eq 1g) or identity
 /// padding, then dequantise into the pipeline's output frame.
 struct FxpStage3 {
-    w: Arc<FxpPrepared>,
+    w: Arc<FxpSegment>,
     /// `m_t` quantised and zero-padded to the projection operand width.
     padded_q: Vec<i16>,
     /// Raw projection output (`out_pad`), reused per frame.
@@ -504,8 +567,8 @@ mod tests {
         let backend = FxpBackend::new(QD);
         let prepared = backend.prepare(&w).unwrap();
         assert_eq!(prepared.backend, "fxp");
-        let mut r1 = backend.build_stages(&prepared).unwrap();
-        let mut r2 = backend.build_stages(&prepared).unwrap();
+        let mut r1 = backend.build_stages(&prepared, SegmentId::LAYER0_FWD).unwrap();
+        let mut r2 = backend.build_stages(&prepared, SegmentId::LAYER0_FWD).unwrap();
         let fused = vec![0.5f32; spec.fused_in_dim(0)];
         let a1 = r1.stage1.run(&[&fused]).unwrap().remove(0);
         let a2 = r2.stage1.run(&[&fused]).unwrap().remove(0);
@@ -518,12 +581,89 @@ mod tests {
         let w = LstmWeights::random(&spec, 29);
         let native = crate::runtime::native::NativeBackend::default();
         let prepared = native.prepare(&w).unwrap();
-        let err = match FxpBackend::new(QD).build_stages(&prepared) {
+        let err = match FxpBackend::new(QD).build_stages(&prepared, SegmentId::LAYER0_FWD) {
             Ok(_) => panic!("foreign prepared weights must be rejected"),
             Err(e) => e,
         };
         let msg = format!("{err:#}");
         assert!(msg.contains("fxp") && msg.contains("native"), "msg: {msg}");
+    }
+
+    #[test]
+    fn layer1_segment_matches_layer1_cell_fx() {
+        // The per-segment bundle must quantise layer 1's own matrices (with
+        // layer 1's fused operand width), bit-identical to a layer-1 CellFx.
+        let spec = LstmSpec {
+            layers: 2,
+            ..LstmSpec::tiny(4)
+        };
+        let w = LstmWeights::random(&spec, 53);
+        let backend = FxpBackend::new(QD);
+        let prepared = backend.prepare(&w).unwrap();
+        let mut stages = backend
+            .build_stages(&prepared, SegmentId::new(1, 0))
+            .unwrap();
+        let cell = CellFx::new(&spec, 1, &w.layers[1][0], QD);
+        let mut st = cell.zero_state();
+        let in_pad = spec.pad(spec.layer_input_dim(1));
+        let out_pad = spec.pad(spec.out_dim());
+        let x: Vec<f32> = (0..spec.layer_input_dim(1))
+            .map(|i| QD.to_f32(QD.from_f32(0.03 * i as f32)))
+            .collect();
+        let want = cell.step(&QD.quantize_slice(&x), &mut st);
+
+        let mut fused = vec![0.0f32; in_pad + out_pad];
+        fused[..x.len()].copy_from_slice(&x);
+        let a = stages.stage1.run(&[&fused]).unwrap().remove(0);
+        let c0 = vec![0.0f32; spec.hidden_dim];
+        let mc = stages.stage2.run(&[&a, &c0]).unwrap();
+        let y = stages.stage3.run(&[&mc[0]]).unwrap().remove(0);
+        assert_eq!(QD.quantize_slice(&y), want[..out_pad], "layer-1 i16 mismatch");
+    }
+
+    #[test]
+    fn truncate_rounding_matches_truncate_oracle_and_differs_from_nearest() {
+        // --rounding truncate must flow through every multiply: the engine
+        // agrees with a Truncate CellFx and (on a generic input) disagrees
+        // with the Nearest one.
+        use crate::num::fxp::Rounding;
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 61);
+        let backend = FxpBackend {
+            q: Some(QD),
+            rounding: Rounding::Truncate,
+        };
+        let mut stages = backend.build_single(&w).unwrap();
+        let trunc = CellFx::with_rounding(&spec, 0, &w.layers[0][0], QD, Rounding::Truncate);
+        let near = CellFx::new(&spec, 0, &w.layers[0][0], QD);
+        let in_pad = spec.pad(spec.layer_input_dim(0));
+        let out_pad = spec.pad(spec.out_dim());
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut st_t = trunc.zero_state();
+        let mut st_n = near.zero_state();
+        let mut y_prev = vec![0.0f32; out_pad];
+        let mut c_prev = vec![0.0f32; spec.hidden_dim];
+        let mut diverged = false;
+        for t in 0..6 {
+            let x: Vec<f32> = (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect();
+            let xq = QD.quantize_slice(&x);
+            let want = trunc.step(&xq, &mut st_t);
+            let nearest = near.step(&xq, &mut st_n);
+            diverged |= want != nearest;
+
+            let mut fused = vec![0.0f32; in_pad + out_pad];
+            fused[..x.len()].copy_from_slice(&x);
+            fused[in_pad..].copy_from_slice(&y_prev);
+            let a = stages.stage1.run(&[&fused]).unwrap().remove(0);
+            let mc = stages.stage2.run(&[&a, &c_prev]).unwrap();
+            let y = stages.stage3.run(&[&mc[0]]).unwrap().remove(0);
+            assert_eq!(QD.quantize_slice(&y), want[..out_pad], "t={t}");
+            y_prev.copy_from_slice(&y);
+            c_prev = mc[1].clone();
+        }
+        assert!(diverged, "truncate and nearest oracles never diverged");
     }
 
     #[test]

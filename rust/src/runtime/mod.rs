@@ -3,9 +3,11 @@
 //! The serving coordinator is backend-agnostic — it drives three opaque
 //! stage executors produced by a [`Backend`]. Preparation is split:
 //! [`Backend::prepare`] precomputes the heavy per-weight-bundle state once
-//! ([`PreparedWeights`], shared via `Arc`), and [`Backend::build_stages`]
-//! cheaply builds one replica's executors over it (see [`backend`] for the
-//! traits and the per-stage I/O contract):
+//! for every `(layer, direction)` segment ([`PreparedWeights`], shared via
+//! `Arc`), and [`Backend::build_stages`] cheaply builds one replica's
+//! executors for a named [`SegmentId`](backend::SegmentId) over it — the
+//! stack topology engine chains one stage set per segment (see [`backend`]
+//! for the traits and the per-stage I/O contract):
 //!
 //! - [`backend`] — the pluggable [`Backend`] / [`StageExecutor`] layer.
 //! - [`native`] — the default backend: pure-Rust execution through the
@@ -37,7 +39,7 @@ pub mod client;
 pub mod pjrt;
 
 pub use artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
-pub use backend::{Backend, PreparedWeights, StageExecutor, StageSet};
+pub use backend::{Backend, PreparedWeights, SegmentId, StageExecutor, StageSet};
 pub use fxp::FxpBackend;
 pub use native::NativeBackend;
 

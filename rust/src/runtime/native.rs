@@ -3,10 +3,11 @@
 //!
 //! [`NativeBackend::prepare`] precomputes the heavy state once per weight
 //! bundle — the stacked gate spectra and projection spectra of §4.1 (the
-//! "BRAM-resident `F(w)`") plus bias/peephole vectors and PWL tables — into
-//! one [`NativePrepared`] shared by every replica through an `Arc`.
+//! "BRAM-resident `F(w)`") plus bias/peephole vectors and PWL tables — for
+//! **every** `(layer, direction)` segment of the model, into one
+//! [`NativePrepared`] shared by every replica through an `Arc`.
 //! [`NativeBackend::build_stages`] is then cheap: each replica's executors
-//! hold an `Arc` reference plus their own scratch buffers.
+//! hold an `Arc` reference to their segment plus their own scratch buffers.
 //!
 //! Stage 1 runs the four fused gate convolutions through the optimized Eq 6
 //! operator ([`matvec_eq6_into`]) over the precomputed spectra. Stage 2 is
@@ -19,10 +20,10 @@ use crate::circulant::conv::{matvec_eq6_into, Eq6Scratch};
 use crate::circulant::spectral::SpectralWeights;
 use crate::circulant::BlockCirculant;
 use crate::lstm::activations::{sigmoid, tanh, ActivationMode, PwlTable};
-use crate::lstm::weights::{LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
+use crate::lstm::weights::{LayerWeights, LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
 use crate::num::fxp::Q;
 use crate::runtime::backend::{
-    downcast_prepared, Backend, PreparedWeights, StageExecutor, StageSet,
+    downcast_prepared, segment_entry, Backend, PreparedWeights, SegmentId, StageExecutor, StageSet,
 };
 use anyhow::{ensure, Result};
 use std::sync::Arc;
@@ -49,9 +50,9 @@ impl NativeBackend {
     }
 }
 
-/// Everything stage construction derives from the weights, computed once by
-/// [`NativeBackend::prepare`] and shared read-only across replicas.
-pub struct NativePrepared {
+/// One `(layer, direction)` segment's precomputed state: spectra, vectors,
+/// tables. Shared read-only by every replica's executors through an `Arc`.
+struct NativeSegment {
     /// Precomputed spectra of the `(4·p, q)` row-stacked gate matrices,
     /// gates in `i, f, g, o` order (input-block DFTs shared across gates).
     gates: SpectralWeights,
@@ -70,28 +71,29 @@ pub struct NativePrepared {
     fused_len: usize,
 }
 
-impl Backend for NativeBackend {
-    fn name(&self) -> String {
-        "native".to_string()
-    }
+/// Everything stage construction derives from the weights — one
+/// [`NativeSegment`] per `(layer, direction)` — computed once by
+/// [`NativeBackend::prepare`] and shared read-only across replicas.
+pub struct NativePrepared {
+    /// `segs[layer][dir]`.
+    segs: Vec<Vec<Arc<NativeSegment>>>,
+}
 
-    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
-        ensure!(
-            !weights.layers.is_empty() && !weights.layers[0].is_empty(),
-            "weights have no layers"
-        );
-        let spec = &weights.spec;
-        let lw = &weights.layers[0][0];
+impl NativeBackend {
+    /// Precompute one segment: row-stack the four gate matrices into one
+    /// (4·p, q) circulant operator — the same fusion the AOT kernels use
+    /// (the bundle's `(4p, q, bins)` layout) — so the per-frame input DFTs
+    /// of the shared fused operand are computed once, not once per gate.
+    fn prepare_segment(
+        &self,
+        spec: &crate::lstm::config::LstmSpec,
+        layer: usize,
+        lw: &LayerWeights,
+    ) -> NativeSegment {
         let h = spec.hidden_dim;
         let hidden_pad = spec.pad(h);
-        let out_pad = spec.pad(spec.out_dim());
         let q = Q::new(12);
-
-        // Stack the four gate matrices row-wise into one (4·p, q) circulant
-        // operator — the same fusion the AOT kernels use (the bundle's
-        // `(4p, q, bins)` layout) — so the per-frame input DFTs of the
-        // shared fused operand are computed once, not once per gate.
-        let fused_len = spec.fused_in_dim(0);
+        let fused_len = spec.fused_in_dim(layer);
         let stacked = {
             let mut w = Vec::with_capacity(4 * lw.gates[0].w.len());
             for g in [GATE_I, GATE_F, GATE_G, GATE_O] {
@@ -99,7 +101,7 @@ impl Backend for NativeBackend {
             }
             BlockCirculant::from_vectors(4 * hidden_pad, fused_len, spec.k, w)
         };
-        let prepared = NativePrepared {
+        NativeSegment {
             gates: SpectralWeights::precompute(&stacked),
             proj: lw.proj.as_ref().map(SpectralWeights::precompute),
             bias: lw.bias.clone(),
@@ -112,18 +114,43 @@ impl Backend for NativeBackend {
             mode: self.mode,
             h,
             hidden_pad,
-            out_pad,
+            out_pad: spec.pad(spec.out_dim()),
             fused_len,
-        };
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
+        ensure!(
+            !weights.layers.is_empty() && !weights.layers[0].is_empty(),
+            "weights have no layers"
+        );
+        let spec = &weights.spec;
+        let segs = weights
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, dirs)| {
+                dirs.iter()
+                    .map(|lw| Arc::new(self.prepare_segment(spec, l, lw)))
+                    .collect()
+            })
+            .collect();
         Ok(Arc::new(PreparedWeights::new(
             spec.clone(),
             self.name(),
-            Box::new(Arc::new(prepared)),
+            Box::new(NativePrepared { segs }),
         )))
     }
 
-    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet> {
-        let w: &Arc<NativePrepared> = downcast_prepared(prepared, "native")?;
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>, seg: SegmentId) -> Result<StageSet> {
+        let p: &NativePrepared = downcast_prepared(prepared, "native")?;
+        let w = segment_entry(&p.segs, seg, "native")?;
         let stage1 = NativeStage1 {
             w: Arc::clone(w),
             acc: vec![0.0; 4 * w.hidden_pad],
@@ -146,7 +173,7 @@ impl Backend for NativeBackend {
 /// Stage 1: the four fused gate circulant convolutions (Eq 6), stacked
 /// row-wise into one operator so the input-block DFTs are shared.
 struct NativeStage1 {
-    w: Arc<NativePrepared>,
+    w: Arc<NativeSegment>,
     /// Stacked output buffer (`4 · hidden_pad`), reused per frame.
     acc: Vec<f32>,
     scratch: Eq6Scratch,
@@ -182,7 +209,7 @@ impl StageExecutor for NativeStage1 {
 /// Stage 2: the element-wise cluster (Eq 1a–1f), mirroring `CellF32::step`
 /// term for term so the pipeline reproduces the reference engine exactly.
 struct NativeStage2 {
-    w: Arc<NativePrepared>,
+    w: Arc<NativeSegment>,
 }
 
 impl NativeStage2 {
@@ -242,7 +269,7 @@ impl StageExecutor for NativeStage2 {
 
 /// Stage 3: projection convolution (Eq 1g) or identity padding.
 struct NativeStage3 {
-    w: Arc<NativePrepared>,
+    w: Arc<NativeSegment>,
     /// `m_t` zero-padded to the projection operand width, reused per frame.
     padded: Vec<f32>,
     scratch: Eq6Scratch,
@@ -366,12 +393,50 @@ mod tests {
         let w = LstmWeights::random(&spec, 23);
         let backend = NativeBackend::default();
         let prepared = backend.prepare(&w).unwrap();
-        let mut r1 = backend.build_stages(&prepared).unwrap();
-        let mut r2 = backend.build_stages(&prepared).unwrap();
+        let mut r1 = backend.build_stages(&prepared, SegmentId::LAYER0_FWD).unwrap();
+        let mut r2 = backend.build_stages(&prepared, SegmentId::LAYER0_FWD).unwrap();
         let fused = vec![0.5f32; spec.fused_in_dim(0)];
         let a1 = r1.stage1.run(&[&fused]).unwrap().remove(0);
         let a2 = r2.stage1.run(&[&fused]).unwrap().remove(0);
         assert_eq!(a1, a2, "replicas over shared spectra must agree exactly");
+    }
+
+    #[test]
+    fn layer1_segment_consumes_the_stacked_input_dim() {
+        // In a 2-layer stack, segment (1, fwd) must size its fused operand
+        // from layer 1's input dim (the previous layer's output), not the
+        // raw feature dim — this is what the old layers[0][0] hardcode got
+        // wrong for every layer past the first.
+        let spec = LstmSpec {
+            layers: 2,
+            ..LstmSpec::tiny(4)
+        };
+        let w = LstmWeights::random(&spec, 37);
+        let backend = NativeBackend::default();
+        let prepared = backend.prepare(&w).unwrap();
+        let mut s1 = backend.build_stages(&prepared, SegmentId::new(1, 0)).unwrap();
+        let cell = CellF32::new(&spec, 1, &w.layers[1][0], ActivationMode::Exact);
+        let mut st = cell.zero_state();
+        let x: Vec<f32> = (0..spec.layer_input_dim(1)).map(|i| 0.01 * i as f32).collect();
+        let want = cell.step(&x, &mut st);
+
+        let in_pad = spec.pad(spec.layer_input_dim(1));
+        let out_pad = spec.pad(spec.out_dim());
+        let mut fused = vec![0.0f32; in_pad + out_pad];
+        fused[..x.len()].copy_from_slice(&x);
+        let a = s1.stage1.run(&[&fused]).unwrap().remove(0);
+        let c0 = vec![0.0f32; spec.hidden_dim];
+        let mc = s1.stage2.run(&[&a, &c0]).unwrap();
+        let y = s1.stage3.run(&[&mc[0]]).unwrap().remove(0);
+        assert_eq!(y.len(), want.len());
+        for i in 0..y.len() {
+            assert!(
+                (y[i] - want[i]).abs() < 1e-5,
+                "y[{i}]: stage {} vs layer-1 engine {}",
+                y[i],
+                want[i]
+            );
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use crate::lstm::weights::LstmWeights;
 use crate::runtime::artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
 use crate::runtime::backend::{
-    downcast_prepared, Backend, PreparedWeights, StageExecutor, StageSet,
+    downcast_prepared, segment_entry, Backend, PreparedWeights, SegmentId, StageExecutor, StageSet,
 };
 use crate::runtime::client::{Executable, Runtime};
 use anyhow::{ensure, Context, Result};
@@ -35,11 +35,15 @@ impl PjrtBackend {
     }
 }
 
-/// Shared per-weight-bundle state: the precomputed spectral buffers plus the
-/// resolved artifact config. Plain flat data — `Send + Sync`.
+/// Shared per-weight-bundle state: one precomputed spectral bundle per
+/// servable `(layer, direction)` segment plus the resolved artifact
+/// config. Plain flat data — `Send + Sync`.
 pub struct PjrtPrepared {
     cfg: ConfigArtifacts,
-    bundle: SpectralBundle,
+    /// `bundles[layer][dir]`. `None` for segments whose fused width the
+    /// artifact set cannot execute (no FFT work is wasted preparing them;
+    /// `build_stages` rejects them with the regenerate-artifacts error).
+    bundles: Vec<Vec<Option<SpectralBundle>>>,
     h: usize,
     out_pad: usize,
     has_proj: bool,
@@ -58,9 +62,26 @@ impl Backend for PjrtBackend {
             .clone();
         let spec = &weights.spec;
         ensure!(spec.k == cfg.k, "weights k={} vs artifact k={}", spec.k, cfg.k);
+        // The stage HLOs are compiled for the layer-0 operand shapes, so
+        // only segments with that fused width are executable — don't waste
+        // the per-segment FFT preparation on ones build_stages must reject.
+        let fused_0 = spec.fused_in_dim(0);
+        let bundles = weights
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, dirs)| {
+                (0..dirs.len())
+                    .map(|d| {
+                        (spec.fused_in_dim(l) == fused_0)
+                            .then(|| SpectralBundle::from_weights(weights, l, d))
+                    })
+                    .collect()
+            })
+            .collect();
         let prepared = PjrtPrepared {
             cfg,
-            bundle: SpectralBundle::from_weights(weights, 0, 0),
+            bundles,
             h: spec.hidden_dim,
             out_pad: spec.pad(spec.out_dim()),
             has_proj: spec.proj_dim.is_some(),
@@ -72,9 +93,25 @@ impl Backend for PjrtBackend {
         )))
     }
 
-    fn build_stages(&self, prepared: &Arc<PreparedWeights>) -> Result<StageSet> {
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>, seg: SegmentId) -> Result<StageSet> {
         let p: &PjrtPrepared = downcast_prepared(prepared, "pjrt")?;
-        let (cfg, bundle, h) = (&p.cfg, &p.bundle, p.h);
+        // The stage HLOs in the artifact set are compiled for the layer-0
+        // operand shapes; the weights reach them as runtime literals, so the
+        // same executables serve any segment with an identical fused width
+        // (e.g. both directions of a bidirectional layer 0). A layer with a
+        // different width needs its own artifact entries.
+        let spec = &prepared.spec;
+        let (fused_seg, fused_0) = (spec.fused_in_dim(seg.layer), spec.fused_in_dim(0));
+        ensure!(
+            fused_seg == fused_0,
+            "segment {seg} has fused operand width {fused_seg}, but the AOT artifact \
+             set compiles stage HLOs for the layer-0 width {fused_0}; regenerate the \
+             artifacts with per-layer stage entries to serve this segment on pjrt"
+        );
+        let bundle = segment_entry(&p.bundles, seg, "pjrt")?
+            .as_ref()
+            .expect("width-matching segments always have a prepared bundle");
+        let (cfg, h) = (&p.cfg, p.h);
 
         let exe1 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage1))?;
         let exe2 = self.rt.load_hlo_text(&self.art.path_of(&cfg.stage2))?;

@@ -1,0 +1,324 @@
+//! Stack-topology engine tests — the engine must serve full multi-layer /
+//! bidirectional models as a pure throughput transform: whatever the
+//! replica count, instance routing, or interleaving order, every
+//! utterance's outputs are bit-identical to the `StackF32` (float) /
+//! `StackFx` (fixed-point) oracles, and no frame is lost, duplicated, or
+//! served by a truncated stack.
+
+use clstm::coordinator::batcher::QueuedUtterance;
+use clstm::coordinator::engine::{EngineConfig, ServeEngine};
+use clstm::coordinator::server::{serve_workload, ServeOptions};
+use clstm::coordinator::topology::{StackEngine, StackTopology};
+use clstm::lstm::activations::ActivationMode;
+use clstm::lstm::config::{LstmSpec, ModelKind};
+use clstm::lstm::sequence::{StackF32, StackFx};
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::Q;
+use clstm::runtime::fxp::FxpBackend;
+use clstm::runtime::native::NativeBackend;
+use clstm::util::prng::Xoshiro256;
+
+const QD: Q = Q::new(12);
+
+/// Google-shaped at test scale: 2 stacked unidirectional layers with
+/// projection and peepholes (the Table 1 architecture, shrunk).
+fn google_shaped() -> LstmSpec {
+    LstmSpec {
+        kind: ModelKind::Google,
+        input_dim: 10,
+        hidden_dim: 16,
+        proj_dim: Some(8),
+        peephole: true,
+        layers: 2,
+        bidirectional: false,
+        k: 4,
+        num_classes: 8,
+    }
+}
+
+/// Small-shaped at test scale: 2 bidirectional layers, no projection, no
+/// peepholes (the §6.1 architecture, shrunk).
+fn small_shaped() -> LstmSpec {
+    LstmSpec {
+        kind: ModelKind::Small,
+        input_dim: 6,
+        hidden_dim: 12,
+        proj_dim: None,
+        peephole: false,
+        layers: 2,
+        bidirectional: true,
+        k: 4,
+        num_classes: 8,
+    }
+}
+
+fn random_frames(spec: &LstmSpec, rng: &mut Xoshiro256, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+/// Engine outputs must match `StackF32::run` bit for bit — per frame, per
+/// element, across replica counts — for both paper model shapes.
+#[test]
+fn stack_engine_bit_identical_to_stack_f32() {
+    for (name, spec) in [("google-shaped", google_shaped()), ("small-shaped", small_shaped())] {
+        let w = LstmWeights::random(&spec, 77);
+        let oracle = StackF32::new(&w, ActivationMode::Exact);
+        let mut rng = Xoshiro256::seed_from_u64(41);
+        let lens = [5usize, 9, 4, 7, 6, 8];
+        let frames: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&n| random_frames(&spec, &mut rng, n))
+            .collect();
+        let want: Vec<Vec<Vec<f32>>> = frames.iter().map(|f| oracle.run(f)).collect();
+        let final_out = spec.out_dim() * spec.directions();
+
+        for replicas in [1usize, 2] {
+            let mut engine = StackEngine::build(
+                &NativeBackend::default(),
+                &w,
+                EngineConfig {
+                    replicas,
+                    ..EngineConfig::default()
+                },
+            )
+            .expect("stack engine builds");
+            assert_eq!(engine.replicas(), replicas);
+            assert_eq!(engine.topology().final_out_dim(), final_out);
+            let utts: Vec<QueuedUtterance> = frames
+                .iter()
+                .enumerate()
+                .map(|(i, f)| QueuedUtterance::new(i as u64, f.clone()))
+                .collect();
+            let completions = engine.serve_all(utts).expect("serve_all");
+            assert_eq!(completions.len(), lens.len());
+            for c in &completions {
+                let id = c.utt.id as usize;
+                assert_eq!(c.outputs.len(), lens[id], "{name} utt {id} frame count");
+                for (t, y) in c.outputs.iter().enumerate() {
+                    let wy = &want[id][t];
+                    assert_eq!(y.len(), wy.len(), "{name} utt {id} frame {t} width");
+                    for i in 0..y.len() {
+                        assert!(
+                            y[i].to_bits() == wy[i].to_bits(),
+                            "{name} replicas={replicas} utt {id} frame {t} [{i}]: \
+                             engine {} vs StackF32 {}",
+                            y[i],
+                            wy[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The fxp stack engine must recover i16 outputs identical to the
+/// `StackFx` oracle — the 16-bit datapath crosses layer boundaries (and
+/// the bidirectional reversed-stream/concat join) without perturbing a
+/// bit.
+#[test]
+fn fxp_stack_engine_bit_identical_to_stack_fx() {
+    let two_layer_tiny = LstmSpec {
+        layers: 2,
+        ..LstmSpec::tiny(4)
+    };
+    for (name, spec) in [("tiny-2layer", two_layer_tiny), ("small-shaped", small_shaped())] {
+        let w = LstmWeights::random(&spec, 91);
+        let oracle = StackFx::new(&w, QD);
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let lens = [6usize, 3, 8, 5];
+        let frames: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&n| random_frames(&spec, &mut rng, n))
+            .collect();
+        let want: Vec<Vec<Vec<i16>>> = frames
+            .iter()
+            .map(|f| oracle.run(f).iter().map(|y| QD.quantize_slice(y)).collect())
+            .collect();
+
+        let mut engine = StackEngine::build(
+            &FxpBackend::new(QD),
+            &w,
+            EngineConfig {
+                replicas: 2,
+                ..EngineConfig::default()
+            },
+        )
+        .expect("fxp stack engine builds");
+        assert_eq!(engine.backend_name(), "fxp");
+        let utts: Vec<QueuedUtterance> = frames
+            .iter()
+            .enumerate()
+            .map(|(i, f)| QueuedUtterance::new(i as u64, f.clone()))
+            .collect();
+        let completions = engine.serve_all(utts).expect("serve_all");
+        for c in &completions {
+            let id = c.utt.id as usize;
+            for (t, y) in c.outputs.iter().enumerate() {
+                assert_eq!(
+                    QD.quantize_slice(y),
+                    want[id][t],
+                    "{name} utt {id} frame {t}: fxp stack engine diverges from StackFx"
+                );
+            }
+        }
+    }
+}
+
+/// Frame conservation across chained segments: every utterance completes
+/// exactly once with exactly its own frame count, and **every segment**
+/// processes every frame exactly once (the per-segment counters agree with
+/// the workload total).
+#[test]
+fn frames_conserved_across_chained_segments() {
+    let spec = small_shaped();
+    let w = LstmWeights::random(&spec, 5);
+    let mut rng = Xoshiro256::seed_from_u64(0xBEEF);
+    let n = 6 + rng.index(6);
+    let lens: Vec<usize> = (0..n).map(|_| 1 + rng.index(10)).collect();
+    let frames_in: usize = lens.iter().sum();
+    let utts: Vec<QueuedUtterance> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &len)| QueuedUtterance::new(i as u64, random_frames(&spec, &mut rng, len)))
+        .collect();
+    let mut engine = StackEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig {
+            replicas: 2,
+            streams_per_lane: 3,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine builds");
+    let completions = engine.serve_all(utts).expect("serve_all");
+    assert_eq!(completions.len(), n, "one completion per utterance");
+    let mut seen = vec![false; n];
+    let mut frames_out = 0usize;
+    for c in &completions {
+        let id = c.utt.id as usize;
+        assert!(!seen[id], "utt {id} completed twice");
+        seen[id] = true;
+        assert_eq!(c.outputs.len(), lens[id], "utt {id}");
+        assert_eq!(c.frame_latency_us.len(), lens[id]);
+        frames_out += c.outputs.len();
+    }
+    assert_eq!(frames_out, frames_in, "frame conservation at the output");
+    // Chained-segment conservation: all 4 segments saw the whole workload.
+    let stats = engine.segment_stats();
+    assert_eq!(stats.len(), 4, "2 layers × 2 directions");
+    for s in &stats {
+        assert_eq!(
+            s.frames, frames_in as u64,
+            "segment {} frame conservation",
+            s.label
+        );
+    }
+}
+
+/// Continuous admission across a 2-layer chain: a straggler utterance must
+/// not hold back short ones submitted after it.
+#[test]
+fn straggler_does_not_stall_two_layer_stack() {
+    let spec = google_shaped();
+    let w = LstmWeights::random(&spec, 9);
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let mut utts = vec![QueuedUtterance::new(0, random_frames(&spec, &mut rng, 48))];
+    for i in 1..=6 {
+        utts.push(QueuedUtterance::new(i, random_frames(&spec, &mut rng, 4)));
+    }
+    let mut engine = StackEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig {
+            replicas: 1,
+            streams_per_lane: 4,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("engine builds");
+    let completions = engine.serve_all(utts).expect("serve_all");
+    assert_eq!(completions.len(), 7);
+    assert_eq!(
+        completions.last().unwrap().utt.id,
+        0,
+        "straggler must finish last; completion order: {:?}",
+        completions.iter().map(|c| c.utt.id).collect::<Vec<_>>()
+    );
+    for c in &completions {
+        assert!(c.queue_wait_us >= 0.0);
+        assert!(c.service_us > 0.0);
+        assert!(c.frame_latency_us.iter().all(|&us| us > 0.0));
+    }
+}
+
+/// `serve_workload` serves the full stack: PER is computed over the
+/// direction-concatenated final layer and every segment carries traffic.
+#[test]
+fn serve_workload_scores_per_over_the_full_stack() {
+    let spec = small_shaped();
+    let w = LstmWeights::random(&spec, 1234);
+    let opts = ServeOptions {
+        replicas: 2,
+        seed: 1234,
+        ..ServeOptions::default()
+    };
+    let report = serve_workload(&NativeBackend::default(), &w, 6, &opts).expect("serve");
+    assert!(report.per.is_finite() && report.per > 0.0, "PER {}", report.per);
+    assert_eq!(report.replicas, 2);
+    let segs = &report.metrics.segments;
+    assert_eq!(segs.len(), 4, "bidirectional 2-layer topology");
+    assert!(
+        segs.iter().all(|s| s.frames == report.metrics.frames as u64),
+        "every segment must serve every frame: {segs:?}"
+    );
+    assert!(report.metrics.summary().contains("segments: l0.fwd"));
+}
+
+/// The single-segment `ServeEngine` refuses stacked/bidirectional specs
+/// instead of silently serving layer 0 forward (the old behaviour), and
+/// the topology the error points at compiles and serves the same spec.
+#[test]
+fn serve_engine_refuses_truncating_specs() {
+    for spec in [google_shaped(), small_shaped()] {
+        let w = LstmWeights::random(&spec, 3);
+        let err = match ServeEngine::build(&NativeBackend::default(), &w, EngineConfig::default())
+        {
+            Ok(_) => panic!("ServeEngine must refuse a {}-layer spec", spec.layers),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("StackEngine"), "error should redirect: {err}");
+        // The redirect target really does serve it.
+        let topo = StackTopology::compile(&spec);
+        assert_eq!(topo.len(), spec.layers * spec.directions());
+        let mut engine = StackEngine::build(&NativeBackend::default(), &w, EngineConfig::default())
+            .expect("stack engine serves what ServeEngine refuses");
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let done = engine
+            .serve_all(vec![QueuedUtterance::new(0, random_frames(&spec, &mut rng, 3))])
+            .expect("serve_all");
+        assert_eq!(done[0].outputs.len(), 3);
+    }
+}
+
+/// Zero-frame utterances complete immediately through the stack engine.
+#[test]
+fn zero_frame_utterance_completes_empty() {
+    let spec = google_shaped();
+    let w = LstmWeights::random(&spec, 3);
+    let mut engine =
+        StackEngine::build(&NativeBackend::default(), &w, EngineConfig::default()).unwrap();
+    let ticket = engine.submit(QueuedUtterance::new(42, Vec::new())).unwrap();
+    assert_eq!(ticket.utt_id, 42);
+    let c = engine.recv().expect("completion");
+    assert_eq!(c.utt.id, 42);
+    assert!(c.outputs.is_empty());
+    assert_eq!(engine.pending(), 0);
+}
