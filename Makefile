@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench serve-fxp serve-stack artifacts table1-per
+.PHONY: build test bench serve-bench bench-fxp-stage1 serve-fxp serve-stack artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -16,6 +16,13 @@ bench:
 # Replica-scaling serving benchmark (engine lanes 1/2/4, CI-sized budgets).
 serve-bench:
 	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_pipeline
+
+# Fused fxp stage-1 benchmark: four-plans vs stacked frames/s (the PR-5
+# before/after), the native stage-1 reference, and the serve p99 under the
+# event-driven scheduler wakeup — (re)writes BENCH_5.json at the repo root.
+bench-fxp-stage1:
+	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_pipeline
+	test -s BENCH_5.json && grep -q "stage1_speedup" BENCH_5.json
 
 # Fixed-point serving smoke test: a few utterances through the 16-bit
 # datapath on 2 lanes; asserts the report prints a nonzero workload PER.

@@ -81,6 +81,13 @@ fn main() {
     // scaling is tracked run over run.
     stack_scaling_bench(&mut b, &mut rng);
 
+    // PR-5 artifact: fxp stage-1 four-plans vs fused-stacked frames/s (the
+    // before/after of sharing the input-block forward FFTs), the native
+    // stage-1 reference, and the serve p99 under the event-driven stack
+    // scheduler wakeup — written to BENCH_5.json at the repo root
+    // (`make bench-fxp-stage1`).
+    fxp_stage1_bench(&mut b, &mut rng);
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b, &mut rng);
     #[cfg(not(feature = "pjrt"))]
@@ -211,6 +218,169 @@ fn stack_scaling_bench(b: &mut Bench, rng: &mut Xoshiro256) {
             assert_eq!(done.len(), n_utts);
             done.len()
         });
+    }
+}
+
+/// The PR-5 stage-1 comparison: the same google-shaped gate weights run as
+/// (a) four independent `FxConvPlan`s — the pre-fusion fxp datapath, which
+/// forward-transforms the fused operand once per gate — vs (b) the fused
+/// `FxStackedConvPlan` (one forward-FFT pass shared by all four gates) vs
+/// (c) the native float stage-1 (row-stacked Eq 6). Results, the
+/// before/after delta, and the serve p99 under the event-driven scheduler
+/// wakeup are written to `BENCH_5.json` at the repo root.
+fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
+    use clstm::circulant::conv::{matvec_eq6_into, Eq6Scratch};
+    use clstm::circulant::fxp_conv::{FxConvPlan, FxConvScratch, FxStackedConvPlan};
+    use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+    use clstm::circulant::BlockCirculant;
+    use clstm::coordinator::server::{serve_workload, ServeOptions};
+    use clstm::num::fxp::{Q, Rounding};
+    use clstm::runtime::fxp::FxpBackend;
+    use clstm::util::json::Json;
+
+    let qd = Q::new(12);
+    let spec = LstmSpec {
+        input_dim: 156,
+        hidden_dim: 256,
+        proj_dim: Some(128),
+        layers: 1,
+        ..LstmSpec::google(8)
+    };
+    let w = LstmWeights::random(&spec, 11);
+    let lw = &w.layers[0][0];
+    let gates: Vec<SpectralWeightsFx> = lw
+        .gates
+        .iter()
+        .map(|m| SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(m)))
+        .collect();
+    let singles: Vec<FxConvPlan> = gates
+        .iter()
+        .map(|g| FxConvPlan::new(g.clone(), qd, Rounding::Nearest))
+        .collect();
+    let stacked = FxStackedConvPlan::new(
+        [
+            gates[0].clone(),
+            gates[1].clone(),
+            gates[2].clone(),
+            gates[3].clone(),
+        ],
+        qd,
+        Rounding::Nearest,
+    )
+    .expect("gate grids match");
+    let fused_len = spec.fused_in_dim(0);
+    let in_blocks = fused_len / spec.k;
+    let x: Vec<i16> = (0..fused_len)
+        .map(|_| qd.from_f32(rng.uniform(-1.0, 1.0) as f32))
+        .collect();
+    let mut scratch = FxConvScratch::for_plan(&stacked);
+    let mut out_gate = vec![0i16; stacked.rows_per_gate()];
+    let mut out_stacked = vec![0i16; stacked.out_len()];
+
+    b.throughput(1);
+    let four = b
+        .bench("fxp_stage1/four_plans_proxy256_k8", || {
+            for p in &singles {
+                p.matvec_into(&x, &mut out_gate, &mut scratch).unwrap();
+            }
+        })
+        .clone();
+    let fused = b
+        .bench("fxp_stage1/stacked_proxy256_k8", || {
+            stacked.matvec_into(&x, &mut out_stacked, &mut scratch).unwrap()
+        })
+        .clone();
+
+    // Native float stage-1 over the same weights (row-stacked Eq 6).
+    let hidden_pad = spec.pad(spec.hidden_dim);
+    let stacked_f32 = {
+        let mut wv = Vec::with_capacity(4 * lw.gates[0].w.len());
+        for g in &lw.gates {
+            wv.extend_from_slice(&g.w);
+        }
+        BlockCirculant::from_vectors(4 * hidden_pad, fused_len, spec.k, wv)
+    };
+    let native_spec = SpectralWeights::precompute(&stacked_f32);
+    let xf: Vec<f32> = x.iter().map(|&v| qd.to_f32(v)).collect();
+    let mut acc = vec![0.0f32; 4 * hidden_pad];
+    let mut es = Eq6Scratch::default();
+    let native = b
+        .bench("native_stage1/stacked_eq6_proxy256_k8", || {
+            matvec_eq6_into(&native_spec, &xf, &mut acc, &mut es)
+        })
+        .clone();
+
+    // Serve p99 through the stack engine's event-driven wakeup (fxp
+    // backend, 2 replicated instances — the default regression scenario).
+    let tiny = LstmWeights::random(&LstmSpec::tiny(4), 1234);
+    let serve = serve_workload(
+        &FxpBackend::default(),
+        &tiny,
+        8,
+        &ServeOptions {
+            replicas: 2,
+            seed: 1234,
+            ..ServeOptions::default()
+        },
+    )
+    .expect("fxp serve");
+    println!(
+        "fxp serve (tiny, 2 instances): p99 frame latency {:.0} µs; {}",
+        serve.metrics.latency_p99_us(),
+        serve.metrics.summary()
+    );
+
+    let fps = |mean_ns: f64| 1e9 / mean_ns;
+    let stage_us: Vec<f64> = serve
+        .metrics
+        .stage_times
+        .iter()
+        .map(|st| st.mean_us())
+        .collect();
+    let json = Json::obj(vec![
+        ("pr", Json::num(5.0)),
+        ("bench", Json::str("fxp fused stage-1 + event-driven stack scheduler")),
+        (
+            "source",
+            Json::str("cargo bench --bench bench_pipeline (make bench-fxp-stage1)"),
+        ),
+        ("spec", Json::str("proxy256_k8_l1 stage-1 (hidden 256, k 8)")),
+        ("stage1_four_plans_fps", Json::num(fps(four.mean_ns))),
+        ("stage1_stacked_fps", Json::num(fps(fused.mean_ns))),
+        (
+            "stage1_speedup",
+            Json::num(four.mean_ns / fused.mean_ns.max(1e-9)),
+        ),
+        (
+            "input_ffts_per_frame_before",
+            Json::num(4.0 * in_blocks as f64),
+        ),
+        ("input_ffts_per_frame_after", Json::num(in_blocks as f64)),
+        ("native_stage1_fps", Json::num(fps(native.mean_ns))),
+        (
+            "serve",
+            Json::obj(vec![
+                ("backend", Json::str("fxp")),
+                ("model", Json::str("tiny_fft4")),
+                ("replicas", Json::num(2.0)),
+                ("utts", Json::num(8.0)),
+                (
+                    "p99_frame_latency_us",
+                    Json::num(serve.metrics.latency_p99_us()),
+                ),
+                ("stage_mean_us", Json::arr_f64(&stage_us)),
+            ]),
+        ),
+    ]);
+    // Benches run from rust/; the artifact lives at the repo root.
+    let path = if std::path::Path::new("../Makefile").exists() {
+        "../BENCH_5.json"
+    } else {
+        "BENCH_5.json"
+    };
+    match std::fs::write(path, json.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
     }
 }
 

@@ -16,13 +16,35 @@
 //! With the forward transform computing `DFT(x)/k`, the unshifted inverse
 //! returns exactly `IDFT(F(w) ⊙ DFT(x))` — the circulant convolution — while
 //! every intermediate stays in 16 bits (§4.2's overflow argument).
+//!
+//! Two operators share this datapath:
+//!
+//! - [`FxConvPlan`] — one weight matrix (the projection, the oracle cells);
+//! - [`FxStackedConvPlan`] — the four row-stacked gate matrices of one LSTM
+//!   cell behind **one** set of input-block forward FFTs (§4.1: the input
+//!   DFTs are shared across the four gates' spectra). Each gate keeps its
+//!   own per-matrix spectral Q-format, and the per-row accumulation order
+//!   and rounding are identical to four separate plans, so the stacked
+//!   operator is **bit-identical** to running four [`FxConvPlan`]s — it
+//!   just skips 3 of the 4 input-FFT passes.
 
 use super::spectral::SpectralWeightsFx;
 use crate::fft::fxp::{FxFftPlan, ShiftPolicy};
 use crate::num::cplx::CplxFx;
 use crate::num::fxp::{narrow, Q, Rounding};
+use anyhow::{ensure, Result};
 
-/// Reusable scratch buffers for [`FxConvPlan::matvec_into`].
+/// Dimensions a conv scratch is sized from — implemented by both the
+/// single-matrix and the row-stacked plans, so [`FxConvScratch::for_plan`]
+/// accepts either.
+pub trait ConvPlanDims {
+    /// Input blocks (`q` — the operand is `q` blocks of `k`).
+    fn in_blocks(&self) -> usize;
+    /// Block / FFT size (`k`).
+    fn block_len(&self) -> usize;
+}
+
+/// Reusable scratch buffers for the `matvec_into` hot paths.
 #[derive(Debug, Clone)]
 pub struct FxConvScratch {
     /// Input spectra, `q` blocks of `k` bins each.
@@ -42,9 +64,81 @@ impl FxConvScratch {
         }
     }
 
-    /// Scratch sized for a plan.
-    pub fn for_plan(plan: &FxConvPlan) -> Self {
-        Self::new(plan.weights.q, plan.weights.k)
+    /// Scratch sized for a plan — single ([`FxConvPlan`]) or stacked
+    /// ([`FxStackedConvPlan`]); both read the same `q`-blocks-of-`k`
+    /// operand, so the scratch shape is identical.
+    pub fn for_plan<P: ConvPlanDims>(plan: &P) -> Self {
+        Self::new(plan.in_blocks(), plan.block_len())
+    }
+
+    /// Validate this scratch against a plan's `(q, k)`, with an error that
+    /// names both shapes (a mismatched scratch must be an error, never a
+    /// silently wrapped or out-of-bounds index).
+    fn check(&self, q: usize, k: usize) -> Result<()> {
+        ensure!(
+            self.fx.len() == q * k && self.acc.len() == k && self.time.len() == k,
+            "conv scratch sized for {} block(s) of {} (fx {}, acc {}, time {}), but the plan \
+             needs {q} block(s) of {k} — build it with FxConvScratch::for_plan",
+            self.fx.len() / self.acc.len().max(1),
+            self.acc.len(),
+            self.fx.len(),
+            self.acc.len(),
+            self.time.len()
+        );
+        Ok(())
+    }
+}
+
+/// Stage B + C of the datapath for the `p` block-rows of one spectral
+/// matrix over already-transformed input spectra: frequency-domain
+/// multiply-accumulate per block-row (16-bit products narrowed to the
+/// matrix's own spectral format, saturating adds, packed bins 0..=k/2
+/// only — the §4.1 conjugate-symmetry halving), then one inverse FFT per
+/// row with the upper bins mirrored from the packed accumulator. Rows land
+/// at `out[(row_off + i) * k ..]`.
+///
+/// This is the one implementation both conv operators run, so the stacked
+/// plan's per-row arithmetic is the single plan's by construction.
+#[allow(clippy::too_many_arguments)]
+fn mac_rows_into(
+    weights: &SpectralWeightsFx,
+    fft: &FxFftPlan,
+    rounding: Rounding,
+    spectra: &[CplxFx],
+    out: &mut [i16],
+    row_off: usize,
+    acc: &mut [CplxFx],
+    time: &mut [CplxFx],
+) {
+    let k = weights.k;
+    let q = weights.q;
+    let half = k / 2;
+    let wfrac = weights.qfmt.frac;
+    for i in 0..weights.p {
+        acc.fill(CplxFx::ZERO);
+        for j in 0..q {
+            let w = weights.block(i, j);
+            let xj = &spectra[j * k..(j + 1) * k];
+            for b in 0..=half {
+                let (wide_re, wide_im) = xj[b].mul_wide(w[b]);
+                let prod = CplxFx::new(
+                    narrow(wide_re, wfrac, rounding),
+                    narrow(wide_im, wfrac, rounding),
+                );
+                acc[b] = acc[b].add_sat(prod);
+            }
+        }
+        // One inverse FFT per block-row (Eq 6 decoupling), upper bins
+        // mirrored from the packed accumulator.
+        time[..=half].copy_from_slice(&acc[..=half]);
+        for b in half + 1..k {
+            time[b] = acc[k - b].conj();
+        }
+        fft.inverse(time);
+        let row = &mut out[(row_off + i) * k..(row_off + i + 1) * k];
+        for (o, t) in row.iter_mut().zip(time.iter()) {
+            *o = t.re;
+        }
     }
 }
 
@@ -57,6 +151,16 @@ pub struct FxConvPlan {
     pub weights: SpectralWeightsFx,
     pub fft: FxFftPlan,
     pub rounding: Rounding,
+}
+
+impl ConvPlanDims for FxConvPlan {
+    fn in_blocks(&self) -> usize {
+        self.weights.q
+    }
+
+    fn block_len(&self) -> usize {
+        self.weights.k
+    }
 }
 
 impl FxConvPlan {
@@ -94,72 +198,206 @@ impl FxConvPlan {
         let k = self.weights.k;
         let mut out = vec![0i16; p * k];
         let mut scratch = FxConvScratch::new(self.weights.q, k);
-        self.matvec_into(x, &mut out, &mut scratch);
+        self.matvec_into(x, &mut out, &mut scratch).expect("freshly sized buffers");
         out
     }
 
     /// Allocation-free hot path: all buffers live in `scratch` (§Perf —
-    /// the engine calls this once per gate per frame; per-call Vec churn
-    /// was the top profile entry before this split).
-    pub fn matvec_into(&self, x: &[i16], out: &mut [i16], scratch: &mut FxConvScratch) {
+    /// the engine calls this once per matrix per frame; per-call Vec churn
+    /// was the top profile entry before this split). Operand, output, and
+    /// scratch lengths are validated — a mismatch (e.g. a frame built for a
+    /// different segment's `fused_len`) is an error naming both shapes,
+    /// never a silent wrap.
+    pub fn matvec_into(
+        &self,
+        x: &[i16],
+        out: &mut [i16],
+        scratch: &mut FxConvScratch,
+    ) -> Result<()> {
         let k = self.weights.k;
         let p = self.weights.p;
         let q = self.weights.q;
-        assert_eq!(x.len(), q * k);
-        assert_eq!(out.len(), p * k);
-        debug_assert!(scratch.fx.len() == q * k && scratch.acc.len() == k);
-        let wfrac = self.weights.qfmt.frac;
-        let half = k / 2;
+        ensure!(
+            x.len() == q * k,
+            "conv operand length {} != q·k = {} ({q} block(s) of {k})",
+            x.len(),
+            q * k
+        );
+        ensure!(
+            out.len() == p * k,
+            "conv output length {} != p·k = {} ({p} block-row(s) of {k})",
+            out.len(),
+            p * k
+        );
+        scratch.check(q, k)?;
 
-        // Stage A: forward FFT of each input block (computes DFT/k under
-        // DftDistributed; unscaled otherwise — the IDFT schedule compensates).
-        for j in 0..q {
-            let buf = &mut scratch.fx[j * k..(j + 1) * k];
-            for (b, &v) in buf.iter_mut().zip(&x[j * k..(j + 1) * k]) {
-                *b = CplxFx::new(v, 0);
-            }
-            self.fft.forward(buf);
-        }
-
-        // Stage B: frequency-domain multiply-accumulate per block-row.
-        // Products are narrowed back to the data format (one DSP output
-        // shifter) and accumulated in saturating 16-bit adders. Only the
-        // packed bins 0..=k/2 are computed (conjugate symmetry): the
-        // inverse transform input is reconstructed from them — the same
-        // halving the FPGA datapath exploits (§4.1).
-        let acc = &mut scratch.acc;
-        let time = &mut scratch.time;
-        for i in 0..p {
-            acc.fill(CplxFx::ZERO);
-            for j in 0..q {
-                let w = self.weights.block(i, j);
-                let xj = &scratch.fx[j * k..(j + 1) * k];
-                for b in 0..=half {
-                    let (wide_re, wide_im) = xj[b].mul_wide(w[b]);
-                    let prod = CplxFx::new(
-                        narrow(wide_re, wfrac, self.rounding),
-                        narrow(wide_im, wfrac, self.rounding),
-                    );
-                    acc[b] = acc[b].add_sat(prod);
-                }
-            }
-            // Stage C: one inverse FFT per block-row (Eq 6 decoupling),
-            // upper bins mirrored from the packed accumulator.
-            time[..=half].copy_from_slice(&acc[..=half]);
-            for b in half + 1..k {
-                time[b] = acc[k - b].conj();
-            }
-            self.fft.inverse(time);
-            for r in 0..k {
-                out[i * k + r] = time[r].re;
-            }
-        }
+        // Stage A: forward FFT of each input block, exactly once (computes
+        // DFT/k under DftDistributed; unscaled otherwise — the IDFT
+        // schedule compensates).
+        self.fft.forward_real_blocks(x, &mut scratch.fx);
+        // Stages B + C over this matrix's rows.
+        mac_rows_into(
+            &self.weights,
+            &self.fft,
+            self.rounding,
+            &scratch.fx,
+            out,
+            0,
+            &mut scratch.acc,
+            &mut scratch.time,
+        );
+        Ok(())
     }
 
     /// Convenience: float in, float out (quantise → run → dequantise).
     pub fn matvec_f32(&self, x: &[f32]) -> Vec<f32> {
         let xq = self.q_data.quantize_slice(x);
         self.q_data.dequantize_slice(&self.matvec(&xq))
+    }
+}
+
+/// The fused stage-1 operator: the four row-stacked gate matrices of one
+/// LSTM cell (`i, f, g, o` order) behind **one** set of input-block forward
+/// FFTs (§4.1 — the input DFTs are gate-independent, so the FPGA computes
+/// them once and fans the spectrum out to all four gates' multipliers).
+///
+/// Each gate keeps its own [`SpectralWeightsFx`] with its own per-matrix
+/// auto Q-format — quantising the stacked `(4·p, q)` matrix with a single
+/// format would *not* be bit-identical to four independent plans. The
+/// per-row MAC order, narrowing, and inverse transforms are shared with
+/// [`FxConvPlan`] (`mac_rows_into`), so outputs are bit-identical to
+/// running the four plans back to back; only the redundant 3× re-transform
+/// of the operand is gone.
+#[derive(Debug, Clone)]
+pub struct FxStackedConvPlan {
+    /// Data (input/activation/output) Q-format.
+    pub q_data: Q,
+    pub rounding: Rounding,
+    /// One FFT plan shared by the forward pass and all rows' inverses (all
+    /// gates run the same `k`, policy, and rounding).
+    pub fft: FxFftPlan,
+    /// Per-gate quantised spectra in `i, f, g, o` order.
+    gates: [SpectralWeightsFx; 4],
+    /// Block-rows per gate.
+    p: usize,
+    /// Input blocks.
+    q: usize,
+    /// Block / FFT size.
+    k: usize,
+}
+
+impl ConvPlanDims for FxStackedConvPlan {
+    fn in_blocks(&self) -> usize {
+        self.q
+    }
+
+    fn block_len(&self) -> usize {
+        self.k
+    }
+}
+
+impl FxStackedConvPlan {
+    /// Build from the four gates' quantised spectra (the paper's final
+    /// shift policy). All four must share the same `(p, q, k)` grid — they
+    /// are row-stacked views of one cell's gate weights.
+    pub fn new(gates: [SpectralWeightsFx; 4], q_data: Q, rounding: Rounding) -> Result<Self> {
+        let (p, q, k) = (gates[0].p, gates[0].q, gates[0].k);
+        for (g, w) in gates.iter().enumerate() {
+            ensure!(
+                (w.p, w.q, w.k) == (p, q, k),
+                "gate {g} grid ({}, {}, {}) != gate 0 grid ({p}, {q}, {k}): \
+                 stacked gates must share one block grid",
+                w.p,
+                w.q,
+                w.k
+            );
+        }
+        ensure!(k.is_power_of_two(), "block size {k} is not a power of two");
+        let fft = FxFftPlan::new(k, ShiftPolicy::DftDistributed, rounding);
+        Ok(Self {
+            q_data,
+            rounding,
+            fft,
+            gates,
+            p,
+            q,
+            k,
+        })
+    }
+
+    /// One gate's quantised spectra (`i, f, g, o` order).
+    pub fn gate(&self, g: usize) -> &SpectralWeightsFx {
+        &self.gates[g]
+    }
+
+    /// Output rows per gate in raw values (`p·k` — the padded hidden dim).
+    pub fn rows_per_gate(&self) -> usize {
+        self.p * self.k
+    }
+
+    /// Total output length (`4·p·k`).
+    pub fn out_len(&self) -> usize {
+        4 * self.p * self.k
+    }
+
+    /// Operand length (`q·k` — the padded fused input dim).
+    pub fn in_len(&self) -> usize {
+        self.q * self.k
+    }
+
+    /// `[a_i; a_f; a_g; a_o] = stacked(W) · x` over raw fixed-point input
+    /// (length `q·k`), writing the four gates' raw outputs back to back
+    /// (gate `g`'s rows at `out[g·p·k..]`). The operand's forward FFTs run
+    /// **once**; every downstream operation is bit-identical to four
+    /// separate [`FxConvPlan::matvec_into`] calls.
+    pub fn matvec_into(
+        &self,
+        x: &[i16],
+        out: &mut [i16],
+        scratch: &mut FxConvScratch,
+    ) -> Result<()> {
+        ensure!(
+            x.len() == self.in_len(),
+            "stacked conv operand length {} != q·k = {} ({} block(s) of {})",
+            x.len(),
+            self.in_len(),
+            self.q,
+            self.k
+        );
+        ensure!(
+            out.len() == self.out_len(),
+            "stacked conv output length {} != 4·p·k = {} (4 gates × {} row(s) of {})",
+            out.len(),
+            self.out_len(),
+            self.p,
+            self.k
+        );
+        scratch.check(self.q, self.k)?;
+
+        // Stage A once for all four gates: the input spectra depend only on
+        // the operand and the FFT plan, never on the gate.
+        self.fft.forward_real_blocks(x, &mut scratch.fx);
+        for (g, weights) in self.gates.iter().enumerate() {
+            mac_rows_into(
+                weights,
+                &self.fft,
+                self.rounding,
+                &scratch.fx,
+                out,
+                g * self.p,
+                &mut scratch.acc,
+                &mut scratch.time,
+            );
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper (tests, one-shot callers).
+    pub fn matvec(&self, x: &[i16]) -> Vec<i16> {
+        let mut out = vec![0i16; self.out_len()];
+        let mut scratch = FxConvScratch::for_plan(self);
+        self.matvec_into(x, &mut out, &mut scratch).expect("freshly sized buffers");
+        out
     }
 }
 
@@ -191,6 +429,20 @@ mod tests {
         (m, plan)
     }
 
+    /// Four gate matrices with different weight scales, so `quantize_auto`
+    /// picks different per-gate spectral formats — the case a single-format
+    /// stacked quantisation would get wrong.
+    fn make_gates(p: usize, q: usize, k: usize, rng: &mut Xoshiro256) -> [SpectralWeightsFx; 4] {
+        let scales = [0.5f32, 2.0, 0.1, 0.9];
+        std::array::from_fn(|g| {
+            let mut m = BlockCirculant::random_init(p * k, q * k, k, rng);
+            for v in m.w.iter_mut() {
+                *v *= scales[g];
+            }
+            SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m))
+        })
+    }
+
     #[test]
     fn fxp_matches_float_within_lsb_budget() {
         let mut rng = Xoshiro256::seed_from_u64(31);
@@ -220,6 +472,107 @@ mod tests {
         let (_, plan) = make_plan(16, 16, 8, &mut rng);
         let x: Vec<i16> = (0..16).map(|i| (i as i16) * 100).collect();
         assert_eq!(plan.matvec(&x), plan.matvec(&x));
+    }
+
+    #[test]
+    fn stacked_plan_bit_identical_to_four_plans() {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for &(p, q, k) in &[(2usize, 3usize, 4usize), (3, 2, 8), (2, 2, 16)] {
+            for rounding in [Rounding::Nearest, Rounding::Truncate] {
+                let gates = make_gates(p, q, k, &mut rng);
+                let singles: Vec<FxConvPlan> = gates
+                    .iter()
+                    .map(|g| FxConvPlan::new(g.clone(), QD, rounding))
+                    .collect();
+                let stacked = FxStackedConvPlan::new(gates, QD, rounding).expect("grids match");
+                let x: Vec<i16> = (0..q * k)
+                    .map(|_| QD.from_f64(rng.uniform(-4.0, 4.0)))
+                    .collect();
+                let got = stacked.matvec(&x);
+                for (g, plan) in singles.iter().enumerate() {
+                    let want = plan.matvec(&x);
+                    assert_eq!(
+                        &got[g * p * k..(g + 1) * p * k],
+                        &want[..],
+                        "p={p} q={q} k={k} {rounding:?} gate {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn stacked_plan_transforms_each_input_block_exactly_once() {
+        let mut rng = Xoshiro256::seed_from_u64(78);
+        let (p, q, k) = (2usize, 3usize, 8usize);
+        let stacked =
+            FxStackedConvPlan::new(make_gates(p, q, k, &mut rng), QD, Rounding::Nearest).unwrap();
+        let x: Vec<i16> = (0..q * k).map(|i| (i as i16) * 321).collect();
+        let mut out = vec![0i16; stacked.out_len()];
+        let mut scratch = FxConvScratch::for_plan(&stacked);
+        let before = stacked.fft.forward_calls();
+        stacked.matvec_into(&x, &mut out, &mut scratch).unwrap();
+        assert_eq!(
+            stacked.fft.forward_calls() - before,
+            q as u64,
+            "one forward FFT per input block per frame"
+        );
+    }
+
+    #[test]
+    fn stacked_plan_rejects_mismatched_gate_grids() {
+        let mut rng = Xoshiro256::seed_from_u64(79);
+        let mut gates = make_gates(2, 3, 4, &mut rng).to_vec();
+        gates[2] = make_gates(2, 2, 4, &mut rng)[0].clone();
+        let err = FxStackedConvPlan::new(
+            [
+                gates[0].clone(),
+                gates[1].clone(),
+                gates[2].clone(),
+                gates[3].clone(),
+            ],
+            QD,
+            Rounding::Nearest,
+        )
+        .expect_err("mismatched grids must be rejected");
+        assert!(format!("{err:#}").contains("gate 2"), "{err:#}");
+    }
+
+    #[test]
+    fn mismatched_operand_scratch_and_output_are_errors_not_wraps() {
+        let mut rng = Xoshiro256::seed_from_u64(80);
+        let (_, plan) = make_plan(8, 12, 4, &mut rng); // p=2, q=3, k=4
+        let stacked =
+            FxStackedConvPlan::new(make_gates(2, 3, 4, &mut rng), QD, Rounding::Nearest).unwrap();
+        let mut scratch = FxConvScratch::for_plan(&plan);
+        let mut out = vec![0i16; 8];
+        // Short operand (a frame built for a different fused_len).
+        let err = plan
+            .matvec_into(&[0i16; 8], &mut out, &mut scratch)
+            .expect_err("short operand");
+        assert!(format!("{err:#}").contains("operand length 8"), "{err:#}");
+        // Wrong output length.
+        let err = plan
+            .matvec_into(&[0i16; 12], &mut [0i16; 4], &mut scratch)
+            .expect_err("short output");
+        assert!(format!("{err:#}").contains("output length 4"), "{err:#}");
+        // Scratch sized for another plan.
+        let mut small = FxConvScratch::new(1, 4);
+        let err = plan
+            .matvec_into(&[0i16; 12], &mut out, &mut small)
+            .expect_err("wrong scratch");
+        assert!(format!("{err:#}").contains("for_plan"), "{err:#}");
+        // Same checks on the stacked plan.
+        let mut sout = vec![0i16; stacked.out_len()];
+        let err = stacked
+            .matvec_into(&[0i16; 4], &mut sout, &mut scratch)
+            .expect_err("short stacked operand");
+        assert!(format!("{err:#}").contains("operand length 4"), "{err:#}");
+        let err = stacked
+            .matvec_into(&[0i16; 12], &mut sout, &mut small)
+            .expect_err("wrong stacked scratch");
+        assert!(format!("{err:#}").contains("for_plan"), "{err:#}");
     }
 
     #[test]

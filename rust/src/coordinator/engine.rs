@@ -21,7 +21,8 @@
 //!   [`ServeEngine::try_recv`].
 
 use crate::coordinator::batcher::QueuedUtterance;
-use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig};
+use crate::coordinator::metrics::StageTime;
+use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig, StageClock, STAGES};
 use crate::lstm::weights::LstmWeights;
 use crate::runtime::backend::{Backend, SegmentId};
 use anyhow::{ensure, Context, Result};
@@ -105,6 +106,8 @@ pub struct ServeEngine {
     /// Padded input dim — frames are validated at submit so a bad frame is
     /// an error here, not a panic inside a lane.
     in_pad: usize,
+    /// Per-lane pipeline stage clocks, for the serve summary's stage split.
+    stage_clocks: Vec<Arc<StageClock>>,
 }
 
 impl ServeEngine {
@@ -130,6 +133,7 @@ impl ServeEngine {
         let replicas = cfg.replicas.max(1);
         let streams = cfg.streams_per_lane.max(1);
         let mut lanes = Vec::with_capacity(replicas);
+        let mut stage_clocks = Vec::with_capacity(replicas);
         for lane in 0..replicas {
             let pipe = ClstmPipeline::with_prepared(
                 backend,
@@ -139,6 +143,7 @@ impl ServeEngine {
                 },
                 SegmentId::LAYER0_FWD,
             )?;
+            stage_clocks.push(pipe.stage_clock());
             let (tx, rx) = channel::<LaneJob>();
             let load = Arc::new(AtomicUsize::new(0));
             let worker_load = Arc::clone(&load);
@@ -160,12 +165,25 @@ impl ServeEngine {
             backend_name: backend.name(),
             streams_per_lane: streams,
             in_pad,
+            stage_clocks,
         })
     }
 
     /// Number of lanes.
     pub fn replicas(&self) -> usize {
         self.lanes.len()
+    }
+
+    /// Per-stage service-time split summed across every lane's pipeline
+    /// (the serve summary's `s1/s2/s3` µs-per-frame line).
+    pub fn stage_times(&self) -> [StageTime; STAGES] {
+        let mut total = [StageTime::default(); STAGES];
+        for clock in &self.stage_clocks {
+            for (t, s) in total.iter_mut().zip(clock.snapshot()) {
+                t.absorb(&s);
+            }
+        }
+        total
     }
 
     /// Name of the backend serving the lanes.

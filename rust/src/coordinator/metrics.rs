@@ -58,6 +58,36 @@ impl LatencySeries {
     }
 }
 
+/// Cumulative service time of one pipeline stage (stage 1 gate
+/// convolutions / stage 2 element-wise / stage 3 projection), summed
+/// across every pipeline and replica that reported — the serve summary's
+/// per-stage split, so a stage-1 win is visible from `clstm serve` output
+/// without a profiler.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StageTime {
+    /// Frames the stage executed.
+    pub frames: u64,
+    /// Total in-stage execution time, µs (excludes channel waits).
+    pub total_us: f64,
+}
+
+impl StageTime {
+    /// Mean in-stage service time per frame, µs.
+    pub fn mean_us(&self) -> f64 {
+        if self.frames == 0 {
+            0.0
+        } else {
+            self.total_us / self.frames as f64
+        }
+    }
+
+    /// Fold another population in (frame counts add, times add).
+    pub fn absorb(&mut self, other: &StageTime) {
+        self.frames += other.frames;
+        self.total_us += other.total_us;
+    }
+}
+
 /// Serving occupancy of one `(layer, direction)` pipeline segment of a
 /// stack topology: how many frames it completed and how full it ran.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,6 +120,9 @@ pub struct Metrics {
     /// Per-segment occupancy of a stack-topology run (empty for
     /// single-segment engines).
     pub segments: Vec<SegmentOccupancy>,
+    /// Per-stage service-time split (stage 1/2/3), summed across all
+    /// pipelines and replicas; all-zero when the engine did not report it.
+    pub stage_times: [StageTime; 3],
 }
 
 impl Metrics {
@@ -140,6 +173,12 @@ impl Metrics {
         self.segments = segments;
     }
 
+    /// Attach the engine's per-stage service-time split (shown in
+    /// [`Self::summary`] as mean µs per frame per stage).
+    pub fn set_stage_times(&mut self, stage_times: [StageTime; 3]) {
+        self.stage_times = stage_times;
+    }
+
     /// Fold another run's counters and samples into this one. Wall times
     /// are **summed**, so this models sequential runs; for concurrent lanes
     /// measure one wall clock around the whole engine instead (as
@@ -155,6 +194,9 @@ impl Metrics {
         self.queue_wait
             .extend(other.queue_wait.samples.iter().copied());
         self.service.extend(other.service.samples.iter().copied());
+        for (mine, theirs) in self.stage_times.iter_mut().zip(&other.stage_times) {
+            mine.absorb(theirs);
+        }
         for seg in &other.segments {
             match self.segments.iter_mut().find(|s| s.label == seg.label) {
                 Some(mine) => {
@@ -236,6 +278,14 @@ impl Metrics {
                 self.queue_wait_p99_us(),
                 self.service_p50_us(),
                 self.service_p99_us()
+            ));
+        }
+        if self.stage_times.iter().any(|st| st.frames > 0) {
+            s.push_str(&format!(
+                "; stage service µs/frame: s1 {:.1} s2 {:.1} s3 {:.1}",
+                self.stage_times[0].mean_us(),
+                self.stage_times[1].mean_us(),
+                self.stage_times[2].mean_us()
             ));
         }
         if !self.segments.is_empty() {
@@ -328,6 +378,32 @@ mod tests {
             a.segments.iter().find(|s| s.label == "l1.fwd").unwrap().frames,
             40
         );
+    }
+
+    #[test]
+    fn stage_time_split_in_summary_and_merge() {
+        let mut a = Metrics::default();
+        // No stage report → no stage line.
+        assert!(!a.summary().contains("stage service"));
+        a.set_stage_times([
+            StageTime { frames: 10, total_us: 1000.0 },
+            StageTime { frames: 10, total_us: 200.0 },
+            StageTime { frames: 10, total_us: 300.0 },
+        ]);
+        assert!((a.stage_times[0].mean_us() - 100.0).abs() < 1e-9);
+        assert!(a.summary().contains("stage service µs/frame: s1 100.0 s2 20.0 s3 30.0"));
+        let mut b = Metrics::default();
+        b.set_stage_times([
+            StageTime { frames: 30, total_us: 1000.0 },
+            StageTime::default(),
+            StageTime::default(),
+        ]);
+        a.merge(&b);
+        // (1000 + 1000) µs over 40 frames.
+        assert_eq!(a.stage_times[0].frames, 40);
+        assert!((a.stage_times[0].mean_us() - 50.0).abs() < 1e-9);
+        assert!((a.stage_times[1].mean_us() - 20.0).abs() < 1e-9);
+        assert_eq!(StageTime::default().mean_us(), 0.0);
     }
 
     #[test]

@@ -24,12 +24,13 @@
 //! perturbing a bit); `PjrtBackend` (feature `pjrt`) runs the AOT HLO
 //! artifacts.
 
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, StageTime};
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
 use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor};
 use anyhow::{ensure, Context, Result};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -59,6 +60,31 @@ impl PipelineConfig {
     pub fn window(&self) -> usize {
         let depth = self.channel_depth.max(1);
         STAGES + (STAGES + 1) * depth
+    }
+}
+
+/// Cumulative per-stage service time of one pipeline, written by its three
+/// stage threads and read by the engines for the serve summary's stage
+/// split ([`Metrics::set_stage_times`]). In-stage execution time only —
+/// channel waits are excluded, so the split shows where compute goes.
+#[derive(Debug, Default)]
+pub struct StageClock {
+    ns: [AtomicU64; STAGES],
+    frames: [AtomicU64; STAGES],
+}
+
+impl StageClock {
+    fn record(&self, stage: usize, elapsed: Duration) {
+        self.ns[stage].fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        self.frames[stage].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Per-stage totals so far (frames and µs).
+    pub fn snapshot(&self) -> [StageTime; STAGES] {
+        std::array::from_fn(|i| StageTime {
+            frames: self.frames[i].load(Ordering::Relaxed),
+            total_us: self.ns[i].load(Ordering::Relaxed) as f64 / 1e3,
+        })
     }
 }
 
@@ -129,6 +155,7 @@ pub struct ClstmPipeline {
     in_pad: usize,
     out_pad: usize,
     hidden: usize,
+    clock: Arc<StageClock>,
 }
 
 impl ClstmPipeline {
@@ -167,6 +194,22 @@ impl ClstmPipeline {
         cfg: PipelineConfig,
         seg: SegmentId,
     ) -> Result<Self> {
+        Self::with_prepared_notify(backend, prepared, cfg, seg, None)
+    }
+
+    /// As [`Self::with_prepared`], with an optional completion notifier:
+    /// the stage-3 thread sends one `()` on `notify` after every frame it
+    /// pushes to the done channel. A scheduler driving several pipelines
+    /// hands the same sender to all of them and blocks on the receiver —
+    /// an "any segment completed" wakeup — instead of parking on one
+    /// pipeline's private done channel.
+    pub fn with_prepared_notify(
+        backend: &dyn Backend,
+        prepared: &Arc<PreparedWeights>,
+        cfg: PipelineConfig,
+        seg: SegmentId,
+        notify: Option<Sender<()>>,
+    ) -> Result<Self> {
         let spec = prepared.spec.clone();
         let stages = backend.build_stages(prepared, seg)?;
         let depth = cfg.channel_depth.max(1);
@@ -193,7 +236,10 @@ impl ClstmPipeline {
         let (s2_tx, s3_rx) = sync_channel::<FrameMsg>(depth);
         let (s3_tx, done_rx) = sync_channel::<FrameMsg>(depth);
 
+        let clock = Arc::new(StageClock::default());
+
         let mut stage1: Box<dyn StageExecutor> = stages.stage1;
+        let clock1 = Arc::clone(&clock);
         let h1 = std::thread::Builder::new()
             .name("clstm-stage1".into())
             .spawn(move || {
@@ -201,9 +247,11 @@ impl ClstmPipeline {
                 while let Ok(mut msg) = s1_rx.recv() {
                     {
                         let FrameMsg { fused, a, .. } = &mut msg;
+                        let t0 = Instant::now();
                         stage1
                             .run_into(&[fused.as_slice()], &mut [a.as_mut_slice()])
                             .expect("stage1 execute");
+                        clock1.record(0, t0.elapsed());
                     }
                     if s1_tx.send(msg).is_err() {
                         break;
@@ -212,6 +260,7 @@ impl ClstmPipeline {
             })?;
 
         let mut stage2: Box<dyn StageExecutor> = stages.stage2;
+        let clock2 = Arc::clone(&clock);
         let h2 = std::thread::Builder::new()
             .name("clstm-stage2".into())
             .spawn(move || {
@@ -219,12 +268,14 @@ impl ClstmPipeline {
                 while let Ok(mut msg) = s2_rx.recv() {
                     {
                         let FrameMsg { a, c_prev, m, c, .. } = &mut msg;
+                        let t0 = Instant::now();
                         stage2
                             .run_into(
                                 &[a.as_slice(), c_prev.as_slice()],
                                 &mut [m.as_mut_slice(), c.as_mut_slice()],
                             )
                             .expect("stage2 execute");
+                        clock2.record(1, t0.elapsed());
                     }
                     if s2_tx.send(msg).is_err() {
                         break;
@@ -233,6 +284,7 @@ impl ClstmPipeline {
             })?;
 
         let mut stage3: Box<dyn StageExecutor> = stages.stage3;
+        let clock3 = Arc::clone(&clock);
         let h3 = std::thread::Builder::new()
             .name("clstm-stage3".into())
             .spawn(move || {
@@ -240,12 +292,19 @@ impl ClstmPipeline {
                 while let Ok(mut msg) = s3_rx.recv() {
                     {
                         let FrameMsg { m, y, .. } = &mut msg;
+                        let t0 = Instant::now();
                         stage3
                             .run_into(&[m.as_slice()], &mut [y.as_mut_slice()])
                             .expect("stage3 execute");
+                        clock3.record(2, t0.elapsed());
                     }
                     if s3_tx.send(msg).is_err() {
                         break;
+                    }
+                    // Wake the scheduler *after* the frame is visible on the
+                    // done channel, so a woken scheduler always finds it.
+                    if let Some(tx) = &notify {
+                        let _ = tx.send(());
                     }
                 }
             })?;
@@ -277,7 +336,15 @@ impl ClstmPipeline {
             in_pad,
             out_pad,
             hidden: c_len,
+            clock,
         })
+    }
+
+    /// Shared handle to this pipeline's per-stage service-time counters
+    /// (engines keep a clone and aggregate across pipelines/replicas after
+    /// the pipelines move into their worker threads).
+    pub fn stage_clock(&self) -> Arc<StageClock> {
+        Arc::clone(&self.clock)
     }
 
     /// Compile the stage artifacts for `cfg` on the PJRT runtime and launch
@@ -394,8 +461,10 @@ impl ClstmPipeline {
     }
 
     /// Block up to `timeout` for the next completed frame; `Ok(None)` on
-    /// timeout (multi-pipeline schedulers park briefly on one pipeline and
-    /// re-poll the others).
+    /// timeout. (Multi-pipeline schedulers should prefer the shared
+    /// completion notifier of [`Self::with_prepared_notify`] over parking
+    /// here — blocking on one pipeline's private channel cannot see another
+    /// segment finishing first.)
     pub fn recv_done_timeout(&mut self, timeout: Duration) -> Result<Option<DoneFrame>> {
         match self.done_rx.recv_timeout(timeout) {
             Ok(msg) => {

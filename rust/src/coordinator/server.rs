@@ -230,6 +230,7 @@ pub fn serve_workload(
     }
     metrics.wall = t0.elapsed();
     metrics.set_segments(engine.segment_stats());
+    metrics.set_stage_times(engine.stage_times());
     drop(engine);
 
     let per = phone_error_rate(&hyps, &refs);

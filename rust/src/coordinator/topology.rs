@@ -49,7 +49,12 @@
 //!   (`y[..out_dim]` per direction, the same truncation as
 //!   [`StackF32`](crate::lstm::sequence::StackF32)) and handed to the next
 //!   layer, so engine outputs are **bit-identical to the
-//!   `StackF32`/`StackFx` oracles** at any replica count.
+//!   `StackF32`/`StackFx` oracles** at any replica count;
+//! - when nothing is dispatchable, the scheduler blocks on the instance's
+//!   shared **completion channel** — every segment's stage-3 thread signals
+//!   it after pushing a finished frame, and `submit` signals it on new work
+//!   — so it wakes the moment *any* segment completes, with no polling and
+//!   no bounded park on one busy segment.
 //!
 //! Per-segment occupancy (frames served + mean frames in flight) is
 //! tracked across all replicas and surfaces through
@@ -57,8 +62,8 @@
 
 use crate::coordinator::batcher::QueuedUtterance;
 use crate::coordinator::engine::{CompletedUtterance, EngineConfig, Ticket};
-use crate::coordinator::metrics::SegmentOccupancy;
-use crate::coordinator::pipeline::{ClstmPipeline, DoneFrame, PipelineConfig};
+use crate::coordinator::metrics::{SegmentOccupancy, StageTime};
+use crate::coordinator::pipeline::{ClstmPipeline, DoneFrame, PipelineConfig, StageClock, STAGES};
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
 use crate::runtime::backend::{Backend, SegmentId};
@@ -202,6 +207,11 @@ struct StackJob {
 
 struct StackLane {
     tx: Option<Sender<StackJob>>,
+    /// Shared wake channel of this instance: every segment's stage-3
+    /// thread signals it per completion, and `submit` signals it per new
+    /// job, so the instance scheduler blocks on "anything happened" —
+    /// never on one segment's private done channel.
+    wake: Sender<()>,
     /// Outstanding frames routed to this instance (least-loaded key).
     load: Arc<AtomicUsize>,
     handle: Option<std::thread::JoinHandle<()>>,
@@ -221,6 +231,9 @@ pub struct StackEngine {
     /// frame is an error here, not a panic inside a worker.
     in_pad: usize,
     seg_stats: Arc<Vec<SegStat>>,
+    /// Per-pipeline stage clocks (all segments, all instances), for the
+    /// serve summary's stage-1/2/3 service-time split.
+    stage_clocks: Vec<Arc<StageClock>>,
 }
 
 impl StackEngine {
@@ -247,17 +260,26 @@ impl StackEngine {
         let replicas = cfg.replicas.max(1);
         let streams = cfg.streams_per_lane.max(1);
         let mut lanes = Vec::with_capacity(replicas);
+        let mut stage_clocks = Vec::with_capacity(replicas * topo.len());
         for lane in 0..replicas {
+            // One wake channel per instance: every segment pipeline's
+            // stage-3 thread and the engine's `submit` signal it, so the
+            // instance scheduler has a true "any segment done / new work"
+            // wakeup instead of a bounded park on one busy segment.
+            let (wake_tx, wake_rx) = channel::<()>();
             let mut pipes = Vec::with_capacity(topo.len());
             for seg in &topo.segments {
-                pipes.push(ClstmPipeline::with_prepared(
+                let pipe = ClstmPipeline::with_prepared_notify(
                     backend,
                     &prepared,
                     PipelineConfig {
                         channel_depth: cfg.channel_depth,
                     },
                     seg.id,
-                )?);
+                    Some(wake_tx.clone()),
+                )?;
+                stage_clocks.push(pipe.stage_clock());
+                pipes.push(pipe);
             }
             let (tx, rx) = channel::<StackJob>();
             let load = Arc::new(AtomicUsize::new(0));
@@ -273,6 +295,7 @@ impl StackEngine {
                         worker_topo,
                         pipes,
                         rx,
+                        wake_rx,
                         worker_done,
                         worker_load,
                         streams,
@@ -281,6 +304,7 @@ impl StackEngine {
                 })?;
             lanes.push(StackLane {
                 tx: Some(tx),
+                wake: wake_tx,
                 load,
                 handle: Some(handle),
             });
@@ -295,7 +319,20 @@ impl StackEngine {
             streams_per_lane: streams,
             in_pad,
             seg_stats,
+            stage_clocks,
         })
+    }
+
+    /// Per-stage service-time split summed across every segment pipeline of
+    /// every instance (the serve summary's `s1/s2/s3` µs-per-frame line).
+    pub fn stage_times(&self) -> [StageTime; STAGES] {
+        let mut total = [StageTime::default(); STAGES];
+        for clock in &self.stage_clocks {
+            for (t, s) in total.iter_mut().zip(clock.snapshot()) {
+                t.absorb(&s);
+            }
+        }
+        total
     }
 
     /// The compiled topology the engine serves.
@@ -400,6 +437,9 @@ impl StackEngine {
             lane_ref.load.fetch_sub(cost, Ordering::Relaxed);
             anyhow::bail!("stack instance {lane} worker is gone");
         }
+        // Wake the instance scheduler in case it is blocked waiting for
+        // segment completions — new work re-opens admission immediately.
+        let _ = lane_ref.wake.send(());
         self.submitted += 1;
         Ok(Ticket { utt_id, lane })
     }
@@ -546,22 +586,32 @@ struct ActiveStack {
 /// One topology instance's scheduler: interleave up to `max_streams`
 /// utterances through all segment pipelines, moving frames across the DAG
 /// the moment they become ready.
+///
+/// When quiescent (nothing dispatchable, nothing harvested), the scheduler
+/// blocks on `wake_rx` — the instance-wide completion channel every
+/// segment's stage-3 thread and `StackEngine::submit` signal — so it wakes
+/// the moment *any* segment completes a frame or new work arrives. This
+/// replaces the old bounded 100 µs park on one busy segment's private done
+/// channel, which both added up to a park's worth of head-of-line latency
+/// per hand-off and re-polled every pipeline 10⁴ times a second per
+/// instance while idle.
 #[allow(clippy::too_many_arguments)]
 fn stack_worker(
     lane: usize,
     topo: StackTopology,
     mut pipes: Vec<ClstmPipeline>,
     rx: Receiver<StackJob>,
+    wake_rx: Receiver<()>,
     done_tx: Sender<CompletedUtterance>,
     load: Arc<AtomicUsize>,
     max_streams: usize,
     seg_stats: Arc<Vec<SegStat>>,
 ) {
-    /// How long to park on one busy segment's completion channel before
-    /// re-polling the others (each pipeline owns a private done channel, so
-    /// an "any segment" wakeup is not available; this bounds the
-    /// head-of-line wait when a *different* segment completes first).
-    const POLL_PARK: Duration = Duration::from_micros(100);
+    /// Safety-net bound on the wake block. Correctness never depends on it
+    /// (every completion and submit sends a wake token *after* its payload
+    /// is visible, so a token is never missed); it only bounds the damage
+    /// should that invariant ever break.
+    const WAKE_FALLBACK: Duration = Duration::from_millis(20);
 
     let layers = topo.spec.layers;
     let dirs = topo.spec.directions();
@@ -572,6 +622,17 @@ fn stack_worker(
     let mut rx_open = true;
 
     loop {
+        // Drain stale wake tokens before this iteration's scheduling
+        // rounds. Every token produced up to this point accompanies a
+        // payload (a completion or a queued job) that the rounds below
+        // will observe directly, so consuming them here keeps the
+        // unbounded wake channel from accumulating one node per served
+        // frame under sustained load — and from burning one no-progress
+        // polling round per stale token once load drops. A token sent
+        // *after* this drain outlives the rounds and wakes the quiescent
+        // block at the bottom, so no wakeup is ever lost.
+        while wake_rx.try_recv().is_ok() {}
+
         // Continuous admission into free stream slots. Blocks only when the
         // instance is fully idle; otherwise drains whatever is queued.
         while rx_open && active < max_streams {
@@ -709,35 +770,28 @@ fn stack_worker(
             }
         }
 
-        // Quiescent: if frames are in flight, park briefly on one busy
-        // segment instead of spinning. A completion on ANY segment re-opens
-        // dispatch, but each pipeline owns a private done channel, so the
-        // bounded timeout caps the head-of-line wait when a different
-        // segment finishes first; the next scheduling round re-polls all.
-        let busy = (0..nseg).find(|&i| pipes[i].in_flight() > 0);
-        match busy {
-            Some(seg_idx) => {
-                if let Some(d) = pipes[seg_idx]
-                    .recv_done_timeout(POLL_PARK)
-                    .expect("stack recv")
-                {
-                    complete_frame(
-                        seg_idx, d, &mut pipes, &mut slots, &topo, &mut local_stats, &seg_stats,
-                        &done_tx, &load, lane, &mut active,
-                    );
-                }
-            }
-            None => {
-                // Invariant: an incomplete utterance always has either a
-                // frame in flight or a dispatchable frame (the first
-                // incomplete segment in topology order has all its layer
-                // inputs ready). Reaching here with active streams is a
-                // scheduler bug; die loudly so `healthy()` trips.
-                assert!(
-                    active == 0,
-                    "stack scheduler wedged: {active} active stream(s), nothing in flight"
-                );
-            }
+        // Quiescent: nothing dispatchable, nothing newly harvested. If
+        // frames are in flight, block on the instance's shared wake channel
+        // — every segment's stage-3 thread signals it after pushing a
+        // completion, and `submit` signals it on new work, so this wakes on
+        // "any segment done" with no polling and no head-of-line park. A
+        // stale token (for a completion the scheduling rounds above already
+        // harvested) just costs one extra no-progress round.
+        if (0..nseg).any(|i| pipes[i].in_flight() > 0) {
+            // Timeout and disconnection both just re-enter the scheduling
+            // rounds: the former is the safety net, the latter means
+            // shutdown mid-work and the rounds drain what's left.
+            let _ = wake_rx.recv_timeout(WAKE_FALLBACK);
+        } else {
+            // Invariant: an incomplete utterance always has either a
+            // frame in flight or a dispatchable frame (the first
+            // incomplete segment in topology order has all its layer
+            // inputs ready). Reaching here with active streams is a
+            // scheduler bug; die loudly so `healthy()` trips.
+            assert!(
+                active == 0,
+                "stack scheduler wedged: {active} active stream(s), nothing in flight"
+            );
         }
     }
     flush_stats(&mut local_stats, &seg_stats);

@@ -33,7 +33,7 @@ pub enum ShiftPolicy {
 
 /// Fixed-point FFT plan: twiddles quantised to Q1.14, per-stage shift
 /// schedule derived from a [`ShiftPolicy`].
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct FxFftPlan {
     pub n: usize,
     pub policy: ShiftPolicy,
@@ -45,6 +45,28 @@ pub struct FxFftPlan {
     /// Per-inverse-stage right shifts.
     inv_shifts: Vec<u32>,
     bitrev: Vec<u32>,
+    /// Debug/test-build forward-transform counter: the "one forward FFT per
+    /// input block per frame" contract of the fused stage-1 operator is
+    /// asserted against this (release builds carry no counter).
+    #[cfg(debug_assertions)]
+    forward_calls: std::sync::atomic::AtomicU64,
+}
+
+impl Clone for FxFftPlan {
+    fn clone(&self) -> Self {
+        Self {
+            n: self.n,
+            policy: self.policy,
+            rounding: self.rounding,
+            twiddles: self.twiddles.clone(),
+            fwd_shifts: self.fwd_shifts.clone(),
+            inv_shifts: self.inv_shifts.clone(),
+            bitrev: self.bitrev.clone(),
+            // A clone is a fresh plan: its transform count starts at zero.
+            #[cfg(debug_assertions)]
+            forward_calls: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
 }
 
 /// Twiddle factors use Q1.14: range (-2, 2) comfortably holds ±1.
@@ -94,6 +116,8 @@ impl FxFftPlan {
             fwd_shifts,
             inv_shifts,
             bitrev,
+            #[cfg(debug_assertions)]
+            forward_calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -102,8 +126,36 @@ impl FxFftPlan {
     /// intentionally, to model the hardware).
     pub fn forward(&self, data: &mut [CplxFx]) {
         assert_eq!(data.len(), self.n);
+        #[cfg(debug_assertions)]
+        self.forward_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.permute(data);
         self.stages(data, &self.fwd_shifts);
+    }
+
+    /// Forward transforms this plan has run (debug/test builds only) —
+    /// the counter behind the stage-1 "exactly one forward FFT per input
+    /// block per frame" assertion.
+    #[cfg(debug_assertions)]
+    pub fn forward_calls(&self) -> u64 {
+        self.forward_calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Plan-level forward-FFT-once entry point: load each `n`-sized block
+    /// of the raw fixed-point operand `x` into `spectra` and transform it
+    /// in place — **one** forward FFT per input block. Both the single
+    /// ([`FxConvPlan`](crate::circulant::fxp_conv::FxConvPlan)) and the
+    /// row-stacked ([`FxStackedConvPlan`](crate::circulant::fxp_conv::FxStackedConvPlan))
+    /// circulant operators run their stage A through this, so "how many
+    /// times is the operand transformed" is decided in exactly one place.
+    pub fn forward_real_blocks(&self, x: &[i16], spectra: &mut [CplxFx]) {
+        assert_eq!(x.len(), spectra.len(), "operand/spectra length mismatch");
+        assert_eq!(x.len() % self.n.max(1), 0, "operand not block-aligned");
+        for (xb, sb) in x.chunks_exact(self.n).zip(spectra.chunks_exact_mut(self.n)) {
+            for (s, &v) in sb.iter_mut().zip(xb) {
+                *s = CplxFx::new(v, 0);
+            }
+            self.forward(sb);
+        }
     }
 
     /// Inverse fixed-point FFT, in place. Combined with [`Self::forward`]
@@ -303,6 +355,44 @@ mod tests {
         let plan_sat = FxFftPlan::new(n, ShiftPolicy::IdftAtEnd, Rounding::Nearest);
         let fx_sat = plan_sat.forward_real(QD, &x);
         assert_eq!(fx_sat[0].re, i16::MAX, "expected saturation");
+    }
+
+    #[test]
+    fn forward_real_blocks_matches_per_block_forward() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let (n, blocks) = (8usize, 3usize);
+        let plan = FxFftPlan::new(n, ShiftPolicy::DftDistributed, Rounding::Nearest);
+        let x: Vec<i16> = (0..n * blocks)
+            .map(|_| QD.from_f64(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let mut spectra = vec![CplxFx::ZERO; n * blocks];
+        #[cfg(debug_assertions)]
+        let before = plan.forward_calls();
+        plan.forward_real_blocks(&x, &mut spectra);
+        #[cfg(debug_assertions)]
+        assert_eq!(
+            plan.forward_calls() - before,
+            blocks as u64,
+            "one forward transform per block"
+        );
+        for j in 0..blocks {
+            let mut buf: Vec<CplxFx> = x[j * n..(j + 1) * n]
+                .iter()
+                .map(|&v| CplxFx::new(v, 0))
+                .collect();
+            plan.forward(&mut buf);
+            assert_eq!(&spectra[j * n..(j + 1) * n], &buf[..], "block {j}");
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn clone_resets_the_forward_counter() {
+        let plan = FxFftPlan::new(4, ShiftPolicy::DftDistributed, Rounding::Nearest);
+        let mut d = vec![CplxFx::ZERO; 4];
+        plan.forward(&mut d);
+        assert_eq!(plan.forward_calls(), 1);
+        assert_eq!(plan.clone().forward_calls(), 0);
     }
 
     #[test]

@@ -202,10 +202,20 @@ impl CellFx {
             let (first, rest) = gate_out.split_at_mut(1);
             let (second, rest2) = rest.split_at_mut(1);
             let (third, fourth) = rest2.split_at_mut(1);
-            self.gates[GATE_I].matvec_into(&fused, &mut first[0], &mut scratch);
-            self.gates[GATE_F].matvec_into(&fused, &mut second[0], &mut scratch);
-            self.gates[GATE_G].matvec_into(&fused, &mut third[0], &mut scratch);
-            self.gates[GATE_O].matvec_into(&fused, &mut fourth[0], &mut scratch);
+            // Buffer shapes are fixed at construction, so a length error
+            // here is a cell bug, not a caller input.
+            self.gates[GATE_I]
+                .matvec_into(&fused, &mut first[0], &mut scratch)
+                .expect("gate i conv");
+            self.gates[GATE_F]
+                .matvec_into(&fused, &mut second[0], &mut scratch)
+                .expect("gate f conv");
+            self.gates[GATE_G]
+                .matvec_into(&fused, &mut third[0], &mut scratch)
+                .expect("gate g conv");
+            self.gates[GATE_O]
+                .matvec_into(&fused, &mut fourth[0], &mut scratch)
+                .expect("gate o conv");
         }
         // The element-wise cluster — the one implementation shared with the
         // serving backend's stage 2 ([`FxElementwise`]); updates state.c in
@@ -237,7 +247,7 @@ impl CellFx {
                 let mut ps = self.proj_scratch.borrow_mut();
                 let scratch = ps.as_mut().expect("proj scratch");
                 let mut out = vec![0i16; p.weights.p * p.weights.k];
-                p.matvec_into(&m, &mut out, scratch);
+                p.matvec_into(&m, &mut out, scratch).expect("projection conv");
                 out
             }
             None => m,

@@ -4,12 +4,25 @@
 //! float backends.
 //!
 //! [`FxpBackend::prepare`] quantises the weight bundle once — for **every**
-//! `(layer, direction)` segment: per-gate [`FxConvPlan`]s over
-//! range-analysed [`SpectralWeightsFx`] spectra, Q-format biases/peepholes,
-//! and the quantised 22-segment PWL tables — into one [`FxpPrepared`]
-//! shared read-only by every replica lane.
+//! `(layer, direction)` segment: one fused [`FxStackedConvPlan`] over the
+//! four gates' range-analysed [`SpectralWeightsFx`] spectra (plus a
+//! [`FxConvPlan`] for the projection), Q-format biases/peepholes, and the
+//! quantised 22-segment PWL tables — into one [`FxpPrepared`] shared
+//! read-only by every replica lane.
 //! [`FxpBackend::build_stages`] is cheap: each replica's executors hold an
 //! `Arc` reference to their segment plus their own i16 scratch buffers.
+//!
+//! ## Fused stage 1 (§4.1: input DFTs shared across the four gates)
+//!
+//! Stage 1 runs the four gate convolutions through the stacked plan, so
+//! each input block of the fused `[x_t, y_{t-1}]` operand is
+//! forward-transformed **once per frame** instead of once per gate — the
+//! same sharing the FPGA datapath (and the native backend's row-stacked
+//! Eq 6 operator) exploits. Every gate keeps its own per-matrix spectral
+//! Q-format and the per-row accumulation order of four separate
+//! [`FxConvPlan`]s, so the fusion is bit-identical to the pre-fusion
+//! datapath (and therefore still bit-identical to the `CellFx` oracle,
+//! which runs four plans).
 //!
 //! ## Boundary quantisation (why the f32 pipeline stays bit-exact)
 //!
@@ -41,7 +54,7 @@
 //! [`FxpPrepared::layer_q`] for diagnostics and the per-*matrix* spectral
 //! formats are still chosen independently by `quantize_auto`.
 
-use crate::circulant::fxp_conv::{FxConvPlan, FxConvScratch};
+use crate::circulant::fxp_conv::{FxConvPlan, FxConvScratch, FxStackedConvPlan};
 use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
 use crate::lstm::activations::PwlTable;
 use crate::lstm::cell_fxp::FxElementwise;
@@ -51,7 +64,7 @@ use crate::quant::range::RangeTracker;
 use crate::runtime::backend::{
     downcast_prepared, segment_entry, Backend, PreparedWeights, SegmentId, StageExecutor, StageSet,
 };
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 
 /// §4.2 accuracy budget: the fxp datapath may degrade workload PER by at
@@ -148,14 +161,17 @@ impl FxpBackend {
 /// One `(layer, direction)` segment's quantised state, shared read-only by
 /// every replica's executors through an `Arc`.
 struct FxpSegment {
+    /// Which `(layer, direction)` this is — stage errors name it.
+    seg: SegmentId,
     /// Data Q-format of every i16 this segment's stages exchange (shared
     /// across the whole stack).
     q: Q,
     rounding: Rounding,
-    /// Per-gate conv plans in `i, f, g, o` order — the same per-matrix
-    /// `quantize_auto` spectra as [`CellFx`](crate::lstm::cell_fxp::CellFx)
-    /// builds, so the serving datapath is bit-identical to the oracle.
-    gates: [FxConvPlan; 4],
+    /// The fused stage-1 operator: the four gates' spectra (`i, f, g, o`,
+    /// each with the same per-matrix `quantize_auto` format as
+    /// [`CellFx`](crate::lstm::cell_fxp::CellFx) builds) behind one set of
+    /// input-block forward FFTs, bit-identical to four separate plans.
+    gates: FxStackedConvPlan,
     proj: Option<FxConvPlan>,
     bias: [Vec<i16>; 4],
     peephole: Option<[Vec<i16>; 3]>,
@@ -187,28 +203,36 @@ pub struct FxpPrepared {
 impl FxpBackend {
     /// Quantise one segment, mirroring `CellFx::with_rounding`
     /// operation-for-operation: per-matrix spectra quantised with their own
-    /// auto format, data values in the shared `q`.
+    /// auto format, data values in the shared `q`. The four gate spectra
+    /// are fused into one [`FxStackedConvPlan`] (input FFTs shared, outputs
+    /// bit-identical to four per-gate plans).
     fn prepare_segment(
         &self,
         spec: &crate::lstm::config::LstmSpec,
-        layer: usize,
+        seg: SegmentId,
         lw: &LayerWeights,
         q: Q,
     ) -> Result<FxpSegment> {
+        let layer = seg.layer;
         let rounding = self.rounding;
-        let mk_plan = |m: &crate::circulant::BlockCirculant| {
-            let spec_f = SpectralWeights::precompute(m);
-            let fx = SpectralWeightsFx::quantize_auto(&spec_f);
-            FxConvPlan::new(fx, q, rounding)
+        let quantize = |m: &crate::circulant::BlockCirculant| {
+            SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(m))
         };
-        let gates = [
-            mk_plan(&lw.gates[GATE_I]),
-            mk_plan(&lw.gates[GATE_F]),
-            mk_plan(&lw.gates[GATE_G]),
-            mk_plan(&lw.gates[GATE_O]),
-        ];
-        let hidden_pad = gates[0].weights.p * gates[0].weights.k;
-        let proj = lw.proj.as_ref().map(&mk_plan);
+        let gates = FxStackedConvPlan::new(
+            [
+                quantize(&lw.gates[GATE_I]),
+                quantize(&lw.gates[GATE_F]),
+                quantize(&lw.gates[GATE_G]),
+                quantize(&lw.gates[GATE_O]),
+            ],
+            q,
+            rounding,
+        )?;
+        let hidden_pad = gates.rows_per_gate();
+        let proj = lw
+            .proj
+            .as_ref()
+            .map(|m| FxConvPlan::new(quantize(m), q, rounding));
         let out_pad = spec.pad(spec.out_dim());
         if let Some(p) = &proj {
             ensure!(
@@ -223,6 +247,7 @@ impl FxpBackend {
             );
         }
         Ok(FxpSegment {
+            seg,
             q,
             rounding,
             gates,
@@ -268,8 +293,8 @@ impl Backend for FxpBackend {
         let mut segs = Vec::with_capacity(weights.layers.len());
         for (l, dirs) in weights.layers.iter().enumerate() {
             let mut seg_dirs = Vec::with_capacity(dirs.len());
-            for lw in dirs {
-                seg_dirs.push(Arc::new(self.prepare_segment(spec, l, lw, q)?));
+            for (d, lw) in dirs.iter().enumerate() {
+                seg_dirs.push(Arc::new(self.prepare_segment(spec, SegmentId::new(l, d), lw, q)?));
             }
             segs.push(seg_dirs);
         }
@@ -285,8 +310,8 @@ impl Backend for FxpBackend {
         let w = segment_entry(&p.segs, seg, "fxp")?;
         let stage1 = FxpStage1 {
             fused_q: vec![0; w.fused_len],
-            gate_out: std::array::from_fn(|_| vec![0i16; w.hidden_pad]),
-            scratch: FxConvScratch::for_plan(&w.gates[0]),
+            gate_out: vec![0i16; w.gates.out_len()],
+            scratch: FxConvScratch::for_plan(&w.gates),
             w: Arc::clone(w),
         };
         let stage2 = FxpStage2 {
@@ -309,15 +334,17 @@ impl Backend for FxpBackend {
     }
 }
 
-/// Stage 1: quantise the fused operand and run the four per-gate
-/// fixed-point circulant convolutions (FFT with DFT-side distributed
-/// shifts, saturating frequency-domain accumulation).
+/// Stage 1: quantise the fused operand and run the fused stacked gate
+/// convolution — one set of input-block forward FFTs feeding all four
+/// gates' frequency-domain MACs (FFT with DFT-side distributed shifts,
+/// saturating accumulation), bit-identical to four per-gate plans.
 struct FxpStage1 {
     w: Arc<FxpSegment>,
     /// Quantised fused operand, reused per frame.
     fused_q: Vec<i16>,
-    /// Raw gate mat-vec outputs (`hidden_pad` each), reused per frame.
-    gate_out: [Vec<i16>; 4],
+    /// Raw stacked gate mat-vec output (`4·hidden_pad`, gate-major),
+    /// reused per frame.
+    gate_out: Vec<i16>,
     scratch: FxConvScratch,
 }
 
@@ -329,7 +356,8 @@ impl StageExecutor for FxpStage1 {
         let fused = inputs[0];
         ensure!(
             fused.len() == w.fused_len,
-            "fused operand length {} != {}",
+            "segment {}: fused operand length {} != {}",
+            w.seg,
             fused.len(),
             w.fused_len
         );
@@ -341,10 +369,13 @@ impl StageExecutor for FxpStage1 {
         for (qv, &fv) in self.fused_q.iter_mut().zip(fused) {
             *qv = w.q.from_f32(fv);
         }
+        w.gates
+            .matvec_into(&self.fused_q, &mut self.gate_out, &mut self.scratch)
+            .with_context(|| format!("fxp stage 1, segment {}", w.seg))?;
+        let hp = w.gates.rows_per_gate();
         for g in [GATE_I, GATE_F, GATE_G, GATE_O] {
-            w.gates[g].matvec_into(&self.fused_q, &mut self.gate_out[g], &mut self.scratch);
             for n in 0..w.h {
-                a[g * w.h + n] = w.q.to_f32(self.gate_out[g][n]);
+                a[g * w.h + n] = w.q.to_f32(self.gate_out[g * hp + n]);
             }
         }
         Ok(())
@@ -451,7 +482,8 @@ impl StageExecutor for FxpStage3 {
                     self.padded_q[i] = w.q.from_f32(m[i]);
                 }
                 let scratch = self.scratch.as_mut().expect("proj scratch");
-                p.matvec_into(&self.padded_q, &mut self.out_q, scratch);
+                p.matvec_into(&self.padded_q, &mut self.out_q, scratch)
+                    .with_context(|| format!("fxp stage 3, segment {}", w.seg))?;
                 for (yv, &qv) in y.iter_mut().zip(&self.out_q) {
                     *yv = w.q.to_f32(qv);
                 }
@@ -664,6 +696,60 @@ mod tests {
             c_prev = mc[1].clone();
         }
         assert!(diverged, "truncate and nearest oracles never diverged");
+    }
+
+    /// The tentpole contract: serving stage 1 forward-transforms each input
+    /// block of the fused operand exactly once per frame (not once per
+    /// gate). The stacked plan's FFT counter (debug builds) is shared with
+    /// the stage through the prepared segment's `Arc`.
+    #[cfg(debug_assertions)]
+    #[test]
+    fn stage1_runs_one_forward_fft_per_input_block_per_frame() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 67);
+        let backend = FxpBackend::new(QD);
+        let prepared = backend.prepare(&w).unwrap();
+        let mut stages = backend
+            .build_stages(&prepared, SegmentId::LAYER0_FWD)
+            .unwrap();
+        let payload: &FxpPrepared = prepared.downcast().unwrap();
+        let seg = &payload.segs[0][0];
+        let q_blocks = (spec.fused_in_dim(0) / spec.k) as u64;
+        assert!(q_blocks > 1, "degenerate spec");
+        let fused = vec![0.25f32; spec.fused_in_dim(0)];
+        let before = seg.gates.fft.forward_calls();
+        stages.stage1.run(&[&fused]).unwrap();
+        assert_eq!(
+            seg.gates.fft.forward_calls() - before,
+            q_blocks,
+            "stage 1 must transform each input block exactly once per frame"
+        );
+        stages.stage1.run(&[&fused]).unwrap();
+        assert_eq!(seg.gates.fft.forward_calls() - before, 2 * q_blocks);
+    }
+
+    #[test]
+    fn stage1_length_error_names_the_segment() {
+        // A frame sized for layer 0 fed to the layer-1 stage must be an
+        // error naming the segment, never a silent wrap.
+        let spec = LstmSpec {
+            input_dim: 6,
+            hidden_dim: 20,
+            proj_dim: Some(10),
+            layers: 2,
+            ..LstmSpec::tiny(4)
+        };
+        let w = LstmWeights::random(&spec, 71);
+        let backend = FxpBackend::new(QD);
+        let prepared = backend.prepare(&w).unwrap();
+        let mut stages = backend
+            .build_stages(&prepared, SegmentId::new(1, 0))
+            .unwrap();
+        let wrong = vec![0.0f32; spec.fused_in_dim(0)];
+        assert_ne!(spec.fused_in_dim(0), spec.fused_in_dim(1), "spec must differ");
+        let err = stages.stage1.run(&[&wrong]).expect_err("length mismatch");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("l1.fwd"), "error must name the segment: {msg}");
     }
 
     #[test]

@@ -9,13 +9,17 @@
 //! the synthetic serve workload, the fxp datapath's PER must stay within
 //! the §4.2 accuracy budget of the float engine.
 
+use clstm::circulant::fxp_conv::{FxConvPlan, FxStackedConvPlan};
+use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
 use clstm::coordinator::batcher::QueuedUtterance;
 use clstm::coordinator::engine::{EngineConfig, ServeEngine};
 use clstm::coordinator::server::{serve_workload, ServeOptions};
+use clstm::coordinator::topology::StackEngine;
 use clstm::lstm::cell_fxp::CellFx;
 use clstm::lstm::config::LstmSpec;
+use clstm::lstm::sequence::StackFx;
 use clstm::lstm::weights::LstmWeights;
-use clstm::num::fxp::Q;
+use clstm::num::fxp::{Q, Rounding};
 use clstm::runtime::fxp::{FxpBackend, FXP_PER_DEGRADATION_BUDGET_PTS};
 use clstm::runtime::native::NativeBackend;
 use clstm::util::prng::Xoshiro256;
@@ -163,6 +167,156 @@ fn fxp_per_within_budget_of_f32_on_synth_workload() {
         fxp.per,
         float.per
     );
+}
+
+/// 2-layer stacked spec at block size `k` (google-shaped, shrunk).
+fn two_layer(k: usize) -> LstmSpec {
+    LstmSpec {
+        layers: 2,
+        ..LstmSpec::tiny(k)
+    }
+}
+
+/// 2-layer bidirectional spec at block size `k` (small-shaped, shrunk).
+fn bidir(k: usize) -> LstmSpec {
+    LstmSpec {
+        layers: 2,
+        bidirectional: true,
+        proj_dim: None,
+        peephole: false,
+        ..LstmSpec::tiny(k)
+    }
+}
+
+/// The fused stage-1 operator vs four independent per-gate plans, over the
+/// gate weights of **every segment** of 2-layer and bidirectional specs at
+/// k ∈ {4, 8, 16}, with a non-default data format and both roundings: the
+/// i16 outputs must be identical, gate block by gate block. This is the
+/// plan-level half of the fused-stage-1 acceptance criterion (the engine
+/// half is the `StackFx` bit-identity below).
+#[test]
+fn stacked_plan_bit_identical_to_four_plans_for_every_stack_segment() {
+    let mut rng = Xoshiro256::seed_from_u64(3001);
+    for k in [4usize, 8, 16] {
+        for spec in [two_layer(k), bidir(k)] {
+            let w = LstmWeights::random(&spec, 5000 + k as u64);
+            for q_data in [Q::new(12), Q::new(10)] {
+                for rounding in [Rounding::Nearest, Rounding::Truncate] {
+                    for (l, dirs) in w.layers.iter().enumerate() {
+                        for (d, lw) in dirs.iter().enumerate() {
+                            let gates: Vec<SpectralWeightsFx> = lw
+                                .gates
+                                .iter()
+                                .map(|m| {
+                                    SpectralWeightsFx::quantize_auto(
+                                        &SpectralWeights::precompute(m),
+                                    )
+                                })
+                                .collect();
+                            let singles: Vec<FxConvPlan> = gates
+                                .iter()
+                                .map(|g| FxConvPlan::new(g.clone(), q_data, rounding))
+                                .collect();
+                            let stacked = FxStackedConvPlan::new(
+                                [
+                                    gates[0].clone(),
+                                    gates[1].clone(),
+                                    gates[2].clone(),
+                                    gates[3].clone(),
+                                ],
+                                q_data,
+                                rounding,
+                            )
+                            .expect("gate grids match");
+                            let fused_len = spec.fused_in_dim(l);
+                            assert_eq!(stacked.in_len(), fused_len, "k={k} l{l}.d{d}");
+                            let x: Vec<i16> = (0..fused_len)
+                                .map(|_| q_data.from_f32(rng.uniform(-2.0, 2.0) as f32))
+                                .collect();
+                            let got = stacked.matvec(&x);
+                            let rows = stacked.rows_per_gate();
+                            for (g, plan) in singles.iter().enumerate() {
+                                assert_eq!(
+                                    &got[g * rows..(g + 1) * rows],
+                                    &plan.matvec(&x)[..],
+                                    "k={k} {rounding:?} Q0.{} l{l}.d{d} gate {g}",
+                                    q_data.frac
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Engine-level acceptance: full-stack fxp serving (2-layer and
+/// bidirectional) through the fused stage-1 operator and the event-driven
+/// scheduler stays bit-identical to the `StackFx` oracle at replicas
+/// 1, 2, and 4 under **both** roundings.
+#[test]
+fn fxp_stack_engine_bit_identical_to_stack_fx_across_replicas_and_roundings() {
+    for (name, spec) in [("two-layer", two_layer(4)), ("bidir", bidir(4))] {
+        let w = LstmWeights::random(&spec, 2024);
+        let mut rng = Xoshiro256::seed_from_u64(57);
+        let lens = [5usize, 8, 3, 6, 7, 4];
+        let frames: Vec<Vec<Vec<f32>>> = lens
+            .iter()
+            .map(|&n| random_frames(&spec, &mut rng, n))
+            .collect();
+        for rounding in [Rounding::Nearest, Rounding::Truncate] {
+            let oracle = StackFx::with_rounding(&w, QD, rounding);
+            let want: Vec<Vec<Vec<i16>>> = frames
+                .iter()
+                .map(|f| oracle.run(f).iter().map(|y| QD.quantize_slice(y)).collect())
+                .collect();
+            for replicas in [1usize, 2, 4] {
+                let backend = FxpBackend {
+                    q: Some(QD),
+                    rounding,
+                };
+                let mut engine = StackEngine::build(
+                    &backend,
+                    &w,
+                    EngineConfig {
+                        replicas,
+                        ..EngineConfig::default()
+                    },
+                )
+                .expect("fxp stack engine builds");
+                let utts: Vec<QueuedUtterance> = frames
+                    .iter()
+                    .enumerate()
+                    .map(|(i, f)| QueuedUtterance::new(i as u64, f.clone()))
+                    .collect();
+                let completions = engine.serve_all(utts).expect("serve_all");
+                assert_eq!(completions.len(), lens.len());
+                for c in &completions {
+                    let id = c.utt.id as usize;
+                    assert_eq!(c.outputs.len(), lens[id]);
+                    for (t, y) in c.outputs.iter().enumerate() {
+                        assert_eq!(
+                            QD.quantize_slice(y),
+                            want[id][t],
+                            "{name} {rounding:?} replicas={replicas} utt {id} frame {t}: \
+                             engine i16s diverge from StackFx"
+                        );
+                    }
+                }
+                // The engine reported per-stage service times for the run.
+                let stages = engine.stage_times();
+                let served: u64 = lens.iter().map(|&n| n as u64).sum();
+                let dirs = spec.directions() as u64;
+                assert_eq!(
+                    stages[0].frames,
+                    served * spec.layers as u64 * dirs,
+                    "{name} replicas={replicas}: stage-1 frame count"
+                );
+                assert!(stages[0].total_us > 0.0, "stage-1 time must be nonzero");
+            }
+        }
+    }
 }
 
 /// The serve report carries the fxp backend name so the CLI's

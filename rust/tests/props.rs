@@ -7,7 +7,7 @@
 //! float oracle within its quantisation budget.
 
 use clstm::circulant::conv::{matvec_direct, matvec_eq3, matvec_eq6};
-use clstm::circulant::fxp_conv::FxConvPlan;
+use clstm::circulant::fxp_conv::{FxConvPlan, FxStackedConvPlan};
 use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
 use clstm::circulant::BlockCirculant;
 use clstm::num::fxp::{Q, Rounding};
@@ -294,6 +294,103 @@ fn property_nearest_narrowing_matches_widened_i64_reference() {
     );
 }
 
+/// The fused stage-1 operator is a pure refactor of the datapath: on random
+/// fxp weights (each gate quantised with its own auto format), random block
+/// grids, both roundings, and non-default data formats, the stacked plan's
+/// output equals four independent [`FxConvPlan`]s run back to back — bit
+/// for bit, not within a tolerance.
+#[test]
+fn property_stacked_plan_equals_four_independent_plans() {
+    forall(
+        Config::default().cases(24),
+        |rng| {
+            let k = gen::pow2(rng, 1, 4);
+            let p = gen::usize_in(rng, 1..=3);
+            let q = gen::usize_in(rng, 1..=3);
+            let frac = gen::usize_in(rng, 10..=13) as u32;
+            let truncate = rng.next_u64() % 2 == 0;
+            let seed = rng.next_u64();
+            (k, p, q, frac, truncate, seed)
+        },
+        no_shrink,
+        |&(k, p, q, frac, truncate, seed)| {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let q_data = Q::new(frac);
+            let rounding = if truncate {
+                Rounding::Truncate
+            } else {
+                Rounding::Nearest
+            };
+            // Different per-gate weight scales force different per-gate
+            // spectral formats out of quantize_auto.
+            let scales = [0.5f32, 1.5, 0.1, 0.8];
+            let gates: Vec<SpectralWeightsFx> = scales
+                .iter()
+                .map(|&s| {
+                    let mut m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+                    for v in m.w.iter_mut() {
+                        *v *= s;
+                    }
+                    SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m))
+                })
+                .collect();
+            let singles: Vec<FxConvPlan> = gates
+                .iter()
+                .map(|g| FxConvPlan::new(g.clone(), q_data, rounding))
+                .collect();
+            let stacked = FxStackedConvPlan::new(
+                [
+                    gates[0].clone(),
+                    gates[1].clone(),
+                    gates[2].clone(),
+                    gates[3].clone(),
+                ],
+                q_data,
+                rounding,
+            )
+            .map_err(|e| format!("stacked build: {e:#}"))?;
+            let x: Vec<i16> = (0..q * k)
+                .map(|_| q_data.from_f32(rng.uniform(-4.0, 4.0) as f32))
+                .collect();
+            let got = stacked.matvec(&x);
+            for (g, plan) in singles.iter().enumerate() {
+                let want = plan.matvec(&x);
+                if got[g * p * k..(g + 1) * p * k] != want[..] {
+                    return Err(format!(
+                        "k={k} p={p} q={q} frac={frac} {rounding:?}: gate {g} diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The fused operator's whole point, pinned: a stacked mat-vec forward-
+/// transforms each input block exactly once per frame (debug builds carry
+/// the plan-level FFT counter the acceptance criterion names).
+#[cfg(debug_assertions)]
+#[test]
+fn stacked_plan_forward_fft_count_is_one_per_input_block() {
+    const QD: Q = Q::new(12);
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let (p, q, k) = (2usize, 4usize, 8usize);
+    let gates: [SpectralWeightsFx; 4] = std::array::from_fn(|_| {
+        let m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+        SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m))
+    });
+    let stacked = FxStackedConvPlan::new(gates, QD, Rounding::Nearest).unwrap();
+    let x = vec![100i16; q * k];
+    for frame in 1..=3u64 {
+        stacked.matvec(&x);
+        assert_eq!(
+            stacked.fft.forward_calls(),
+            frame * q as u64,
+            "frame {frame}: exactly q = {q} forward FFTs per frame"
+        );
+    }
+}
+
 /// Scratch reuse across frames is state-free: running the same frame twice
 /// through one `FxConvScratch` — with a different frame in between to dirty
 /// every buffer — must reproduce the first output bit for bit.
@@ -313,9 +410,9 @@ fn fx_conv_scratch_reuse_is_state_free() {
         let mut out1 = vec![0i16; p * k];
         let mut dirty = vec![0i16; p * k];
         let mut out2 = vec![0i16; p * k];
-        plan.matvec_into(&frame_a, &mut out1, &mut scratch);
-        plan.matvec_into(&frame_b, &mut dirty, &mut scratch);
-        plan.matvec_into(&frame_a, &mut out2, &mut scratch);
+        plan.matvec_into(&frame_a, &mut out1, &mut scratch).unwrap();
+        plan.matvec_into(&frame_b, &mut dirty, &mut scratch).unwrap();
+        plan.matvec_into(&frame_a, &mut out2, &mut scratch).unwrap();
         assert_eq!(out1, out2, "k={k}: scratch carried state between frames");
         assert_ne!(out1, dirty, "k={k}: distinct frames should differ");
     }
