@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench bench-fxp-stage1 serve-fxp serve-stack artifacts table1-per
+.PHONY: build test bench serve-bench bench-fxp-stage1 serve-fxp serve-stack verify-datapath artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -42,6 +42,17 @@ serve-stack:
 	grep -q "topology: 4 segment(s)" /tmp/clstm-serve-stack.out
 	grep -E "workload PER: [0-9]+\.[0-9]+% \(full 2-layer stack\)" /tmp/clstm-serve-stack.out
 	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-stack.out
+
+# Static datapath verifier smoke: both paper-scale models through
+# `clstm verify` at the default (range-analysis) format and at one
+# explicit non-default format, plus the scheduler-graph pass (release
+# mode: google-scale weight quantisation runs in the check). Non-zero
+# exit on any E*/S* violation.
+verify-datapath:
+	cd rust && cargo run --release -- verify --model google --k 8
+	cd rust && cargo run --release -- verify --model small --k 8
+	cd rust && cargo run --release -- verify --model google --k 8 --q-format q4.11
+	cd rust && cargo run --release -- verify --model small --k 8 --q-format q4.11
 
 # JAX AOT lowering -> rust/artifacts/*.hlo.txt + manifest.json + golden
 # bundle (enables the golden-vector integration tests and the PJRT backend).

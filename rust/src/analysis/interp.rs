@@ -1,0 +1,681 @@
+//! Abstract interpreter over the fixed-point dataflow IR.
+//!
+//! Propagates three worst-case facts per site class — a complex-modulus
+//! value bound and an accumulated rounding-error bound (both in real
+//! units), plus per-component raw-integer magnitude bounds — and checks:
+//!
+//! - **E1 `WrapOverflow`** — a 32-bit wide computation (twiddle/MAC/product
+//!   multiplies plus the nearest-rounding bias) can exceed `i32::MAX` and
+//!   silently wrap. Structurally impossible for today's operators (the
+//!   4-mult complex product tops out at `2^30 + 32768·32767 < i32::MAX`),
+//!   but computed generically so an operator with longer wide chains (the
+//!   planned `ese` CSR accumulators) is caught the day it is declared.
+//! - **E2 `MustFitClip`** — a [`SatRole::MustFit`] narrow can clip. The
+//!   check is on the truncated shifted value: the nearest-rounding carry
+//!   may push the single topmost value (`u − t = 65535` at the rails) one
+//!   LSB into saturation, which `narrow` absorbs losslessly-enough (≤ 1
+//!   LSB, never a wrap) and is exempt. A ≥1-bit stage shift therefore
+//!   passes structurally (`⌊65535/2⌋ = 32767`); a 0-shift forward stage
+//!   fails on rail inputs — exactly the case the `DftDistributed` shift
+//!   policy exists to prevent.
+//! - **E3 `FormatMismatch`** — Q-formats must agree across every edge, and
+//!   the twiddle / PWL-slope grids must sit on the crate-wide Q1.14.
+//! - **E4 `PrecisionBudget`** — worst-case accumulated rounding error at a
+//!   gate pre-activation (PWL input) exceeds [`PRECISION_BUDGET`]. The
+//!   error grows ≈ `k · l1_max · e_fft + k · q_blocks · ρ · eps`, so this
+//!   is where a too-large block size breaks a too-coarse Q-format.
+//! - **E5 `PwlDomain`** — the data format cannot represent the PWL table's
+//!   fitted domain (e.g. frac ≥ 13 cannot reach the sigmoid's ±8).
+//! - **W1 warnings** — a [`SatRole::Tolerated`] site where the envelope
+//!   admits saturation. By design (saturating accumulators / clip
+//!   narrows); reported so a format change that newly saturates a site is
+//!   visible, never fatal.
+//!
+//! Error facts bound a **single pass** through the declared graph against
+//! an exact evaluation over the same quantized weights; recurrent
+//! compounding across frames is the job of the dynamic PER regression
+//! suite. Scheduler-graph checks (S1–S3) live in [`super::scheduler`].
+
+use super::ir::{Graph, OpKind, SatRole};
+use crate::num::fxp::{Q, Rounding};
+
+/// Worst-case accumulated rounding error allowed at a gate pre-activation,
+/// in real units — one quarter of the PWL sigmoid's fitted ±8 domain.
+///
+/// Calibrated against measured quantized-weight envelopes of the paper's
+/// models (adversarial worst case, all rounding errors sign-aligned): every
+/// spec/format pair the bit-identity suites serve stays below ~1.4
+/// (worst: Small at k=8 / Q4.11), while Google at k=16 / Q5.10 — the
+/// "large k on coarse accumulators" failure the paper's §4.2 choice of
+/// Q-format avoids — lands at ~3.2 and is rejected with ≥1.5× margin on
+/// both sides.
+pub const PRECISION_BUDGET: f64 = 2.0;
+
+const I16_POS: f64 = 32767.0;
+const I16_NEG: f64 = 32768.0;
+const SQ2: f64 = std::f64::consts::SQRT_2;
+/// The crate-wide twiddle / PWL-slope grid (Q1.14).
+const UNIT_GRID_FRAC: u32 = 14;
+
+/// Facts the interpreter carries per site class.
+#[derive(Debug, Clone, Copy)]
+pub struct Fact {
+    /// Worst-case complex-modulus value bound, real units.
+    pub bound: f64,
+    /// Worst-case |fixed-point − exact-on-quantized-weights| for one pass,
+    /// real units.
+    pub err: f64,
+    /// Worst-case positive per-component raw magnitude (LSBs).
+    pub raw_pos: f64,
+    /// Worst-case negative per-component raw magnitude (LSBs).
+    pub raw_neg: f64,
+}
+
+/// Which static check a violation belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckKind {
+    /// E1: a wide (i32) computation can exceed `i32::MAX` and wrap.
+    WrapOverflow,
+    /// E2: a `MustFit` narrow can clip.
+    MustFitClip,
+    /// E3: Q-formats disagree across an edge (or off the Q1.14 grid).
+    FormatMismatch,
+    /// E4: accumulated worst-case rounding error exceeds the budget.
+    PrecisionBudget,
+    /// E5: the data format cannot cover a PWL table's domain.
+    PwlDomain,
+    /// S1: the segment dependency graph has a cycle.
+    DeadlockCycle,
+    /// S2: a stage-3 cannot reach the scheduler wake channel.
+    WakeUnreachable,
+    /// S3: admission window exceeds the recycled-buffer ring.
+    WindowOverrun,
+}
+
+impl CheckKind {
+    pub fn code(&self) -> &'static str {
+        match self {
+            CheckKind::WrapOverflow => "E1 wrap-overflow",
+            CheckKind::MustFitClip => "E2 must-fit-clip",
+            CheckKind::FormatMismatch => "E3 format-mismatch",
+            CheckKind::PrecisionBudget => "E4 precision-budget",
+            CheckKind::PwlDomain => "E5 pwl-domain",
+            CheckKind::DeadlockCycle => "S1 deadlock-cycle",
+            CheckKind::WakeUnreachable => "S2 wake-unreachable",
+            CheckKind::WindowOverrun => "S3 window-overrun",
+        }
+    }
+}
+
+/// A hard verification failure, naming the violating op site.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub kind: CheckKind,
+    pub site: String,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at `{}`: {}", self.kind.code(), self.site, self.detail)
+    }
+}
+
+/// A W1 may-saturate note at a `Tolerated` site.
+#[derive(Debug, Clone)]
+pub struct MaySaturate {
+    pub site: String,
+    pub detail: String,
+}
+
+/// Result of a verification run (numeric and/or scheduler passes).
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub violations: Vec<Violation>,
+    pub warnings: Vec<MaySaturate>,
+    /// Per-site facts, declaration order — the property tests compare
+    /// these static bounds against instrumented runtime maxima.
+    pub facts: Vec<(String, Fact)>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Fact of the first site whose name ends with `suffix`.
+    pub fn fact(&self, suffix: &str) -> Option<&Fact> {
+        self.facts
+            .iter()
+            .find(|(s, _)| s.ends_with(suffix))
+            .map(|(_, f)| f)
+    }
+
+    /// Merge another report (e.g. per-segment runs) into this one.
+    pub fn merge(&mut self, other: VerifyReport) {
+        self.violations.extend(other.violations);
+        self.warnings.extend(other.warnings);
+        self.facts.extend(other.facts);
+    }
+
+    /// Multi-line human report; violations first, then warning count.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&format!("violation: {v}\n"));
+        }
+        s.push_str(&format!(
+            "{} site(s) checked, {} violation(s), {} may-saturate warning(s)\n",
+            self.facts.len(),
+            self.violations.len(),
+            self.warnings.len()
+        ));
+        s
+    }
+}
+
+/// Exact supremum of the 2-term wide product `|a·b − c·d|` over i16-ranged
+/// operands with per-component magnitude bounds `ra`, `rb`: both products
+/// can reach `ra·rb` only through the asymmetric negative rail, so the
+/// second term is capped by the positive rail.
+fn mul_wide_sup(ra: f64, rb: f64) -> f64 {
+    ra * rb + (ra * rb.min(I16_POS)).max(ra.min(I16_POS) * rb)
+}
+
+fn round_bias(shift: u32, rounding: Rounding) -> f64 {
+    if shift > 0 && rounding == Rounding::Nearest {
+        (1u64 << (shift - 1)) as f64
+    } else {
+        0.0
+    }
+}
+
+/// Run the numeric pass over a declared graph.
+pub fn verify_graph(g: &Graph, rounding: Rounding) -> VerifyReport {
+    let mut rep = VerifyReport::default();
+    let rho = match rounding {
+        Rounding::Nearest => 0.5,
+        Rounding::Truncate => 1.0,
+    };
+    let mut facts: Vec<Fact> = Vec::with_capacity(g.nodes.len());
+
+    for node in &g.nodes {
+        let q = Q::new(node.frac);
+        let eps = q.eps();
+        // E3: operand formats must agree with this node's format.
+        for &i in &node.inputs {
+            let in_frac = g.node(i).frac;
+            if in_frac != node.frac {
+                rep.violations.push(Violation {
+                    kind: CheckKind::FormatMismatch,
+                    site: node.site.clone(),
+                    detail: format!(
+                        "operand `{}` carries Q{}.{} but this site expects Q{}.{}",
+                        g.node(i).site,
+                        15 - in_frac,
+                        in_frac,
+                        15 - node.frac,
+                        node.frac
+                    ),
+                });
+            }
+        }
+        let ins: Vec<Fact> = node.inputs.iter().map(|&i| facts[i]).collect();
+
+        let mut warn = |site: &str, detail: String, warnings: &mut Vec<MaySaturate>| {
+            warnings.push(MaySaturate {
+                site: site.to_string(),
+                detail,
+            });
+        };
+
+        let fact = match &node.kind {
+            OpKind::Source { bound } => Fact {
+                bound: *bound,
+                err: 0.5 * eps * SQ2,
+                raw_pos: (bound / eps).floor().min(I16_POS),
+                raw_neg: (bound / eps).ceil().min(I16_NEG),
+            },
+            OpKind::FftStage {
+                shift,
+                twiddle_frac,
+                inverse: _,
+            } => {
+                let x = ins[0];
+                if *twiddle_frac != UNIT_GRID_FRAC {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::FormatMismatch,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "twiddle factors stored at Q{}.{twiddle_frac}, the butterfly \
+                             grid is pinned at Q1.{UNIT_GRID_FRAC}",
+                            15 - twiddle_frac
+                        ),
+                    });
+                }
+                let tw_scale = (1u64 << *twiddle_frac) as f64;
+                let tw_err = 2f64.powi(-(*twiddle_frac as i32));
+                // Twiddle product: 4-mult/2-add i32 wide, narrowed by the
+                // twiddle frac (E1 on the wide form).
+                let wide = mul_wide_sup(x.raw_neg, tw_scale) + round_bias(*twiddle_frac, rounding);
+                if wide > i32::MAX as f64 {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::WrapOverflow,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "twiddle product wide value can reach {wide:.0} > i32::MAX"
+                        ),
+                    });
+                }
+                let t_bound = x.bound * (1.0 + tw_err) + SQ2 * rho * eps;
+                let t_err = x.err * (1.0 + tw_err) + x.bound * tw_err * SQ2 + SQ2 * rho * eps;
+                let t_raw = x.raw_neg * SQ2 * (1.0 + tw_err) + rho;
+                if t_raw > I16_POS {
+                    warn(
+                        &node.site,
+                        format!(
+                            "twiddle-product narrow may clip (|t| ≤ {t_raw:.0} LSB) — \
+                             saturating by design at rail inputs"
+                        ),
+                        &mut rep.warnings,
+                    );
+                }
+                let t_pos = t_raw.min(I16_POS);
+                let t_neg = t_raw.min(I16_NEG);
+                // Butterfly u ± t: exact i32 add, then narrow by the stage
+                // shift. Subtraction makes the worst positive side
+                // `pos(u) + neg(t)`.
+                let pre_pos = x.raw_pos + t_neg;
+                let pre_neg = x.raw_neg + t_neg;
+                let scale = (1u64 << *shift) as f64;
+                let fits = (pre_pos / scale).floor() <= I16_POS
+                    && (pre_neg / scale).floor() <= I16_NEG;
+                match node.role {
+                    SatRole::MustFit if !fits => rep.violations.push(Violation {
+                        kind: CheckKind::MustFitClip,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "butterfly narrow (shift {shift}) declared must-fit but \
+                             |u±t| can reach {pre_pos:.0}/{pre_neg:.0} LSB — \
+                             ⌊/2^{shift}⌋ exceeds the i16 rails"
+                        ),
+                    }),
+                    SatRole::Tolerated if !fits => warn(
+                        &node.site,
+                        format!(
+                            "butterfly narrow (shift {shift}) may clip \
+                             (|u±t| ≤ {pre_neg:.0} LSB) — saturating by design"
+                        ),
+                        &mut rep.warnings,
+                    ),
+                    _ => {}
+                }
+                let shift_round = if *shift > 0 { SQ2 * rho * eps } else { 0.0 };
+                let bound = (x.bound + t_bound) / scale + shift_round;
+                let bias = round_bias(*shift, rounding);
+                Fact {
+                    bound,
+                    err: (x.err + t_err) / scale + shift_round,
+                    raw_pos: ((pre_pos + bias) / scale)
+                        .floor()
+                        .min(I16_POS)
+                        .min((bound / eps).ceil()),
+                    raw_neg: ((pre_neg + bias) / scale)
+                        .floor()
+                        .min(I16_NEG)
+                        .min((bound / eps).ceil()),
+                }
+            }
+            OpKind::SpectralMac {
+                terms,
+                w_frac,
+                w_max,
+                l1_max,
+            } => {
+                let x = ins[0];
+                let w_raw = (w_max * (1u64 << *w_frac) as f64).ceil().min(I16_NEG);
+                let wide = mul_wide_sup(x.raw_neg, w_raw) + round_bias(*w_frac, rounding);
+                if wide > i32::MAX as f64 {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::WrapOverflow,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "spectral product wide value can reach {wide:.0} > i32::MAX \
+                             (weight grid Q{}.{w_frac})",
+                            15 - w_frac
+                        ),
+                    });
+                }
+                // Per-term product narrowed back to the data format.
+                let p_raw = (x.bound * w_max) / eps + rho;
+                if p_raw > I16_POS {
+                    warn(
+                        &node.site,
+                        format!(
+                            "per-term product narrow may clip (≤ {p_raw:.0} LSB) — \
+                             saturating by design"
+                        ),
+                        &mut rep.warnings,
+                    );
+                }
+                // Saturating accumulation over the `terms`-long chain.
+                let acc_bound = l1_max * x.bound + *terms as f64 * SQ2 * rho * eps;
+                if acc_bound > q.max_val() {
+                    warn(
+                        &node.site,
+                        format!(
+                            "{terms}-term accumulator envelope {acc_bound:.2} exceeds \
+                             ±{:.2} — clips via saturating_add by design",
+                            q.max_val()
+                        ),
+                        &mut rep.warnings,
+                    );
+                }
+                let bound = acc_bound.min(SQ2 * I16_NEG * eps);
+                Fact {
+                    bound,
+                    err: l1_max * x.err + *terms as f64 * SQ2 * rho * eps,
+                    raw_pos: (bound / eps).ceil().min(I16_POS),
+                    raw_neg: (bound / eps).ceil().min(I16_NEG),
+                }
+            }
+            OpKind::AddSat => {
+                let bound_sum: f64 = ins.iter().map(|f| f.bound).sum();
+                if bound_sum > q.max_val() {
+                    warn(
+                        &node.site,
+                        format!(
+                            "sum envelope {bound_sum:.2} exceeds ±{:.2} — saturating_add \
+                             by design",
+                            q.max_val()
+                        ),
+                        &mut rep.warnings,
+                    );
+                }
+                let bound = bound_sum.min(I16_NEG * eps);
+                Fact {
+                    bound,
+                    err: ins.iter().map(|f| f.err).sum(),
+                    raw_pos: ins.iter().map(|f| f.raw_pos).sum::<f64>().min(I16_POS),
+                    raw_neg: ins.iter().map(|f| f.raw_neg).sum::<f64>().min(I16_NEG),
+                }
+            }
+            OpKind::Pwl {
+                domain,
+                slope_frac,
+                slope_bound,
+                out_bound,
+                budgeted,
+            } => {
+                let x = ins[0];
+                if *slope_frac != UNIT_GRID_FRAC {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::FormatMismatch,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "PWL slopes stored at Q{}.{slope_frac}, the lookup grid is \
+                             pinned at Q1.{UNIT_GRID_FRAC}",
+                            15 - slope_frac
+                        ),
+                    });
+                }
+                // E5: the data format must reach the table's fitted domain
+                // (one LSB of tolerance: Q3.12's 7.9998 covers ±8).
+                if q.max_val() + eps < *domain {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::PwlDomain,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "data format Q{}.{} tops out at {:.4} — cannot represent \
+                             the PWL table's ±{domain} domain",
+                            15 - node.frac,
+                            node.frac,
+                            q.max_val()
+                        ),
+                    });
+                }
+                // E4: the pre-activation error budget (gate lookups only —
+                // see `OpKind::Pwl::budgeted`).
+                if *budgeted && x.err > PRECISION_BUDGET {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::PrecisionBudget,
+                        site: node.site.clone(),
+                        detail: format!(
+                            "worst-case pre-activation rounding error {:.3} exceeds the \
+                             budget {PRECISION_BUDGET} — the k·q-term MAC chain is too \
+                             long for Q{}.{}; shrink the block size or add fractional \
+                             bits",
+                            x.err,
+                            15 - node.frac,
+                            node.frac
+                        ),
+                    });
+                }
+                Fact {
+                    bound: *out_bound,
+                    err: x.err * slope_bound + rho * eps,
+                    raw_pos: (out_bound / eps).ceil().min(I16_POS),
+                    raw_neg: (out_bound / eps).ceil().min(I16_NEG),
+                }
+            }
+            OpKind::MulData => {
+                let (a, b) = (ins[0], ins[1]);
+                let wide = a.raw_neg * b.raw_neg + round_bias(node.frac, rounding);
+                if wide > i32::MAX as f64 {
+                    rep.violations.push(Violation {
+                        kind: CheckKind::WrapOverflow,
+                        site: node.site.clone(),
+                        detail: format!("product wide value can reach {wide:.0} > i32::MAX"),
+                    });
+                }
+                let raw_product = a.bound * b.bound;
+                if raw_product > q.max_val() {
+                    warn(
+                        &node.site,
+                        format!(
+                            "product envelope {raw_product:.2} exceeds ±{:.2} — clip \
+                             narrow by design",
+                            q.max_val()
+                        ),
+                        &mut rep.warnings,
+                    );
+                }
+                let bound = raw_product.min(I16_NEG * eps);
+                Fact {
+                    bound,
+                    err: a.bound * b.err + b.bound * a.err + rho * eps,
+                    raw_pos: (bound / eps).ceil().min(I16_POS),
+                    raw_neg: (bound / eps).ceil().min(I16_NEG),
+                }
+            }
+            OpKind::Join => Fact {
+                bound: ins.iter().map(|f| f.bound).fold(0.0, f64::max),
+                err: ins.iter().map(|f| f.err).fold(0.0, f64::max),
+                raw_pos: ins.iter().map(|f| f.raw_pos).fold(0.0, f64::max),
+                raw_neg: ins.iter().map(|f| f.raw_neg).fold(0.0, f64::max),
+            },
+        };
+        rep.facts.push((node.site.clone(), fact));
+        facts.push(fact);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::ir::{GraphBuilder, OpKind, SatRole};
+
+    fn fwd_stage(g: &mut GraphBuilder, input: usize, frac: u32, shift: u32) -> usize {
+        g.node(
+            "stage",
+            OpKind::FftStage {
+                shift,
+                twiddle_frac: 14,
+                inverse: false,
+            },
+            frac,
+            SatRole::MustFit,
+            &[input],
+        )
+    }
+
+    #[test]
+    fn shifted_forward_butterfly_is_provably_clip_free() {
+        let mut g = GraphBuilder::new();
+        let q = Q::new(12);
+        let src = g.source("x", q, 100.0); // clamps to the rail
+        let mut n = src;
+        for _ in 0..3 {
+            n = fwd_stage(&mut g, n, 12, 1);
+        }
+        let rep = verify_graph(&g.finish(), Rounding::Nearest);
+        assert!(
+            !rep.violations.iter().any(|v| v.kind == CheckKind::MustFitClip),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn unshifted_forward_butterfly_fails_must_fit_on_rail_inputs() {
+        let mut g = GraphBuilder::new();
+        let q = Q::new(12);
+        let src = g.source("x", q, 100.0);
+        let n = fwd_stage(&mut g, src, 12, 0);
+        let _ = n;
+        let rep = verify_graph(&g.finish(), Rounding::Nearest);
+        let v = rep
+            .violations
+            .iter()
+            .find(|v| v.kind == CheckKind::MustFitClip)
+            .expect("0-shift stage must be rejected");
+        assert!(v.site.ends_with("stage"), "site: {}", v.site);
+    }
+
+    #[test]
+    fn format_mismatch_across_edge_is_flagged() {
+        let mut g = GraphBuilder::new();
+        let a = g.source("a", Q::new(12), 1.0);
+        let b = g.source("b", Q::new(10), 1.0);
+        g.node("sum", OpKind::AddSat, 12, SatRole::Tolerated, &[a, b]);
+        let rep = verify_graph(&g.finish(), Rounding::Nearest);
+        assert!(rep
+            .violations
+            .iter()
+            .any(|v| v.kind == CheckKind::FormatMismatch && v.site.ends_with("sum")));
+    }
+
+    #[test]
+    fn pwl_domain_requires_wide_enough_format() {
+        for (frac, ok) in [(12u32, true), (13, false)] {
+            let mut g = GraphBuilder::new();
+            let src = g.source("z", Q::new(frac), 1.0);
+            g.node(
+                "sigmoid",
+                OpKind::Pwl {
+                    domain: 8.0,
+                    slope_frac: 14,
+                    slope_bound: 0.25,
+                    out_bound: 1.0,
+                    budgeted: true,
+                },
+                frac,
+                SatRole::Clamp,
+                &[src],
+            );
+            let rep = verify_graph(&g.finish(), Rounding::Nearest);
+            assert_eq!(
+                !rep.violations.iter().any(|v| v.kind == CheckKind::PwlDomain),
+                ok,
+                "frac {frac}: {}",
+                rep.render()
+            );
+        }
+    }
+
+    #[test]
+    fn tolerated_accumulator_warns_but_does_not_fail() {
+        let mut g = GraphBuilder::new();
+        let q = Q::new(12);
+        let src = g.source("x", q, 4.0);
+        g.node(
+            "acc",
+            OpKind::SpectralMac {
+                terms: 64,
+                w_frac: 14,
+                w_max: 1.5,
+                l1_max: 40.0,
+            },
+            12,
+            SatRole::Tolerated,
+            &[src],
+        );
+        let rep = verify_graph(&g.finish(), Rounding::Nearest);
+        assert!(rep.ok(), "{}", rep.render());
+        assert!(
+            rep.warnings.iter().any(|w| w.site.ends_with("acc")),
+            "accumulator envelope past the rail must warn"
+        );
+    }
+
+    #[test]
+    fn long_mac_chain_on_coarse_format_breaks_the_budget() {
+        // k=16-shaped chain on Q5.10: error ≈ k·(l1·e_fft + q·√2·ρ·eps)
+        // exceeds the budget; same chain on Q3.12 stays inside.
+        for (frac, ok) in [(12u32, true), (10, false)] {
+            let mut g = GraphBuilder::new();
+            let q = Q::new(frac);
+            let src = g.source("x", q, q.max_val());
+            let mut n = src;
+            for _ in 0..4 {
+                n = fwd_stage(&mut g, n, frac, 1);
+            }
+            let acc = g.node(
+                "acc",
+                OpKind::SpectralMac {
+                    terms: 42,
+                    w_frac: 14,
+                    w_max: 1.0,
+                    l1_max: 8.0,
+                },
+                frac,
+                SatRole::Tolerated,
+                &[n],
+            );
+            let mut t = acc;
+            for _ in 0..4 {
+                t = g.node(
+                    "ifft",
+                    OpKind::FftStage {
+                        shift: 0,
+                        twiddle_frac: 14,
+                        inverse: true,
+                    },
+                    frac,
+                    SatRole::Tolerated,
+                    &[t],
+                );
+            }
+            g.node(
+                "sigmoid",
+                OpKind::Pwl {
+                    domain: 8.0,
+                    slope_frac: 14,
+                    slope_bound: 0.25,
+                    out_bound: 1.0,
+                    budgeted: true,
+                },
+                frac,
+                SatRole::Clamp,
+                &[t],
+            );
+            let rep = verify_graph(&g.finish(), Rounding::Nearest);
+            let budget_hit = rep
+                .violations
+                .iter()
+                .any(|v| v.kind == CheckKind::PrecisionBudget);
+            assert_eq!(budget_hit, !ok, "frac {frac}: {}", rep.render());
+        }
+    }
+}

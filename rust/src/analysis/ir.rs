@@ -1,0 +1,185 @@
+//! Typed fixed-point dataflow IR the fxp operators declare themselves into.
+//!
+//! Nodes are **site classes**, not runtime instances: one `FftStage` node
+//! stands for every butterfly of that stage across all blocks and frames,
+//! one `SpectralMac` node for every (row, bin) accumulation chain of one
+//! gate matrix. The abstract interpreter ([`super::interp`]) propagates
+//! worst-case facts through these classes, so the graph for a full Google
+//! segment is ~50 nodes rather than millions of op instances.
+//!
+//! Operators implement [`DeclareOps`] to emit their own graph — the
+//! declaration lives next to the kernel it describes, so a kernel change
+//! that moves a narrowing site is a one-line declaration change away from
+//! being re-verified. A future backend (the planned `ese` CSR one) plugs in
+//! the same way: declare its dot-product chains as `SpectralMac`-shaped
+//! nodes (real-valued, `terms` = nonzeros per row) and the same checks
+//! apply.
+
+use crate::num::fxp::Q;
+
+/// Index of a node in a [`Graph`].
+pub type NodeId = usize;
+
+/// How a potentially-saturating site is classified by the operator that
+/// declared it. This is the heart of check E2/W1: the operator states its
+/// *intent* and the interpreter proves or audits it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SatRole {
+    /// Saturation must be provably impossible for all representable inputs
+    /// (e.g. the forward-FFT butterfly narrow under a ≥1-bit stage shift).
+    /// If the interpreter cannot prove it, that is a hard violation.
+    MustFit,
+    /// The site saturates by design (`saturating_add` accumulators, clip
+    /// narrows); possible saturation is reported as a warning, silent
+    /// wrapping is still a violation.
+    Tolerated,
+    /// An intentional range clamp (PWL domain ends); never reported.
+    Clamp,
+}
+
+/// Site-class operation kinds with their static parameters. Envelope
+/// parameters (`w_max`, `l1_max`, bias bounds) are *measured* from the
+/// actual quantized weights at declaration time — the analysis is per
+/// prepared model, not per architecture.
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// External operand quantized into the data format; `bound` is the
+    /// worst-case |value| in real units (clamped to the format rail).
+    Source { bound: f64 },
+    /// One radix-2 butterfly stage: Q1.14 twiddle product (narrow by
+    /// `twiddle_frac`), exact i32 add/sub, then narrow by `shift`.
+    FftStage {
+        shift: u32,
+        twiddle_frac: u32,
+        inverse: bool,
+    },
+    /// Per-(row, bin) spectral MAC chain: `terms` complex products (each
+    /// narrowed from a 32-bit wide accumulator by `w_frac`) summed with
+    /// saturating adds. `w_max`/`l1_max` are the measured max bin modulus
+    /// and max row-wise L1 of bin moduli of the quantized weights.
+    SpectralMac {
+        terms: usize,
+        w_frac: u32,
+        w_max: f64,
+        l1_max: f64,
+    },
+    /// Saturating add of all inputs (bias / peephole pre-activation adds).
+    AddSat,
+    /// Piecewise-linear activation lookup: input must cover ±`domain`,
+    /// slopes are stored at `slope_frac`, output is bounded by `out_bound`
+    /// and amplifies input error by at most `slope_bound`. `budgeted`
+    /// marks the gate pre-activation lookups where the E4 precision budget
+    /// is enforced; lookups whose input error is dominated by the
+    /// recurrent state (e.g. `tanh(c)`) are declared un-budgeted — state
+    /// drift is the dynamic PER regression's contract, not the static
+    /// single-pass bound's.
+    Pwl {
+        domain: f64,
+        slope_frac: u32,
+        slope_bound: f64,
+        out_bound: f64,
+        budgeted: bool,
+    },
+    /// Data-format product of two inputs (gate products, peephole scaling):
+    /// 32-bit wide multiply narrowed back by the data frac.
+    MulData,
+    /// Format-preserving merge of equal-format edges (direction concat,
+    /// recurrent feedback); bound/err are the input maxima.
+    Join,
+}
+
+/// One site-class node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Hierarchical site name, e.g. `l0.d0/gates/fwd/stage2`.
+    pub site: String,
+    pub kind: OpKind,
+    /// Q-format (fractional bits) of this node's output values.
+    pub frac: u32,
+    pub role: SatRole,
+    pub inputs: Vec<NodeId>,
+}
+
+/// A declared dataflow graph (append-only; ids are creation order, so the
+/// node list is already topologically sorted).
+#[derive(Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+}
+
+/// Builder with hierarchical site scopes.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    nodes: Vec<Node>,
+    scope: Vec<String>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` with `name` pushed onto the site scope.
+    pub fn scoped<R>(&mut self, name: &str, f: impl FnOnce(&mut Self) -> R) -> R {
+        self.scope.push(name.to_string());
+        let r = f(self);
+        self.scope.pop();
+        r
+    }
+
+    /// Append a node; `site` is joined onto the current scope path.
+    pub fn node(
+        &mut self,
+        site: &str,
+        kind: OpKind,
+        frac: u32,
+        role: SatRole,
+        inputs: &[NodeId],
+    ) -> NodeId {
+        let id = self.nodes.len();
+        let mut path = self.scope.join("/");
+        if !path.is_empty() {
+            path.push('/');
+        }
+        path.push_str(site);
+        self.nodes.push(Node {
+            id,
+            site: path,
+            kind,
+            frac,
+            role,
+            inputs: inputs.to_vec(),
+        });
+        id
+    }
+
+    /// Convenience: an external operand in data format `q` bounded by
+    /// `bound` real units (clamped to the format rail — quantized inputs
+    /// cannot exceed it).
+    pub fn source(&mut self, site: &str, q: Q, bound: f64) -> NodeId {
+        let b = bound.min(q.max_val());
+        self.node(site, OpKind::Source { bound: b }, q.frac, SatRole::Clamp, &[])
+    }
+
+    pub fn finish(self) -> Graph {
+        Graph { nodes: self.nodes }
+    }
+}
+
+/// Fixed-point operators declare their op graph into the IR.
+///
+/// `inputs` are the operand edges (already in the operator's data
+/// Q-format); the returned ids are the operator's output edges. An
+/// operator must declare **every** site where magnitude can exceed the
+/// carried width (narrows, saturating adds, wide accumulations) with the
+/// truthful [`SatRole`] — the interpreter audits exactly what is declared.
+pub trait DeclareOps {
+    fn declare_ops(&self, g: &mut GraphBuilder, inputs: &[NodeId]) -> Vec<NodeId>;
+}

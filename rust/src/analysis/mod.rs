@@ -1,0 +1,28 @@
+//! Static verification of the fixed-point datapath and the scheduling
+//! graph (`clstm verify`).
+//!
+//! Two passes over declared models of the code that is about to run:
+//!
+//! 1. **Numeric** ([`ir`] + [`interp`]): the fxp operators declare their
+//!    op graph through [`ir::DeclareOps`]; the abstract interpreter
+//!    propagates worst-case value/error/raw-magnitude facts and checks
+//!    overflow, saturation intent, Q-format agreement, the precision
+//!    budget, and PWL domain coverage (E1–E5, W1).
+//! 2. **Scheduler** ([`scheduler`]): `StackTopology` + `PipelineConfig`
+//!    are lowered to a channel/segment graph checked for bounded-channel
+//!    deadlock cycles, wake reachability, and admission-window sanity
+//!    (S1–S3).
+//!
+//! Both run automatically — the numeric pass inside
+//! `FxpBackend::prepare`, the scheduler pass inside `StackEngine::build` —
+//! and on demand via `clstm verify`.
+
+pub mod interp;
+pub mod ir;
+pub mod scheduler;
+
+pub use interp::{
+    verify_graph, CheckKind, Fact, MaySaturate, VerifyReport, Violation, PRECISION_BUDGET,
+};
+pub use ir::{DeclareOps, Graph, GraphBuilder, Node, NodeId, OpKind, SatRole};
+pub use scheduler::{SchedGraph, SchedNodeKind};

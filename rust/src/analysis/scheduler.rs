@@ -1,0 +1,348 @@
+//! Static checks over the pipeline/stack scheduling graph.
+//!
+//! [`crate::coordinator::topology`] builds a [`SchedGraph`] mirroring what
+//! `StackEngine::build` is about to spawn — one node per pipeline stage /
+//! scheduler / drain endpoint, one edge per channel (with its bound), plus
+//! the segment-level dependency DAG from `StackTopology` — and runs
+//! [`SchedGraph::check`] before any thread starts:
+//!
+//! - **S1 `DeadlockCycle` (segments)** — the segment dependency graph must
+//!   be acyclic, otherwise two lanes wait on each other's output forever.
+//! - **S2 `WakeUnreachable`** — every final pipeline stage must reach a
+//!   scheduler node through channel edges (the wake-token path), and every
+//!   channel *into* a scheduler must be unbounded: a bounded wake channel
+//!   can fill up and block the very stage whose completion would drain it.
+//! - **S3 `DeadlockCycle` (channels) / `WindowOverrun`** — no cycle made
+//!   purely of bounded channels (the classic bounded-queue deadlock: every
+//!   hop full, every sender blocked), and the admission window must not
+//!   exceed the recycled-buffer ring, otherwise admission blocks on a
+//!   buffer that can never come back.
+//!
+//! Violations reuse [`super::interp`]'s [`Violation`] type so `clstm
+//! verify` renders numeric and scheduler findings in one report.
+
+use super::interp::{CheckKind, Violation};
+
+/// Role of a node in the scheduling graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedNodeKind {
+    /// Admission/scheduler loop (receives wake tokens).
+    Scheduler,
+    /// A pipeline stage; `last` marks the stage whose completion must be
+    /// able to wake the scheduler (stage-3 in the serving pipeline).
+    Stage { last: bool },
+    /// Terminal drain (result collection); never blocks upstream.
+    Drain,
+}
+
+/// One channel edge between two scheduling nodes.
+#[derive(Debug, Clone)]
+pub struct SchedChannel {
+    pub name: String,
+    pub src: usize,
+    pub dst: usize,
+    /// `Some(depth)` for a bounded `sync_channel`, `None` for unbounded.
+    pub capacity: Option<usize>,
+}
+
+/// Scheduling graph: per-lane stage/channel topology plus the segment
+/// dependency DAG.
+#[derive(Debug, Default)]
+pub struct SchedGraph {
+    nodes: Vec<(String, SchedNodeKind)>,
+    channels: Vec<SchedChannel>,
+    segments: Vec<String>,
+    /// `(upstream, downstream)` — downstream consumes upstream's output.
+    seg_deps: Vec<(usize, usize)>,
+    /// Frames admitted in flight per lane.
+    window: usize,
+    /// Recycled frame-buffer ring size per lane.
+    ring_capacity: usize,
+}
+
+impl SchedGraph {
+    pub fn new(window: usize, ring_capacity: usize) -> Self {
+        Self {
+            window,
+            ring_capacity,
+            ..Default::default()
+        }
+    }
+
+    pub fn add_node(&mut self, name: &str, kind: SchedNodeKind) -> usize {
+        self.nodes.push((name.to_string(), kind));
+        self.nodes.len() - 1
+    }
+
+    pub fn add_channel(&mut self, name: &str, src: usize, dst: usize, capacity: Option<usize>) {
+        self.channels.push(SchedChannel {
+            name: name.to_string(),
+            src,
+            dst,
+            capacity,
+        });
+    }
+
+    pub fn add_segment(&mut self, name: &str) -> usize {
+        self.segments.push(name.to_string());
+        self.segments.len() - 1
+    }
+
+    pub fn add_seg_dep(&mut self, upstream: usize, downstream: usize) {
+        self.seg_deps.push((upstream, downstream));
+    }
+
+    /// Run S1–S3; empty result means the graph is deadlock-free by these
+    /// criteria.
+    pub fn check(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        self.check_segment_dag(&mut out);
+        self.check_wake_paths(&mut out);
+        self.check_bounded_cycles(&mut out);
+        if self.window > self.ring_capacity {
+            out.push(Violation {
+                kind: CheckKind::WindowOverrun,
+                site: "pipeline/ring".to_string(),
+                detail: format!(
+                    "admission window {} exceeds the {}-buffer recycle ring — \
+                     admission would block on a buffer that never returns",
+                    self.window, self.ring_capacity
+                ),
+            });
+        }
+        out
+    }
+
+    /// S1: Kahn toposort over segment dependencies; leftovers are on a cycle.
+    fn check_segment_dag(&self, out: &mut Vec<Violation>) {
+        let n = self.segments.len();
+        let mut indeg = vec![0usize; n];
+        for &(_, d) in &self.seg_deps {
+            indeg[d] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(u) = queue.pop() {
+            seen += 1;
+            for &(s, d) in &self.seg_deps {
+                if s == u {
+                    indeg[d] -= 1;
+                    if indeg[d] == 0 {
+                        queue.push(d);
+                    }
+                }
+            }
+        }
+        if seen < n {
+            let cyclic: Vec<&str> = (0..n)
+                .filter(|&i| indeg[i] > 0)
+                .map(|i| self.segments[i].as_str())
+                .collect();
+            out.push(Violation {
+                kind: CheckKind::DeadlockCycle,
+                site: "topology/segments".to_string(),
+                detail: format!(
+                    "segment dependency graph has a cycle through {{{}}}",
+                    cyclic.join(", ")
+                ),
+            });
+        }
+    }
+
+    /// S2: every `last` stage must reach a scheduler via channels, and wake
+    /// channels (edges into a scheduler) must be unbounded.
+    fn check_wake_paths(&self, out: &mut Vec<Violation>) {
+        for ch in &self.channels {
+            if matches!(self.nodes[ch.dst].1, SchedNodeKind::Scheduler) {
+                if let Some(depth) = ch.capacity {
+                    out.push(Violation {
+                        kind: CheckKind::WakeUnreachable,
+                        site: ch.name.clone(),
+                        detail: format!(
+                            "wake channel into `{}` is bounded (depth {depth}) — a full \
+                             channel would block the completing stage",
+                            self.nodes[ch.dst].0
+                        ),
+                    });
+                }
+            }
+        }
+        for (i, (name, kind)) in self.nodes.iter().enumerate() {
+            if !matches!(kind, SchedNodeKind::Stage { last: true }) {
+                continue;
+            }
+            // BFS over channel edges.
+            let mut seen = vec![false; self.nodes.len()];
+            let mut queue = vec![i];
+            seen[i] = true;
+            let mut woke = false;
+            while let Some(u) = queue.pop() {
+                if matches!(self.nodes[u].1, SchedNodeKind::Scheduler) {
+                    woke = true;
+                    break;
+                }
+                for ch in &self.channels {
+                    if ch.src == u && !seen[ch.dst] {
+                        seen[ch.dst] = true;
+                        queue.push(ch.dst);
+                    }
+                }
+            }
+            if !woke {
+                out.push(Violation {
+                    kind: CheckKind::WakeUnreachable,
+                    site: name.clone(),
+                    detail: "final stage has no channel path to any scheduler — completed \
+                             frames can never wake admission"
+                        .to_string(),
+                });
+            }
+        }
+    }
+
+    /// S3: DFS cycle detection over the subgraph of bounded channels only.
+    fn check_bounded_cycles(&self, out: &mut Vec<Violation>) {
+        const WHITE: u8 = 0;
+        const GRAY: u8 = 1;
+        const BLACK: u8 = 2;
+        let mut color = vec![WHITE; self.nodes.len()];
+        let mut stack_names: Vec<String> = Vec::new();
+
+        // Iterative DFS carrying the channel-name path for the report.
+        fn dfs(
+            u: usize,
+            g: &SchedGraph,
+            color: &mut [u8],
+            path: &mut Vec<String>,
+            out: &mut Vec<Violation>,
+        ) {
+            color[u] = GRAY;
+            for ch in &g.channels {
+                if ch.src != u || ch.capacity.is_none() {
+                    continue;
+                }
+                match color[ch.dst] {
+                    GRAY => {
+                        let mut cycle = path.clone();
+                        cycle.push(ch.name.clone());
+                        out.push(Violation {
+                            kind: CheckKind::DeadlockCycle,
+                            site: ch.name.clone(),
+                            detail: format!(
+                                "cycle of bounded channels {{{}}} — with every hop full, \
+                                 every sender blocks forever",
+                                cycle.join(" → ")
+                            ),
+                        });
+                    }
+                    WHITE => {
+                        path.push(ch.name.clone());
+                        dfs(ch.dst, g, color, path, out);
+                        path.pop();
+                    }
+                    _ => {}
+                }
+            }
+            color[u] = BLACK;
+        }
+
+        for u in 0..self.nodes.len() {
+            if color[u] == WHITE {
+                dfs(u, self, &mut color, &mut stack_names, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A lane shaped like `ClstmPipeline`: sched → s1 → s2 → s3 → drain over
+    /// bounded hops, unbounded recycle + wake back into the scheduler.
+    fn healthy_lane(wake_bounded: bool, recycle_bounded: bool) -> SchedGraph {
+        let mut g = SchedGraph::new(11, 11);
+        let sched = g.add_node("sched", SchedNodeKind::Scheduler);
+        let s1 = g.add_node("s1", SchedNodeKind::Stage { last: false });
+        let s2 = g.add_node("s2", SchedNodeKind::Stage { last: false });
+        let s3 = g.add_node("s3", SchedNodeKind::Stage { last: true });
+        let drain = g.add_node("drain", SchedNodeKind::Drain);
+        g.add_channel("to_s1", sched, s1, Some(2));
+        g.add_channel("s1_s2", s1, s2, Some(2));
+        g.add_channel("s2_s3", s2, s3, Some(2));
+        g.add_channel("s3_drain", s3, drain, Some(2));
+        g.add_channel(
+            "recycle",
+            drain,
+            sched,
+            if recycle_bounded { Some(2) } else { None },
+        );
+        g.add_channel("wake", s3, sched, if wake_bounded { Some(1) } else { None });
+        g
+    }
+
+    #[test]
+    fn healthy_pipeline_lane_passes() {
+        let v = healthy_lane(false, false).check();
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn bounded_wake_channel_is_rejected() {
+        let v = healthy_lane(true, false).check();
+        assert!(v
+            .iter()
+            .any(|x| x.kind == CheckKind::WakeUnreachable && x.site == "wake"));
+    }
+
+    #[test]
+    fn bounded_recycle_closes_a_deadlock_cycle() {
+        let v = healthy_lane(false, true).check();
+        assert!(v.iter().any(|x| x.kind == CheckKind::DeadlockCycle));
+    }
+
+    #[test]
+    fn stage3_without_wake_path_is_rejected() {
+        let mut g = SchedGraph::new(4, 4);
+        let _sched = g.add_node("sched", SchedNodeKind::Scheduler);
+        let s3 = g.add_node("s3", SchedNodeKind::Stage { last: true });
+        let drain = g.add_node("drain", SchedNodeKind::Drain);
+        g.add_channel("s3_drain", s3, drain, Some(2));
+        let v = g.check();
+        assert!(v
+            .iter()
+            .any(|x| x.kind == CheckKind::WakeUnreachable && x.site == "s3"));
+    }
+
+    #[test]
+    fn window_larger_than_ring_is_rejected() {
+        let mut g = healthy_lane(false, false);
+        g.window = 20;
+        let v = g.check();
+        assert!(v.iter().any(|x| x.kind == CheckKind::WindowOverrun));
+    }
+
+    #[test]
+    fn segment_dependency_cycle_is_rejected() {
+        let mut g = SchedGraph::new(4, 4);
+        let a = g.add_segment("l0.d0");
+        let b = g.add_segment("l1.d0");
+        g.add_seg_dep(a, b);
+        g.add_seg_dep(b, a);
+        let v = g.check();
+        assert!(v
+            .iter()
+            .any(|x| x.kind == CheckKind::DeadlockCycle && x.site == "topology/segments"));
+    }
+
+    #[test]
+    fn layered_segment_dag_passes() {
+        let mut g = SchedGraph::new(4, 4);
+        let l0f = g.add_segment("l0.d0");
+        let l0b = g.add_segment("l0.d1");
+        let l1f = g.add_segment("l1.d0");
+        g.add_seg_dep(l0f, l1f);
+        g.add_seg_dep(l0b, l1f);
+        assert!(g.check().is_empty());
+    }
+}

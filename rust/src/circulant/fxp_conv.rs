@@ -29,10 +29,63 @@
 //!   just skips 3 of the 4 input-FFT passes.
 
 use super::spectral::SpectralWeightsFx;
+use crate::analysis::ir::{DeclareOps, GraphBuilder, NodeId, OpKind, SatRole};
 use crate::fft::fxp::{FxFftPlan, ShiftPolicy};
 use crate::num::cplx::CplxFx;
 use crate::num::fxp::{narrow, Q, Rounding};
 use anyhow::{ensure, Result};
+
+/// Measured spectral envelopes of a quantised matrix, in real units:
+/// `(w_max, l1_max)` — the max bin modulus, and the max over (block-row,
+/// bin) of the L1 sum of bin moduli across the `q` input blocks. These
+/// parameterise the [`OpKind::SpectralMac`] site class, so the static
+/// verification is of *this* prepared model's weights, not a generic
+/// architecture bound.
+pub fn spectral_envelope(w: &SpectralWeightsFx) -> (f64, f64) {
+    let eps = w.qfmt.eps();
+    let half = w.k / 2;
+    let (mut w_max, mut l1_max) = (0f64, 0f64);
+    for i in 0..w.p {
+        for b in 0..=half {
+            let mut l1 = 0f64;
+            for j in 0..w.q {
+                let c = w.block(i, j)[b];
+                let m = ((c.re as f64).powi(2) + (c.im as f64).powi(2)).sqrt() * eps;
+                w_max = w_max.max(m);
+                l1 += m;
+            }
+            l1_max = l1_max.max(l1);
+        }
+    }
+    (w_max, l1_max)
+}
+
+/// Declare stages B + C (`mac_rows_into`) for one spectral matrix: the
+/// per-(row, bin) MAC chain over `q` products, then the inverse butterfly
+/// chain back to the time domain. Mirrors the runtime call shape: whatever
+/// `mac_rows_into` executes, this declares.
+fn declare_mac_rows(
+    g: &mut GraphBuilder,
+    weights: &SpectralWeightsFx,
+    fft: &FxFftPlan,
+    q_data: Q,
+    spectrum: NodeId,
+) -> NodeId {
+    let (w_max, l1_max) = spectral_envelope(weights);
+    let acc = g.node(
+        "mac",
+        OpKind::SpectralMac {
+            terms: weights.q,
+            w_frac: weights.qfmt.frac,
+            w_max,
+            l1_max,
+        },
+        q_data.frac,
+        SatRole::Tolerated,
+        &[spectrum],
+    );
+    fft.declare_inverse(g, q_data.frac, acc)
+}
 
 /// Dimensions a conv scratch is sized from — implemented by both the
 /// single-matrix and the row-stacked plans, so [`FxConvScratch::for_plan`]
@@ -128,6 +181,8 @@ fn mac_rows_into(
                 acc[b] = acc[b].add_sat(prod);
             }
         }
+        #[cfg(feature = "fft-stats")]
+        crate::fft::fxp::DatapathStats::update(&fft.stats.acc_peak, &acc[..=half]);
         // One inverse FFT per block-row (Eq 6 decoupling), upper bins
         // mirrored from the packed accumulator.
         time[..=half].copy_from_slice(&acc[..=half]);
@@ -135,6 +190,8 @@ fn mac_rows_into(
             time[b] = acc[k - b].conj();
         }
         fft.inverse(time);
+        #[cfg(feature = "fft-stats")]
+        crate::fft::fxp::DatapathStats::update(&fft.stats.time_peak, time);
         let row = &mut out[(row_off + i) * k..(row_off + i + 1) * k];
         for (o, t) in row.iter_mut().zip(time.iter()) {
             *o = t.re;
@@ -253,6 +310,23 @@ impl FxConvPlan {
     pub fn matvec_f32(&self, x: &[f32]) -> Vec<f32> {
         let xq = self.q_data.quantize_slice(x);
         self.q_data.dequantize_slice(&self.matvec(&xq))
+    }
+}
+
+impl DeclareOps for FxConvPlan {
+    /// Declares the exact `matvec_into` chain: forward butterflies over
+    /// the operand (`inputs[0]`), one spectral MAC site class with this
+    /// matrix's measured envelope, inverse butterflies. One output edge —
+    /// the time-domain result rows.
+    fn declare_ops(&self, g: &mut GraphBuilder, inputs: &[NodeId]) -> Vec<NodeId> {
+        let spectrum = self.fft.declare_forward(g, self.q_data.frac, inputs[0]);
+        vec![declare_mac_rows(
+            g,
+            &self.weights,
+            &self.fft,
+            self.q_data,
+            spectrum,
+        )]
     }
 }
 
@@ -401,6 +475,25 @@ impl FxStackedConvPlan {
     }
 }
 
+impl DeclareOps for FxStackedConvPlan {
+    /// Declares the fused stage-1 shape faithfully: **one** shared forward
+    /// chain over the operand (`inputs[0]`), then per-gate MAC + inverse
+    /// chains under `gate_i/f/g/o` scopes, each with that gate's own
+    /// measured spectral envelope and Q-format (the PR-5 per-gate formats
+    /// check E3 guards). Four output edges in `i, f, g, o` order.
+    fn declare_ops(&self, g: &mut GraphBuilder, inputs: &[NodeId]) -> Vec<NodeId> {
+        let spectrum = self.fft.declare_forward(g, self.q_data.frac, inputs[0]);
+        const GATE: [&str; 4] = ["gate_i", "gate_f", "gate_g", "gate_o"];
+        (0..4)
+            .map(|gi| {
+                g.scoped(GATE[gi], |g| {
+                    declare_mac_rows(g, &self.gates[gi], &self.fft, self.q_data, spectrum)
+                })
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,7 +563,7 @@ mod tests {
     fn deterministic() {
         let mut rng = Xoshiro256::seed_from_u64(32);
         let (_, plan) = make_plan(16, 16, 8, &mut rng);
-        let x: Vec<i16> = (0..16).map(|i| (i as i16) * 100).collect();
+        let x: Vec<i16> = (0i16..16).map(|i| i * 100).collect();
         assert_eq!(plan.matvec(&x), plan.matvec(&x));
     }
 
@@ -501,14 +594,16 @@ mod tests {
         }
     }
 
-    #[cfg(debug_assertions)]
+    #[cfg(feature = "fft-stats")]
     #[test]
     fn stacked_plan_transforms_each_input_block_exactly_once() {
         let mut rng = Xoshiro256::seed_from_u64(78);
         let (p, q, k) = (2usize, 3usize, 8usize);
         let stacked =
             FxStackedConvPlan::new(make_gates(p, q, k, &mut rng), QD, Rounding::Nearest).unwrap();
-        let x: Vec<i16> = (0..q * k).map(|i| (i as i16) * 321).collect();
+        let x: Vec<i16> = (0..q * k)
+            .map(|i| i16::try_from(i).unwrap() * 321)
+            .collect();
         let mut out = vec![0i16; stacked.out_len()];
         let mut scratch = FxConvScratch::for_plan(&stacked);
         let before = stacked.fft.forward_calls();
@@ -609,6 +704,48 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn stacked_declaration_shares_one_forward_chain_across_gates() {
+        use crate::analysis::ir::OpKind as K;
+        let mut rng = Xoshiro256::seed_from_u64(81);
+        let (p, q, k) = (2usize, 3usize, 8usize);
+        let stacked =
+            FxStackedConvPlan::new(make_gates(p, q, k, &mut rng), QD, Rounding::Nearest).unwrap();
+        let mut g = crate::analysis::ir::GraphBuilder::new();
+        let src = g.source("x", QD, 1.0);
+        let outs = stacked.declare_ops(&mut g, &[src]);
+        assert_eq!(outs.len(), 4, "one output edge per gate");
+        let graph = g.finish();
+        let fwd = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, K::FftStage { inverse: false, .. }))
+            .count();
+        let inv = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, K::FftStage { inverse: true, .. }))
+            .count();
+        let macs: Vec<_> = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, K::SpectralMac { .. }))
+            .collect();
+        assert_eq!(fwd, 3, "log2(8) forward stages, declared once for all gates");
+        assert_eq!(inv, 4 * 3, "per-gate inverse chains");
+        assert_eq!(macs.len(), 4);
+        assert!(macs.iter().any(|n| n.site.contains("gate_g/mac")), "gate scopes");
+        // Per-gate envelopes differ (make_gates scales each gate).
+        let l1s: Vec<String> = macs
+            .iter()
+            .map(|n| match n.kind {
+                K::SpectralMac { l1_max, .. } => format!("{l1_max:.6}"),
+                _ => unreachable!(),
+            })
+            .collect();
+        assert!(l1s.iter().any(|v| v != &l1s[0]), "measured envelopes: {l1s:?}");
     }
 
     #[test]

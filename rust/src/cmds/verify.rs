@@ -1,0 +1,95 @@
+//! `clstm verify` — static verification of the fxp serving configuration:
+//! the numeric dataflow pass (Q-format agreement, wrap/clip discipline,
+//! accumulator precision budget, PWL domain coverage) over every declared
+//! `(layer, direction)` segment, plus the scheduler-graph pass (segment
+//! DAG, wake reachability, bounded-channel cycles, admission window) over
+//! the stack topology about to be served. Non-zero exit with a site-named
+//! report on any violation; `prepare` runs the same numeric pass as a
+//! library assert.
+
+use anyhow::{ensure, Result};
+use clstm::coordinator::pipeline::PipelineConfig;
+use clstm::coordinator::topology::StackTopology;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::Rounding;
+use clstm::runtime::fxp::FxpBackend;
+use clstm::util::cli::Cli;
+
+pub fn verify_cmd(cli: &Cli) -> Result<()> {
+    let model = cli.get_str("model");
+    let k = cli.get_usize("k");
+    let spec = match model.as_str() {
+        "tiny" => LstmSpec::tiny(k),
+        "small" => LstmSpec::small(k),
+        "google" => LstmSpec::google(k),
+        other => anyhow::bail!("unknown --model {other:?} (expected: google | small | tiny)"),
+    };
+    let q = cli.get_q_format("q-format").map_err(anyhow::Error::msg)?;
+    let rounding = match cli.get_str("rounding").as_str() {
+        "nearest" => Rounding::Nearest,
+        "truncate" => Rounding::Truncate,
+        other => anyhow::bail!("unknown --rounding {other:?} (expected: nearest | truncate)"),
+    };
+    let input_bound = match cli.get_str("input-bound").as_str() {
+        "format" => None,
+        s => {
+            let b: f64 = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--input-bound {s:?}: {e}"))?;
+            ensure!(b > 0.0, "--input-bound must be positive (got {b})");
+            Some(b)
+        }
+    };
+
+    // The verifier analyses *quantized* weights (envelopes are measured,
+    // not assumed), so it needs a concrete bundle; a seeded random bundle
+    // at trained scale stands in for a checkpoint, exactly as `serve` does.
+    let weights = LstmWeights::random(&spec, cli.get_u64("seed"));
+    let backend = FxpBackend { q, rounding };
+    let used_q = backend.resolve_q(&weights);
+    println!(
+        "clstm verify: model {model} (k={k}), data format Q{}.{}{}, rounding {}",
+        15 - used_q.frac,
+        used_q.frac,
+        if q.is_some() { "" } else { " (range-analysis auto)" },
+        match rounding {
+            Rounding::Nearest => "nearest",
+            Rounding::Truncate => "truncate",
+        },
+    );
+
+    // Numeric pass: quantise every segment, declare its operators into the
+    // dataflow IR, interpret worst-case value/error facts.
+    let report = backend.verify_report(&weights, input_bound)?;
+    if cli.get_flag("verbose") {
+        for (site, f) in &report.facts {
+            println!("  {site}: |v| ≤ {:.4}, err ≤ {:.4}", f.bound, f.err);
+        }
+        for w in &report.warnings {
+            println!("  may-saturate at `{}`: {}", w.site, w.detail);
+        }
+    }
+    print!("datapath:  {}", report.render());
+
+    // Scheduler pass: the lane graph `StackEngine::build` would spawn.
+    let topo = StackTopology::compile(&spec);
+    let sched_violations = topo.sched_graph(&PipelineConfig::default()).check();
+    for v in &sched_violations {
+        println!("violation: {v}");
+    }
+    println!(
+        "scheduler: {} ({} violation(s))",
+        topo.describe(),
+        sched_violations.len()
+    );
+
+    ensure!(
+        report.ok() && sched_violations.is_empty(),
+        "verification failed: {} datapath / {} scheduler violation(s)",
+        report.violations.len(),
+        sched_violations.len()
+    );
+    println!("verified: datapath and scheduling graph are clean");
+    Ok(())
+}

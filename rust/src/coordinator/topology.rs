@@ -60,6 +60,7 @@
 //! tracked across all replicas and surfaces through
 //! [`StackEngine::segment_stats`] → [`Metrics`](crate::coordinator::metrics).
 
+use crate::analysis::{SchedGraph, SchedNodeKind};
 use crate::coordinator::batcher::QueuedUtterance;
 use crate::coordinator::engine::{CompletedUtterance, EngineConfig, Ticket};
 use crate::coordinator::metrics::{SegmentOccupancy, StageTime};
@@ -130,6 +131,50 @@ impl StackTopology {
     /// both concatenated — exactly the `StackF32::run` frame width.
     pub fn final_out_dim(&self) -> usize {
         self.spec.out_dim() * self.spec.directions()
+    }
+
+    /// Build the static scheduling graph of one topology instance, exactly
+    /// as [`StackEngine::build`] is about to spawn it: one scheduler node
+    /// (the `stack_worker` loop), per segment a 3-stage pipeline over
+    /// bounded `channel_depth` hops with a bounded done hop into the
+    /// harvest drain and the **unbounded** wake-token edge back into the
+    /// scheduler, plus the layer-level segment dependency DAG (every
+    /// direction of layer `l` feeds every direction of layer `l+1` through
+    /// the concat join). `StackEngine::build` checks this graph before any
+    /// thread starts; `clstm verify` renders it alongside the numeric pass.
+    pub fn sched_graph(&self, cfg: &PipelineConfig) -> SchedGraph {
+        let depth = cfg.channel_depth.max(1);
+        // The recycled FrameMsg ring is allocated at window size, so the
+        // admission window exactly matches the buffers that can come back.
+        let mut g = SchedGraph::new(cfg.window(), cfg.window());
+        let sched = g.add_node("sched", SchedNodeKind::Scheduler);
+        let mut seg_nodes = Vec::with_capacity(self.segments.len());
+        for seg in &self.segments {
+            let id = seg.id.to_string();
+            let s1 = g.add_node(&format!("{id}/s1"), SchedNodeKind::Stage { last: false });
+            let s2 = g.add_node(&format!("{id}/s2"), SchedNodeKind::Stage { last: false });
+            let s3 = g.add_node(&format!("{id}/s3"), SchedNodeKind::Stage { last: true });
+            // The bounded done channel never blocks the lane for good: the
+            // scheduler drains it unconditionally every scheduling round
+            // (modelled as a drain node); what wakes those rounds is the
+            // unbounded wake-token edge, which S2 insists stays unbounded
+            // and reachable from the last stage.
+            let drain = g.add_node(&format!("{id}/harvest"), SchedNodeKind::Drain);
+            g.add_channel(&format!("{id}/to_s1"), sched, s1, Some(depth));
+            g.add_channel(&format!("{id}/s1_s2"), s1, s2, Some(depth));
+            g.add_channel(&format!("{id}/s2_s3"), s2, s3, Some(depth));
+            g.add_channel(&format!("{id}/done"), s3, drain, Some(depth));
+            g.add_channel(&format!("{id}/wake"), s3, sched, None);
+            seg_nodes.push(g.add_segment(&id));
+        }
+        for (i, seg) in self.segments.iter().enumerate() {
+            for (j, up) in self.segments.iter().enumerate() {
+                if up.id.layer + 1 == seg.id.layer {
+                    g.add_seg_dep(seg_nodes[j], seg_nodes[i]);
+                }
+            }
+        }
+        g
     }
 
     /// One-line ASCII rendering of the DAG (serve logs, docs).
@@ -253,6 +298,25 @@ impl StackEngine {
             weights.spec.directions()
         );
         let prepared = backend.prepare(weights)?;
+        // Static scheduler verification (the `clstm verify` scheduling
+        // pass): prove the lane graph about to be spawned is deadlock-free
+        // — segment DAG acyclic, wake path unbounded and reachable, no
+        // bounded-channel cycle, window within the recycle ring — before
+        // any thread starts.
+        let sched_violations = topo
+            .sched_graph(&PipelineConfig {
+                channel_depth: cfg.channel_depth,
+            })
+            .check();
+        ensure!(
+            sched_violations.is_empty(),
+            "stack scheduling graph failed static verification: {}",
+            sched_violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("; ")
+        );
         let in_pad = prepared.spec.pad(prepared.spec.layer_input_dim(0));
         let seg_stats: Arc<Vec<SegStat>> =
             Arc::new((0..topo.len()).map(|_| SegStat::new()).collect());
@@ -923,5 +987,32 @@ mod tests {
         let topo = StackTopology::compile(&spec);
         assert_eq!(topo.len(), 1);
         assert_eq!(topo.final_out_dim(), spec.out_dim());
+    }
+
+    #[test]
+    fn served_scheduling_graphs_verify_deadlock_free() {
+        // Every shipped topology shape, at the default depth and depth 1:
+        // the graph StackEngine spawns must pass the static checks.
+        for spec in [LstmSpec::tiny(4), LstmSpec::google(8), LstmSpec::small(8)] {
+            for depth in [1usize, 2] {
+                let topo = StackTopology::compile(&spec);
+                let v = topo
+                    .sched_graph(&PipelineConfig {
+                        channel_depth: depth,
+                    })
+                    .check();
+                assert!(v.is_empty(), "{spec:?} depth {depth}: {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sched_graph_mirrors_the_segment_dependency_dag() {
+        // Bidirectional 2-layer stack: both l1 directions depend on both l0
+        // directions (4 dependency edges through the concat join), and the
+        // graph still checks clean.
+        let topo = StackTopology::compile(&LstmSpec::small(8));
+        let g = topo.sched_graph(&PipelineConfig::default());
+        assert!(g.check().is_empty());
     }
 }

@@ -130,9 +130,11 @@ impl SynthTimit {
     /// Generate utterance number `idx` of split `split_seed` (deterministic
     /// per (idx, split)).
     pub fn utterance(&self, split_seed: u64, idx: u64) -> Utterance {
-        let mut rng = Xoshiro256::seed_from_u64(
-            self.cfg.seed ^ split_seed.wrapping_mul(0x9E37_79B9).wrapping_add(idx),
-        );
+        // Seed hashing mixes mod 2^64 on purpose — exempt from the
+        // crate-wide wrapping-op ban.
+        #[allow(clippy::disallowed_methods)]
+        let seed = self.cfg.seed ^ split_seed.wrapping_mul(0x9E37_79B9).wrapping_add(idx);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
         let n_frames = (self.cfg.mean_frames as f64 * rng.uniform(0.6, 1.4)) as usize;
         let n_frames = n_frames.max(8);
         let d = self.cfg.base_dim;

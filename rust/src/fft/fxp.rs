@@ -16,9 +16,43 @@
 //! [`ShiftPolicy`] selects among these; `quant/` and the ablation bench
 //! measure the resulting accuracy differences, reproducing the §4.2 claims.
 
+use crate::analysis::ir::{GraphBuilder, NodeId, OpKind, SatRole};
 use crate::num::cplx::CplxFx;
 use crate::num::fxp::{Q, Rounding};
 use crate::num::Cplx;
+
+/// Opt-in datapath instrumentation (`fft-stats` cargo feature): transform
+/// counts plus running per-component peak magnitudes at the instrumented
+/// narrowing sites. The analyzer-validation property tests serve random
+/// utterances and assert these observed peaks stay below the static
+/// worst-case bounds of [`crate::analysis`]; the fused stage-1 operator
+/// asserts its "one forward FFT per input block per frame" contract
+/// against `forward_calls`.
+#[cfg(feature = "fft-stats")]
+#[derive(Debug, Default)]
+pub struct DatapathStats {
+    /// Forward transforms run by this plan.
+    pub forward_calls: std::sync::atomic::AtomicU64,
+    /// Peak |component| (LSBs) at the forward-FFT output.
+    pub forward_peak: std::sync::atomic::AtomicU64,
+    /// Peak |component| (LSBs) of the spectral MAC accumulators.
+    pub acc_peak: std::sync::atomic::AtomicU64,
+    /// Peak |component| (LSBs) at the IFFT (time-domain) output.
+    pub time_peak: std::sync::atomic::AtomicU64,
+}
+
+#[cfg(feature = "fft-stats")]
+impl DatapathStats {
+    /// Fold the peak |component| of `data` into `slot`.
+    pub fn update(slot: &std::sync::atomic::AtomicU64, data: &[CplxFx]) {
+        let peak = data
+            .iter()
+            .map(|c| (c.re.unsigned_abs() as u64).max(c.im.unsigned_abs() as u64))
+            .max()
+            .unwrap_or(0);
+        slot.fetch_max(peak, std::sync::atomic::Ordering::Relaxed);
+    }
+}
 
 /// Where the 1/n scaling shifts are placed in the FFT/IFFT pair.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,11 +79,10 @@ pub struct FxFftPlan {
     /// Per-inverse-stage right shifts.
     inv_shifts: Vec<u32>,
     bitrev: Vec<u32>,
-    /// Debug/test-build forward-transform counter: the "one forward FFT per
-    /// input block per frame" contract of the fused stage-1 operator is
-    /// asserted against this (release builds carry no counter).
-    #[cfg(debug_assertions)]
-    forward_calls: std::sync::atomic::AtomicU64,
+    /// Datapath instrumentation (`fft-stats` feature only — default builds
+    /// carry no counters). See [`DatapathStats`].
+    #[cfg(feature = "fft-stats")]
+    pub stats: DatapathStats,
 }
 
 impl Clone for FxFftPlan {
@@ -62,9 +95,9 @@ impl Clone for FxFftPlan {
             fwd_shifts: self.fwd_shifts.clone(),
             inv_shifts: self.inv_shifts.clone(),
             bitrev: self.bitrev.clone(),
-            // A clone is a fresh plan: its transform count starts at zero.
-            #[cfg(debug_assertions)]
-            forward_calls: std::sync::atomic::AtomicU64::new(0),
+            // A clone is a fresh plan: its counters start at zero.
+            #[cfg(feature = "fft-stats")]
+            stats: DatapathStats::default(),
         }
     }
 }
@@ -116,8 +149,8 @@ impl FxFftPlan {
             fwd_shifts,
             inv_shifts,
             bitrev,
-            #[cfg(debug_assertions)]
-            forward_calls: std::sync::atomic::AtomicU64::new(0),
+            #[cfg(feature = "fft-stats")]
+            stats: DatapathStats::default(),
         }
     }
 
@@ -126,18 +159,24 @@ impl FxFftPlan {
     /// intentionally, to model the hardware).
     pub fn forward(&self, data: &mut [CplxFx]) {
         assert_eq!(data.len(), self.n);
-        #[cfg(debug_assertions)]
-        self.forward_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        #[cfg(feature = "fft-stats")]
+        self.stats
+            .forward_calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.permute(data);
         self.stages(data, &self.fwd_shifts);
+        #[cfg(feature = "fft-stats")]
+        DatapathStats::update(&self.stats.forward_peak, data);
     }
 
-    /// Forward transforms this plan has run (debug/test builds only) —
+    /// Forward transforms this plan has run (`fft-stats` feature only) —
     /// the counter behind the stage-1 "exactly one forward FFT per input
     /// block per frame" assertion.
-    #[cfg(debug_assertions)]
+    #[cfg(feature = "fft-stats")]
     pub fn forward_calls(&self) -> u64 {
-        self.forward_calls.load(std::sync::atomic::Ordering::Relaxed)
+        self.stats
+            .forward_calls
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Plan-level forward-FFT-once entry point: load each `n`-sized block
@@ -220,6 +259,55 @@ impl FxFftPlan {
                 data.swap(i, j);
             }
         }
+    }
+
+    /// Declare the forward butterfly chain into the analysis IR: one
+    /// [`OpKind::FftStage`] site class per stage with its policy shift. A
+    /// shifted stage is declared [`SatRole::MustFit`] — the ≥1-bit stage
+    /// shift is exactly what makes the narrow provably clip-free, and the
+    /// verifier holds us to it. An unshifted forward stage (the
+    /// `IdftAtEnd`/`IdftDistributed` policies) saturates by documented
+    /// design and is declared [`SatRole::Tolerated`].
+    pub fn declare_forward(&self, g: &mut GraphBuilder, frac: u32, input: NodeId) -> NodeId {
+        self.declare_stages(g, frac, input, &self.fwd_shifts, false)
+    }
+
+    /// Declare the inverse butterfly chain into the analysis IR. Inverse
+    /// stages accumulate post-MAC magnitudes that may legitimately clip
+    /// (the saturating §4.2 behaviour), so they are always `Tolerated`.
+    pub fn declare_inverse(&self, g: &mut GraphBuilder, frac: u32, input: NodeId) -> NodeId {
+        self.declare_stages(g, frac, input, &self.inv_shifts, true)
+    }
+
+    fn declare_stages(
+        &self,
+        g: &mut GraphBuilder,
+        frac: u32,
+        input: NodeId,
+        shifts: &[u32],
+        inverse: bool,
+    ) -> NodeId {
+        let dir = if inverse { "inv" } else { "fwd" };
+        let mut n = input;
+        for (i, &shift) in shifts.iter().enumerate() {
+            let role = if !inverse && shift > 0 {
+                SatRole::MustFit
+            } else {
+                SatRole::Tolerated
+            };
+            n = g.node(
+                &format!("{dir}/stage{i}"),
+                OpKind::FftStage {
+                    shift,
+                    twiddle_frac: TWIDDLE_Q.frac,
+                    inverse,
+                },
+                frac,
+                role,
+                &[n],
+            );
+        }
+        n
     }
 
     /// Convenience: quantise a real f64 slice into the plan's data format,
@@ -366,10 +454,10 @@ mod tests {
             .map(|_| QD.from_f64(rng.uniform(-1.0, 1.0)))
             .collect();
         let mut spectra = vec![CplxFx::ZERO; n * blocks];
-        #[cfg(debug_assertions)]
+        #[cfg(feature = "fft-stats")]
         let before = plan.forward_calls();
         plan.forward_real_blocks(&x, &mut spectra);
-        #[cfg(debug_assertions)]
+        #[cfg(feature = "fft-stats")]
         assert_eq!(
             plan.forward_calls() - before,
             blocks as u64,
@@ -385,7 +473,7 @@ mod tests {
         }
     }
 
-    #[cfg(debug_assertions)]
+    #[cfg(feature = "fft-stats")]
     #[test]
     fn clone_resets_the_forward_counter() {
         let plan = FxFftPlan::new(4, ShiftPolicy::DftDistributed, Rounding::Nearest);
@@ -393,6 +481,31 @@ mod tests {
         plan.forward(&mut d);
         assert_eq!(plan.forward_calls(), 1);
         assert_eq!(plan.clone().forward_calls(), 0);
+    }
+
+    #[test]
+    fn declared_forward_chain_mirrors_the_shift_policy() {
+        use crate::analysis::ir::{GraphBuilder, OpKind, SatRole};
+        let plan = FxFftPlan::new(16, ShiftPolicy::DftDistributed, Rounding::Nearest);
+        let mut g = GraphBuilder::new();
+        let src = g.source("x", QD, 1.0);
+        plan.declare_forward(&mut g, QD.frac, src);
+        let graph = g.finish();
+        let stages: Vec<_> = graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::FftStage { .. }))
+            .collect();
+        assert_eq!(stages.len(), 4, "log2(16) stage site classes");
+        for s in &stages {
+            assert_eq!(s.role, SatRole::MustFit, "{}", s.site);
+            match s.kind {
+                OpKind::FftStage { shift, twiddle_frac, inverse } => {
+                    assert_eq!((shift, twiddle_frac, inverse), (1, 14, false));
+                }
+                _ => unreachable!(),
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! system inventory, the `default`/`pjrt` feature matrix, and the build +
 //! `make artifacts` instructions.
 
+pub mod analysis;
 pub mod circulant;
 pub mod coordinator;
 pub mod data;

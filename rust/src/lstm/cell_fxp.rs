@@ -8,9 +8,10 @@
 //! narrowing. The only f32 touchpoints are the quantise/dequantise
 //! boundaries.
 
-use super::activations::PwlTable;
+use super::activations::{PwlTable, SLOPE_Q};
 use super::config::LstmSpec;
 use super::weights::{LayerWeights, GATE_F, GATE_G, GATE_I, GATE_O};
+use crate::analysis::ir::{DeclareOps, GraphBuilder, NodeId, OpKind, SatRole};
 use crate::circulant::fxp_conv::{FxConvPlan, FxConvScratch};
 use std::cell::RefCell;
 use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
@@ -79,6 +80,122 @@ impl FxElementwise<'_> {
             m[n] = q.mul(o, self.pwl_tanh.eval_fx(cn, r), r);
             c[n] = cn;
         }
+    }
+}
+
+/// Declare one PWL lookup site class with the table's *measured* slope and
+/// output envelopes.
+fn declare_pwl(
+    g: &mut GraphBuilder,
+    site: &str,
+    table: &PwlTable,
+    frac: u32,
+    budgeted: bool,
+    input: NodeId,
+) -> NodeId {
+    let slope_bound = table
+        .slope
+        .iter()
+        .fold(0f64, |m, &s| m.max(s.abs() as f64));
+    let out_bound = table.y_left.abs().max(table.y_right.abs()) as f64;
+    g.node(
+        site,
+        OpKind::Pwl {
+            domain: table.x_max as f64,
+            slope_frac: SLOPE_Q.frac,
+            slope_bound,
+            out_bound,
+            budgeted,
+        },
+        frac,
+        SatRole::Clamp,
+        &[input],
+    )
+}
+
+impl DeclareOps for FxElementwise<'_> {
+    /// Declares one `step` iteration (Eq 1a–1f). Inputs: the four gate
+    /// conv outputs `[a_i, a_f, a_g, a_o]` plus the stored cell state
+    /// `c_prev`; outputs `[m, c]`.
+    ///
+    /// Error-reset convention: every *stored-state read* is a fresh
+    /// [`OpKind::Source`] carrying only quantisation error — the verifier
+    /// bounds the error injected per pass, while recurrent compounding
+    /// across frames is the dynamic PER regression's contract. This is
+    /// also why the output-gate peephole (which runs on the just-computed
+    /// `c_t`) reads a fresh rail-bounded `c_store` source, and why only the
+    /// gate pre-activation lookups are E4-`budgeted`.
+    fn declare_ops(&self, g: &mut GraphBuilder, inputs: &[NodeId]) -> Vec<NodeId> {
+        let q = self.q;
+        let frac = q.frac;
+        let (a_i, a_f, a_g, a_o, c_prev) =
+            (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+        // Measured max-abs of a quantised vector, in real units.
+        let vmax = |v: &[i16]| {
+            v.iter().map(|&x| u32::from(x.unsigned_abs())).max().unwrap_or(0) as f64 * q.eps()
+        };
+
+        let bias = |g: &mut GraphBuilder, gate: usize, name: &str| {
+            g.source(&format!("bias_{name}"), q, vmax(&self.bias[gate]))
+        };
+        // Peephole term w ⊙ c (`Q.mul`): a data-format product.
+        let peep = |g: &mut GraphBuilder, idx: usize, name: &str, c: NodeId| {
+            self.peephole.map(|p| {
+                let w = g.source(&format!("peep_{name}"), q, vmax(&p[idx]));
+                g.node(
+                    &format!("peep_{name}_mul"),
+                    OpKind::MulData,
+                    frac,
+                    SatRole::Tolerated,
+                    &[w, c],
+                )
+            })
+        };
+        let preact = |g: &mut GraphBuilder,
+                      name: &str,
+                      a: NodeId,
+                      peep_term: Option<NodeId>,
+                      b: NodeId| {
+            let mut ins = vec![a];
+            ins.extend(peep_term);
+            ins.push(b);
+            g.node(&format!("z_{name}"), OpKind::AddSat, frac, SatRole::Tolerated, &ins)
+        };
+
+        let b_i = bias(g, GATE_I, "i");
+        let p_i = peep(g, 0, "i", c_prev);
+        let zi = preact(g, "i", a_i, p_i, b_i);
+        let i_gate = declare_pwl(g, "sigmoid_i", self.pwl_sigmoid, frac, true, zi);
+
+        let b_f = bias(g, GATE_F, "f");
+        let p_f = peep(g, 1, "f", c_prev);
+        let zf = preact(g, "f", a_f, p_f, b_f);
+        let f_gate = declare_pwl(g, "sigmoid_f", self.pwl_sigmoid, frac, true, zf);
+
+        let b_g = bias(g, GATE_G, "g");
+        let zg = preact(g, "g", a_g, None, b_g);
+        let g_gate = declare_pwl(g, "tanh_g", self.pwl_tanh, frac, true, zg);
+
+        // Eq 1d: c = f⊙c_prev + g⊙i.
+        let fc = g.node("f_x_c", OpKind::MulData, frac, SatRole::Tolerated, &[f_gate, c_prev]);
+        let gi = g.node("g_x_i", OpKind::MulData, frac, SatRole::Tolerated, &[g_gate, i_gate]);
+        let c = g.node("c", OpKind::AddSat, frac, SatRole::Tolerated, &[fc, gi]);
+
+        let b_o = bias(g, GATE_O, "o");
+        let p_o = if self.peephole.is_some() {
+            let c_store = g.source("c_store", q, q.max_val());
+            peep(g, 2, "o", c_store)
+        } else {
+            None
+        };
+        let zo = preact(g, "o", a_o, p_o, b_o);
+        let o_gate = declare_pwl(g, "sigmoid_o", self.pwl_sigmoid, frac, true, zo);
+
+        // Eq 1f: m = o ⊙ tanh(c). `tanh_c`'s input error is state-coupled,
+        // hence un-budgeted (see above).
+        let tanh_c = declare_pwl(g, "tanh_c", self.pwl_tanh, frac, false, c);
+        let m = g.node("m", OpKind::MulData, frac, SatRole::Tolerated, &[o_gate, tanh_c]);
+        vec![m, c]
     }
 }
 
@@ -307,7 +424,9 @@ mod tests {
     #[test]
     fn deterministic_and_pure_fixed_point() {
         let (spec, _f, xcell) = pair(8, 3);
-        let x: Vec<i16> = (0..spec.input_dim).map(|i| (i as i16 % 7) * 400).collect();
+        let x: Vec<i16> = (0..spec.input_dim)
+            .map(|i| i16::try_from(i % 7).unwrap() * 400)
+            .collect();
         let mut s1 = xcell.zero_state();
         let mut s2 = xcell.zero_state();
         let y1 = xcell.step(&x, &mut s1);

@@ -20,6 +20,10 @@
 //!                         #    the float-vs-fixed PER comparison, and takes
 //!                         #    --rounding nearest|truncate)
 //! clstm quantize          # range analysis + fxp-vs-float accuracy report
+//! clstm verify            # static fxp datapath + scheduler verification
+//!                         #   (--model, --q-format, --rounding,
+//!                         #    --input-bound; non-zero exit + site-named
+//!                         #    report on any violation)
 //! ```
 
 use clstm::util::cli::Cli;
@@ -29,6 +33,7 @@ mod cmds {
     pub mod quantize;
     pub mod serve;
     pub mod tables;
+    pub mod verify;
 }
 
 fn main() {
@@ -54,6 +59,11 @@ fn main() {
         "rounding",
         "nearest",
         "fxp narrowing policy: nearest | truncate (§4.2 shift-policy ablation)",
+    )
+    .opt(
+        "input-bound",
+        "format",
+        "verify: worst-case |input feature|, real units: format (the Q rail) | <float>",
     )
     .opt("utts", "24", "utterances to serve (sized so the PER comparison is meaningful)")
     .opt("streams", "4", "interleaved streams per pipeline lane")
@@ -84,9 +94,10 @@ fn main() {
         "simulate" => cmds::tables::simulate_cmd(&cli),
         "serve" => cmds::serve::serve_cmd(&cli),
         "quantize" => cmds::quantize::quantize_cmd(&cli),
+        "verify" => cmds::verify::verify_cmd(&cli),
         _ => {
             eprintln!(
-                "usage: clstm <table1|table3|fig3|fig4|fig5|fig6|schedule|dse|codegen|simulate|serve|quantize> [options]\n\
+                "usage: clstm <table1|table3|fig3|fig4|fig5|fig6|schedule|dse|codegen|simulate|serve|quantize|verify> [options]\n\
                  run `clstm --help` for options"
             );
             Ok(())

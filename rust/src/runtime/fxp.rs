@@ -54,6 +54,8 @@
 //! [`FxpPrepared::layer_q`] for diagnostics and the per-*matrix* spectral
 //! formats are still chosen independently by `quantize_auto`.
 
+use crate::analysis::ir::{DeclareOps, GraphBuilder};
+use crate::analysis::{verify_graph, VerifyReport};
 use crate::circulant::fxp_conv::{FxConvPlan, FxConvScratch, FxStackedConvPlan};
 use crate::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
 use crate::lstm::activations::PwlTable;
@@ -156,6 +158,64 @@ impl FxpBackend {
     pub fn resolve_q(&self, weights: &LstmWeights) -> Q {
         self.q.unwrap_or_else(|| Self::recommend_q(weights))
     }
+
+    /// Run the static datapath verification (`clstm verify`'s numeric
+    /// pass) over the segments this backend would prepare from `weights`:
+    /// quantise every `(layer, direction)` segment, have its operators
+    /// declare themselves into the analysis IR, and interpret the graphs.
+    ///
+    /// `input_bound` is the worst-case |input feature| in real units;
+    /// `None` assumes the format rail (quantisation clamps there), which
+    /// is what `prepare` itself asserts against.
+    pub fn verify_report(
+        &self,
+        weights: &LstmWeights,
+        input_bound: Option<f64>,
+    ) -> Result<VerifyReport> {
+        let (_q, _layer_q, segs) = self.prepare_segments(weights)?;
+        Ok(verify_segments(&segs, input_bound))
+    }
+}
+
+/// Build and interpret one dataflow graph per prepared segment.
+///
+/// Per-pass error-reset semantics: each segment's operand and stored cell
+/// state enter as fresh [`Source`](crate::analysis::ir::OpKind::Source)s
+/// carrying only quantisation error, so the verifier bounds the error one
+/// pass through one segment can inject. Cross-frame and cross-layer
+/// compounding is deliberately *not* chained here — that is the dynamic
+/// PER regression's contract (`FXP_PER_DEGRADATION_BUDGET_PTS`), and
+/// chaining worst cases through the recurrence would bound nothing useful.
+/// Cross-segment hand-off is still covered: every segment shares the one
+/// stack-wide data format, which check E3 enforces edge-by-edge inside
+/// each graph.
+fn verify_segments(segs: &[Vec<Arc<FxpSegment>>], input_bound: Option<f64>) -> VerifyReport {
+    let mut rep = VerifyReport::default();
+    for dirs in segs {
+        for s in dirs {
+            let mut g = GraphBuilder::new();
+            g.scoped(&s.seg.to_string(), |g| {
+                let bound = input_bound.unwrap_or_else(|| s.q.max_val());
+                let x = g.source("x", s.q, bound);
+                let mut ins = s.gates.declare_ops(g, &[x]);
+                ins.push(g.source("c_prev", s.q, s.q.max_val()));
+                let mc = FxElementwise {
+                    q: s.q,
+                    rounding: s.rounding,
+                    bias: &s.bias,
+                    peephole: s.peephole.as_ref(),
+                    pwl_sigmoid: &s.pwl_sigmoid,
+                    pwl_tanh: &s.pwl_tanh,
+                }
+                .declare_ops(g, &ins);
+                if let Some(p) = &s.proj {
+                    g.scoped("proj", |g| p.declare_ops(g, &[mc[0]]));
+                }
+            });
+            rep.merge(verify_graph(&g.finish(), s.rounding));
+        }
+    }
+    rep
 }
 
 /// One `(layer, direction)` segment's quantised state, shared read-only by
@@ -273,14 +333,14 @@ impl FxpBackend {
             fused_len: spec.fused_in_dim(layer),
         })
     }
-}
 
-impl Backend for FxpBackend {
-    fn name(&self) -> String {
-        "fxp".to_string()
-    }
-
-    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
+    /// Quantise every `(layer, direction)` segment with the resolved shared
+    /// data format, without assembling the [`PreparedWeights`] — both
+    /// `prepare` and [`FxpBackend::verify_report`] run this.
+    fn prepare_segments(
+        &self,
+        weights: &LstmWeights,
+    ) -> Result<(Q, Vec<Q>, Vec<Vec<Arc<FxpSegment>>>)> {
         ensure!(
             !weights.layers.is_empty() && !weights.layers[0].is_empty(),
             "weights have no layers"
@@ -298,8 +358,29 @@ impl Backend for FxpBackend {
             }
             segs.push(seg_dirs);
         }
+        Ok((q, layer_q, segs))
+    }
+}
+
+impl Backend for FxpBackend {
+    fn name(&self) -> String {
+        "fxp".to_string()
+    }
+
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
+        let (q, layer_q, segs) = self.prepare_segments(weights)?;
+        // Static datapath verification: the same pass `clstm verify` runs.
+        // An unservable (spec, format, rounding) triple — wrap risk,
+        // unproven must-fit narrow, format mismatch, blown precision budget
+        // — is rejected here, before any frame is served.
+        let report = verify_segments(&segs, None);
+        ensure!(
+            report.ok(),
+            "fxp datapath failed static verification (run `clstm verify` for the full report):\n{}",
+            report.render()
+        );
         Ok(Arc::new(PreparedWeights::new(
-            spec.clone(),
+            weights.spec.clone(),
             self.name(),
             Box::new(FxpPrepared { q, layer_q, segs }),
         )))
@@ -700,9 +781,9 @@ mod tests {
 
     /// The tentpole contract: serving stage 1 forward-transforms each input
     /// block of the fused operand exactly once per frame (not once per
-    /// gate). The stacked plan's FFT counter (debug builds) is shared with
-    /// the stage through the prepared segment's `Arc`.
-    #[cfg(debug_assertions)]
+    /// gate). The stacked plan's FFT counter (`fft-stats` builds) is shared
+    /// with the stage through the prepared segment's `Arc`.
+    #[cfg(feature = "fft-stats")]
     #[test]
     fn stage1_runs_one_forward_fft_per_input_block_per_frame() {
         let spec = LstmSpec::tiny(4);
@@ -726,6 +807,38 @@ mod tests {
         );
         stages.stage1.run(&[&fused]).unwrap();
         assert_eq!(seg.gates.fft.forward_calls() - before, 2 * q_blocks);
+    }
+
+    #[test]
+    fn prepare_rejects_a_format_that_breaks_the_precision_budget() {
+        // Q5.10 on a k=16 Google-sized stack blows the E4 gate-lookup
+        // budget (long MAC chains at a coarse grid): prepare must refuse
+        // with a site-named report instead of serving a degraded model.
+        let spec = LstmSpec::google(16);
+        let w = LstmWeights::random(&spec, 5);
+        let err = match FxpBackend::new(Q::new(10)).prepare(&w) {
+            Ok(_) => panic!("Q5.10 google(16) must fail static verification"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("static verification"), "msg: {msg}");
+        assert!(msg.contains("E4"), "must cite the failed check: {msg}");
+        assert!(msg.contains("l0.fwd/"), "must name the site: {msg}");
+    }
+
+    #[test]
+    fn verify_report_passes_the_serving_formats() {
+        // Every (spec, format) pair the bit-identity suites serve must come
+        // back clean — the prepare hook must never reject a working config.
+        let w = LstmWeights::random(&LstmSpec::tiny(4), 3);
+        for q in [None, Some(Q::new(12)), Some(Q::new(10))] {
+            for rounding in [Rounding::Nearest, Rounding::Truncate] {
+                let backend = FxpBackend { q, rounding };
+                let rep = backend.verify_report(&w, None).unwrap();
+                assert!(rep.ok(), "tiny(4) {q:?} {rounding:?}:\n{}", rep.render());
+                assert!(!rep.facts.is_empty(), "report must carry facts");
+            }
+        }
     }
 
     #[test]

@@ -218,6 +218,9 @@ mod tests {
     fn measures_something_plausible() {
         std::env::set_var("CLSTM_BENCH_FAST", "1");
         let mut b = Bench::new("selftest").measure_time(Duration::from_millis(50));
+        // Benchmark payload summing in mod-2^64 — exempt from the
+        // crate-wide wrapping-op ban.
+        #[allow(clippy::disallowed_methods)]
         let s = b
             .bench("sum1k", || (0..1000u64).fold(0u64, |a, x| a.wrapping_add(x)))
             .clone();

@@ -26,6 +26,9 @@ impl SplitMix64 {
     }
 
     /// Next 64 uniformly distributed bits.
+    // Wrapping mod-2^64 arithmetic is the SplitMix64 algorithm itself, not
+    // an overflow hazard — exempt from the crate-wide wrapping-op ban.
+    #[allow(clippy::disallowed_methods)]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -55,6 +58,9 @@ impl Xoshiro256 {
     }
 
     /// Next 64 uniformly distributed bits.
+    // The xoshiro256** scrambler is defined over mod-2^64 arithmetic —
+    // exempt from the crate-wide wrapping-op ban.
+    #[allow(clippy::disallowed_methods)]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

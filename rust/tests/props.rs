@@ -184,7 +184,7 @@ fn fxp_conv_plan_is_deterministic_across_shapes() {
         let m = BlockCirculant::random_init(2 * k, 3 * k, k, &mut rng);
         let spec = SpectralWeights::precompute(&m);
         let plan = FxConvPlan::new(SpectralWeightsFx::quantize_auto(&spec), QD, Rounding::Nearest);
-        let x: Vec<i16> = (0..3 * k).map(|i| (i as i16).wrapping_mul(211)).collect();
+        let x: Vec<i16> = (0..3 * k).map(|i| i16::try_from(i).unwrap() * 211).collect();
         assert_eq!(plan.matvec(&x), plan.matvec(&x), "k={k}");
     }
 }
@@ -405,8 +405,12 @@ fn fx_conv_scratch_reuse_is_state_free() {
         let spec = SpectralWeights::precompute(&m);
         let plan = FxConvPlan::new(SpectralWeightsFx::quantize_auto(&spec), QD, Rounding::Nearest);
         let mut scratch = FxConvScratch::for_plan(&plan);
-        let frame_a: Vec<i16> = (0..q * k).map(|i| (i as i16).wrapping_mul(997)).collect();
-        let frame_b: Vec<i16> = (0..q * k).map(|i| (i as i16).wrapping_mul(-403)).collect();
+        let frame_a: Vec<i16> = (0..q * k)
+            .map(|i| i16::try_from(i * 997 % 30011).unwrap() - 15005)
+            .collect();
+        let frame_b: Vec<i16> = (0..q * k)
+            .map(|i| 14891 - i16::try_from(i * 403 % 29989).unwrap())
+            .collect();
         let mut out1 = vec![0i16; p * k];
         let mut dirty = vec![0i16; p * k];
         let mut out2 = vec![0i16; p * k];

@@ -1,0 +1,252 @@
+//! Integration tests for the static fxp verifier (`clstm verify` / the
+//! `prepare`-time hook).
+//!
+//! Three contracts:
+//! - every (spec, format, rounding) combination the bit-identity suites
+//!   actually serve comes back clean — the hook must never reject a
+//!   working configuration;
+//! - a known-bad pair (Google at k=16 on Q5.10 — long MAC chains on a
+//!   coarse grid) is rejected with a site-named E4 error;
+//! - (`fft-stats` builds) the static worst-case raw bounds dominate the
+//!   instrumented runtime maxima over random full-range frames, across
+//!   block sizes, formats, and roundings.
+
+use clstm::analysis::CheckKind;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::runtime::fxp::FxpBackend;
+
+const ROUNDINGS: [Rounding; 2] = [Rounding::Nearest, Rounding::Truncate];
+
+/// Every topology shape the stack-engine suites serve, at both the formats
+/// they pin (Q3.12 explicit and the auto recommendation), must verify
+/// clean on both roundings.
+#[test]
+fn served_spec_format_combos_verify_clean() {
+    let combos = [
+        (LstmSpec::tiny(4), "tiny(4)"),
+        (
+            LstmSpec {
+                layers: 2,
+                ..LstmSpec::tiny(4)
+            },
+            "two-layer tiny(4)",
+        ),
+        (
+            LstmSpec {
+                bidirectional: true,
+                ..LstmSpec::tiny(4)
+            },
+            "bidirectional tiny(4)",
+        ),
+    ];
+    for (spec, label) in combos {
+        let w = LstmWeights::random(&spec, 7);
+        for q in [None, Some(Q::new(12))] {
+            for rounding in ROUNDINGS {
+                let rep = FxpBackend { q, rounding }.verify_report(&w, None).unwrap();
+                assert!(rep.ok(), "{label} {q:?} {rounding:?}:\n{}", rep.render());
+            }
+        }
+    }
+}
+
+/// The CI serve smokes run google(8) and small(8) at the auto format: the
+/// prepare hook must pass the paper-scale models it serves by default.
+#[test]
+fn paper_scale_models_at_auto_format_verify_clean() {
+    for (spec, label) in [
+        (LstmSpec::google(8), "google(8)"),
+        (LstmSpec::small(8), "small(8)"),
+    ] {
+        let w = LstmWeights::random(&spec, 1234);
+        for rounding in ROUNDINGS {
+            let backend = FxpBackend { q: None, rounding };
+            let rep = backend.verify_report(&w, None).unwrap();
+            assert!(rep.ok(), "{label} auto {rounding:?}:\n{}", rep.render());
+        }
+    }
+}
+
+/// The golden bad pair: k=16 Google on Q5.10. The worst-case gate
+/// pre-activation error blows the E4 budget and the report names the
+/// violating gate-lookup site.
+#[test]
+fn google_k16_on_q5_10_is_rejected_with_a_site_named_error() {
+    let spec = LstmSpec::google(16);
+    let w = LstmWeights::random(&spec, 5);
+    let rep = FxpBackend::new(Q::new(10))
+        .verify_report(&w, None)
+        .unwrap();
+    assert!(!rep.ok(), "Q5.10 google(16) must fail verification");
+    let v = rep
+        .violations
+        .iter()
+        .find(|v| v.kind == CheckKind::PrecisionBudget)
+        .expect("must fail the E4 precision budget");
+    assert!(
+        v.site.starts_with("l0.") || v.site.starts_with("l1."),
+        "site must name the segment: {}",
+        v.site
+    );
+    assert!(
+        v.site.contains("sigmoid") || v.site.contains("tanh"),
+        "site must name the gate lookup: {}",
+        v.site
+    );
+}
+
+/// A tighter caller-supplied input bound must never make verification
+/// worse than the format-rail default.
+#[test]
+fn explicit_input_bound_is_no_worse_than_the_rail() {
+    let w = LstmWeights::random(&LstmSpec::tiny(4), 11);
+    let backend = FxpBackend::new(Q::new(12));
+    let rail = backend.verify_report(&w, None).unwrap();
+    let tight = backend.verify_report(&w, Some(1.0)).unwrap();
+    assert!(rail.ok() && tight.ok());
+    assert!(tight.warnings.len() <= rail.warnings.len());
+}
+
+/// Property: the static per-site raw bounds dominate instrumented runtime
+/// maxima over random full-range frames — the analyzer is sound for the
+/// operators it declares. k ∈ {4, 8, 16} × {Q3.12, Q5.10} × both
+/// roundings, on the single-matrix plan; one fused stacked combo covers
+/// the shared-forward path per gate.
+#[cfg(feature = "fft-stats")]
+mod bounds {
+    use super::*;
+    use clstm::analysis::ir::{DeclareOps, GraphBuilder};
+    use clstm::analysis::{verify_graph, VerifyReport};
+    use clstm::circulant::fxp_conv::{FxConvPlan, FxConvScratch, FxStackedConvPlan};
+    use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+    use clstm::circulant::BlockCirculant;
+    use clstm::util::prng::Xoshiro256;
+    use std::sync::atomic::Ordering;
+
+    fn rand_frame(rng: &mut Xoshiro256, qd: Q, n: usize) -> Vec<i16> {
+        (0..n)
+            .map(|_| qd.from_f64(rng.uniform(-qd.max_val(), qd.max_val())))
+            .collect()
+    }
+
+    /// Observed peak at `slot` must stay within the declared site's raw
+    /// magnitude cap.
+    fn assert_dominated(
+        rep: &VerifyReport,
+        suffix: &str,
+        slot: &std::sync::atomic::AtomicU64,
+        label: &str,
+    ) {
+        let fact = rep
+            .fact(suffix)
+            .unwrap_or_else(|| panic!("{label}: no fact for site suffix {suffix:?}"));
+        let observed = slot.load(Ordering::Relaxed) as f64;
+        let cap = fact.raw_pos.max(fact.raw_neg);
+        assert!(
+            observed <= cap,
+            "{label} {suffix}: observed peak {observed} LSB exceeds static bound {cap:.0}"
+        );
+    }
+
+    #[test]
+    fn static_bounds_dominate_runtime_maxima() {
+        let mut rng = Xoshiro256::seed_from_u64(2024);
+        for &k in &[4usize, 8, 16] {
+            for frac in [12u32, 10] {
+                for rounding in [Rounding::Nearest, Rounding::Truncate] {
+                    let qd = Q::new(frac);
+                    let (p, q) = (2usize, 3usize);
+                    let m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+                    let plan = FxConvPlan::new(
+                        SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m)),
+                        qd,
+                        rounding,
+                    );
+
+                    let mut g = GraphBuilder::new();
+                    let src = g.source("x", qd, qd.max_val());
+                    plan.declare_ops(&mut g, &[src]);
+                    let rep = verify_graph(&g.finish(), rounding);
+
+                    let mut scratch = FxConvScratch::for_plan(&plan);
+                    let mut out = vec![0i16; p * k];
+                    for _ in 0..40 {
+                        let x = rand_frame(&mut rng, qd, q * k);
+                        plan.matvec_into(&x, &mut out, &mut scratch).unwrap();
+                    }
+
+                    let label = format!("k={k} Q{}.{frac} {rounding:?}", 15 - frac);
+                    let last = k.ilog2() - 1;
+                    let s = &plan.fft.stats;
+                    assert_dominated(&rep, &format!("fwd/stage{last}"), &s.forward_peak, &label);
+                    assert_dominated(&rep, "mac", &s.acc_peak, &label);
+                    assert_dominated(&rep, &format!("inv/stage{last}"), &s.time_peak, &label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_static_bounds_dominate_per_gate_runtime_maxima() {
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let (p, q, k) = (2usize, 3usize, 8usize);
+        let qd = Q::new(12);
+        let quantize = |rng: &mut Xoshiro256| {
+            SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(
+                &BlockCirculant::random_init(p * k, q * k, k, rng),
+            ))
+        };
+        let gates = [
+            quantize(&mut rng),
+            quantize(&mut rng),
+            quantize(&mut rng),
+            quantize(&mut rng),
+        ];
+        let plan = FxStackedConvPlan::new(gates, qd, Rounding::Nearest).unwrap();
+
+        let mut g = GraphBuilder::new();
+        let src = g.source("x", qd, qd.max_val());
+        plan.declare_ops(&mut g, &[src]);
+        let rep = verify_graph(&g.finish(), Rounding::Nearest);
+
+        let mut scratch = FxConvScratch::for_plan(&plan);
+        let mut out = vec![0i16; plan.out_len()];
+        for _ in 0..40 {
+            let x = rand_frame(&mut rng, qd, q * k);
+            plan.matvec_into(&x, &mut out, &mut scratch).unwrap();
+        }
+
+        let last = k.ilog2() - 1;
+        let s = &plan.fft.stats;
+        assert_dominated(&rep, &format!("fwd/stage{last}"), &s.forward_peak, "stacked");
+        // The shared acc/time slots fold peaks across all four gates, so
+        // compare them against the widest per-gate static cap.
+        let cap_across_gates = |mk: &dyn Fn(&str) -> String| {
+            ["gate_i", "gate_f", "gate_g", "gate_o"]
+                .iter()
+                .map(|gate| {
+                    let f = rep
+                        .fact(&mk(gate))
+                        .unwrap_or_else(|| panic!("missing fact for {}", mk(gate)));
+                    f.raw_pos.max(f.raw_neg)
+                })
+                .fold(0.0f64, f64::max)
+        };
+        for (slot, mk) in [
+            (
+                &s.acc_peak,
+                &(|gate: &str| format!("{gate}/mac")) as &dyn Fn(&str) -> String,
+            ),
+            (&s.time_peak, &|gate: &str| format!("{gate}/inv/stage{last}")),
+        ] {
+            let cap = cap_across_gates(mk);
+            let observed = slot.load(Ordering::Relaxed) as f64;
+            assert!(
+                observed <= cap,
+                "stacked: observed peak {observed} LSB exceeds static bound {cap:.0}"
+            );
+        }
+    }
+}
