@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench bench-fxp-stage1 serve-fxp serve-stack verify-datapath artifacts table1-per
+.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd serve-fxp serve-stack verify-datapath artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -23,6 +23,19 @@ serve-bench:
 bench-fxp-stage1:
 	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_pipeline
 	test -s BENCH_5.json && grep -q "stage1_speedup" BENCH_5.json
+	grep -q '"source": "native:' BENCH_5.json
+
+# Scalar-vs-SIMD spectral kernel split (PR 7): fxp fused stage-1 at
+# k 8/16/64, native float stage-1, and the serve p50/p99 under both kernel
+# selections in one binary — (re)writes BENCH_6.json at the repo root
+# (atomically: temp + rename). On a nightly toolchain add
+# `--features simd` to measure the lane kernels; a stable build records an
+# honest ≈1.0x scalar-fallback split and says so in the json's
+# backend/simd_feature fields.
+bench-simd:
+	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_simd $(SIMD_FEATURES)
+	test -s BENCH_6.json && grep -q '"source": "native:' BENCH_6.json
+	! test -e BENCH_6.json.tmp
 
 # Fixed-point serving smoke test: a few utterances through the 16-bit
 # datapath on 2 lanes; asserts the report prints a nonzero workload PER.

@@ -341,8 +341,10 @@ fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
         ("pr", Json::num(5.0)),
         ("bench", Json::str("fxp fused stage-1 + event-driven stack scheduler")),
         (
+            // "native:" distinguishes a measured run on this host from the
+            // committed python-sim baselines (which stamp "python-sim: ...").
             "source",
-            Json::str("cargo bench --bench bench_pipeline (make bench-fxp-stage1)"),
+            Json::str("native: cargo bench --bench bench_pipeline (make bench-fxp-stage1)"),
         ),
         ("spec", Json::str("proxy256_k8_l1 stage-1 (hidden 256, k 8)")),
         ("stage1_four_plans_fps", Json::num(fps(four.mean_ns))),
@@ -365,6 +367,10 @@ fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
                 ("replicas", Json::num(2.0)),
                 ("utts", Json::num(8.0)),
                 (
+                    "p50_frame_latency_us",
+                    Json::num(serve.metrics.latency_p50_us()),
+                ),
+                (
                     "p99_frame_latency_us",
                     Json::num(serve.metrics.latency_p99_us()),
                 ),
@@ -378,7 +384,7 @@ fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
     } else {
         "BENCH_5.json"
     };
-    match std::fs::write(path, json.to_pretty()) {
+    match clstm::util::json::write_atomic(path, &json.to_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => println!("could not write {path}: {e}"),
     }

@@ -1,0 +1,225 @@
+//! Scalar-vs-SIMD spectral kernel benchmarks (PR-7, `make bench-simd`).
+//!
+//! The same binary runs every measurement twice — once with
+//! `Kernel::Scalar` forced, once with `Kernel::Auto` — so the split is a
+//! kernel-selection delta, not a build or host delta:
+//!
+//! * fxp fused stage-1 (four stacked gate convolutions) at k ∈ {8, 16, 64}
+//!   over a 256-row / 512-input geometry, with the per-span lane-coverage
+//!   counts recorded (at k=8 the packed spectrum is 5 bins — zero full
+//!   8-wide chunks, all tail — so no speedup is expected or claimed there);
+//! * the native float stage-1 (row-stacked Eq 6) on the same k=8 geometry;
+//! * the serve p99/p50 through the stack engine on the fxp backend.
+//!
+//! Results land in `BENCH_6.json` at the repo root (written atomically;
+//! the committed baseline is a python-sim estimate and says so in its
+//! `source` field — this bench replaces it with measured numbers).
+//!
+//! Without `--features simd` both kernel selections run the scalar twins,
+//! so the split reads ≈1.0× — the `source`/`backend` fields record which
+//! build produced the artifact.
+
+use clstm::circulant::conv::{matvec_eq6_into_with, Eq6Scratch};
+use clstm::circulant::fxp_conv::{FxConvScratch, FxStackedConvPlan};
+use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+use clstm::circulant::BlockCirculant;
+use clstm::coordinator::server::{serve_workload, ServeOptions};
+use clstm::fft::rfft::spectrum_len;
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::num::simd::backend_name;
+use clstm::num::Kernel;
+use clstm::runtime::fxp::FxpBackend;
+use clstm::util::bench::Bench;
+use clstm::util::json::{write_atomic, Json};
+use clstm::util::prng::Xoshiro256;
+
+/// 8-wide i32 lanes in the fxp MAC kernel (`num::simd::lanes::FX_LANES`).
+const FX_LANES: usize = 8;
+
+fn main() {
+    let mut b = Bench::new("simd");
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    let qd = Q::new(12);
+
+    println!("kernel backend this build: {}", backend_name());
+
+    // --- fxp fused stage-1 at three block sizes -----------------------
+    // 256 gate rows, 512 fused inputs; k sets the lane shape of the
+    // per-(row,bin) MAC span (bins = k/2 + 1).
+    let mut stage1_cases = Vec::new();
+    for &k in &[8usize, 16, 64] {
+        let (p, q) = (256 / k, 512 / k);
+        let scales = [0.5f32, 1.5, 0.1, 0.8];
+        let gates: [SpectralWeightsFx; 4] = std::array::from_fn(|g| {
+            let mut m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+            for v in m.w.iter_mut() {
+                *v *= scales[g];
+            }
+            SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m))
+        });
+        let x: Vec<i16> = (0..q * k)
+            .map(|_| qd.from_f64(rng.uniform(-1.0, 1.0)))
+            .collect();
+        let label = format!("h256_f512_k{k}");
+        let bins = spectrum_len(k);
+        let mut fps = [0.0f64; 2];
+        for (slot, kernel) in [(0usize, Kernel::Scalar), (1, Kernel::Auto)] {
+            let mut plan = FxStackedConvPlan::new(gates.clone(), qd, Rounding::Nearest)
+                .expect("gate grids match");
+            plan.set_kernel(kernel);
+            let mut scratch = FxConvScratch::for_plan(&plan);
+            let mut out = vec![0i16; plan.out_len()];
+            b.throughput(1);
+            let r = b
+                .bench(&format!("fxp_stage1/{label}/{}", kernel.label()), || {
+                    plan.matvec_into(&x, &mut out, &mut scratch).unwrap()
+                })
+                .clone();
+            fps[slot] = 1e9 / r.mean_ns;
+        }
+        let speedup = fps[1] / fps[0].max(1e-9);
+        println!(
+            "fxp stage-1 {label}: scalar {:.0}/s, auto {:.0}/s ({speedup:.2}x, \
+             MAC span {bins} bins = {} chunks + {} tail lanes)",
+            fps[0],
+            fps[1],
+            bins / FX_LANES,
+            bins % FX_LANES
+        );
+        stage1_cases.push(Json::obj(vec![
+            ("geometry", Json::str(label)),
+            ("k", Json::num(k as f64)),
+            ("scalar_fps", Json::num(fps[0])),
+            ("simd_fps", Json::num(fps[1])),
+            ("speedup", Json::num(speedup)),
+            ("mac_span_bins", Json::num(bins as f64)),
+            ("mac_full_chunks", Json::num((bins / FX_LANES) as f64)),
+            ("mac_tail_lanes", Json::num((bins % FX_LANES) as f64)),
+        ]));
+    }
+
+    // --- native float stage-1 (row-stacked Eq 6), k=8 geometry --------
+    let (p, q, k) = (256usize / 8, 512usize / 8, 8usize);
+    let m = BlockCirculant::random_init(4 * p * k, q * k, k, &mut rng);
+    let native_spec = SpectralWeights::precompute(&m);
+    let xf: Vec<f32> = (0..q * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let mut acc = vec![0.0f32; 4 * p * k];
+    let mut es = Eq6Scratch::default();
+    let mut native_fps = [0.0f64; 2];
+    for (slot, kernel) in [(0usize, Kernel::Scalar), (1, Kernel::Auto)] {
+        let r = b
+            .bench(&format!("native_stage1/h256_f512_k8/{}", kernel.label()), || {
+                matvec_eq6_into_with(&native_spec, &xf, &mut acc, &mut es, kernel)
+            })
+            .clone();
+        native_fps[slot] = 1e9 / r.mean_ns;
+    }
+    println!(
+        "native stage-1 h256_f512_k8: scalar {:.0}/s, auto {:.0}/s ({:.2}x)",
+        native_fps[0],
+        native_fps[1],
+        native_fps[1] / native_fps[0].max(1e-9)
+    );
+
+    // --- serve p99 split (fxp backend, event-driven stack engine) -----
+    let tiny = LstmWeights::random(&LstmSpec::tiny(4), 1234);
+    let opts = ServeOptions {
+        replicas: 2,
+        seed: 1234,
+        ..ServeOptions::default()
+    };
+    let mut serve_split = Vec::new();
+    let mut stage_us = Vec::new();
+    for kernel in [Kernel::Scalar, Kernel::Auto] {
+        let backend = FxpBackend {
+            kernel,
+            ..FxpBackend::default()
+        };
+        let report = serve_workload(&backend, &tiny, 8, &opts).expect("fxp serve");
+        println!(
+            "fxp serve (tiny, 2 instances, {}): p99 {:.0} us; {}",
+            kernel.label(),
+            report.metrics.latency_p99_us(),
+            report.metrics.summary()
+        );
+        if matches!(kernel, Kernel::Auto) {
+            stage_us = report
+                .metrics
+                .stage_times
+                .iter()
+                .map(|st| st.mean_us())
+                .collect();
+        }
+        serve_split.push(Json::obj(vec![
+            (
+                "kernel",
+                Json::str(if matches!(kernel, Kernel::Scalar) {
+                    "scalar"
+                } else {
+                    "auto"
+                }),
+            ),
+            ("backend_ran", Json::str(kernel.label())),
+            (
+                "p50_frame_latency_us",
+                Json::num(report.metrics.latency_p50_us()),
+            ),
+            (
+                "p99_frame_latency_us",
+                Json::num(report.metrics.latency_p99_us()),
+            ),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("pr", Json::num(7.0)),
+        ("bench", Json::str("scalar vs SIMD spectral kernels")),
+        (
+            // "native:" distinguishes a measured run on this host from the
+            // committed python-sim baseline (which stamps "python-sim: ...").
+            "source",
+            Json::str("native: cargo bench --bench bench_simd (make bench-simd)"),
+        ),
+        ("backend", Json::str(backend_name())),
+        (
+            "simd_feature",
+            Json::str(if cfg!(feature = "simd") { "on" } else { "off" }),
+        ),
+        ("stage1", Json::Arr(stage1_cases)),
+        (
+            "native_stage1",
+            Json::obj(vec![
+                ("geometry", Json::str("h256_f512_k8")),
+                ("scalar_fps", Json::num(native_fps[0])),
+                ("simd_fps", Json::num(native_fps[1])),
+                (
+                    "speedup",
+                    Json::num(native_fps[1] / native_fps[0].max(1e-9)),
+                ),
+            ]),
+        ),
+        (
+            "serve",
+            Json::obj(vec![
+                ("backend", Json::str("fxp")),
+                ("model", Json::str("tiny_fft4")),
+                ("replicas", Json::num(2.0)),
+                ("utts", Json::num(8.0)),
+                ("split", Json::Arr(serve_split)),
+                ("stage_mean_us", Json::arr_f64(&stage_us)),
+            ]),
+        ),
+    ]);
+    // Benches run from rust/; the artifact lives at the repo root.
+    let path = if std::path::Path::new("../Makefile").exists() {
+        "../BENCH_6.json"
+    } else {
+        "BENCH_6.json"
+    };
+    match write_atomic(path, &json.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}

@@ -19,6 +19,7 @@
 use super::block::BlockCirculant;
 use super::spectral::SpectralWeights;
 use crate::fft::rfft::{irfft, rfft, spectral_mul_acc, spectrum_len};
+use crate::num::simd::{self, Kernel};
 use crate::num::Cplx;
 
 /// Direct time-domain block-circulant mat-vec (the correctness oracle).
@@ -91,6 +92,18 @@ pub struct Eq6Scratch {
 
 /// Allocation-free Eq 6 (same math as [`matvec_eq6`]; scratch reused).
 pub fn matvec_eq6_into(spec: &SpectralWeights, x: &[f32], out: &mut [f32], s: &mut Eq6Scratch) {
+    matvec_eq6_into_with(spec, x, out, s, Kernel::Auto)
+}
+
+/// [`matvec_eq6_into`] with an explicit kernel selection for the FFT
+/// butterflies and the frequency-domain MAC (scalar-vs-SIMD benches).
+pub fn matvec_eq6_into_with(
+    spec: &SpectralWeights,
+    x: &[f32],
+    out: &mut [f32],
+    s: &mut Eq6Scratch,
+    kernel: Kernel,
+) {
     use crate::fft::radix2::plan;
     let k = spec.k;
     assert_eq!(x.len(), spec.q * k);
@@ -109,11 +122,12 @@ pub fn matvec_eq6_into(spec: &SpectralWeights, x: &[f32], out: &mut [f32], s: &m
         for (dst, &v) in full.iter_mut().zip(&x[j * k..(j + 1) * k]) {
             *dst = Cplx::new(v as f64, 0.0);
         }
-        p.forward(&mut full);
+        p.forward_with(kernel, &mut full);
         s.fx[j * bins..(j + 1) * bins].copy_from_slice(&full[..bins]);
     }
 
     // Stage B: frequency-domain MAC + one inverse transform per block-row.
+    // The Σ_j stays this scalar outer loop; only the per-bin span is laned.
     for i in 0..spec.p {
         for a in s.acc.iter_mut() {
             *a = Cplx::ZERO;
@@ -121,15 +135,13 @@ pub fn matvec_eq6_into(spec: &SpectralWeights, x: &[f32], out: &mut [f32], s: &m
         for j in 0..spec.q {
             let w = spec.block(i, j);
             let xj = &s.fx[j * bins..(j + 1) * bins];
-            for b in 0..bins {
-                s.acc[b] += w[b] * xj[b];
-            }
+            simd::mac_span_f64(kernel, &mut s.acc[..bins], w, xj);
         }
         // Reconstruct the redundant half, inverse in place.
         for b in bins..k {
             s.acc[b] = s.acc[k - b].conj();
         }
-        p.inverse(&mut s.acc);
+        p.inverse_with(kernel, &mut s.acc);
         for r in 0..k {
             out[i * k + r] = s.acc[r].re as f32;
         }

@@ -32,7 +32,8 @@ use super::spectral::SpectralWeightsFx;
 use crate::analysis::ir::{DeclareOps, GraphBuilder, NodeId, OpKind, SatRole};
 use crate::fft::fxp::{FxFftPlan, ShiftPolicy};
 use crate::num::cplx::CplxFx;
-use crate::num::fxp::{narrow, Q, Rounding};
+use crate::num::fxp::{Q, Rounding};
+use crate::num::simd::{self, Kernel};
 use anyhow::{ensure, Result};
 
 /// Measured spectral envelopes of a quantised matrix, in real units:
@@ -169,17 +170,21 @@ fn mac_rows_into(
     let wfrac = weights.qfmt.frac;
     for i in 0..weights.p {
         acc.fill(CplxFx::ZERO);
+        // The Σ_j accumulation order stays this scalar outer loop (it
+        // determines where saturation lands); only the per-bin span inside
+        // one (row, j) term is laned, which the kernel layer guarantees is
+        // bit-identical to the scalar twin.
         for j in 0..q {
             let w = weights.block(i, j);
             let xj = &spectra[j * k..(j + 1) * k];
-            for b in 0..=half {
-                let (wide_re, wide_im) = xj[b].mul_wide(w[b]);
-                let prod = CplxFx::new(
-                    narrow(wide_re, wfrac, rounding),
-                    narrow(wide_im, wfrac, rounding),
-                );
-                acc[b] = acc[b].add_sat(prod);
-            }
+            simd::mac_span_fx(
+                fft.kernel,
+                &mut acc[..=half],
+                &xj[..=half],
+                &w[..=half],
+                wfrac,
+                rounding,
+            );
         }
         #[cfg(feature = "fft-stats")]
         crate::fft::fxp::DatapathStats::update(&fft.stats.acc_peak, &acc[..=half]);
@@ -246,6 +251,13 @@ impl FxConvPlan {
             fft,
             rounding,
         }
+    }
+
+    /// Select the span kernel for the FFT butterflies and the spectral MAC
+    /// (bit-identical either way — the SIMD lanes preserve rounding and
+    /// saturation order; used by the scalar-vs-SIMD benches and suites).
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.fft.set_kernel(kernel);
     }
 
     /// `a = Wx` over raw fixed-point input (length `q·k`), producing raw
@@ -397,6 +409,12 @@ impl FxStackedConvPlan {
             q,
             k,
         })
+    }
+
+    /// Select the span kernel for the shared forward FFTs, the per-gate
+    /// spectral MACs, and the per-row inverses (bit-identical either way).
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.fft.set_kernel(kernel);
     }
 
     /// One gate's quantised spectra (`i, f, g, o` order).

@@ -164,6 +164,7 @@ fn serve_fxp(
     let backend = FxpBackend {
         q: Some(q),
         rounding,
+        ..Default::default()
     };
     println!(
         "serving {label} on the fxp backend (Q{}.{} 16-bit datapath{}, {} narrowing): \

@@ -46,7 +46,11 @@ pub fn verify_cmd(cli: &Cli) -> Result<()> {
     // not assumed), so it needs a concrete bundle; a seeded random bundle
     // at trained scale stands in for a checkpoint, exactly as `serve` does.
     let weights = LstmWeights::random(&spec, cli.get_u64("seed"));
-    let backend = FxpBackend { q, rounding };
+    let backend = FxpBackend {
+        q,
+        rounding,
+        ..Default::default()
+    };
     let used_q = backend.resolve_q(&weights);
     println!(
         "clstm verify: model {model} (k={k}), data format Q{}.{}{}, rounding {}",

@@ -19,6 +19,7 @@
 use crate::analysis::ir::{GraphBuilder, NodeId, OpKind, SatRole};
 use crate::num::cplx::CplxFx;
 use crate::num::fxp::{Q, Rounding};
+use crate::num::simd::{self, Kernel};
 use crate::num::Cplx;
 
 /// Opt-in datapath instrumentation (`fft-stats` cargo feature): transform
@@ -72,6 +73,10 @@ pub struct FxFftPlan {
     pub n: usize,
     pub policy: ShiftPolicy,
     pub rounding: Rounding,
+    /// Which butterfly kernel the stages dispatch to (`Auto` by default).
+    /// The SIMD lanes are bit-identical to the scalar twin, so this never
+    /// changes results — only how fast they arrive.
+    pub kernel: Kernel,
     /// Twiddles in Q1.14, stage-major (same layout as the float plan).
     twiddles: Vec<CplxFx>,
     /// Per-forward-stage right shifts.
@@ -91,6 +96,7 @@ impl Clone for FxFftPlan {
             n: self.n,
             policy: self.policy,
             rounding: self.rounding,
+            kernel: self.kernel,
             twiddles: self.twiddles.clone(),
             fwd_shifts: self.fwd_shifts.clone(),
             inv_shifts: self.inv_shifts.clone(),
@@ -145,6 +151,7 @@ impl FxFftPlan {
             n,
             policy,
             rounding,
+            kernel: Kernel::Auto,
             twiddles,
             fwd_shifts,
             inv_shifts,
@@ -152,6 +159,12 @@ impl FxFftPlan {
             #[cfg(feature = "fft-stats")]
             stats: DatapathStats::default(),
         }
+    }
+
+    /// Select the butterfly kernel (bit-identical either way; used by the
+    /// scalar-vs-SIMD benches and the bit-identity suites).
+    pub fn set_kernel(&mut self, kernel: Kernel) {
+        self.kernel = kernel;
     }
 
     /// Forward fixed-point FFT, in place. With `DftDistributed` the output
@@ -213,37 +226,30 @@ impl FxFftPlan {
     }
 
     fn stages(&self, data: &mut [CplxFx], shifts: &[u32]) {
-        use crate::num::fxp::narrow;
         let n = self.n;
         let mut m = 1;
         let mut tw_off = 0;
         let mut stage = 0usize;
         while m < n {
             let shift = shifts[stage];
+            // Each (stage, base) group is an elementwise butterfly span over
+            // j — the kernel layer chunks it into lanes (or runs the verbatim
+            // scalar loop) without touching rounding/saturation order. With a
+            // 1-bit stage shift the narrowed result provably fits; with no
+            // shift it saturates — exactly the §4.2 overflow behaviour the
+            // shift policies trade off.
+            let tw = &self.twiddles[tw_off..tw_off + m];
             for base in (0..n).step_by(2 * m) {
-                for j in 0..m {
-                    let w = self.twiddles[tw_off + j];
-                    let t = data[base + j + m].mul_q(w, TWIDDLE_Q.frac, self.rounding);
-                    let u = data[base + j];
-                    // Butterfly adds in widened precision (the hardware's
-                    // 17-bit adder output), then the stage shift, then the
-                    // narrowing back to the 16-bit datapath. With a 1-bit
-                    // stage shift the result provably fits; with no shift
-                    // it saturates — which is exactly the §4.2 overflow
-                    // behaviour the shift policies trade off.
-                    let hi_re = u.re as i32 + t.re as i32;
-                    let hi_im = u.im as i32 + t.im as i32;
-                    let lo_re = u.re as i32 - t.re as i32;
-                    let lo_im = u.im as i32 - t.im as i32;
-                    data[base + j] = CplxFx::new(
-                        narrow(hi_re, shift, self.rounding),
-                        narrow(hi_im, shift, self.rounding),
-                    );
-                    data[base + j + m] = CplxFx::new(
-                        narrow(lo_re, shift, self.rounding),
-                        narrow(lo_im, shift, self.rounding),
-                    );
-                }
+                let (u, v) = data[base..base + 2 * m].split_at_mut(m);
+                simd::butterfly_span_fx(
+                    self.kernel,
+                    u,
+                    v,
+                    tw,
+                    TWIDDLE_Q.frac,
+                    shift,
+                    self.rounding,
+                );
             }
             tw_off += m;
             m <<= 1;

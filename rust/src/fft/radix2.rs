@@ -7,6 +7,7 @@
 //! factors for a given size; plans are cheap and cached globally for the
 //! hot sizes.
 
+use crate::num::simd::{self, Kernel};
 use crate::num::Cplx;
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
@@ -46,20 +47,25 @@ impl Plan {
 
     /// In-place forward FFT (no scaling).
     pub fn forward(&self, data: &mut [Cplx]) {
+        self.forward_with(Kernel::Auto, data)
+    }
+
+    /// [`Plan::forward`] with an explicit kernel selection. Plans are
+    /// globally cached and shared, so the selection is per-call rather than
+    /// per-plan state; `forward` dispatches `Auto`.
+    pub fn forward_with(&self, kernel: Kernel, data: &mut [Cplx]) {
         assert_eq!(data.len(), self.n);
         self.permute(data);
         let n = self.n;
         let mut m = 1;
         let mut tw_off = 0;
         while m < n {
+            // Each (stage, base) group is an elementwise butterfly span
+            // over j: (u, v) = data[base..base+m], data[base+m..base+2m].
+            let tw = &self.twiddles[tw_off..tw_off + m];
             for base in (0..n).step_by(2 * m) {
-                for j in 0..m {
-                    let w = self.twiddles[tw_off + j];
-                    let t = w * data[base + j + m];
-                    let u = data[base + j];
-                    data[base + j] = u + t;
-                    data[base + j + m] = u - t;
-                }
+                let (u, v) = data[base..base + 2 * m].split_at_mut(m);
+                simd::butterfly_span_f64(kernel, u, v, tw);
             }
             tw_off += m;
             m <<= 1;
@@ -68,11 +74,16 @@ impl Plan {
 
     /// In-place inverse FFT (scales by 1/n, so `inverse(forward(x)) == x`).
     pub fn inverse(&self, data: &mut [Cplx]) {
+        self.inverse_with(Kernel::Auto, data)
+    }
+
+    /// [`Plan::inverse`] with an explicit kernel selection.
+    pub fn inverse_with(&self, kernel: Kernel, data: &mut [Cplx]) {
         // IFFT(x) = conj(FFT(conj(x))) / n
         for d in data.iter_mut() {
             *d = d.conj();
         }
-        self.forward(data);
+        self.forward_with(kernel, data);
         let inv_n = 1.0 / self.n as f64;
         for d in data.iter_mut() {
             *d = d.conj().scale(inv_n);

@@ -14,6 +14,7 @@
 //! convolution and by the weight pre-computation path.
 
 use super::radix2::plan;
+use crate::num::simd::{self, Kernel};
 use crate::num::Cplx;
 
 /// Number of non-redundant spectrum bins for a real signal of length `n`.
@@ -64,9 +65,7 @@ pub fn spectral_mul(a: &[Cplx], b: &[Cplx]) -> Vec<Cplx> {
 pub fn spectral_mul_acc(acc: &mut [Cplx], a: &[Cplx], b: &[Cplx]) {
     debug_assert_eq!(acc.len(), a.len());
     debug_assert_eq!(a.len(), b.len());
-    for ((s, &x), &y) in acc.iter_mut().zip(a).zip(b) {
-        *s += x * y;
-    }
+    simd::mac_span_f64(Kernel::Auto, acc, a, b);
 }
 
 /// Count of real multiplications for one packed spectral ⊙ of size n,

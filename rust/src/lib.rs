@@ -1,3 +1,8 @@
+// `std::simd` (portable SIMD) is nightly-only; the non-default `simd`
+// feature opts into it for the vectorized spectral kernels (num/simd.rs).
+// Stable builds compile the bit-identical scalar twins instead.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # C-LSTM — structured LSTM compression + FPGA synthesis framework
 //!
 //! A full reproduction of *C-LSTM: Enabling Efficient LSTM using Structured

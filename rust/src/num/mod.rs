@@ -8,6 +8,8 @@
 
 pub mod cplx;
 pub mod fxp;
+pub mod simd;
 
 pub use cplx::{Cplx, CplxFx};
 pub use fxp::{Fx32, Q, Rounding};
+pub use simd::Kernel;

@@ -1,0 +1,565 @@
+//! The SIMD kernel layer: vectorized spans for the spectral hot loops.
+//!
+//! The FFT butterflies and the per-row spectral MACs are elementwise over a
+//! span index (the butterfly index `j` within a stage, the bin index `b`
+//! within a row) — no lane ever reads another lane's result. That is the
+//! property that makes vectorization *bit-exact* for the 16-bit datapath:
+//! these kernels only chunk an elementwise span into lanes, they never
+//! reorder an accumulation (the Eq 6 Σ_j stays a scalar outer loop at the
+//! call sites) and never use horizontal reductions.
+//!
+//! Four span kernels cover the hot path, each with an always-compiled
+//! scalar twin that is the verbatim pre-vectorization loop:
+//!
+//! - [`butterfly_span_fx`] / [`mac_span_fx`] — the i16 datapath. The lane
+//!   math replicates [`narrow`](crate::num::fxp::narrow) exactly: the
+//!   round-half-away-from-zero shift computes both sign branches and
+//!   mask-selects, and i16 saturation becomes an i32 clamp (exact, because
+//!   every operand is in i16 range so the i32 add cannot overflow).
+//!   **Domain**: like the scalar primitives, the i32 lane arithmetic is
+//!   exact for `|wide| ≤ 2·32767·32768` (the widest defined i16 complex
+//!   product), which every declared datapath site satisfies — `clstm
+//!   verify`'s E1/E2 checks are the static proof.
+//! - [`butterfly_span_f64`] / [`mac_span_f64`] — the float reference path.
+//!   Per-lane IEEE ops in the same order and association as the scalar
+//!   twins (no FMA contraction, no reassociation), so results agree to the
+//!   last ULP; the contract tests bound them at a few ULP to stay robust
+//!   to future kernel changes.
+//!
+//! The lane implementations use `std::simd` (portable SIMD, i32×8 / f64×4)
+//! behind the **non-default** `simd` cargo feature — `std::simd` needs a
+//! nightly toolchain (`#![feature(portable_simd)]`), so the stable tier-1
+//! build stays on the scalar twins. [`Kernel`] selects at runtime between
+//! `Auto` (lanes when compiled in) and `Scalar` (force the twins), which is
+//! how one binary benches scalar-vs-SIMD and property-tests bit-identity.
+//!
+//! `std::simd` integer operators wrap silently on overflow and cannot be
+//! covered by the crate's clippy `wrapping_*` ban (`rust/clippy.toml`);
+//! the range-analysis domain above is what rules wrap out, exactly as it
+//! does for the scalar `+`/`*` on the same sites.
+
+use super::cplx::{Cplx, CplxFx};
+use super::fxp::{narrow, Rounding};
+
+/// Which implementation a plan's hot loops dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// Vectorized lanes when the `simd` feature is compiled in; the scalar
+    /// twins otherwise.
+    #[default]
+    Auto,
+    /// Force the scalar twins (bench baselines, bit-identity tests).
+    Scalar,
+}
+
+impl Kernel {
+    /// Does this selection dispatch to the vector lanes in this build?
+    #[inline]
+    pub fn vectorized(self) -> bool {
+        match self {
+            Kernel::Auto => cfg!(feature = "simd"),
+            Kernel::Scalar => false,
+        }
+    }
+
+    /// Human-readable name of what this selection runs in this build.
+    pub fn label(self) -> &'static str {
+        if self.vectorized() {
+            "simd(i32x8/f64x4)"
+        } else {
+            "scalar"
+        }
+    }
+}
+
+/// Name of the lane implementation `Kernel::Auto` dispatches to in this
+/// build (bench/serve reporting).
+pub const fn backend_name() -> &'static str {
+    if cfg!(feature = "simd") {
+        "simd(i32x8/f64x4)"
+    } else {
+        "scalar"
+    }
+}
+
+// ------------------------------------------------------------------ fxp
+
+/// One radix-2 DIT butterfly span: `m` butterflies `(u[j], v[j])` with
+/// twiddles `tw[j]` (Q-format with `twiddle_frac` fractional bits), stage
+/// shift `shift`. Exactly the inner loop of `FxFftPlan::stages`.
+#[inline]
+pub fn butterfly_span_fx(
+    kernel: Kernel,
+    u: &mut [CplxFx],
+    v: &mut [CplxFx],
+    tw: &[CplxFx],
+    twiddle_frac: u32,
+    shift: u32,
+    r: Rounding,
+) {
+    #[cfg(feature = "simd")]
+    {
+        if kernel.vectorized() {
+            return lanes::butterfly_span_fx(u, v, tw, twiddle_frac, shift, r);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = kernel;
+    butterfly_span_fx_scalar(u, v, tw, twiddle_frac, shift, r)
+}
+
+/// The scalar twin of [`butterfly_span_fx`] — the verbatim
+/// pre-vectorization butterfly loop; also the lane kernels' tail handler.
+pub fn butterfly_span_fx_scalar(
+    u: &mut [CplxFx],
+    v: &mut [CplxFx],
+    tw: &[CplxFx],
+    twiddle_frac: u32,
+    shift: u32,
+    r: Rounding,
+) {
+    debug_assert!(u.len() == v.len() && v.len() == tw.len());
+    for j in 0..u.len() {
+        let t = v[j].mul_q(tw[j], twiddle_frac, r);
+        let uu = u[j];
+        // Butterfly adds in widened precision (the hardware's 17-bit adder
+        // output), then the stage shift, then the narrowing back to the
+        // 16-bit datapath.
+        let hi_re = uu.re as i32 + t.re as i32;
+        let hi_im = uu.im as i32 + t.im as i32;
+        let lo_re = uu.re as i32 - t.re as i32;
+        let lo_im = uu.im as i32 - t.im as i32;
+        u[j] = CplxFx::new(narrow(hi_re, shift, r), narrow(hi_im, shift, r));
+        v[j] = CplxFx::new(narrow(lo_re, shift, r), narrow(lo_im, shift, r));
+    }
+}
+
+/// One spectral MAC span: `acc[b] = sat(acc[b] + narrow(x[b] · w[b]))` over
+/// the packed bins of one `(row, j)` term — the inner loop of
+/// `mac_rows_into`. The Σ_j accumulation order is the caller's scalar
+/// outer loop; this span is elementwise over `b` only.
+#[inline]
+pub fn mac_span_fx(
+    kernel: Kernel,
+    acc: &mut [CplxFx],
+    x: &[CplxFx],
+    w: &[CplxFx],
+    wfrac: u32,
+    r: Rounding,
+) {
+    #[cfg(feature = "simd")]
+    {
+        if kernel.vectorized() {
+            return lanes::mac_span_fx(acc, x, w, wfrac, r);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = kernel;
+    mac_span_fx_scalar(acc, x, w, wfrac, r)
+}
+
+/// The scalar twin of [`mac_span_fx`] — the verbatim pre-vectorization MAC
+/// loop; also the lane kernels' tail handler.
+pub fn mac_span_fx_scalar(
+    acc: &mut [CplxFx],
+    x: &[CplxFx],
+    w: &[CplxFx],
+    wfrac: u32,
+    r: Rounding,
+) {
+    debug_assert!(acc.len() == x.len() && x.len() == w.len());
+    for b in 0..acc.len() {
+        let (wide_re, wide_im) = x[b].mul_wide(w[b]);
+        let prod = CplxFx::new(narrow(wide_re, wfrac, r), narrow(wide_im, wfrac, r));
+        acc[b] = acc[b].add_sat(prod);
+    }
+}
+
+// ---------------------------------------------------------------- float
+
+/// One float radix-2 DIT butterfly span — the inner loop of
+/// `fft::radix2::Plan::forward`.
+#[inline]
+pub fn butterfly_span_f64(kernel: Kernel, u: &mut [Cplx], v: &mut [Cplx], tw: &[Cplx]) {
+    #[cfg(feature = "simd")]
+    {
+        if kernel.vectorized() {
+            return lanes::butterfly_span_f64(u, v, tw);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = kernel;
+    butterfly_span_f64_scalar(u, v, tw)
+}
+
+/// The scalar twin of [`butterfly_span_f64`].
+pub fn butterfly_span_f64_scalar(u: &mut [Cplx], v: &mut [Cplx], tw: &[Cplx]) {
+    debug_assert!(u.len() == v.len() && v.len() == tw.len());
+    for j in 0..u.len() {
+        let t = tw[j] * v[j];
+        let uu = u[j];
+        u[j] = uu + t;
+        v[j] = uu - t;
+    }
+}
+
+/// One float spectral MAC span: `acc[i] += a[i] * b[i]` — the ⊙-accumulate
+/// of Eq 6 on packed spectra (`rfft::spectral_mul_acc`, the Eq 6 stage-B
+/// loop in `circulant::conv`).
+#[inline]
+pub fn mac_span_f64(kernel: Kernel, acc: &mut [Cplx], a: &[Cplx], b: &[Cplx]) {
+    #[cfg(feature = "simd")]
+    {
+        if kernel.vectorized() {
+            return lanes::mac_span_f64(acc, a, b);
+        }
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = kernel;
+    mac_span_f64_scalar(acc, a, b)
+}
+
+/// The scalar twin of [`mac_span_f64`].
+pub fn mac_span_f64_scalar(acc: &mut [Cplx], a: &[Cplx], b: &[Cplx]) {
+    debug_assert!(acc.len() == a.len() && a.len() == b.len());
+    for i in 0..acc.len() {
+        acc[i] += a[i] * b[i];
+    }
+}
+
+// ---------------------------------------------------------------- lanes
+
+/// The `std::simd` implementations (nightly-only `simd` feature). Lane
+/// order within a chunk and chunk order along the span both preserve the
+/// scalar element order; tails run the scalar twins on the same elements,
+/// which is bit-equivalent because every span is elementwise.
+#[cfg(feature = "simd")]
+mod lanes {
+    use super::{Cplx, CplxFx, Rounding};
+    use std::simd::cmp::{SimdOrd, SimdPartialOrd};
+    use std::simd::{f64x4, i32x8};
+
+    /// i16 spans run 8 complex elements per iteration (i32×8 lanes per
+    /// component: products/accumulators are 32-bit).
+    const FX_LANES: usize = 8;
+    /// f64 spans run 4 complex elements per iteration.
+    const F64_LANES: usize = 4;
+
+    #[inline]
+    fn load_re(c: &[CplxFx]) -> i32x8 {
+        i32x8::from_array(std::array::from_fn(|l| c[l].re as i32))
+    }
+
+    #[inline]
+    fn load_im(c: &[CplxFx]) -> i32x8 {
+        i32x8::from_array(std::array::from_fn(|l| c[l].im as i32))
+    }
+
+    /// Store lanes already clamped to the i16 interval. The `as i16` here
+    /// is value-preserving by construction (see [`clamp16`]); keeping it in
+    /// `num/` is what the CI narrowing-cast guard requires.
+    #[inline]
+    fn store(out: &mut [CplxFx], re: i32x8, im: i32x8) {
+        let re = re.to_array();
+        let im = im.to_array();
+        for l in 0..FX_LANES {
+            out[l] = CplxFx::new(re[l] as i16, im[l] as i16);
+        }
+    }
+
+    /// Clamp i32 lanes into the i16 interval — the lane form of i16
+    /// saturation (exact: operands are narrower than i32).
+    #[inline]
+    fn clamp16(v: i32x8) -> i32x8 {
+        v.simd_clamp(i32x8::splat(i16::MIN as i32), i32x8::splat(i16::MAX as i32))
+    }
+
+    /// Lane form of `fxp::narrow`: round-half-away-from-zero computes both
+    /// sign branches and mask-selects (bit-equal to the scalar branch for
+    /// every in-domain i32 — validated exhaustively against rails in the
+    /// kernel test suites), then the saturating clamp.
+    #[inline]
+    fn narrow_lanes(wide: i32x8, shift: u32, r: Rounding) -> i32x8 {
+        let shifted = if shift == 0 {
+            wide
+        } else {
+            let sh = i32x8::splat(shift as i32);
+            match r {
+                Rounding::Truncate => wide >> sh,
+                Rounding::Nearest => {
+                    let bias = i32x8::splat(1 << (shift - 1));
+                    let pos = (wide + bias) >> sh;
+                    let neg = -((-wide + bias) >> sh);
+                    wide.simd_ge(i32x8::splat(0)).select(pos, neg)
+                }
+            }
+        };
+        clamp16(shifted)
+    }
+
+    pub(super) fn butterfly_span_fx(
+        u: &mut [CplxFx],
+        v: &mut [CplxFx],
+        tw: &[CplxFx],
+        twiddle_frac: u32,
+        shift: u32,
+        r: Rounding,
+    ) {
+        debug_assert!(u.len() == v.len() && v.len() == tw.len());
+        let m = u.len();
+        let mut j = 0;
+        while j + FX_LANES <= m {
+            let vr = load_re(&v[j..]);
+            let vi = load_im(&v[j..]);
+            let wr = load_re(&tw[j..]);
+            let wi = load_im(&tw[j..]);
+            // t = v · w in full i32 width, narrowed by the twiddle frac —
+            // the lane form of CplxFx::mul_q.
+            let tr = narrow_lanes(vr * wr - vi * wi, twiddle_frac, r);
+            let ti = narrow_lanes(vr * wi + vi * wr, twiddle_frac, r);
+            let ur = load_re(&u[j..]);
+            let ui = load_im(&u[j..]);
+            store(
+                &mut u[j..],
+                narrow_lanes(ur + tr, shift, r),
+                narrow_lanes(ui + ti, shift, r),
+            );
+            store(
+                &mut v[j..],
+                narrow_lanes(ur - tr, shift, r),
+                narrow_lanes(ui - ti, shift, r),
+            );
+            j += FX_LANES;
+        }
+        super::butterfly_span_fx_scalar(&mut u[j..], &mut v[j..], &tw[j..m], twiddle_frac, shift, r);
+    }
+
+    pub(super) fn mac_span_fx(
+        acc: &mut [CplxFx],
+        x: &[CplxFx],
+        w: &[CplxFx],
+        wfrac: u32,
+        r: Rounding,
+    ) {
+        debug_assert!(acc.len() == x.len() && x.len() == w.len());
+        let n = acc.len();
+        let mut b = 0;
+        while b + FX_LANES <= n {
+            let xr = load_re(&x[b..]);
+            let xi = load_im(&x[b..]);
+            let wr = load_re(&w[b..]);
+            let wi = load_im(&w[b..]);
+            // Lane form of mul_wide + narrow(wfrac) + add_sat.
+            let pr = narrow_lanes(xr * wr - xi * wi, wfrac, r);
+            let pi = narrow_lanes(xr * wi + xi * wr, wfrac, r);
+            let ar = clamp16(load_re(&acc[b..]) + pr);
+            let ai = clamp16(load_im(&acc[b..]) + pi);
+            store(&mut acc[b..], ar, ai);
+            b += FX_LANES;
+        }
+        super::mac_span_fx_scalar(&mut acc[b..], &x[b..n], &w[b..n], wfrac, r);
+    }
+
+    #[inline]
+    fn load_f64(c: &[Cplx]) -> (f64x4, f64x4) {
+        (
+            f64x4::from_array(std::array::from_fn(|l| c[l].re)),
+            f64x4::from_array(std::array::from_fn(|l| c[l].im)),
+        )
+    }
+
+    #[inline]
+    fn store_f64(out: &mut [Cplx], re: f64x4, im: f64x4) {
+        let re = re.to_array();
+        let im = im.to_array();
+        for l in 0..F64_LANES {
+            out[l] = Cplx::new(re[l], im[l]);
+        }
+    }
+
+    pub(super) fn butterfly_span_f64(u: &mut [Cplx], v: &mut [Cplx], tw: &[Cplx]) {
+        debug_assert!(u.len() == v.len() && v.len() == tw.len());
+        let m = u.len();
+        let mut j = 0;
+        while j + F64_LANES <= m {
+            let (vr, vi) = load_f64(&v[j..]);
+            let (wr, wi) = load_f64(&tw[j..]);
+            // Same operand order as the scalar `tw[j] * v[j]` (Cplx::mul:
+            // self = tw, o = v), so per-lane IEEE results match exactly.
+            let tr = wr * vr - wi * vi;
+            let ti = wr * vi + wi * vr;
+            let (ur, ui) = load_f64(&u[j..]);
+            store_f64(&mut u[j..], ur + tr, ui + ti);
+            store_f64(&mut v[j..], ur - tr, ui - ti);
+            j += F64_LANES;
+        }
+        super::butterfly_span_f64_scalar(&mut u[j..], &mut v[j..], &tw[j..m]);
+    }
+
+    pub(super) fn mac_span_f64(acc: &mut [Cplx], a: &[Cplx], b: &[Cplx]) {
+        debug_assert!(acc.len() == a.len() && a.len() == b.len());
+        let n = acc.len();
+        let mut i = 0;
+        while i + F64_LANES <= n {
+            let (ar, ai) = load_f64(&a[i..]);
+            let (br, bi) = load_f64(&b[i..]);
+            let (sr, si) = load_f64(&acc[i..]);
+            // Same order as the scalar `acc[i] += a[i] * b[i]`.
+            store_f64(
+                &mut acc[i..],
+                sr + (ar * br - ai * bi),
+                si + (ar * bi + ai * br),
+            );
+            i += F64_LANES;
+        }
+        super::mac_span_f64_scalar(&mut acc[i..], &a[i..n], &b[i..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::fxp::Q;
+    use crate::util::prng::Xoshiro256;
+
+    fn rand_fx(rng: &mut Xoshiro256, n: usize, rail_heavy: bool) -> Vec<CplxFx> {
+        (0..n)
+            .map(|_| {
+                let mut draw = |_| {
+                    if rail_heavy && rng.uniform(0.0, 1.0) < 0.1 {
+                        if rng.uniform(0.0, 1.0) < 0.5 {
+                            i16::MAX
+                        } else {
+                            i16::MIN
+                        }
+                    } else {
+                        Q::new(12).from_f64(rng.uniform(-6.0, 6.0))
+                    }
+                };
+                CplxFx::new(draw(0), draw(1))
+            })
+            .collect()
+    }
+
+    fn rand_f64(rng: &mut Xoshiro256, n: usize) -> Vec<Cplx> {
+        (0..n)
+            .map(|_| Cplx::new(rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)))
+            .collect()
+    }
+
+    #[test]
+    fn kernel_auto_tracks_the_feature() {
+        assert_eq!(Kernel::Auto.vectorized(), cfg!(feature = "simd"));
+        assert!(!Kernel::Scalar.vectorized());
+        assert_eq!(Kernel::Scalar.label(), "scalar");
+        if cfg!(feature = "simd") {
+            assert_ne!(backend_name(), "scalar");
+        } else {
+            assert_eq!(backend_name(), "scalar");
+        }
+    }
+
+    /// The scalar MAC twin is the original loop — pin it against an inline
+    /// re-statement so a refactor of the twin cannot silently drift.
+    #[test]
+    fn scalar_mac_twin_matches_original_loop() {
+        let mut rng = Xoshiro256::seed_from_u64(91);
+        for r in [Rounding::Nearest, Rounding::Truncate] {
+            let n = 33;
+            let x = rand_fx(&mut rng, n, true);
+            let w = rand_fx(&mut rng, n, true);
+            let mut acc = rand_fx(&mut rng, n, true);
+            let mut expect = acc.clone();
+            for b in 0..n {
+                let (wide_re, wide_im) = x[b].mul_wide(w[b]);
+                let prod = CplxFx::new(narrow(wide_re, 12, r), narrow(wide_im, 12, r));
+                expect[b] = expect[b].add_sat(prod);
+            }
+            mac_span_fx_scalar(&mut acc, &x, &w, 12, r);
+            assert_eq!(acc, expect, "{r:?}");
+        }
+    }
+
+    /// Auto and Scalar dispatch must agree bit-for-bit on the i16 spans —
+    /// trivially true in scalar builds, the real lane check with
+    /// `--features simd` (rail-heavy inputs stress rounding + saturation;
+    /// span lengths cover sub-lane, exact-chunk, and chunk+tail shapes).
+    #[test]
+    fn fx_spans_bit_identical_across_kernels() {
+        let mut rng = Xoshiro256::seed_from_u64(92);
+        for r in [Rounding::Nearest, Rounding::Truncate] {
+            for &n in &[1usize, 5, 8, 9, 16, 33, 64] {
+                for _ in 0..50 {
+                    let x = rand_fx(&mut rng, n, true);
+                    let w = rand_fx(&mut rng, n, true);
+                    let seed_acc = rand_fx(&mut rng, n, true);
+                    let mut a = seed_acc.clone();
+                    let mut b = seed_acc.clone();
+                    mac_span_fx(Kernel::Auto, &mut a, &x, &w, 12, r);
+                    mac_span_fx(Kernel::Scalar, &mut b, &x, &w, 12, r);
+                    assert_eq!(a, b, "mac n={n} {r:?}");
+
+                    let tw = rand_fx(&mut rng, n, false);
+                    let u0 = rand_fx(&mut rng, n, true);
+                    let v0 = rand_fx(&mut rng, n, true);
+                    for shift in [0u32, 1] {
+                        let (mut ua, mut va) = (u0.clone(), v0.clone());
+                        let (mut ub, mut vb) = (u0.clone(), v0.clone());
+                        butterfly_span_fx(Kernel::Auto, &mut ua, &mut va, &tw, 14, shift, r);
+                        butterfly_span_fx(Kernel::Scalar, &mut ub, &mut vb, &tw, 14, shift, r);
+                        assert_eq!((ua, va), (ub, vb), "bfly n={n} shift={shift} {r:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Float spans across kernels agree to a few ULP (in practice exactly:
+    /// the lanes run the same IEEE ops in the same association).
+    #[test]
+    fn f64_spans_agree_across_kernels() {
+        let mut rng = Xoshiro256::seed_from_u64(93);
+        let close = |x: f64, y: f64| (x - y).abs() <= 4.0 * f64::EPSILON * x.abs().max(1.0);
+        for &n in &[1usize, 3, 4, 7, 16, 33] {
+            let a = rand_f64(&mut rng, n);
+            let b = rand_f64(&mut rng, n);
+            let acc0 = rand_f64(&mut rng, n);
+            let mut s_auto = acc0.clone();
+            let mut s_scalar = acc0.clone();
+            mac_span_f64(Kernel::Auto, &mut s_auto, &a, &b);
+            mac_span_f64(Kernel::Scalar, &mut s_scalar, &a, &b);
+            for i in 0..n {
+                assert!(close(s_auto[i].re, s_scalar[i].re), "mac re n={n} i={i}");
+                assert!(close(s_auto[i].im, s_scalar[i].im), "mac im n={n} i={i}");
+            }
+
+            let tw = rand_f64(&mut rng, n);
+            let (u0, v0) = (rand_f64(&mut rng, n), rand_f64(&mut rng, n));
+            let (mut ua, mut va) = (u0.clone(), v0.clone());
+            let (mut ub, mut vb) = (u0.clone(), v0.clone());
+            butterfly_span_f64(Kernel::Auto, &mut ua, &mut va, &tw);
+            butterfly_span_f64(Kernel::Scalar, &mut ub, &mut vb, &tw);
+            for i in 0..n {
+                assert!(close(ua[i].re, ub[i].re) && close(ua[i].im, ub[i].im), "u n={n} i={i}");
+                assert!(close(va[i].re, vb[i].re) && close(va[i].im, vb[i].im), "v n={n} i={i}");
+            }
+        }
+    }
+
+    /// Saturation rails through the MAC span: a full-rail accumulator must
+    /// pin at the rails, never wrap, under both kernels.
+    #[test]
+    fn mac_span_saturates_at_rails() {
+        let n = 16;
+        let x = vec![CplxFx::new(i16::MAX, 0); n];
+        let w = vec![CplxFx::new(1 << 12, 0); n]; // 1.0 in Q3.12
+        for kernel in [Kernel::Auto, Kernel::Scalar] {
+            let mut acc = vec![CplxFx::new(i16::MAX, i16::MIN); n];
+            mac_span_fx(kernel, &mut acc, &x, &w, 12, Rounding::Nearest);
+            for (b, c) in acc.iter().enumerate() {
+                assert_eq!(c.re, i16::MAX, "{kernel:?} b={b}");
+                assert_eq!(c.im, i16::MIN, "{kernel:?} b={b}");
+            }
+        }
+    }
+}

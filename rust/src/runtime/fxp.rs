@@ -62,6 +62,7 @@ use crate::lstm::activations::PwlTable;
 use crate::lstm::cell_fxp::FxElementwise;
 use crate::lstm::weights::{LayerWeights, LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
 use crate::num::fxp::{Q, Rounding};
+use crate::num::simd::Kernel;
 use crate::quant::range::RangeTracker;
 use crate::runtime::backend::{
     downcast_prepared, segment_entry, Backend, PreparedWeights, SegmentId, StageExecutor, StageSet,
@@ -83,6 +84,10 @@ pub struct FxpBackend {
     pub q: Option<Q>,
     /// Narrowing behaviour of every multiply in the datapath.
     pub rounding: Rounding,
+    /// Span-kernel selection for the spectral hot loops (FFT butterflies +
+    /// per-row MACs). Bit-identical either way — `Scalar` exists for the
+    /// scalar-vs-SIMD benches and the bit-identity suites.
+    pub kernel: Kernel,
 }
 
 impl Default for FxpBackend {
@@ -90,6 +95,7 @@ impl Default for FxpBackend {
         Self {
             q: None,
             rounding: Rounding::Nearest,
+            kernel: Kernel::Auto,
         }
     }
 }
@@ -99,7 +105,7 @@ impl FxpBackend {
     pub fn new(q: Q) -> Self {
         Self {
             q: Some(q),
-            rounding: Rounding::Nearest,
+            ..Self::default()
         }
     }
 
@@ -278,7 +284,7 @@ impl FxpBackend {
         let quantize = |m: &crate::circulant::BlockCirculant| {
             SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(m))
         };
-        let gates = FxStackedConvPlan::new(
+        let mut gates = FxStackedConvPlan::new(
             [
                 quantize(&lw.gates[GATE_I]),
                 quantize(&lw.gates[GATE_F]),
@@ -288,11 +294,13 @@ impl FxpBackend {
             q,
             rounding,
         )?;
+        gates.set_kernel(self.kernel);
         let hidden_pad = gates.rows_per_gate();
-        let proj = lw
-            .proj
-            .as_ref()
-            .map(|m| FxConvPlan::new(quantize(m), q, rounding));
+        let proj = lw.proj.as_ref().map(|m| {
+            let mut p = FxConvPlan::new(quantize(m), q, rounding);
+            p.set_kernel(self.kernel);
+            p
+        });
         let out_pad = spec.pad(spec.out_dim());
         if let Some(p) = &proj {
             ensure!(
@@ -745,6 +753,7 @@ mod tests {
         let backend = FxpBackend {
             q: Some(QD),
             rounding: Rounding::Truncate,
+            ..Default::default()
         };
         let mut stages = backend.build_single(&w).unwrap();
         let trunc = CellFx::with_rounding(&spec, 0, &w.layers[0][0], QD, Rounding::Truncate);
@@ -833,7 +842,11 @@ mod tests {
         let w = LstmWeights::random(&LstmSpec::tiny(4), 3);
         for q in [None, Some(Q::new(12)), Some(Q::new(10))] {
             for rounding in [Rounding::Nearest, Rounding::Truncate] {
-                let backend = FxpBackend { q, rounding };
+                let backend = FxpBackend {
+                    q,
+                    rounding,
+                    ..Default::default()
+                };
                 let rep = backend.verify_report(&w, None).unwrap();
                 assert!(rep.ok(), "tiny(4) {q:?} {rounding:?}:\n{}", rep.render());
                 assert!(!rep.facts.is_empty(), "report must carry facts");

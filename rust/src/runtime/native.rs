@@ -10,18 +10,19 @@
 //! hold an `Arc` reference to their segment plus their own scratch buffers.
 //!
 //! Stage 1 runs the four fused gate convolutions through the optimized Eq 6
-//! operator ([`matvec_eq6_into`]) over the precomputed spectra. Stage 2 is
+//! operator ([`matvec_eq6_into_with`]) over the precomputed spectra. Stage 2 is
 //! the element-wise cluster of Eq 1a–1f with the same arithmetic — term
 //! order included — as [`CellF32`](crate::lstm::cell_f32::CellF32), so
 //! pipeline outputs are bit-identical to the reference engine's. Stage 3
 //! applies the projection convolution (Eq 1g) or identity padding.
 
-use crate::circulant::conv::{matvec_eq6_into, Eq6Scratch};
+use crate::circulant::conv::{matvec_eq6_into_with, Eq6Scratch};
 use crate::circulant::spectral::SpectralWeights;
 use crate::circulant::BlockCirculant;
 use crate::lstm::activations::{sigmoid, tanh, ActivationMode, PwlTable};
 use crate::lstm::weights::{LayerWeights, LstmWeights, GATE_F, GATE_G, GATE_I, GATE_O};
 use crate::num::fxp::Q;
+use crate::num::simd::Kernel;
 use crate::runtime::backend::{
     downcast_prepared, segment_entry, Backend, PreparedWeights, SegmentId, StageExecutor, StageSet,
 };
@@ -34,19 +35,27 @@ pub struct NativeBackend {
     /// Activation implementation (exact transcendental by default; PWL for
     /// FPGA-faithful activation error).
     pub mode: ActivationMode,
+    /// Span-kernel selection for the Eq 6 hot loops (FFT butterflies +
+    /// frequency-domain MACs) — `Scalar` forces the scalar twins for the
+    /// scalar-vs-SIMD benches.
+    pub kernel: Kernel,
 }
 
 impl Default for NativeBackend {
     fn default() -> Self {
         Self {
             mode: ActivationMode::Exact,
+            kernel: Kernel::Auto,
         }
     }
 }
 
 impl NativeBackend {
     pub fn new(mode: ActivationMode) -> Self {
-        Self { mode }
+        Self {
+            mode,
+            kernel: Kernel::Auto,
+        }
     }
 }
 
@@ -65,6 +74,7 @@ struct NativeSegment {
     pwl_sigmoid: PwlTable,
     pwl_tanh: PwlTable,
     mode: ActivationMode,
+    kernel: Kernel,
     h: usize,
     hidden_pad: usize,
     out_pad: usize,
@@ -112,6 +122,7 @@ impl NativeBackend {
             pwl_sigmoid: PwlTable::sigmoid(q),
             pwl_tanh: PwlTable::tanh(q),
             mode: self.mode,
+            kernel: self.kernel,
             h,
             hidden_pad,
             out_pad: spec.pad(spec.out_dim()),
@@ -193,7 +204,7 @@ impl StageExecutor for NativeStage1 {
         );
         let a = &mut *outputs[0];
         ensure!(a.len() == 4 * w.h, "a length {} != {}", a.len(), 4 * w.h);
-        matvec_eq6_into(&w.gates, fused, &mut self.acc, &mut self.scratch);
+        matvec_eq6_into_with(&w.gates, fused, &mut self.acc, &mut self.scratch, w.kernel);
         for g in 0..4 {
             a[g * w.h..(g + 1) * w.h]
                 .copy_from_slice(&self.acc[g * w.hidden_pad..g * w.hidden_pad + w.h]);
@@ -288,7 +299,7 @@ impl StageExecutor for NativeStage3 {
                 self.padded.fill(0.0);
                 let n = m.len().min(w.hidden_pad);
                 self.padded[..n].copy_from_slice(&m[..n]);
-                matvec_eq6_into(p, &self.padded, y, &mut self.scratch);
+                matvec_eq6_into_with(p, &self.padded, y, &mut self.scratch, w.kernel);
             }
             None => {
                 y.fill(0.0);

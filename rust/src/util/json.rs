@@ -202,6 +202,17 @@ impl Json {
     }
 }
 
+/// Write `contents` to `path` atomically: write a `.tmp` sibling, then
+/// rename over the destination. A crash or failed bench run mid-write can
+/// therefore never leave a truncated or half-serialised `BENCH_*.json` —
+/// the destination either keeps its old contents or gets the complete new
+/// ones.
+pub fn write_atomic(path: &str, contents: &str) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
 fn write_num(out: &mut String, x: f64) -> fmt::Result {
     use fmt::Write;
     if x.fract() == 0.0 && x.abs() < 1e15 {
@@ -468,5 +479,21 @@ mod tests {
         let v = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str(), Some("Aé"));
         assert!(Json::parse(r#""\ud834""#).is_err());
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("clstm_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+        let path = path.to_str().unwrap();
+        write_atomic(path, "{\"a\":1}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "{\"a\":1}\n");
+        // Overwrite: destination gets the complete new contents, and the
+        // temp sibling is gone.
+        write_atomic(path, "{\"a\":2}\n").unwrap();
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "{\"a\":2}\n");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -275,6 +275,7 @@ fn fxp_stack_engine_bit_identical_to_stack_fx_across_replicas_and_roundings() {
                 let backend = FxpBackend {
                     q: Some(QD),
                     rounding,
+                    ..Default::default()
                 };
                 let mut engine = StackEngine::build(
                     &backend,

@@ -1,0 +1,224 @@
+//! Scalar-vs-SIMD kernel identity (PR-7 acceptance).
+//!
+//! The `simd` feature routes the spectral hot spans — radix-2 butterflies
+//! and per-(row,bin) complex MACs — through `std::simd` lanes. The fxp
+//! contract is **bit identity**: `Kernel::Scalar` and `Kernel::Auto` must
+//! produce the same `i16` streams for every shift schedule, rounding mode,
+//! and data format, because `analysis::ir` declarations and the committed
+//! golden outputs assume one exact datapath. The float contract is
+//! ULP-level agreement (same per-element IEEE ops, no reassociation of the
+//! Σ_j accumulation — in practice bitwise, asserted here within 4 ULP).
+//!
+//! Without `--features simd` both kernels are the same scalar code, so the
+//! suite doubles as the fallback-stays-compiled check; with the feature on
+//! (nightly) it exercises the actual lane kernels.
+
+use clstm::circulant::conv::{matvec_eq6_into_with, Eq6Scratch};
+use clstm::circulant::fxp_conv::{FxConvPlan, FxConvScratch, FxStackedConvPlan};
+use clstm::circulant::spectral::{SpectralWeights, SpectralWeightsFx};
+use clstm::circulant::BlockCirculant;
+use clstm::fft::fxp::{FxFftPlan, ShiftPolicy};
+use clstm::num::cplx::CplxFx;
+use clstm::num::fxp::{Q, Rounding};
+use clstm::num::simd::backend_name;
+use clstm::num::Kernel;
+use clstm::util::prng::Xoshiro256;
+
+const ROUNDINGS: [Rounding; 2] = [Rounding::Truncate, Rounding::Nearest];
+/// Q3.12 and Q5.10 — the two data formats the acceptance grid names.
+const FRACS: [u32; 2] = [12, 10];
+/// Covers no-chunk (k=4: 3 bins), tail-only (k=8: 5 bins), one chunk +
+/// tail (k=16: 9 bins), and multi-chunk (k=64: 33 bins) lane shapes.
+const KS: [usize; 4] = [4, 8, 16, 64];
+
+fn rand_gate(rng: &mut Xoshiro256, p: usize, q: usize, k: usize, scale: f32) -> SpectralWeightsFx {
+    let mut m = BlockCirculant::random_init(p * k, q * k, k, rng);
+    for v in m.w.iter_mut() {
+        *v *= scale;
+    }
+    SpectralWeightsFx::quantize_auto(&SpectralWeights::precompute(&m))
+}
+
+fn rand_input(rng: &mut Xoshiro256, qd: Q, n: usize) -> Vec<i16> {
+    (0..n)
+        .map(|i| {
+            // Rail-heavy: saturation behaviour is part of the contract.
+            match i % 16 {
+                0 => i16::MAX,
+                8 => i16::MIN,
+                _ => qd.from_f64(rng.uniform(-4.0, 4.0)),
+            }
+        })
+        .collect()
+}
+
+/// Single-gate conv plans: `Kernel::Scalar` and `Kernel::Auto` outputs are
+/// bit-identical over k × {Q3.12, Q5.10} × both roundings.
+#[test]
+fn fx_conv_plan_bit_identical_across_kernels() {
+    let mut rng = Xoshiro256::seed_from_u64(0x51_7D_01);
+    for &k in &KS {
+        for &frac in &FRACS {
+            for &rounding in &ROUNDINGS {
+                let qd = Q::new(frac);
+                let (p, q) = (2usize, 3usize);
+                let gate = rand_gate(&mut rng, p, q, k, 0.9);
+                let mut scalar = FxConvPlan::new(gate.clone(), qd, rounding);
+                scalar.set_kernel(Kernel::Scalar);
+                let mut auto = FxConvPlan::new(gate, qd, rounding);
+                auto.set_kernel(Kernel::Auto);
+                let mut s_scratch = FxConvScratch::for_plan(&scalar);
+                let mut a_scratch = FxConvScratch::for_plan(&auto);
+                let mut got_s = vec![0i16; p * k];
+                let mut got_a = vec![0i16; p * k];
+                for trial in 0..8 {
+                    let x = rand_input(&mut rng, qd, q * k);
+                    scalar.matvec_into(&x, &mut got_s, &mut s_scratch).unwrap();
+                    auto.matvec_into(&x, &mut got_a, &mut a_scratch).unwrap();
+                    assert_eq!(
+                        got_s, got_a,
+                        "k={k} frac={frac} {rounding:?} trial={trial} ({})",
+                        backend_name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fused four-gate plans: the stage-1 hot path stays bit-identical across
+/// kernels (distinct per-gate spectral formats force distinct wfrac
+/// narrowing shifts through the lane kernel).
+#[test]
+fn fx_stacked_plan_bit_identical_across_kernels() {
+    let mut rng = Xoshiro256::seed_from_u64(0x51_7D_02);
+    for &k in &KS {
+        for &frac in &FRACS {
+            for &rounding in &ROUNDINGS {
+                let qd = Q::new(frac);
+                let (p, q) = (2usize, 3usize);
+                let scales = [0.5f32, 1.5, 0.1, 0.8];
+                let gates: [SpectralWeightsFx; 4] =
+                    std::array::from_fn(|g| rand_gate(&mut rng, p, q, k, scales[g]));
+                let mut scalar = FxStackedConvPlan::new(gates.clone(), qd, rounding).unwrap();
+                scalar.set_kernel(Kernel::Scalar);
+                let mut auto = FxStackedConvPlan::new(gates, qd, rounding).unwrap();
+                auto.set_kernel(Kernel::Auto);
+                let mut s_scratch = FxConvScratch::for_plan(&scalar);
+                let mut a_scratch = FxConvScratch::for_plan(&auto);
+                let mut got_s = vec![0i16; scalar.out_len()];
+                let mut got_a = vec![0i16; auto.out_len()];
+                for trial in 0..6 {
+                    let x = rand_input(&mut rng, qd, q * k);
+                    scalar.matvec_into(&x, &mut got_s, &mut s_scratch).unwrap();
+                    auto.matvec_into(&x, &mut got_a, &mut a_scratch).unwrap();
+                    assert_eq!(
+                        got_s, got_a,
+                        "k={k} frac={frac} {rounding:?} trial={trial} ({})",
+                        backend_name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Raw fxp FFT plans: forward, block forward, and inverse transforms are
+/// bit-identical across kernels for every §4.2 shift policy.
+#[test]
+fn fx_fft_plan_bit_identical_across_kernels() {
+    let policies = [
+        ShiftPolicy::IdftAtEnd,
+        ShiftPolicy::IdftDistributed,
+        ShiftPolicy::DftDistributed,
+    ];
+    let mut rng = Xoshiro256::seed_from_u64(0x51_7D_03);
+    for &k in &KS {
+        for &policy in &policies {
+            for &rounding in &ROUNDINGS {
+                let mut scalar = FxFftPlan::new(k, policy, rounding);
+                scalar.set_kernel(Kernel::Scalar);
+                let mut auto = FxFftPlan::new(k, policy, rounding);
+                auto.set_kernel(Kernel::Auto);
+                for trial in 0..8 {
+                    let data: Vec<CplxFx> = (0..k)
+                        .map(|i| match i % 8 {
+                            0 => CplxFx::new(i16::MAX, i16::MIN),
+                            _ => CplxFx::new(
+                                Q::new(12).from_f64(rng.uniform(-4.0, 4.0)),
+                                Q::new(12).from_f64(rng.uniform(-4.0, 4.0)),
+                            ),
+                        })
+                        .collect();
+                    let ctx = format!(
+                        "k={k} {policy:?} {rounding:?} trial={trial} ({})",
+                        backend_name()
+                    );
+
+                    let mut fwd_s = data.clone();
+                    let mut fwd_a = data.clone();
+                    scalar.forward(&mut fwd_s);
+                    auto.forward(&mut fwd_a);
+                    assert_eq!(fwd_s, fwd_a, "forward: {ctx}");
+
+                    let reals: Vec<i16> = data.iter().map(|c| c.re).collect();
+                    let mut blk_s = vec![CplxFx::new(0, 0); k];
+                    let mut blk_a = vec![CplxFx::new(0, 0); k];
+                    scalar.forward_real_blocks(&reals, &mut blk_s);
+                    auto.forward_real_blocks(&reals, &mut blk_a);
+                    assert_eq!(blk_s, blk_a, "forward_real_blocks: {ctx}");
+
+                    let mut inv_s = fwd_s;
+                    let mut inv_a = fwd_a;
+                    scalar.inverse(&mut inv_s);
+                    auto.inverse(&mut inv_a);
+                    assert_eq!(inv_s, inv_a, "inverse: {ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// Float Eq 6: kernels agree to ULP level (the lanes run the same IEEE ops
+/// per element and the Σ_j order is unchanged, so any divergence here means
+/// the lane kernel reassociated something).
+#[test]
+fn float_eq6_kernels_agree_to_ulp() {
+    let mut rng = Xoshiro256::seed_from_u64(0x51_7D_04);
+    for &k in &KS {
+        let (p, q) = (3usize, 4usize);
+        let m = BlockCirculant::random_init(p * k, q * k, k, &mut rng);
+        let spec = SpectralWeights::precompute(&m);
+        let x: Vec<f32> = (0..q * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut got_s = vec![0.0f32; p * k];
+        let mut got_a = vec![0.0f32; p * k];
+        let mut s_scratch = Eq6Scratch::default();
+        let mut a_scratch = Eq6Scratch::default();
+        matvec_eq6_into_with(&spec, &x, &mut got_s, &mut s_scratch, Kernel::Scalar);
+        matvec_eq6_into_with(&spec, &x, &mut got_a, &mut a_scratch, Kernel::Auto);
+        for (i, (&a, &b)) in got_s.iter().zip(&got_a).enumerate() {
+            // 4-ULP budget at f32 after the f64 pipeline — effectively
+            // "bitwise or the very last bit".
+            let ulp = (a.abs().max(b.abs()).max(f32::MIN_POSITIVE) * f32::EPSILON) * 4.0;
+            assert!(
+                (a - b).abs() <= ulp,
+                "k={k} idx={i}: scalar {a} vs auto {b} ({})",
+                backend_name()
+            );
+        }
+    }
+}
+
+/// The dispatch plumbing itself: `Kernel::Auto` vectorizes exactly when the
+/// feature is compiled in, `Kernel::Scalar` never does, and the backend
+/// label agrees — so a scalar-only build is provably running the fallback.
+#[test]
+fn kernel_dispatch_tracks_build_features() {
+    assert!(!Kernel::Scalar.vectorized());
+    assert_eq!(Kernel::Scalar.label(), "scalar");
+    assert_eq!(Kernel::Auto.vectorized(), cfg!(feature = "simd"));
+    assert_eq!(backend_name(), Kernel::Auto.label());
+    if !cfg!(feature = "simd") {
+        assert_eq!(backend_name(), "scalar");
+    }
+}

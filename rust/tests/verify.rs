@@ -45,7 +45,13 @@ fn served_spec_format_combos_verify_clean() {
         let w = LstmWeights::random(&spec, 7);
         for q in [None, Some(Q::new(12))] {
             for rounding in ROUNDINGS {
-                let rep = FxpBackend { q, rounding }.verify_report(&w, None).unwrap();
+                let rep = FxpBackend {
+                    q,
+                    rounding,
+                    ..Default::default()
+                }
+                .verify_report(&w, None)
+                .unwrap();
                 assert!(rep.ok(), "{label} {q:?} {rounding:?}:\n{}", rep.render());
             }
         }
@@ -62,7 +68,11 @@ fn paper_scale_models_at_auto_format_verify_clean() {
     ] {
         let w = LstmWeights::random(&spec, 1234);
         for rounding in ROUNDINGS {
-            let backend = FxpBackend { q: None, rounding };
+            let backend = FxpBackend {
+                q: None,
+                rounding,
+                ..Default::default()
+            };
             let rep = backend.verify_report(&w, None).unwrap();
             assert!(rep.ok(), "{label} auto {rounding:?}:\n{}", rep.render());
         }
