@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd serve-fxp serve-stack verify-datapath artifacts table1-per
+.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd bench-overload serve-fxp serve-stack serve-overload verify-datapath artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -37,6 +37,16 @@ bench-simd:
 	test -s BENCH_6.json && grep -q '"source": "native:' BENCH_6.json
 	! test -e BENCH_6.json.tmp
 
+# Sustained-overload serving benchmark (PR 8): closed-loop capacity probe,
+# then an open-loop Poisson burst at ~2× that rate through the elastic
+# 1..2-lane engine with a 50 ms queue-wait SLO — (re)writes BENCH_7.json
+# at the repo root (atomically: temp + rename).
+bench-overload:
+	cd rust && CLSTM_BENCH_FAST=1 cargo bench --bench bench_pipeline
+	test -s BENCH_7.json && grep -q '"shed_rate"' BENCH_7.json
+	grep -q '"source": "native:' BENCH_7.json
+	! test -e BENCH_7.json.tmp
+
 # Fixed-point serving smoke test: a few utterances through the 16-bit
 # datapath on 2 lanes; asserts the report prints a nonzero workload PER.
 serve-fxp:
@@ -55,6 +65,17 @@ serve-stack:
 	grep -q "topology: 4 segment(s)" /tmp/clstm-serve-stack.out
 	grep -E "workload PER: [0-9]+\.[0-9]+% \(full 2-layer stack\)" /tmp/clstm-serve-stack.out
 	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-stack.out
+
+# Sustained-overload serving smoke: a Poisson burst far past capacity on an
+# elastic 1..2-lane engine with a queue-wait SLO. Asserts the run exits
+# cleanly with a nonzero shed count AND a served queue-wait p99 inside the
+# SLO — i.e. deadline-aware admission kept the *served* tail healthy
+# instead of letting the backlog blow every utterance's deadline.
+serve-overload:
+	cd rust && cargo run --release -- serve --replicas 1..2 --utts 2000 \
+		--arrival poisson --rate 100000 --slo-ms 50 | tee /tmp/clstm-serve-overload.out
+	grep -q "(met)" /tmp/clstm-serve-overload.out
+	grep -Eq "shed [1-9][0-9]*/[0-9]+" /tmp/clstm-serve-overload.out
 
 # Static datapath verifier smoke: both paper-scale models through
 # `clstm verify` at the default (range-analysis) format and at one

@@ -88,6 +88,12 @@ fn main() {
     // (`make bench-fxp-stage1`).
     fxp_stage1_bench(&mut b, &mut rng);
 
+    // PR-8 artifact: sustained-overload serving — a closed-loop capacity
+    // probe followed by an open-loop Poisson burst at ~2× capacity through
+    // the elastic engine with a queue-wait SLO, recording the shed rate and
+    // the served tail — written to BENCH_7.json (`make bench-overload`).
+    overload_serve_bench();
+
     #[cfg(feature = "pjrt")]
     pjrt_benches(&mut b, &mut rng);
     #[cfg(not(feature = "pjrt"))]
@@ -383,6 +389,109 @@ fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
         "../BENCH_5.json"
     } else {
         "BENCH_5.json"
+    };
+    match clstm::util::json::write_atomic(path, &json.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+/// The PR-8 overload point: measure the single-lane closed-loop capacity
+/// of the tiny model on the native backend, then offer an open-loop
+/// Poisson stream at ~2× that rate into the elastic 1..2-lane engine with
+/// a 50 ms queue-wait SLO. Deadline-aware admission should shed the excess
+/// while the *served* queue-wait p99 stays inside the SLO. Results land in
+/// `BENCH_7.json` at the repo root (atomic write: temp + rename).
+fn overload_serve_bench() {
+    use clstm::coordinator::server::{serve_workload, Arrival, ServeOptions};
+    use clstm::runtime::native::NativeBackend;
+    use clstm::util::json::Json;
+    use std::time::Duration;
+
+    let fast = std::env::var("CLSTM_BENCH_FAST").is_ok();
+    let (probe_utts, n_utts) = if fast { (48usize, 400usize) } else { (160, 1200) };
+    let backend = NativeBackend::default();
+    let tiny = LstmWeights::random(&LstmSpec::tiny(4), 1234);
+
+    // Capacity probe: the whole workload at t = 0 through one fixed lane.
+    let closed = serve_workload(
+        &backend,
+        &tiny,
+        probe_utts,
+        &ServeOptions {
+            replicas: 1,
+            seed: 1234,
+            ..ServeOptions::default()
+        },
+    )
+    .expect("closed-loop capacity probe");
+    let capacity_ups = probe_utts as f64 / closed.metrics.wall.as_secs_f64().max(1e-9);
+
+    // Overload run: Poisson arrivals at 2× the measured capacity, elastic
+    // lanes 1..2, 50 ms queue-wait SLO.
+    let slo = Duration::from_millis(50);
+    let offered_rate = 2.0 * capacity_ups;
+    let over = serve_workload(
+        &backend,
+        &tiny,
+        n_utts,
+        &ServeOptions {
+            replicas: 1,
+            max_replicas: 2,
+            arrival: Arrival::Poisson { rate: offered_rate },
+            seed: 1234,
+            slo: Some(slo),
+            ..ServeOptions::default()
+        },
+    )
+    .expect("overload serve");
+    let m = &over.metrics;
+    let slo_ms = slo.as_secs_f64() * 1e3;
+    let p99_ms = m.queue_wait_p99_us() / 1e3;
+    println!(
+        "overload serve (tiny, 1..2 lanes, {offered_rate:.0} utts/s offered vs \
+         {capacity_ups:.0} capacity): shed {}/{} ({:.1}%), served queue-wait p99 \
+         {p99_ms:.1} ms vs SLO {slo_ms:.0} ms ({}); lanes +{}/-{}",
+        m.shed,
+        m.offered,
+        m.shed_rate() * 100.0,
+        if p99_ms <= slo_ms { "met" } else { "missed" },
+        m.lanes_grown,
+        m.lanes_retired
+    );
+
+    let json = Json::obj(vec![
+        ("pr", Json::num(8.0)),
+        (
+            "bench",
+            Json::str("sustained-overload serving: deadline-aware shedding + elastic lanes"),
+        ),
+        (
+            // "native:" distinguishes a measured run on this host from the
+            // committed python-sim baseline (which stamps "python-sim: ...").
+            "source",
+            Json::str("native: cargo bench --bench bench_pipeline (make bench-overload)"),
+        ),
+        ("model", Json::str("tiny_fft4 / native backend")),
+        ("slo_ms", Json::num(slo_ms)),
+        ("closed_loop_capacity_utts_per_s", Json::num(capacity_ups)),
+        ("offered_rate_utts_per_s", Json::num(offered_rate)),
+        ("offered", Json::num(m.offered as f64)),
+        ("shed", Json::num(m.shed as f64)),
+        ("shed_rate", Json::num(m.shed_rate())),
+        ("served_queue_wait_p50_us", Json::num(m.queue_wait_p50_us())),
+        ("served_queue_wait_p99_us", Json::num(m.queue_wait_p99_us())),
+        (
+            "slo_p99",
+            Json::str(if p99_ms <= slo_ms { "met" } else { "missed" }),
+        ),
+        ("lanes_grown", Json::num(m.lanes_grown as f64)),
+        ("lanes_retired", Json::num(m.lanes_retired as f64)),
+    ]);
+    let path = if std::path::Path::new("../Makefile").exists() {
+        "../BENCH_7.json"
+    } else {
+        "BENCH_7.json"
     };
     match clstm::util::json::write_atomic(path, &json.to_pretty()) {
         Ok(()) => println!("wrote {path}"),

@@ -17,11 +17,16 @@
 //!
 //! Replication and load shape:
 //!
-//! - `--replicas N` — pipeline lanes sharing one prepared-weights copy;
+//! - `--replicas N` or `--replicas MIN..MAX` — pipeline lanes sharing one
+//!   prepared-weights copy; a range makes the engine elastic, growing and
+//!   draining lanes from occupancy as the offered load swings;
 //! - `--streams S` — utterance streams interleaved per lane;
 //! - `--arrival closed|poisson` + `--rate R` — closed-loop (whole workload
 //!   at t = 0) or open-loop Poisson arrivals at R utterances/second, which
-//!   makes the queue-wait vs service split in the report meaningful.
+//!   makes the queue-wait vs service split in the report meaningful;
+//! - `--slo-ms B` — queue-wait SLO: deadline-aware admission sheds load so
+//!   the *served* queue-wait tail stays within B ms under sustained
+//!   overload (the summary reports the shed count and rate).
 
 use anyhow::Result;
 use clstm::coordinator::server::{Arrival, ServeOptions, ServeReport};
@@ -29,7 +34,8 @@ use clstm::coordinator::topology::StackTopology;
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::num::fxp::Rounding;
-use clstm::util::cli::Cli;
+use clstm::util::cli::{parse_replicas, Cli};
+use std::time::Duration;
 
 /// Model spec + label for the serve run. Plain `clstm serve` uses the tiny
 /// model; an explicit `--model google|small --k <k>` serves the paper-scale
@@ -76,11 +82,17 @@ fn serve_options(cli: &Cli) -> Result<ServeOptions> {
         },
         other => anyhow::bail!("unknown --arrival {other:?} (expected: closed | poisson)"),
     };
+    let (replicas, max_replicas) =
+        parse_replicas(&cli.get_str("replicas")).map_err(anyhow::Error::msg)?;
+    let slo_ms = cli.get_f64("slo-ms");
+    anyhow::ensure!(slo_ms >= 0.0 && slo_ms.is_finite(), "--slo-ms must be ≥ 0");
     Ok(ServeOptions {
-        replicas: cli.get_usize("replicas"),
+        replicas,
+        max_replicas,
         streams_per_lane: cli.get_usize("streams"),
         arrival,
         seed: cli.get_u64("seed"),
+        slo: (slo_ms > 0.0).then(|| Duration::from_secs_f64(slo_ms / 1e3)),
         ..ServeOptions::default()
     })
 }
@@ -138,6 +150,23 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     };
     println!("  backend: {} ({} replicas)", report.config, report.replicas);
     println!("  {}", report.metrics.summary());
+    if let Some(slo) = report.slo {
+        // Served-tail SLO check: queue-wait p99 covers *served* utterances
+        // only (shed ones never reach the engine), which is exactly the
+        // population the SLO governs.
+        let slo_ms = slo.as_secs_f64() * 1e3;
+        let p99_ms = report.metrics.queue_wait_p99_us() / 1e3;
+        println!(
+            "  SLO {:.0}ms: served queue-wait p99 {:.1}ms ≤ {:.1}ms ({}); shed {}/{} ({:.1}%)",
+            slo_ms,
+            p99_ms,
+            slo_ms,
+            if p99_ms <= slo_ms { "met" } else { "missed" },
+            report.metrics.shed,
+            report.metrics.offered,
+            report.metrics.shed_rate() * 100.0
+        );
+    }
     println!("  workload PER: {:.2}% (full {}-layer stack)", report.per, spec.layers);
     Ok(())
 }

@@ -9,7 +9,7 @@
 //! arrival processes and SLAs (see `server::Arrival`).
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A queued utterance: opaque id, frames, and the reference phone sequence
 /// (carried along so scorers never regenerate the workload).
@@ -106,6 +106,106 @@ impl Batcher {
     }
 }
 
+/// EWMA smoothing factor for the per-utterance service-time estimate.
+const SERVICE_EWMA_ALPHA: f64 = 0.2;
+
+/// Fraction of the SLO budgeted to *estimated* waiting-room delay. The
+/// other half is headroom for in-engine lane queueing, which the
+/// backlog × service estimator cannot see (the engine admits up to
+/// roughly two generations per stream slot ahead of service), plus
+/// estimator error — so a shed decision made at the front door still
+/// leaves the *served* tail within the SLO.
+const SLO_HEADROOM: f64 = 0.5;
+
+/// Deadline-aware admission control: shed from the waiting room when the
+/// estimated queue wait exceeds the SLO budget.
+///
+/// The estimator is the live queue-wait vs service split the engines
+/// already export: an EWMA of observed per-utterance service time, times
+/// the current backlog, divided by the engine's parallel stream slots —
+/// an M/G/k wait estimate using only signals the drive loop has on hand.
+/// Decisions are deterministic given the same observe/admit call sequence
+/// (no clock reads), which the shed-determinism test pins.
+#[derive(Debug, Clone)]
+pub struct AdmissionControl {
+    slo_us: f64,
+    service_ewma_us: f64,
+    samples: u64,
+    /// Utterances offered to the controller.
+    pub offered: u64,
+    /// Utterances shed (denied admission).
+    pub shed: u64,
+}
+
+impl AdmissionControl {
+    /// A controller targeting `slo` for served queue-wait p99.
+    pub fn new(slo: Duration) -> Self {
+        Self {
+            slo_us: slo.as_secs_f64() * 1e6,
+            service_ewma_us: 0.0,
+            samples: 0,
+            offered: 0,
+            shed: 0,
+        }
+    }
+
+    /// The configured SLO, µs.
+    pub fn slo_us(&self) -> f64 {
+        self.slo_us
+    }
+
+    /// The waiting-room budget: the slice of the SLO the estimator sheds
+    /// against (the rest is in-engine headroom).
+    pub fn budget_us(&self) -> f64 {
+        self.slo_us * SLO_HEADROOM
+    }
+
+    /// Feed one completed utterance's observed service time (µs) into the
+    /// estimator.
+    pub fn observe_service(&mut self, service_us: f64) {
+        if !service_us.is_finite() || service_us < 0.0 {
+            return;
+        }
+        if self.samples == 0 {
+            self.service_ewma_us = service_us;
+        } else {
+            self.service_ewma_us +=
+                SERVICE_EWMA_ALPHA * (service_us - self.service_ewma_us);
+        }
+        self.samples += 1;
+    }
+
+    /// Estimated wait (µs) for an utterance arriving behind `backlog`
+    /// others with `slots` utterances servable in parallel.
+    pub fn estimated_wait_us(&self, backlog: usize, slots: usize) -> f64 {
+        backlog as f64 * self.service_ewma_us / slots.max(1) as f64
+    }
+
+    /// Admission decision for one arriving utterance. `backlog` is the
+    /// total queue ahead of it (waiting room + engine-pending), `slots`
+    /// the engine's parallel stream slots. Never sheds before the first
+    /// service observation (cold start serves everything — the estimator
+    /// has no signal yet).
+    pub fn admit(&mut self, backlog: usize, slots: usize) -> bool {
+        self.offered += 1;
+        if self.samples == 0 || self.estimated_wait_us(backlog, slots) <= self.budget_us() {
+            true
+        } else {
+            self.shed += 1;
+            false
+        }
+    }
+
+    /// Fraction of offered utterances shed so far.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +288,51 @@ mod tests {
         let mut b = Batcher::new(2, 1);
         b.offer(u);
         assert_eq!(b.pop().unwrap().phone_seq, vec![1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn admission_control_serves_everything_cold_and_under_load() {
+        let mut adm = AdmissionControl::new(Duration::from_millis(10));
+        // Cold start: no service observation yet → never shed, whatever
+        // the backlog claims.
+        assert!(adm.admit(1_000_000, 1));
+        // Light load after warmup: 2 queued × 1ms service / 4 slots =
+        // 0.5ms wait, well inside the 5ms waiting-room budget.
+        adm.observe_service(1_000.0);
+        assert!(adm.admit(2, 4));
+        assert_eq!(adm.shed, 0);
+        assert_eq!(adm.offered, 2);
+    }
+
+    #[test]
+    fn admission_control_sheds_on_estimated_overload() {
+        let mut adm = AdmissionControl::new(Duration::from_millis(10));
+        adm.observe_service(2_000.0); // 2ms per utterance
+        assert!((adm.budget_us() - 5_000.0).abs() < 1e-9, "half the SLO");
+        // 40 queued × 2ms / 4 slots = 20ms estimated wait > 5ms budget.
+        assert!(!adm.admit(40, 4));
+        // The same backlog with more capacity clears the budget:
+        // 40 × 2ms / 20 = 4ms.
+        assert!(adm.admit(40, 20));
+        assert_eq!(adm.offered, 2);
+        assert_eq!(adm.shed, 1);
+        assert!((adm.shed_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_control_tracks_service_drift() {
+        let mut adm = AdmissionControl::new(Duration::from_millis(10));
+        adm.observe_service(1_000.0);
+        assert!((adm.estimated_wait_us(10, 1) - 10_000.0).abs() < 1e-9);
+        // EWMA pulls toward faster service; NaN and negative observations
+        // are ignored.
+        for _ in 0..50 {
+            adm.observe_service(100.0);
+        }
+        assert!(adm.estimated_wait_us(10, 1) < 2_000.0);
+        let before = adm.estimated_wait_us(10, 1);
+        adm.observe_service(f64::NAN);
+        adm.observe_service(-5.0);
+        assert!((adm.estimated_wait_us(10, 1) - before).abs() < 1e-9);
     }
 }

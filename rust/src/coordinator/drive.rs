@@ -1,0 +1,612 @@
+//! The generic lane driver: one submit/drain/health/scale loop for every
+//! replicated engine.
+//!
+//! [`ServeEngine`](crate::coordinator::engine::ServeEngine) (single-segment
+//! lanes) and [`StackEngine`](crate::coordinator::topology::StackEngine)
+//! (whole topology instances) used to duplicate their submit routing,
+//! completion drain, `serve_all`, health checks, and shutdown/join
+//! bookkeeping nearly verbatim — drift between the two copies is where
+//! bugs lived. [`LaneDriver`] is that loop written once, parameterized
+//! over how a lane is *spawned* (a [`LaneSpawner`] closure the engine
+//! provides); everything after spawn — least-loaded dispatch, ticket
+//! issue, drain, health, elastic scaling, retirement — is shared.
+//!
+//! ## Elastic lanes
+//!
+//! A driver is built with a `min..=max` lane range. `min == max` is the
+//! classic fixed-replica engine and the scaler is inert. With `max > min`
+//! the driver samples occupancy (pending utterances per stream slot) on
+//! every [`LaneDriver::autoscale`] call:
+//!
+//! - sustained **saturation** (every stream slot of every active lane
+//!   claimed, plus backlog) grows a new lane from the engine's pre-built
+//!   stage pool;
+//! - sustained **low occupancy** (≤ 25 % of slots in use) picks the
+//!   least-loaded lane and *drains* it: its queue sender is dropped, the
+//!   worker finishes what it holds and exits, and the driver joins it and
+//!   marks it retired. Draining lanes take no new work but still count
+//!   toward completions.
+//!
+//! Spawning is a closure so the driver never touches a
+//! [`Backend`](crate::runtime::backend::Backend): engines pre-build stage
+//! executors for every lane they may ever run (the pool) while the backend
+//! borrow is live, and the closure turns one pool entry into a running
+//! worker thread. When the pool runs dry the driver simply stops growing.
+//!
+//! ## Lane failures
+//!
+//! Workers never panic on a stage error. They report a [`LaneFailure`] —
+//! lane index plus the pipeline's named `(segment, stage, cause)` record —
+//! to the driver's shared [`StatusBoard`] and exit; `healthy()` then trips
+//! and `serve_all`/`recv` surface the named report instead of a bare
+//! "lane died".
+
+use crate::coordinator::batcher::QueuedUtterance;
+use crate::coordinator::engine::{CompletedUtterance, Ticket};
+use crate::coordinator::metrics::StageTime;
+use crate::coordinator::pipeline::{ClstmPipeline, StageClock, STAGES};
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A named lane failure: which lane, which segment, which stage, and why.
+#[derive(Debug, Clone)]
+pub struct LaneFailure {
+    /// Lane (replica / instance) index.
+    pub lane: usize,
+    /// Segment label (`l0.fwd`, …).
+    pub segment: String,
+    /// Stage label (`stage1`..`stage3`, or `drive` for scheduler-side
+    /// failures like a completion for an unknown slot).
+    pub stage: String,
+    /// The underlying error, stringified.
+    pub cause: String,
+}
+
+impl std::fmt::Display for LaneFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "lane {}: segment {} {} failed: {}",
+            self.lane, self.segment, self.stage, self.cause
+        )
+    }
+}
+
+impl LaneFailure {
+    /// Build the failure record for a lane whose pipeline call errored:
+    /// prefer the pipeline's own named stage record (set when a stage
+    /// thread died on an executor error), fall back to the drive-side
+    /// error with the pipeline's segment label.
+    pub fn from_pipeline(lane: usize, pipe: &ClstmPipeline, err: &anyhow::Error) -> Self {
+        match pipe.failure() {
+            Some(f) => Self {
+                lane,
+                segment: f.seg.to_string(),
+                stage: format!("stage{}", f.stage),
+                cause: f.cause,
+            },
+            None => Self {
+                lane,
+                segment: pipe.segment().to_string(),
+                stage: "drive".into(),
+                cause: format!("{err:#}"),
+            },
+        }
+    }
+}
+
+/// Shared failure board between lane workers and the driver. Workers
+/// report the first failure they hit and exit; the driver's health paths
+/// read it to name the error.
+#[derive(Debug, Default)]
+pub struct StatusBoard {
+    failures: Mutex<Vec<LaneFailure>>,
+}
+
+impl StatusBoard {
+    /// Record a lane failure (workers call this once, then exit).
+    pub fn report(&self, failure: LaneFailure) {
+        if let Ok(mut guard) = self.failures.lock() {
+            guard.push(failure);
+        }
+    }
+
+    /// The first recorded failure, if any.
+    pub fn first(&self) -> Option<LaneFailure> {
+        self.failures.lock().ok().and_then(|g| g.first().cloned())
+    }
+
+    /// Whether no failure has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.failures.lock().map(|g| g.is_empty()).unwrap_or(false)
+    }
+}
+
+/// One utterance queued to a lane worker, with its admission instant (the
+/// queue-wait clock).
+pub struct Job {
+    pub utt: QueuedUtterance,
+    pub submitted: Instant,
+}
+
+/// Everything the driver hands a [`LaneSpawner`] so the new worker can
+/// plug into the shared completion channel, failure board, and load
+/// accounting.
+pub struct LaneSeat {
+    /// Index of the lane being spawned (stable for the driver's lifetime —
+    /// retired lanes keep their index).
+    pub lane: usize,
+    /// Completion channel every lane shares.
+    pub done_tx: Sender<CompletedUtterance>,
+    /// Shared failure board.
+    pub status: Arc<StatusBoard>,
+    /// Outstanding-frame counter (least-loaded dispatch key). The driver
+    /// increments it at submit; the worker decrements at completion.
+    pub load: Arc<AtomicUsize>,
+}
+
+/// What a [`LaneSpawner`] returns: the running worker's endpoints.
+pub struct SpawnedLane {
+    /// Job queue into the worker.
+    pub tx: Sender<Job>,
+    /// Optional wake channel (stack instances block on an "anything
+    /// happened" channel; the driver signals it after every job send).
+    pub wake: Option<Sender<()>>,
+    /// The worker thread.
+    pub handle: std::thread::JoinHandle<()>,
+    /// Stage clocks of every pipeline the lane owns (one for a serve lane,
+    /// one per segment for a stack instance) — aggregated by
+    /// [`LaneDriver::stage_times`].
+    pub clocks: Vec<Arc<StageClock>>,
+}
+
+/// Turns one pre-built lane slot into a running worker. `Ok(None)` means
+/// the engine's stage pool is exhausted — the driver stops growing.
+pub type LaneSpawner = Box<dyn FnMut(LaneSeat) -> Result<Option<SpawnedLane>> + Send>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LaneState {
+    /// Taking new work.
+    Active,
+    /// Queue closed; the worker is finishing what it holds.
+    Draining,
+    /// Worker joined; the slot is kept for stable lane indices.
+    Retired,
+}
+
+struct Lane {
+    tx: Option<Sender<Job>>,
+    wake: Option<Sender<()>>,
+    load: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    state: LaneState,
+}
+
+/// Occupancy threshold (pending / stream slots) above which a scale-up
+/// sample is "hot": every slot claimed plus backlog.
+const SCALE_UP_UTIL: f64 = 1.0;
+/// Occupancy threshold below which a sample is "cold".
+const SCALE_DOWN_UTIL: f64 = 0.25;
+/// Consecutive hot samples before growing a lane — low, so a genuine
+/// overload grows within a few scheduling rounds.
+const SCALE_UP_STREAK: u32 = 3;
+/// Consecutive cold samples before draining a lane — high, so transient
+/// lulls between utterances don't flap lanes (≈ 200 ms of sustained
+/// low occupancy at the sampling interval below).
+const SCALE_DOWN_STREAK: u32 = 200;
+/// Minimum spacing between occupancy samples (rate-gates `autoscale` so
+/// hot drive loops don't turn the streak counters into spin counters).
+const SCALE_INTERVAL: Duration = Duration::from_millis(1);
+
+/// The shared drive core: lanes, tickets, completion drain, health,
+/// elastic scaling. Engines construct one with a [`LaneSpawner`] and
+/// delegate their whole public drive API to it.
+pub struct LaneDriver {
+    lanes: Vec<Lane>,
+    /// Kept so lanes spawned later share the same completion channel.
+    done_tx: Sender<CompletedUtterance>,
+    done_rx: Receiver<CompletedUtterance>,
+    status: Arc<StatusBoard>,
+    spawner: LaneSpawner,
+    stage_clocks: Vec<Arc<StageClock>>,
+    submitted: usize,
+    completed: usize,
+    /// Padded input dim — frames are validated at submit so a bad frame is
+    /// an error here, not a panic inside a lane.
+    in_pad: usize,
+    streams_per_lane: usize,
+    min_lanes: usize,
+    max_lanes: usize,
+    hot_streak: u32,
+    cold_streak: u32,
+    last_sample: Instant,
+    lanes_grown: u64,
+    lanes_retired: u64,
+    pool_dry: bool,
+}
+
+impl LaneDriver {
+    /// Spawn `min_lanes` workers through `spawner` and return the driver.
+    /// `min..=max` is the elastic range; `min == max` disables scaling.
+    pub fn new(
+        min_lanes: usize,
+        max_lanes: usize,
+        streams_per_lane: usize,
+        in_pad: usize,
+        spawner: LaneSpawner,
+    ) -> Result<Self> {
+        let min_lanes = min_lanes.max(1);
+        let max_lanes = max_lanes.max(min_lanes);
+        let (done_tx, done_rx) = channel::<CompletedUtterance>();
+        let mut driver = Self {
+            lanes: Vec::with_capacity(max_lanes),
+            done_tx,
+            done_rx,
+            status: Arc::new(StatusBoard::default()),
+            spawner,
+            stage_clocks: Vec::new(),
+            submitted: 0,
+            completed: 0,
+            in_pad,
+            streams_per_lane: streams_per_lane.max(1),
+            min_lanes,
+            max_lanes,
+            hot_streak: 0,
+            cold_streak: 0,
+            last_sample: Instant::now(),
+            lanes_grown: 0,
+            lanes_retired: 0,
+            pool_dry: false,
+        };
+        for _ in 0..min_lanes {
+            ensure!(
+                driver.grow()?,
+                "lane spawner ran dry before the minimum {} lane(s) existed",
+                min_lanes
+            );
+        }
+        Ok(driver)
+    }
+
+    /// Spawn one more lane. `Ok(false)` when the spawner's pool is dry.
+    fn grow(&mut self) -> Result<bool> {
+        if self.pool_dry {
+            return Ok(false);
+        }
+        let lane = self.lanes.len();
+        let load = Arc::new(AtomicUsize::new(0));
+        let seat = LaneSeat {
+            lane,
+            done_tx: self.done_tx.clone(),
+            status: Arc::clone(&self.status),
+            load: Arc::clone(&load),
+        };
+        match (self.spawner)(seat)? {
+            Some(spawned) => {
+                self.stage_clocks.extend(spawned.clocks);
+                self.lanes.push(Lane {
+                    tx: Some(spawned.tx),
+                    wake: spawned.wake,
+                    load,
+                    handle: Some(spawned.handle),
+                    state: LaneState::Active,
+                });
+                self.lanes_grown += 1;
+                Ok(true)
+            }
+            None => {
+                self.pool_dry = true;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Close the least-loaded active lane's queue: the worker finishes
+    /// what it holds and exits, and [`Self::reap`] joins it.
+    fn drain_one(&mut self) {
+        let Some(idx) = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.state == LaneState::Active)
+            .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+        else {
+            return;
+        };
+        let lane = &mut self.lanes[idx];
+        lane.tx = None; // closes the queue; the worker drains and exits
+        lane.state = LaneState::Draining;
+    }
+
+    /// Join draining workers that have finished; their slots become
+    /// `Retired` (indices stay stable, clocks keep counting historically).
+    fn reap(&mut self) {
+        for lane in self.lanes.iter_mut() {
+            if lane.state == LaneState::Draining
+                && lane.handle.as_ref().is_some_and(|h| h.is_finished())
+            {
+                if let Some(h) = lane.handle.take() {
+                    let _ = h.join();
+                }
+                lane.state = LaneState::Retired;
+                self.lanes_retired += 1;
+            }
+        }
+    }
+
+    /// One occupancy sample of the elastic policy; a no-op for fixed
+    /// (`min == max`) drivers and between sampling intervals. Drive loops
+    /// call this once per iteration (`serve_all` already does).
+    pub fn autoscale(&mut self) -> Result<()> {
+        if self.max_lanes <= self.min_lanes {
+            return Ok(());
+        }
+        self.reap();
+        if self.last_sample.elapsed() < SCALE_INTERVAL {
+            return Ok(());
+        }
+        self.last_sample = Instant::now();
+        let active = self.active_lanes();
+        let slots = (active * self.streams_per_lane).max(1);
+        let util = self.pending() as f64 / slots as f64;
+        if util >= SCALE_UP_UTIL {
+            self.cold_streak = 0;
+            self.hot_streak += 1;
+            if self.hot_streak >= SCALE_UP_STREAK && active < self.max_lanes {
+                self.hot_streak = 0;
+                self.grow()?;
+            }
+        } else if util <= SCALE_DOWN_UTIL {
+            self.hot_streak = 0;
+            self.cold_streak += 1;
+            if self.cold_streak >= SCALE_DOWN_STREAK && active > self.min_lanes {
+                self.cold_streak = 0;
+                self.drain_one();
+            }
+        } else {
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+        }
+        Ok(())
+    }
+
+    /// Lanes currently accepting work.
+    pub fn active_lanes(&self) -> usize {
+        self.lanes
+            .iter()
+            .filter(|l| l.state == LaneState::Active)
+            .count()
+    }
+
+    /// Lanes grown beyond the initial minimum, over the driver's lifetime.
+    pub fn lanes_grown_beyond_min(&self) -> u64 {
+        self.lanes_grown.saturating_sub(self.min_lanes as u64)
+    }
+
+    /// Lanes drained and retired, over the driver's lifetime.
+    pub fn lanes_retired(&self) -> u64 {
+        self.lanes_retired
+    }
+
+    /// Utterance streams interleaved per lane.
+    pub fn streams_per_lane(&self) -> usize {
+        self.streams_per_lane
+    }
+
+    /// Utterances submitted but not yet drained.
+    pub fn pending(&self) -> usize {
+        self.submitted - self.completed
+    }
+
+    /// Outstanding frames across all lanes (load snapshot).
+    pub fn load(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|l| l.load.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Per-stage service-time split summed across every pipeline the
+    /// driver ever spawned (retired lanes' history included).
+    pub fn stage_times(&self) -> [StageTime; STAGES] {
+        let mut total = [StageTime::default(); STAGES];
+        for clock in &self.stage_clocks {
+            for (t, s) in total.iter_mut().zip(clock.snapshot()) {
+                t.absorb(&s);
+            }
+        }
+        total
+    }
+
+    /// Whether the engine can still make progress: no reported lane
+    /// failure, every active lane's worker alive, and every draining
+    /// worker either still running or fully drained.
+    pub fn healthy(&self) -> bool {
+        if !self.status.is_empty() {
+            return false;
+        }
+        self.lanes.iter().all(|l| match l.state {
+            LaneState::Active => l.handle.as_ref().is_some_and(|h| !h.is_finished()),
+            LaneState::Draining => {
+                !l.handle.as_ref().is_some_and(|h| h.is_finished())
+                    || l.load.load(Ordering::Relaxed) == 0
+            }
+            LaneState::Retired => true,
+        })
+    }
+
+    /// The health failure as a named report: the first recorded
+    /// `(lane, segment, stage, cause)` when a worker reported one, else
+    /// the generic dead-lane line.
+    pub fn health_report(&self) -> String {
+        match self.status.first() {
+            Some(f) => format!("{f} ({} utterances outstanding)", self.pending()),
+            None => format!(
+                "engine lane died with {} utterances outstanding",
+                self.pending()
+            ),
+        }
+    }
+
+    /// Admission bound used by the drive loops: roughly two utterance
+    /// generations in flight per active stream slot, so lanes backfill
+    /// instantly while a bounded waiting room keeps its backpressure
+    /// signal.
+    pub fn admit_limit(&self) -> usize {
+        2 * self.active_lanes().max(1) * self.streams_per_lane
+    }
+
+    /// Non-blocking submit with the queue-wait clock starting now.
+    pub fn submit(&mut self, utt: QueuedUtterance) -> Result<Ticket> {
+        self.submit_arrived(utt, Instant::now())
+    }
+
+    /// Non-blocking submit: route `utt` to the least-loaded active lane.
+    /// `arrived` is the utterance's admission instant, so the reported
+    /// queue-wait split covers upstream waiting-room time too.
+    pub fn submit_arrived(&mut self, utt: QueuedUtterance, arrived: Instant) -> Result<Ticket> {
+        ensure!(
+            utt.frames.iter().all(|f| f.len() <= self.in_pad),
+            "utterance {} has a frame longer than the padded input dim {}",
+            utt.id,
+            self.in_pad
+        );
+        let lane = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.state == LaneState::Active && l.tx.is_some())
+            .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .context("engine has no active lanes")?;
+        let utt_id = utt.id;
+        let cost = utt.frames.len().max(1);
+        let lane_ref = &self.lanes[lane];
+        let tx = lane_ref.tx.as_ref().context("engine already shut down")?;
+        // Count the load before the send (the lane decrements it at
+        // completion, so adding after could race to underflow) and roll it
+        // back if the send fails, so a dead lane cannot permanently skew
+        // least-loaded routing.
+        lane_ref.load.fetch_add(cost, Ordering::Relaxed);
+        let sent = tx.send(Job {
+            utt,
+            submitted: arrived,
+        });
+        if sent.is_err() {
+            lane_ref.load.fetch_sub(cost, Ordering::Relaxed);
+            anyhow::bail!("{}", self.health_report());
+        }
+        // Wake the lane scheduler in case it is blocked waiting for
+        // segment completions — new work re-opens admission immediately.
+        if let Some(wake) = &lane_ref.wake {
+            let _ = wake.send(());
+        }
+        self.submitted += 1;
+        Ok(Ticket { utt_id, lane })
+    }
+
+    /// Block for the next completed utterance; `None` when nothing is
+    /// pending or a lane died (a dead lane's utterances can never
+    /// complete, so blocking on them would hang forever).
+    pub fn recv(&mut self) -> Option<CompletedUtterance> {
+        while self.pending() > 0 {
+            match self.done_rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(c) => {
+                    self.completed += 1;
+                    return Some(c);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if !self.healthy() {
+                        return None;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+        None
+    }
+
+    /// Drain one completed utterance without blocking.
+    pub fn try_recv(&mut self) -> Option<CompletedUtterance> {
+        match self.done_rx.try_recv() {
+            Ok(c) => {
+                self.completed += 1;
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Block up to `timeout` for the next completion (open-loop drivers
+    /// interleave draining with arrival generation).
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Option<CompletedUtterance> {
+        if self.pending() == 0 {
+            return None;
+        }
+        match self.done_rx.recv_timeout(timeout) {
+            Ok(c) => {
+                self.completed += 1;
+                Some(c)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Closed-loop convenience driver: submit every utterance with bounded
+    /// admission, drain until all complete, and return the completions.
+    /// Runs the elastic policy each iteration; errors (with the named lane
+    /// failure when one was reported) instead of hanging if a lane dies.
+    pub fn serve_all(
+        &mut self,
+        utts: impl IntoIterator<Item = QueuedUtterance>,
+    ) -> Result<Vec<CompletedUtterance>> {
+        let mut queue: VecDeque<QueuedUtterance> = utts.into_iter().collect();
+        let total = queue.len();
+        let mut done = Vec::with_capacity(total);
+        while done.len() < total {
+            while self.pending() < self.admit_limit() {
+                let Some(u) = queue.pop_front() else { break };
+                self.submit(u)?;
+            }
+            self.autoscale()?;
+            match self.recv_timeout(Duration::from_millis(50)) {
+                Some(c) => done.push(c),
+                None => ensure!(self.healthy(), "{}", self.health_report()),
+            }
+        }
+        Ok(done)
+    }
+
+    /// Collect every outstanding completion, then shut the lanes down.
+    pub fn finish(&mut self) -> Vec<CompletedUtterance> {
+        let mut out = Vec::new();
+        while let Some(c) = self.recv() {
+            out.push(c);
+        }
+        self.shutdown();
+        out
+    }
+
+    /// Close every lane queue and join every worker.
+    pub fn shutdown(&mut self) {
+        for l in self.lanes.iter_mut() {
+            l.tx = None; // closes the lane queue
+        }
+        for l in self.lanes.iter_mut() {
+            if let Some(h) = l.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for LaneDriver {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

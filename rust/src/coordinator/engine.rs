@@ -19,23 +19,32 @@
 //!   least-loaded lane (outstanding frames) and returns a [`Ticket`];
 //!   completions are drained from a channel via [`ServeEngine::recv`] /
 //!   [`ServeEngine::try_recv`].
+//!
+//! The submit routing, completion drain, health checks, and elastic
+//! scaling all live in the shared [`LaneDriver`] — this module only
+//! defines *what a lane is* (one single-segment pipeline and the
+//! [`lane_worker`] scheduler that interleaves streams through it) and the
+//! engine build step that pre-builds stage executors for every lane the
+//! driver may ever grow.
 
 use crate::coordinator::batcher::QueuedUtterance;
+use crate::coordinator::drive::{Job, LaneDriver, LaneFailure, LaneSeat, SpawnedLane, StatusBoard};
 use crate::coordinator::metrics::StageTime;
-use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig, StageClock, STAGES};
+use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig, STAGES};
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::{Backend, SegmentId};
-use anyhow::{ensure, Context, Result};
+use crate::runtime::backend::{Backend, SegmentId, StageSet};
+use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Engine shape knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
-    /// Pipeline lanes (replicas). Clamped to ≥ 1.
+    /// Pipeline lanes (replicas); with elastic scaling this is the
+    /// *minimum* the engine never drops below. Clamped to ≥ 1.
     pub replicas: usize,
     /// Utterance streams interleaved per lane (≥ 3 keeps a lane's 3-stage
     /// pipeline full, §6.2). Clamped to ≥ 1.
@@ -43,6 +52,11 @@ pub struct EngineConfig {
     /// Per-lane pipeline channel depth (see
     /// [`PipelineConfig::channel_depth`]).
     pub channel_depth: usize,
+    /// Upper bound for elastic lane scaling. `0` (the default) means
+    /// "fixed at `replicas`" — the engine grows lanes under sustained
+    /// saturation and drains them under sustained low occupancy only when
+    /// this exceeds `replicas`.
+    pub max_replicas: usize,
 }
 
 impl Default for EngineConfig {
@@ -51,6 +65,7 @@ impl Default for EngineConfig {
             replicas: 1,
             streams_per_lane: 4,
             channel_depth: 2,
+            max_replicas: 0,
         }
     }
 }
@@ -82,37 +97,17 @@ pub struct CompletedUtterance {
     pub frame_latency_us: Vec<f64>,
 }
 
-/// One utterance queued to a lane.
-struct LaneJob {
-    utt: QueuedUtterance,
-    submitted: Instant,
-}
-
-struct LaneHandle {
-    tx: Option<Sender<LaneJob>>,
-    /// Outstanding frames routed to this lane (least-loaded dispatch key).
-    load: Arc<AtomicUsize>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
 /// N pipeline lanes over one shared weight preparation.
 pub struct ServeEngine {
-    lanes: Vec<LaneHandle>,
-    done_rx: Receiver<CompletedUtterance>,
-    submitted: usize,
-    completed: usize,
+    driver: LaneDriver,
     backend_name: String,
-    streams_per_lane: usize,
-    /// Padded input dim — frames are validated at submit so a bad frame is
-    /// an error here, not a panic inside a lane.
-    in_pad: usize,
-    /// Per-lane pipeline stage clocks, for the serve summary's stage split.
-    stage_clocks: Vec<Arc<StageClock>>,
 }
 
 impl ServeEngine {
     /// Prepare `weights` once on `backend` and launch `cfg.replicas` lanes
-    /// over the shared prepared weights.
+    /// over the shared prepared weights. With `cfg.max_replicas >
+    /// cfg.replicas` the engine pre-builds stage executors for every lane
+    /// it may ever grow and scales elastically between the two bounds.
     ///
     /// Errors on stacked/bidirectional specs: a `ServeEngine` lane is one
     /// 3-stage pipeline, so serving such a model here would silently
@@ -129,61 +124,75 @@ impl ServeEngine {
         );
         let prepared = backend.prepare(weights)?;
         let in_pad = prepared.spec.pad(prepared.spec.layer_input_dim(0));
-        let (done_tx, done_rx) = channel::<CompletedUtterance>();
         let replicas = cfg.replicas.max(1);
+        let max = cfg.max_replicas.max(replicas);
         let streams = cfg.streams_per_lane.max(1);
-        let mut lanes = Vec::with_capacity(replicas);
-        let mut stage_clocks = Vec::with_capacity(replicas);
-        for lane in 0..replicas {
-            let pipe = ClstmPipeline::with_prepared(
-                backend,
-                &prepared,
-                PipelineConfig {
-                    channel_depth: cfg.channel_depth,
-                },
+        // Pre-build the stage-executor pool while the backend borrow is
+        // live: one entry per lane the driver may ever spawn — the initial
+        // max plus one regrow per possible retirement. A dry pool just
+        // stops growth.
+        let pool_size = max + (max - replicas);
+        let mut pool: VecDeque<StageSet> = VecDeque::with_capacity(pool_size);
+        for _ in 0..pool_size {
+            pool.push_back(backend.build_stages(&prepared, SegmentId::LAYER0_FWD)?);
+        }
+        let spec = prepared.spec.clone();
+        let pipe_cfg = PipelineConfig {
+            channel_depth: cfg.channel_depth,
+        };
+        let spawner = Box::new(move |seat: LaneSeat| -> Result<Option<SpawnedLane>> {
+            let Some(stages) = pool.pop_front() else {
+                return Ok(None);
+            };
+            let pipe = ClstmPipeline::from_stage_set(
+                spec.clone(),
+                stages,
+                pipe_cfg,
                 SegmentId::LAYER0_FWD,
+                None,
             )?;
-            stage_clocks.push(pipe.stage_clock());
-            let (tx, rx) = channel::<LaneJob>();
-            let load = Arc::new(AtomicUsize::new(0));
-            let worker_load = Arc::clone(&load);
-            let worker_done = done_tx.clone();
+            let clocks = vec![pipe.stage_clock()];
+            let (tx, rx) = channel::<Job>();
+            let LaneSeat {
+                lane,
+                done_tx,
+                status,
+                load,
+            } = seat;
             let handle = std::thread::Builder::new()
                 .name(format!("clstm-lane{lane}"))
-                .spawn(move || lane_worker(lane, pipe, rx, worker_done, worker_load, streams))?;
-            lanes.push(LaneHandle {
-                tx: Some(tx),
-                load,
-                handle: Some(handle),
-            });
-        }
+                .spawn(move || lane_worker(lane, pipe, rx, done_tx, load, streams, status))?;
+            Ok(Some(SpawnedLane {
+                tx,
+                wake: None,
+                handle,
+                clocks,
+            }))
+        });
         Ok(Self {
-            lanes,
-            done_rx,
-            submitted: 0,
-            completed: 0,
+            driver: LaneDriver::new(replicas, max, streams, in_pad, spawner)?,
             backend_name: backend.name(),
-            streams_per_lane: streams,
-            in_pad,
-            stage_clocks,
         })
     }
 
-    /// Number of lanes.
+    /// Number of lanes currently accepting work.
     pub fn replicas(&self) -> usize {
-        self.lanes.len()
+        self.driver.active_lanes()
+    }
+
+    /// Lanes grown beyond / retired below the configured minimum, over the
+    /// engine's lifetime (the serve summary's autoscale line).
+    pub fn scale_events(&self) -> (u64, u64) {
+        (
+            self.driver.lanes_grown_beyond_min(),
+            self.driver.lanes_retired(),
+        )
     }
 
     /// Per-stage service-time split summed across every lane's pipeline
     /// (the serve summary's `s1/s2/s3` µs-per-frame line).
     pub fn stage_times(&self) -> [StageTime; STAGES] {
-        let mut total = [StageTime::default(); STAGES];
-        for clock in &self.stage_clocks {
-            for (t, s) in total.iter_mut().zip(clock.snapshot()) {
-                t.absorb(&s);
-            }
-        }
-        total
+        self.driver.stage_times()
     }
 
     /// Name of the backend serving the lanes.
@@ -193,30 +202,36 @@ impl ServeEngine {
 
     /// Utterances submitted but not yet drained.
     pub fn pending(&self) -> usize {
-        self.submitted - self.completed
+        self.driver.pending()
     }
 
     /// Outstanding frames across all lanes (load snapshot).
     pub fn load(&self) -> usize {
-        self.lanes
-            .iter()
-            .map(|l| l.load.load(Ordering::Relaxed))
-            .sum()
+        self.driver.load()
     }
 
     /// Whether every lane worker is still alive (a dead lane means a bug —
     /// drivers should bail rather than wait forever on its completions).
     pub fn healthy(&self) -> bool {
-        self.lanes
-            .iter()
-            .all(|l| l.handle.as_ref().is_some_and(|h| !h.is_finished()))
+        self.driver.healthy()
     }
 
-    /// Admission bound used by the drive loops: roughly two utterance
-    /// generations in flight per stream slot, so lanes backfill instantly
-    /// while a bounded waiting room keeps its backpressure signal.
+    /// The named lane-failure report behind an unhealthy engine.
+    pub fn health_report(&self) -> String {
+        self.driver.health_report()
+    }
+
+    /// Admission bound used by the drive loops (see
+    /// [`LaneDriver::admit_limit`]).
     pub fn admit_limit(&self) -> usize {
-        2 * self.replicas() * self.streams_per_lane
+        self.driver.admit_limit()
+    }
+
+    /// One elastic-scaling occupancy sample (no-op on fixed-replica
+    /// engines). Open-loop drive loops call this once per iteration;
+    /// [`Self::serve_all`] already does.
+    pub fn autoscale(&mut self) -> Result<()> {
+        self.driver.autoscale()
     }
 
     /// Non-blocking submit: route `utt` to the least-loaded lane. The lane
@@ -226,92 +241,30 @@ impl ServeEngine {
     ///
     /// [`Batcher`]: crate::coordinator::batcher::Batcher
     pub fn submit(&mut self, utt: QueuedUtterance) -> Result<Ticket> {
-        self.submit_arrived(utt, Instant::now())
+        self.driver.submit(utt)
     }
 
     /// Submit with an explicit arrival instant, so the reported queue-wait
     /// split covers upstream waiting-room time too — under open-loop
     /// overload the unbounded part of the wait is exactly there.
     pub fn submit_arrived(&mut self, utt: QueuedUtterance, arrived: Instant) -> Result<Ticket> {
-        ensure!(
-            utt.frames.iter().all(|f| f.len() <= self.in_pad),
-            "utterance {} has a frame longer than the padded input dim {}",
-            utt.id,
-            self.in_pad
-        );
-        let lane = self
-            .lanes
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
-            .map(|(i, _)| i)
-            .context("engine has no lanes")?;
-        let utt_id = utt.id;
-        let cost = utt.frames.len().max(1);
-        let lane_ref = &self.lanes[lane];
-        let tx = lane_ref.tx.as_ref().context("engine already shut down")?;
-        // Count the load before the send (the lane decrements it at
-        // completion, so adding after could race to underflow) and roll it
-        // back if the send fails, so a dead lane cannot permanently skew
-        // least-loaded routing.
-        lane_ref.load.fetch_add(cost, Ordering::Relaxed);
-        let sent = tx.send(LaneJob {
-            utt,
-            submitted: arrived,
-        });
-        if sent.is_err() {
-            lane_ref.load.fetch_sub(cost, Ordering::Relaxed);
-            anyhow::bail!("lane {lane} worker is gone");
-        }
-        self.submitted += 1;
-        Ok(Ticket { utt_id, lane })
+        self.driver.submit_arrived(utt, arrived)
     }
 
     /// Block for the next completed utterance; `None` when nothing is
-    /// pending or a lane died (a dead lane's utterances can never
-    /// complete, so blocking on them would hang forever).
+    /// pending or a lane died.
     pub fn recv(&mut self) -> Option<CompletedUtterance> {
-        while self.pending() > 0 {
-            match self.done_rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(c) => {
-                    self.completed += 1;
-                    return Some(c);
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    if !self.healthy() {
-                        return None;
-                    }
-                }
-                Err(RecvTimeoutError::Disconnected) => return None,
-            }
-        }
-        None
+        self.driver.recv()
     }
 
     /// Drain one completed utterance without blocking.
     pub fn try_recv(&mut self) -> Option<CompletedUtterance> {
-        match self.done_rx.try_recv() {
-            Ok(c) => {
-                self.completed += 1;
-                Some(c)
-            }
-            Err(_) => None,
-        }
+        self.driver.try_recv()
     }
 
-    /// Block up to `timeout` for the next completion (open-loop drivers
-    /// interleave draining with arrival generation).
+    /// Block up to `timeout` for the next completion.
     pub fn recv_timeout(&mut self, timeout: std::time::Duration) -> Option<CompletedUtterance> {
-        if self.pending() == 0 {
-            return None;
-        }
-        match self.done_rx.recv_timeout(timeout) {
-            Ok(c) => {
-                self.completed += 1;
-                Some(c)
-            }
-            Err(_) => None,
-        }
+        self.driver.recv_timeout(timeout)
     }
 
     /// Closed-loop convenience driver: submit every utterance with bounded
@@ -321,52 +274,12 @@ impl ServeEngine {
         &mut self,
         utts: impl IntoIterator<Item = QueuedUtterance>,
     ) -> Result<Vec<CompletedUtterance>> {
-        let mut queue: VecDeque<QueuedUtterance> = utts.into_iter().collect();
-        let total = queue.len();
-        let limit = self.admit_limit();
-        let mut done = Vec::with_capacity(total);
-        while done.len() < total {
-            while self.pending() < limit {
-                let Some(u) = queue.pop_front() else { break };
-                self.submit(u)?;
-            }
-            match self.recv_timeout(Duration::from_millis(50)) {
-                Some(c) => done.push(c),
-                None => ensure!(
-                    self.healthy(),
-                    "engine lane died with {} utterances outstanding",
-                    self.pending()
-                ),
-            }
-        }
-        Ok(done)
+        self.driver.serve_all(utts)
     }
 
     /// Collect every outstanding completion, then shut the lanes down.
     pub fn finish(mut self) -> Vec<CompletedUtterance> {
-        let mut out = Vec::new();
-        while let Some(c) = self.recv() {
-            out.push(c);
-        }
-        self.shutdown_lanes();
-        out
-    }
-
-    fn shutdown_lanes(&mut self) {
-        for l in self.lanes.iter_mut() {
-            l.tx = None; // closes the lane queue
-        }
-        for l in self.lanes.iter_mut() {
-            if let Some(h) = l.handle.take() {
-                let _ = h.join();
-            }
-        }
-    }
-}
-
-impl Drop for ServeEngine {
-    fn drop(&mut self) {
-        self.shutdown_lanes();
+        self.driver.finish()
     }
 }
 
@@ -388,13 +301,17 @@ struct ActiveUtt {
 
 /// Lane scheduler: interleave up to `max_streams` utterances through one
 /// pipeline, admitting from `rx` the moment a slot frees (no wave barrier).
+/// A pipeline error is reported to the shared [`StatusBoard`] — with the
+/// failing stage's `(segment, stage, cause)` record when a stage thread
+/// died — and the worker exits instead of panicking.
 fn lane_worker(
     lane: usize,
     mut pipe: ClstmPipeline,
-    rx: Receiver<LaneJob>,
+    rx: Receiver<Job>,
     done_tx: Sender<CompletedUtterance>,
     load: Arc<AtomicUsize>,
     max_streams: usize,
+    status: Arc<StatusBoard>,
 ) {
     let out_pad = pipe.out_pad();
     let hidden = pipe.hidden();
@@ -402,7 +319,7 @@ fn lane_worker(
     let mut active = 0usize;
     let mut rx_open = true;
 
-    loop {
+    'outer: loop {
         // Continuous admission into free stream slots. Blocks only when the
         // lane is fully idle; otherwise drains whatever is queued.
         while rx_open && active < max_streams {
@@ -474,8 +391,10 @@ fn lane_worker(
                 continue;
             }
             let t = au.next_t;
-            pipe.dispatch(slot, t, &au.utt.frames[t], &au.y_state, &au.c_state)
-                .expect("lane dispatch");
+            if let Err(e) = pipe.dispatch(slot, t, &au.utt.frames[t], &au.y_state, &au.c_state) {
+                status.report(LaneFailure::from_pipeline(lane, &pipe, &e));
+                break 'outer;
+            }
             if au.first_dispatch.is_none() {
                 au.first_dispatch = Some(Instant::now());
             }
@@ -487,7 +406,13 @@ fn lane_worker(
         }
 
         // Harvest at least one completion (block), then drain what's ready.
-        let mut done = Some(pipe.recv_done().expect("lane recv"));
+        let mut done = match pipe.recv_done() {
+            Ok(d) => Some(d),
+            Err(e) => {
+                status.report(LaneFailure::from_pipeline(lane, &pipe, &e));
+                break 'outer;
+            }
+        };
         while let Some(d) = done {
             let slot = d.stream();
             let finished = {
@@ -516,7 +441,13 @@ fn lane_worker(
                     utt: au.utt,
                 });
             }
-            done = pipe.try_recv_done().expect("lane try_recv");
+            done = match pipe.try_recv_done() {
+                Ok(d) => d,
+                Err(e) => {
+                    status.report(LaneFailure::from_pipeline(lane, &pipe, &e));
+                    break 'outer;
+                }
+            };
         }
     }
     pipe.shutdown();

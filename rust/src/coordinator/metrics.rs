@@ -35,19 +35,28 @@ impl LatencySeries {
     fn sorted(&self) -> &[f64] {
         self.sorted.get_or_init(|| {
             let mut xs = self.samples.clone();
-            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // `total_cmp`, not `partial_cmp(..).unwrap()`: a single NaN
+            // sample (e.g. a zero-duration clock edge divided out) must
+            // not panic the summary after an otherwise-successful run.
+            // NaN sorts last under the IEEE-754 total order, so it can
+            // only surface in the extreme tail percentile.
+            xs.sort_by(f64::total_cmp);
             xs
         })
     }
 
-    /// Nearest-rank percentile over the cached sorted snapshot (no re-sort).
+    /// True nearest-rank percentile over the cached sorted snapshot (no
+    /// re-sort): the smallest sample with at least `p·N` samples at or
+    /// below it, i.e. rank `⌈p·N⌉` (1-based). The old
+    /// `round((N−1)·p)` linear index under-reported tail percentiles —
+    /// e.g. p99 of 50 samples picked rank 49 of 50 instead of 50.
     fn percentile(&self, p: f64) -> f64 {
         let xs = self.sorted();
         if xs.is_empty() {
             return 0.0;
         }
-        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
-        xs[idx]
+        let rank = (p * xs.len() as f64).ceil() as usize;
+        xs[rank.clamp(1, xs.len()) - 1]
     }
 
     fn mean(&self) -> f64 {
@@ -123,6 +132,17 @@ pub struct Metrics {
     /// Per-stage service-time split (stage 1/2/3), summed across all
     /// pipelines and replicas; all-zero when the engine did not report it.
     pub stage_times: [StageTime; 3],
+    /// Utterances offered to SLO admission control (0 when no `--slo-ms`
+    /// was configured — the admission line is then omitted from
+    /// [`Self::summary`]).
+    pub offered: u64,
+    /// Utterances shed by admission control (deadline-aware load
+    /// shedding); shed utterances are *not* counted in `utterances`.
+    pub shed: u64,
+    /// Lanes grown beyond the configured minimum by the elastic engine.
+    pub lanes_grown: u64,
+    /// Lanes drained and retired by the elastic engine.
+    pub lanes_retired: u64,
 }
 
 impl Metrics {
@@ -189,6 +209,10 @@ impl Metrics {
         self.frames += other.frames;
         self.utterances += other.utterances;
         self.wall += other.wall;
+        self.offered += other.offered;
+        self.shed += other.shed;
+        self.lanes_grown += other.lanes_grown;
+        self.lanes_retired += other.lanes_retired;
         self.frame_latency
             .extend(other.frame_latency.samples.iter().copied());
         self.queue_wait
@@ -208,6 +232,16 @@ impl Metrics {
                 }
                 None => self.segments.push(seg.clone()),
             }
+        }
+    }
+
+    /// Fraction of offered utterances shed by admission control
+    /// (0.0 when admission control was off).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
         }
     }
 
@@ -286,6 +320,20 @@ impl Metrics {
                 self.stage_times[0].mean_us(),
                 self.stage_times[1].mean_us(),
                 self.stage_times[2].mean_us()
+            ));
+        }
+        if self.offered > 0 {
+            s.push_str(&format!(
+                "; admission: shed {}/{} ({:.1}%)",
+                self.shed,
+                self.offered,
+                self.shed_rate() * 100.0
+            ));
+        }
+        if self.lanes_grown > 0 || self.lanes_retired > 0 {
+            s.push_str(&format!(
+                "; autoscale: +{} grown / -{} retired",
+                self.lanes_grown, self.lanes_retired
             ));
         }
         if !self.segments.is_empty() {
@@ -404,6 +452,63 @@ mod tests {
         assert!((a.stage_times[0].mean_us() - 50.0).abs() < 1e-9);
         assert!((a.stage_times[1].mean_us() - 20.0).abs() < 1e-9);
         assert_eq!(StageTime::default().mean_us(), 0.0);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        // A zero-duration clock edge can produce a NaN sample; the summary
+        // (which sorts) must survive it. NaN sorts last under total_cmp,
+        // so finite percentiles stay meaningful.
+        let mut m = Metrics::default();
+        m.extend_frame_latency([3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(m.latency_p50_us(), 2.0);
+        assert!(m.summary().contains("FPS"));
+        // An all-NaN and an empty population are both safe.
+        let mut all_nan = Metrics::default();
+        all_nan.extend_frame_latency([f64::NAN, f64::NAN]);
+        assert!(all_nan.latency_p99_us().is_nan());
+        assert!(!all_nan.summary().is_empty());
+        assert_eq!(Metrics::default().latency_p99_us(), 0.0);
+    }
+
+    #[test]
+    fn percentile_is_true_nearest_rank() {
+        let mut m = Metrics::default();
+        m.extend_frame_latency((1..=50).map(|i| i as f64));
+        // Nearest rank ⌈p·N⌉: p99 of 50 samples is rank ⌈49.5⌉ = 50 →
+        // the maximum (the old (N−1)-linear-index formula said 49).
+        assert_eq!(m.latency_p99_us(), 50.0);
+        assert_eq!(m.latency_p50_us(), 25.0);
+        // p100 clamps to the maximum, p0 to the minimum.
+        let one = Metrics::default();
+        assert_eq!(one.latency_p50_us(), 0.0);
+        let mut two = Metrics::default();
+        two.extend_frame_latency([10.0, 20.0]);
+        assert_eq!(two.latency_p50_us(), 10.0);
+        assert_eq!(two.latency_p99_us(), 20.0);
+    }
+
+    #[test]
+    fn shed_and_autoscale_counters_in_summary_and_merge() {
+        let mut m = Metrics::default();
+        // No admission control → no admission line.
+        assert!(!m.summary().contains("admission"));
+        assert_eq!(m.shed_rate(), 0.0);
+        m.offered = 40;
+        m.shed = 10;
+        m.lanes_grown = 2;
+        m.lanes_retired = 1;
+        assert!((m.shed_rate() - 0.25).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("admission: shed 10/40 (25.0%)"), "{s}");
+        assert!(s.contains("autoscale: +2 grown / -1 retired"), "{s}");
+        let mut other = Metrics::default();
+        other.offered = 10;
+        other.shed = 5;
+        m.merge(&other);
+        assert_eq!(m.offered, 50);
+        assert_eq!(m.shed, 15);
+        assert_eq!(m.lanes_grown, 2);
     }
 
     #[test]

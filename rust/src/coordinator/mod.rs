@@ -21,6 +21,9 @@
 //! - [`engine`] — the replicated single-segment [`ServeEngine`]: N lanes,
 //!   non-blocking submit, completion channel (errors on stacked specs —
 //!   the stack engine owns those).
+//! - [`drive`] — the generic lane driver both engines instantiate: one
+//!   shared submit/drain/health/autoscale loop, parameterized over how a
+//!   lane is spawned, with named lane-failure reporting.
 //! - [`batcher`] — utterance admission, backpressure, the bounded waiting
 //!   room in front of the engine.
 //! - [`metrics`] — latency/throughput accounting (queue-wait vs service
@@ -30,15 +33,17 @@
 //!   over the full stack.
 
 pub mod batcher;
+pub mod drive;
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
 pub mod topology;
 
-pub use batcher::{Batcher, QueuedUtterance};
+pub use batcher::{AdmissionControl, Batcher, QueuedUtterance};
+pub use drive::{LaneDriver, LaneFailure};
 pub use engine::{CompletedUtterance, EngineConfig, ServeEngine, Ticket};
 pub use metrics::Metrics;
-pub use pipeline::{ClstmPipeline, PipelineConfig};
+pub use pipeline::{ClstmPipeline, PipelineConfig, StageFailure};
 pub use server::{serve_workload, Arrival, ServeOptions, ServeReport};
 pub use topology::{StackEngine, StackTopology};

@@ -27,11 +27,11 @@
 use crate::coordinator::metrics::{Metrics, StageTime};
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor};
+use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor, StageSet};
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Stages in the pipeline (Fig 7: gate convolutions, element-wise cluster,
@@ -87,6 +87,38 @@ impl StageClock {
         })
     }
 }
+
+/// A named stage failure: which stage of which segment died, and why.
+///
+/// Stage threads record the first failure here instead of panicking, then
+/// exit; the channel-drop cascade tears the rest of the pipeline down and
+/// the dispatch/recv paths surface this record to the caller — so a stage
+/// error reads "segment l0.bwd stage2 failed: ..." instead of an unnamed
+/// dead thread.
+#[derive(Debug, Clone)]
+pub struct StageFailure {
+    /// Segment whose pipeline failed.
+    pub seg: SegmentId,
+    /// 1-based stage index (1 = gate convolutions, 2 = element-wise
+    /// cluster, 3 = projection).
+    pub stage: usize,
+    /// The underlying error, stringified.
+    pub cause: String,
+}
+
+impl std::fmt::Display for StageFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "segment {} stage{} failed: {}",
+            self.seg, self.stage, self.cause
+        )
+    }
+}
+
+/// Shared first-failure slot between the three stage threads and the
+/// pipeline handle.
+type FailureSlot = Arc<Mutex<Option<StageFailure>>>;
 
 /// A frame travelling through the pipeline. All buffers are allocated once
 /// at pipeline build time and recycled through the message loop.
@@ -156,6 +188,7 @@ pub struct ClstmPipeline {
     out_pad: usize,
     hidden: usize,
     clock: Arc<StageClock>,
+    failure: FailureSlot,
 }
 
 impl ClstmPipeline {
@@ -212,6 +245,20 @@ impl ClstmPipeline {
     ) -> Result<Self> {
         let spec = prepared.spec.clone();
         let stages = backend.build_stages(prepared, seg)?;
+        Self::from_stage_set(spec, stages, cfg, seg, notify)
+    }
+
+    /// Launch a pipeline from already-built stage executors. This is the
+    /// primitive behind [`Self::with_prepared_notify`]; elastic engines
+    /// pre-build a pool of [`StageSet`]s while the backend borrow is live
+    /// and spawn lanes from the pool later, without holding the backend.
+    pub fn from_stage_set(
+        spec: LstmSpec,
+        stages: StageSet,
+        cfg: PipelineConfig,
+        seg: SegmentId,
+        notify: Option<Sender<()>>,
+    ) -> Result<Self> {
         let depth = cfg.channel_depth.max(1);
         let window = cfg.window();
 
@@ -237,20 +284,35 @@ impl ClstmPipeline {
         let (s3_tx, done_rx) = sync_channel::<FrameMsg>(depth);
 
         let clock = Arc::new(StageClock::default());
+        let failure: FailureSlot = Arc::new(Mutex::new(None));
+        let record_failure = |slot: &FailureSlot, stage: usize, err: anyhow::Error| {
+            if let Ok(mut guard) = slot.lock() {
+                guard.get_or_insert(StageFailure {
+                    seg,
+                    stage,
+                    cause: format!("{err:#}"),
+                });
+            }
+        };
 
         let mut stage1: Box<dyn StageExecutor> = stages.stage1;
         let clock1 = Arc::clone(&clock);
+        let fail1 = Arc::clone(&failure);
         let h1 = std::thread::Builder::new()
             .name("clstm-stage1".into())
             .spawn(move || {
-                // Stage 1: the four fused gate convolutions.
+                // Stage 1: the four fused gate convolutions. On a stage
+                // error, record it and exit — dropping the channel ends tear
+                // the pipeline down and the caller reads the named failure.
                 while let Ok(mut msg) = s1_rx.recv() {
                     {
                         let FrameMsg { fused, a, .. } = &mut msg;
                         let t0 = Instant::now();
-                        stage1
-                            .run_into(&[fused.as_slice()], &mut [a.as_mut_slice()])
-                            .expect("stage1 execute");
+                        if let Err(e) = stage1.run_into(&[fused.as_slice()], &mut [a.as_mut_slice()])
+                        {
+                            record_failure(&fail1, 1, e);
+                            return;
+                        }
                         clock1.record(0, t0.elapsed());
                     }
                     if s1_tx.send(msg).is_err() {
@@ -261,6 +323,7 @@ impl ClstmPipeline {
 
         let mut stage2: Box<dyn StageExecutor> = stages.stage2;
         let clock2 = Arc::clone(&clock);
+        let fail2 = Arc::clone(&failure);
         let h2 = std::thread::Builder::new()
             .name("clstm-stage2".into())
             .spawn(move || {
@@ -269,12 +332,13 @@ impl ClstmPipeline {
                     {
                         let FrameMsg { a, c_prev, m, c, .. } = &mut msg;
                         let t0 = Instant::now();
-                        stage2
-                            .run_into(
-                                &[a.as_slice(), c_prev.as_slice()],
-                                &mut [m.as_mut_slice(), c.as_mut_slice()],
-                            )
-                            .expect("stage2 execute");
+                        if let Err(e) = stage2.run_into(
+                            &[a.as_slice(), c_prev.as_slice()],
+                            &mut [m.as_mut_slice(), c.as_mut_slice()],
+                        ) {
+                            record_failure(&fail2, 2, e);
+                            return;
+                        }
                         clock2.record(1, t0.elapsed());
                     }
                     if s2_tx.send(msg).is_err() {
@@ -285,6 +349,7 @@ impl ClstmPipeline {
 
         let mut stage3: Box<dyn StageExecutor> = stages.stage3;
         let clock3 = Arc::clone(&clock);
+        let fail3 = Arc::clone(&failure);
         let h3 = std::thread::Builder::new()
             .name("clstm-stage3".into())
             .spawn(move || {
@@ -293,9 +358,10 @@ impl ClstmPipeline {
                     {
                         let FrameMsg { m, y, .. } = &mut msg;
                         let t0 = Instant::now();
-                        stage3
-                            .run_into(&[m.as_slice()], &mut [y.as_mut_slice()])
-                            .expect("stage3 execute");
+                        if let Err(e) = stage3.run_into(&[m.as_slice()], &mut [y.as_mut_slice()]) {
+                            record_failure(&fail3, 3, e);
+                            return;
+                        }
                         clock3.record(2, t0.elapsed());
                     }
                     if s3_tx.send(msg).is_err() {
@@ -337,7 +403,23 @@ impl ClstmPipeline {
             out_pad,
             hidden: c_len,
             clock,
+            failure,
         })
+    }
+
+    /// The recorded stage failure, if a stage thread died on an error.
+    pub fn failure(&self) -> Option<StageFailure> {
+        self.failure.lock().ok().and_then(|g| g.clone())
+    }
+
+    /// The error surfaced when a channel endpoint is found disconnected:
+    /// the named stage failure when one was recorded, else a generic (but
+    /// still segment-named) dead-pipeline report.
+    fn gone_error(&self) -> anyhow::Error {
+        match self.failure() {
+            Some(f) => anyhow::anyhow!("{f}"),
+            None => anyhow::anyhow!("segment {} pipeline stage threads are gone", self.seg),
+        }
     }
 
     /// Shared handle to this pipeline's per-stage service-time counters
@@ -444,7 +526,7 @@ impl ClstmPipeline {
             .context("pipeline already shut down")?
             .send(msg);
         if sent.is_err() {
-            anyhow::bail!("pipeline stage threads are gone");
+            return Err(self.gone_error());
         }
         self.in_flight += 1;
         Ok(())
@@ -452,7 +534,10 @@ impl ClstmPipeline {
 
     /// Block for the next completed frame.
     pub fn recv_done(&mut self) -> Result<DoneFrame> {
-        let msg = self.done_rx.recv().context("pipeline recv")?;
+        let msg = match self.done_rx.recv() {
+            Ok(m) => m,
+            Err(_) => return Err(self.gone_error()),
+        };
         self.in_flight -= 1;
         Ok(DoneFrame {
             latency_us: msg.dispatched.elapsed().as_secs_f64() * 1e6,
@@ -475,7 +560,7 @@ impl ClstmPipeline {
                 }))
             }
             Err(RecvTimeoutError::Timeout) => Ok(None),
-            Err(RecvTimeoutError::Disconnected) => anyhow::bail!("pipeline stage threads are gone"),
+            Err(RecvTimeoutError::Disconnected) => Err(self.gone_error()),
         }
     }
 
@@ -491,7 +576,7 @@ impl ClstmPipeline {
                 }))
             }
             Err(TryRecvError::Empty) => Ok(None),
-            Err(TryRecvError::Disconnected) => anyhow::bail!("pipeline stage threads are gone"),
+            Err(TryRecvError::Disconnected) => Err(self.gone_error()),
         }
     }
 

@@ -21,9 +21,13 @@
 //! utterance never stalls the rest of the workload (the old wave barrier is
 //! gone). Arrivals are either closed-loop (the whole workload queued up
 //! front) or an open-loop Poisson process ([`Arrival::Poisson`]) for
-//! SLA-style queue-wait/service measurements.
+//! SLA-style queue-wait/service measurements. With a queue-wait SLO set
+//! ([`ServeOptions::slo`]) the loop sheds load via [`AdmissionControl`] so
+//! the *served* tail stays within the SLO under sustained overload, and
+//! with `max_replicas > replicas` the engine grows/retires lanes from
+//! occupancy as the offered load swings.
 
-use crate::coordinator::batcher::{Batcher, QueuedUtterance};
+use crate::coordinator::batcher::{AdmissionControl, Batcher, QueuedUtterance};
 use crate::coordinator::engine::{CompletedUtterance, EngineConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::topology::StackEngine;
@@ -49,8 +53,10 @@ pub enum Arrival {
 /// Knobs for [`serve_workload`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
-    /// Pipeline lanes (replicas).
+    /// Pipeline lanes (replicas) at start — the elastic minimum.
     pub replicas: usize,
+    /// Elastic maximum lane count; `0` means fixed at `replicas`.
+    pub max_replicas: usize,
     /// Utterance streams interleaved per lane.
     pub streams_per_lane: usize,
     /// Per-lane pipeline channel depth.
@@ -59,16 +65,21 @@ pub struct ServeOptions {
     pub arrival: Arrival,
     /// Workload/arrival seed.
     pub seed: u64,
+    /// Queue-wait SLO for served utterances; enables deadline-aware
+    /// admission (load shedding) when set.
+    pub slo: Option<Duration>,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
         Self {
             replicas: 1,
+            max_replicas: 0,
             streams_per_lane: 4,
             channel_depth: 2,
             arrival: Arrival::Closed,
             seed: 0x17c5,
+            slo: None,
         }
     }
 }
@@ -82,8 +93,10 @@ pub struct ServeReport {
     pub per: f64,
     /// Which backend served the run (e.g. `native`, `pjrt:tiny_fft4`).
     pub config: String,
-    /// Lanes the engine served with.
+    /// Lanes the engine started with (the elastic minimum).
     pub replicas: usize,
+    /// The queue-wait SLO the run shed against, if any.
+    pub slo: Option<Duration>,
 }
 
 /// Generate `n_utts` SynthTIMIT utterances sized for `weights.spec`, serve
@@ -156,6 +169,7 @@ pub fn serve_workload(
 
     let engine_cfg = EngineConfig {
         replicas: opts.replicas,
+        max_replicas: opts.max_replicas,
         streams_per_lane: opts.streams_per_lane,
         channel_depth: opts.channel_depth,
     };
@@ -164,8 +178,11 @@ pub fn serve_workload(
     // The engine takes ~two utterance generations per stream slot; the
     // batcher holds the rest so its occupancy stays a meaningful
     // backpressure signal.
-    let admit_limit = engine.admit_limit();
     let mut batcher = Batcher::new(n_utts.max(1), replicas * opts.streams_per_lane.max(1));
+    // Deadline-aware admission when an SLO is set: shed at the front door
+    // when the estimated queue wait blows the waiting-room budget, and at
+    // pop time when an admitted utterance has already burned it waiting.
+    let mut adm = opts.slo.map(AdmissionControl::new);
 
     let mut metrics = Metrics::default();
     let mut hyps: Vec<Vec<usize>> = Vec::with_capacity(n_utts);
@@ -179,13 +196,40 @@ pub fn serve_workload(
         refs.push(c.utt.phone_seq);
     };
 
-    while completed < n_utts {
-        // Arrived utterances enter the bounded waiting room.
+    // Idle backoff: start fine-grained so completions drain promptly, back
+    // off toward a coarse cap while nothing moves so an idle drive loop is
+    // not a busy-poll, and reset the moment anything drains. The wait is
+    // capped by the time to the next open-loop arrival so backing off never
+    // skews the Poisson clock by more than the minimum step.
+    const IDLE_WAIT_MIN: Duration = Duration::from_micros(500);
+    const IDLE_WAIT_MAX: Duration = Duration::from_millis(5);
+    // Health is a cross-lane mutex sweep — rate-limit it instead of
+    // checking on every empty wakeup.
+    const HEALTH_CHECK_EVERY: Duration = Duration::from_millis(10);
+    let mut idle_wait = IDLE_WAIT_MIN;
+    let mut last_health_check = t0;
+
+    loop {
+        let shed = adm.as_ref().map_or(0, |a| a.shed as usize);
+        if completed + shed >= n_utts {
+            break;
+        }
+        // Let the engine adapt lane count to occupancy before feeding it.
+        engine.autoscale()?;
+        // Arrived utterances enter the bounded waiting room — unless the
+        // admission controller estimates they'd blow the SLO just waiting.
         while workload
             .front()
             .is_some_and(|(at, _)| *at <= t0.elapsed())
         {
             let (_, utt) = workload.pop_front().expect("front checked");
+            if let Some(a) = adm.as_mut() {
+                let backlog = batcher.len() + engine.pending();
+                let slots = engine.replicas() * opts.streams_per_lane.max(1);
+                if !a.admit(backlog, slots) {
+                    continue; // shed at the front door
+                }
+            }
             let accepted = batcher.offer(utt);
             debug_assert!(accepted, "batcher sized for the whole workload");
         }
@@ -193,32 +237,62 @@ pub fn serve_workload(
         // finished streams are backfilled immediately, no wave barrier. The
         // queue-wait clock starts at batcher admission, so waiting-room
         // time under overload is part of the reported split.
-        while engine.pending() < admit_limit {
+        while engine.pending() < engine.admit_limit() {
             let Some((u, admitted)) = batcher.pop_admitted() else { break };
+            if let Some(a) = adm.as_mut() {
+                // Deadline shed: the estimator let it in, but it has sat in
+                // the waiting room past the budget — serving it now would
+                // land outside the SLO, so cut the loss.
+                if admitted.elapsed().as_secs_f64() * 1e6 > a.budget_us() {
+                    a.shed += 1;
+                    continue;
+                }
+            }
             engine.submit_arrived(u, admitted)?;
         }
         // Drain whatever has finished.
         let mut drained = false;
         while let Some(c) = engine.try_recv() {
+            if let Some(a) = adm.as_mut() {
+                a.observe_service(c.service_us);
+            }
             handle(c, &mut metrics);
             completed += 1;
             drained = true;
         }
-        if drained || completed >= n_utts {
+        if drained {
+            idle_wait = IDLE_WAIT_MIN;
             continue;
         }
+        {
+            let shed = adm.as_ref().map_or(0, |a| a.shed as usize);
+            if completed + shed >= n_utts {
+                break;
+            }
+        }
         if engine.pending() > 0 {
-            // Wait briefly for service; short timeout so open-loop arrivals
-            // keep flowing while the engine works.
-            if let Some(c) = engine.recv_timeout(Duration::from_micros(500)) {
+            // Wait for service with backoff; cap by the next arrival so
+            // open-loop admissions stay on the Poisson clock.
+            let wait = match workload.front() {
+                Some((at, _)) => {
+                    let until = at.saturating_sub(t0.elapsed());
+                    idle_wait.min(until.max(IDLE_WAIT_MIN))
+                }
+                None => idle_wait,
+            };
+            if let Some(c) = engine.recv_timeout(wait) {
+                if let Some(a) = adm.as_mut() {
+                    a.observe_service(c.service_us);
+                }
                 handle(c, &mut metrics);
                 completed += 1;
+                idle_wait = IDLE_WAIT_MIN;
             } else {
-                ensure!(
-                    engine.healthy(),
-                    "serving engine lane died with {} utterances outstanding",
-                    engine.pending()
-                );
+                idle_wait = (idle_wait * 2).min(IDLE_WAIT_MAX);
+                if last_health_check.elapsed() >= HEALTH_CHECK_EVERY {
+                    last_health_check = Instant::now();
+                    ensure!(engine.healthy(), "{}", engine.health_report());
+                }
             }
         } else if let Some((at, _)) = workload.front() {
             // Idle under open loop: sleep until the next arrival.
@@ -231,6 +305,13 @@ pub fn serve_workload(
     metrics.wall = t0.elapsed();
     metrics.set_segments(engine.segment_stats());
     metrics.set_stage_times(engine.stage_times());
+    let (grown, retired) = engine.scale_events();
+    metrics.lanes_grown = grown;
+    metrics.lanes_retired = retired;
+    if let Some(a) = &adm {
+        metrics.offered = a.offered;
+        metrics.shed = a.shed;
+    }
     drop(engine);
 
     let per = phone_error_rate(&hyps, &refs);
@@ -239,5 +320,6 @@ pub fn serve_workload(
         per,
         config: backend.name(),
         replicas,
+        slo: opts.slo,
     })
 }

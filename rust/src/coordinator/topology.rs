@@ -62,16 +62,19 @@
 
 use crate::analysis::{SchedGraph, SchedNodeKind};
 use crate::coordinator::batcher::QueuedUtterance;
+use crate::coordinator::drive::{
+    Job, LaneDriver, LaneFailure, LaneSeat, SpawnedLane, StatusBoard,
+};
 use crate::coordinator::engine::{CompletedUtterance, EngineConfig, Ticket};
 use crate::coordinator::metrics::{SegmentOccupancy, StageTime};
-use crate::coordinator::pipeline::{ClstmPipeline, DoneFrame, PipelineConfig, StageClock, STAGES};
+use crate::coordinator::pipeline::{ClstmPipeline, DoneFrame, PipelineConfig, STAGES};
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::{Backend, SegmentId};
-use anyhow::{ensure, Context, Result};
+use crate::runtime::backend::{Backend, SegmentId, StageSet};
+use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -244,46 +247,24 @@ fn flush_stats(local: &mut [LocalSegStats], shared: &[SegStat]) {
     }
 }
 
-/// One utterance queued to a topology instance.
-struct StackJob {
-    utt: QueuedUtterance,
-    submitted: Instant,
-}
-
-struct StackLane {
-    tx: Option<Sender<StackJob>>,
-    /// Shared wake channel of this instance: every segment's stage-3
-    /// thread signals it per completion, and `submit` signals it per new
-    /// job, so the instance scheduler blocks on "anything happened" —
-    /// never on one segment's private done channel.
-    wake: Sender<()>,
-    /// Outstanding frames routed to this instance (least-loaded key).
-    load: Arc<AtomicUsize>,
-    handle: Option<std::thread::JoinHandle<()>>,
-}
-
 /// N replicated topology instances over one shared weight preparation,
-/// behind the `submit`/`recv` ticket API.
+/// behind the `submit`/`recv` ticket API. All drive-loop bookkeeping
+/// (least-loaded routing, completion drain, health, elastic scaling) is
+/// the shared [`LaneDriver`]; this engine defines what one lane *is* — a
+/// whole topology instance run by [`stack_worker`].
 pub struct StackEngine {
     topo: StackTopology,
-    lanes: Vec<StackLane>,
-    done_rx: Receiver<CompletedUtterance>,
-    submitted: usize,
-    completed: usize,
+    driver: LaneDriver,
     backend_name: String,
-    streams_per_lane: usize,
-    /// Padded layer-0 input dim — frames are validated at submit so a bad
-    /// frame is an error here, not a panic inside a worker.
-    in_pad: usize,
     seg_stats: Arc<Vec<SegStat>>,
-    /// Per-pipeline stage clocks (all segments, all instances), for the
-    /// serve summary's stage-1/2/3 service-time split.
-    stage_clocks: Vec<Arc<StageClock>>,
 }
 
 impl StackEngine {
     /// Prepare `weights` once on `backend` (every segment) and launch
     /// `cfg.replicas` topology instances over the shared prepared weights.
+    /// With `cfg.max_replicas > cfg.replicas` the engine pre-builds stage
+    /// executors for every instance it may ever grow and scales
+    /// elastically between the two bounds.
     pub fn build(backend: &dyn Backend, weights: &LstmWeights, cfg: EngineConfig) -> Result<Self> {
         let topo = StackTopology::compile(&weights.spec);
         ensure!(!topo.is_empty(), "spec compiles to an empty topology");
@@ -320,37 +301,59 @@ impl StackEngine {
         let in_pad = prepared.spec.pad(prepared.spec.layer_input_dim(0));
         let seg_stats: Arc<Vec<SegStat>> =
             Arc::new((0..topo.len()).map(|_| SegStat::new()).collect());
-        let (done_tx, done_rx) = channel::<CompletedUtterance>();
         let replicas = cfg.replicas.max(1);
+        let max = cfg.max_replicas.max(replicas);
         let streams = cfg.streams_per_lane.max(1);
-        let mut lanes = Vec::with_capacity(replicas);
-        let mut stage_clocks = Vec::with_capacity(replicas * topo.len());
-        for lane in 0..replicas {
+        // Pre-build the stage-executor pool while the backend borrow is
+        // live: one Vec<StageSet> (all segments, topology order) per
+        // instance the driver may ever spawn — the initial max plus one
+        // regrow per possible retirement. A dry pool just stops growth.
+        let pool_size = max + (max - replicas);
+        let mut pool: VecDeque<Vec<StageSet>> = VecDeque::with_capacity(pool_size);
+        for _ in 0..pool_size {
+            let mut sets = Vec::with_capacity(topo.len());
+            for seg in &topo.segments {
+                sets.push(backend.build_stages(&prepared, seg.id)?);
+            }
+            pool.push_back(sets);
+        }
+        let spec = prepared.spec.clone();
+        let pipe_cfg = PipelineConfig {
+            channel_depth: cfg.channel_depth,
+        };
+        let spawn_topo = topo.clone();
+        let spawn_stats = Arc::clone(&seg_stats);
+        let spawner = Box::new(move |seat: LaneSeat| -> Result<Option<SpawnedLane>> {
+            let Some(sets) = pool.pop_front() else {
+                return Ok(None);
+            };
             // One wake channel per instance: every segment pipeline's
-            // stage-3 thread and the engine's `submit` signal it, so the
+            // stage-3 thread and the driver's `submit` signal it, so the
             // instance scheduler has a true "any segment done / new work"
             // wakeup instead of a bounded park on one busy segment.
             let (wake_tx, wake_rx) = channel::<()>();
-            let mut pipes = Vec::with_capacity(topo.len());
-            for seg in &topo.segments {
-                let pipe = ClstmPipeline::with_prepared_notify(
-                    backend,
-                    &prepared,
-                    PipelineConfig {
-                        channel_depth: cfg.channel_depth,
-                    },
+            let mut pipes = Vec::with_capacity(spawn_topo.len());
+            let mut clocks = Vec::with_capacity(spawn_topo.len());
+            for (seg, stages) in spawn_topo.segments.iter().zip(sets) {
+                let pipe = ClstmPipeline::from_stage_set(
+                    spec.clone(),
+                    stages,
+                    pipe_cfg,
                     seg.id,
                     Some(wake_tx.clone()),
                 )?;
-                stage_clocks.push(pipe.stage_clock());
+                clocks.push(pipe.stage_clock());
                 pipes.push(pipe);
             }
-            let (tx, rx) = channel::<StackJob>();
-            let load = Arc::new(AtomicUsize::new(0));
-            let worker_load = Arc::clone(&load);
-            let worker_done = done_tx.clone();
-            let worker_topo = topo.clone();
-            let worker_stats = Arc::clone(&seg_stats);
+            let LaneSeat {
+                lane,
+                done_tx,
+                status,
+                load,
+            } = seat;
+            let (tx, rx) = channel::<Job>();
+            let worker_topo = spawn_topo.clone();
+            let worker_stats = Arc::clone(&spawn_stats);
             let handle = std::thread::Builder::new()
                 .name(format!("clstm-stack{lane}"))
                 .spawn(move || {
@@ -360,43 +363,32 @@ impl StackEngine {
                         pipes,
                         rx,
                         wake_rx,
-                        worker_done,
-                        worker_load,
+                        done_tx,
+                        load,
                         streams,
                         worker_stats,
+                        status,
                     )
                 })?;
-            lanes.push(StackLane {
-                tx: Some(tx),
-                wake: wake_tx,
-                load,
-                handle: Some(handle),
-            });
-        }
+            Ok(Some(SpawnedLane {
+                tx,
+                wake: Some(wake_tx),
+                handle,
+                clocks,
+            }))
+        });
         Ok(Self {
             topo,
-            lanes,
-            done_rx,
-            submitted: 0,
-            completed: 0,
+            driver: LaneDriver::new(replicas, max, streams, in_pad, spawner)?,
             backend_name: backend.name(),
-            streams_per_lane: streams,
-            in_pad,
             seg_stats,
-            stage_clocks,
         })
     }
 
     /// Per-stage service-time split summed across every segment pipeline of
     /// every instance (the serve summary's `s1/s2/s3` µs-per-frame line).
     pub fn stage_times(&self) -> [StageTime; STAGES] {
-        let mut total = [StageTime::default(); STAGES];
-        for clock in &self.stage_clocks {
-            for (t, s) in total.iter_mut().zip(clock.snapshot()) {
-                t.absorb(&s);
-            }
-        }
-        total
+        self.driver.stage_times()
     }
 
     /// The compiled topology the engine serves.
@@ -404,9 +396,18 @@ impl StackEngine {
         &self.topo
     }
 
-    /// Number of replicated topology instances.
+    /// Number of topology instances currently accepting work.
     pub fn replicas(&self) -> usize {
-        self.lanes.len()
+        self.driver.active_lanes()
+    }
+
+    /// Instances grown beyond / retired below the configured minimum, over
+    /// the engine's lifetime (the serve summary's autoscale line).
+    pub fn scale_events(&self) -> (u64, u64) {
+        (
+            self.driver.lanes_grown_beyond_min(),
+            self.driver.lanes_retired(),
+        )
     }
 
     /// Name of the backend serving the instances.
@@ -416,29 +417,36 @@ impl StackEngine {
 
     /// Utterances submitted but not yet drained.
     pub fn pending(&self) -> usize {
-        self.submitted - self.completed
+        self.driver.pending()
     }
 
     /// Outstanding frames across all instances (load snapshot).
     pub fn load(&self) -> usize {
-        self.lanes
-            .iter()
-            .map(|l| l.load.load(Ordering::Relaxed))
-            .sum()
+        self.driver.load()
     }
 
     /// Whether every instance worker is still alive (a dead worker means a
     /// bug — drivers should bail rather than wait forever).
     pub fn healthy(&self) -> bool {
-        self.lanes
-            .iter()
-            .all(|l| l.handle.as_ref().is_some_and(|h| !h.is_finished()))
+        self.driver.healthy()
     }
 
-    /// Admission bound used by the drive loops: roughly two utterance
-    /// generations in flight per stream slot.
+    /// The named lane-failure report behind an unhealthy engine.
+    pub fn health_report(&self) -> String {
+        self.driver.health_report()
+    }
+
+    /// Admission bound used by the drive loops (see
+    /// [`LaneDriver::admit_limit`]).
     pub fn admit_limit(&self) -> usize {
-        2 * self.replicas() * self.streams_per_lane
+        self.driver.admit_limit()
+    }
+
+    /// One elastic-scaling occupancy sample (no-op on fixed-replica
+    /// engines). Open-loop drive loops call this once per iteration;
+    /// [`Self::serve_all`] already does.
+    pub fn autoscale(&mut self) -> Result<()> {
+        self.driver.autoscale()
     }
 
     /// Per-segment serving statistics across all replicas: frames
@@ -467,90 +475,29 @@ impl StackEngine {
     /// queue-wait clock starts now; use [`Self::submit_arrived`] when the
     /// utterance already waited upstream.
     pub fn submit(&mut self, utt: QueuedUtterance) -> Result<Ticket> {
-        self.submit_arrived(utt, Instant::now())
+        self.driver.submit(utt)
     }
 
     /// Submit with an explicit arrival instant, so the reported queue-wait
     /// split covers upstream waiting-room time too.
     pub fn submit_arrived(&mut self, utt: QueuedUtterance, arrived: Instant) -> Result<Ticket> {
-        ensure!(
-            utt.frames.iter().all(|f| f.len() <= self.in_pad),
-            "utterance {} has a frame longer than the padded input dim {}",
-            utt.id,
-            self.in_pad
-        );
-        let lane = self
-            .lanes
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, l)| l.load.load(Ordering::Relaxed))
-            .map(|(i, _)| i)
-            .context("engine has no instances")?;
-        let utt_id = utt.id;
-        let cost = utt.frames.len().max(1);
-        let lane_ref = &self.lanes[lane];
-        let tx = lane_ref.tx.as_ref().context("engine already shut down")?;
-        // Count the load before the send and roll back on failure, exactly
-        // as in the single-segment engine.
-        lane_ref.load.fetch_add(cost, Ordering::Relaxed);
-        let sent = tx.send(StackJob {
-            utt,
-            submitted: arrived,
-        });
-        if sent.is_err() {
-            lane_ref.load.fetch_sub(cost, Ordering::Relaxed);
-            anyhow::bail!("stack instance {lane} worker is gone");
-        }
-        // Wake the instance scheduler in case it is blocked waiting for
-        // segment completions — new work re-opens admission immediately.
-        let _ = lane_ref.wake.send(());
-        self.submitted += 1;
-        Ok(Ticket { utt_id, lane })
+        self.driver.submit_arrived(utt, arrived)
     }
 
     /// Block for the next completed utterance; `None` when nothing is
     /// pending or an instance died.
     pub fn recv(&mut self) -> Option<CompletedUtterance> {
-        while self.pending() > 0 {
-            match self.done_rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(c) => {
-                    self.completed += 1;
-                    return Some(c);
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    if !self.healthy() {
-                        return None;
-                    }
-                }
-                Err(RecvTimeoutError::Disconnected) => return None,
-            }
-        }
-        None
+        self.driver.recv()
     }
 
     /// Drain one completed utterance without blocking.
     pub fn try_recv(&mut self) -> Option<CompletedUtterance> {
-        match self.done_rx.try_recv() {
-            Ok(c) => {
-                self.completed += 1;
-                Some(c)
-            }
-            Err(_) => None,
-        }
+        self.driver.try_recv()
     }
 
     /// Block up to `timeout` for the next completion.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Option<CompletedUtterance> {
-        if self.pending() == 0 {
-            return None;
-        }
-        match self.done_rx.recv_timeout(timeout) {
-            Ok(c) => {
-                self.completed += 1;
-                Some(c)
-            }
-            Err(_) => None,
-        }
+        self.driver.recv_timeout(timeout)
     }
 
     /// Closed-loop convenience driver: submit every utterance with bounded
@@ -559,52 +506,12 @@ impl StackEngine {
         &mut self,
         utts: impl IntoIterator<Item = QueuedUtterance>,
     ) -> Result<Vec<CompletedUtterance>> {
-        let mut queue: VecDeque<QueuedUtterance> = utts.into_iter().collect();
-        let total = queue.len();
-        let limit = self.admit_limit();
-        let mut done = Vec::with_capacity(total);
-        while done.len() < total {
-            while self.pending() < limit {
-                let Some(u) = queue.pop_front() else { break };
-                self.submit(u)?;
-            }
-            match self.recv_timeout(Duration::from_millis(50)) {
-                Some(c) => done.push(c),
-                None => ensure!(
-                    self.healthy(),
-                    "stack instance died with {} utterances outstanding",
-                    self.pending()
-                ),
-            }
-        }
-        Ok(done)
+        self.driver.serve_all(utts)
     }
 
     /// Collect every outstanding completion, then shut the instances down.
     pub fn finish(mut self) -> Vec<CompletedUtterance> {
-        let mut out = Vec::new();
-        while let Some(c) = self.recv() {
-            out.push(c);
-        }
-        self.shutdown_lanes();
-        out
-    }
-
-    fn shutdown_lanes(&mut self) {
-        for l in self.lanes.iter_mut() {
-            l.tx = None; // closes the instance queue
-        }
-        for l in self.lanes.iter_mut() {
-            if let Some(h) = l.handle.take() {
-                let _ = h.join();
-            }
-        }
-    }
-}
-
-impl Drop for StackEngine {
-    fn drop(&mut self) {
-        self.shutdown_lanes();
+        self.driver.finish()
     }
 }
 
@@ -659,17 +566,21 @@ struct ActiveStack {
 /// channel, which both added up to a park's worth of head-of-line latency
 /// per hand-off and re-polled every pipeline 10⁴ times a second per
 /// instance while idle.
+/// A pipeline error is reported to the shared [`StatusBoard`] — with the
+/// failing stage's `(segment, stage, cause)` record when a stage thread
+/// died — and the worker exits instead of panicking.
 #[allow(clippy::too_many_arguments)]
 fn stack_worker(
     lane: usize,
     topo: StackTopology,
     mut pipes: Vec<ClstmPipeline>,
-    rx: Receiver<StackJob>,
+    rx: Receiver<Job>,
     wake_rx: Receiver<()>,
     done_tx: Sender<CompletedUtterance>,
     load: Arc<AtomicUsize>,
     max_streams: usize,
     seg_stats: Arc<Vec<SegStat>>,
+    status: Arc<StatusBoard>,
 ) {
     /// Safety-net bound on the wake block. Correctness never depends on it
     /// (every completion and submit sends a wake token *after* its payload
@@ -685,7 +596,7 @@ fn stack_worker(
     let mut active = 0usize;
     let mut rx_open = true;
 
-    loop {
+    'outer: loop {
         // Drain stale wake tokens before this iteration's scheduling
         // rounds. Every token produced up to this point accompanies a
         // payload (a completion or a queued job) that the rounds below
@@ -798,9 +709,10 @@ fn stack_worker(
                     {
                         let x = au.inputs[layer][t].as_ref().expect("readiness checked");
                         let sr = &au.segs[seg_idx];
-                        pipes[seg_idx]
-                            .dispatch(slot, t, x, &sr.y, &sr.c)
-                            .expect("stack dispatch");
+                        if let Err(e) = pipes[seg_idx].dispatch(slot, t, x, &sr.y, &sr.c) {
+                            status.report(LaneFailure::from_pipeline(lane, &pipes[seg_idx], &e));
+                            break 'outer;
+                        }
                     }
                     if layer == 0 && au.frame_start[t].is_none() {
                         au.frame_start[t] = Some(Instant::now());
@@ -815,7 +727,15 @@ fn stack_worker(
                 }
             }
             for seg_idx in 0..nseg {
-                while let Some(d) = pipes[seg_idx].try_recv_done().expect("stack try_recv") {
+                loop {
+                    let d = match pipes[seg_idx].try_recv_done() {
+                        Ok(Some(d)) => d,
+                        Ok(None) => break,
+                        Err(e) => {
+                            status.report(LaneFailure::from_pipeline(lane, &pipes[seg_idx], &e));
+                            break 'outer;
+                        }
+                    };
                     complete_frame(
                         seg_idx, d, &mut pipes, &mut slots, &topo, &mut local_stats, &seg_stats,
                         &done_tx, &load, lane, &mut active,

@@ -67,9 +67,10 @@ fn main() {
     )
     .opt("utts", "24", "utterances to serve (sized so the PER comparison is meaningful)")
     .opt("streams", "4", "interleaved streams per pipeline lane")
-    .opt("replicas", "1", "replicated pipeline lanes in the serving engine")
+    .opt("replicas", "1", "serving lanes: N fixed, or MIN..MAX elastic from occupancy")
     .opt("arrival", "closed", "arrival process: closed | poisson")
     .opt("rate", "8.0", "poisson arrival rate, utterances/second")
+    .opt("slo-ms", "0", "queue-wait SLO in ms; > 0 sheds load to keep the served tail inside it")
     .opt("seed", "1234", "random seed")
     .opt("out", "", "optional output file for generated code/reports")
     .flag("verbose", "chatty logging")

@@ -42,6 +42,29 @@ pub fn parse_q_format(s: &str) -> Result<Option<Q>, String> {
     Ok(Some(Q::new(frac)))
 }
 
+/// Parse a `--replicas` style value: a fixed lane count (`4` ⇒ `(4, 4)`)
+/// or an elastic range (`1..4` ⇒ `(1, 4)`, the engine scales lanes between
+/// the two from occupancy). Both bounds must be ≥ 1 and `min ≤ max`.
+pub fn parse_replicas(s: &str) -> Result<(usize, usize), String> {
+    let s = s.trim();
+    let bad = || format!("bad replica count {s:?} (expected: N | MIN..MAX, e.g. 2 or 1..4)");
+    let (min, max) = if let Some((lo, hi)) = s.split_once("..") {
+        let lo: usize = lo.trim().parse().map_err(|_| bad())?;
+        let hi: usize = hi.trim().parse().map_err(|_| bad())?;
+        (lo, hi)
+    } else {
+        let n: usize = s.parse().map_err(|_| bad())?;
+        (n, n)
+    };
+    if min == 0 {
+        return Err(format!("replica count {s:?}: at least one lane is required"));
+    }
+    if max < min {
+        return Err(format!("replica range {s:?}: MIN must be ≤ MAX"));
+    }
+    Ok((min, max))
+}
+
 /// Specification of one option.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -299,6 +322,20 @@ mod tests {
         assert!(parse_q_format("q4.12").unwrap_err().contains("15"));
         assert!(parse_q_format("16").is_err());
         assert!(parse_q_format("nope").is_err());
+    }
+
+    #[test]
+    fn replicas_parses_fixed_and_range_forms() {
+        assert_eq!(parse_replicas("4").unwrap(), (4, 4));
+        assert_eq!(parse_replicas("1..4").unwrap(), (1, 4));
+        assert_eq!(parse_replicas(" 2 .. 8 ").unwrap(), (2, 8));
+        assert_eq!(parse_replicas("3..3").unwrap(), (3, 3));
+        assert!(parse_replicas("0").unwrap_err().contains("at least one"));
+        assert!(parse_replicas("0..4").unwrap_err().contains("at least one"));
+        assert!(parse_replicas("4..2").unwrap_err().contains("MIN"));
+        assert!(parse_replicas("nope").is_err());
+        assert!(parse_replicas("1..").is_err());
+        assert!(parse_replicas("..4").is_err());
     }
 
     #[test]

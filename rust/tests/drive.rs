@@ -1,0 +1,353 @@
+//! Shared lane-driver tests: elastic scaling, named lane-failure
+//! reporting, admission-control determinism, and degenerate-input
+//! handling through the engines that instantiate the driver.
+//!
+//! The drive core (`coordinator::drive::LaneDriver`) is exercised through
+//! its public faces — `ServeEngine` and `StackEngine` — so these tests pin
+//! the *engine-visible* contract: a lane that dies surfaces a named
+//! `(segment, stage, cause)` error instead of a hang or panic, elastic
+//! engines grow under sustained saturation and drain back to the minimum,
+//! and fixed-replica engines never scale at all (the bit-identity tests in
+//! `engine.rs`/`topology.rs` rely on that).
+
+use clstm::coordinator::batcher::{AdmissionControl, QueuedUtterance};
+use clstm::coordinator::engine::{EngineConfig, ServeEngine};
+use clstm::coordinator::topology::StackEngine;
+use clstm::lstm::config::{LstmSpec, ModelKind};
+use clstm::lstm::weights::LstmWeights;
+use clstm::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor, StageSet};
+use clstm::runtime::native::NativeBackend;
+use clstm::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Small-shaped at test scale: 2 bidirectional layers (4 segments).
+fn small_shaped() -> LstmSpec {
+    LstmSpec {
+        kind: ModelKind::Small,
+        input_dim: 6,
+        hidden_dim: 12,
+        proj_dim: None,
+        peephole: false,
+        layers: 2,
+        bidirectional: true,
+        k: 4,
+        num_classes: 8,
+    }
+}
+
+fn random_frames(spec: &LstmSpec, rng: &mut Xoshiro256, n: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            (0..spec.input_dim)
+                .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- failures
+
+/// A stage-2 executor that errors after `fail_at` successful frames —
+/// simulates a backend fault mid-utterance.
+struct FailAfter {
+    inner: Box<dyn StageExecutor>,
+    calls: usize,
+    fail_at: usize,
+}
+
+impl StageExecutor for FailAfter {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> anyhow::Result<()> {
+        if self.calls >= self.fail_at {
+            anyhow::bail!("injected stage-2 fault after {} frames", self.calls);
+        }
+        self.calls += 1;
+        self.inner.run_into(inputs, outputs)
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        self.inner.out_lens()
+    }
+}
+
+/// Native backend whose stage-2 executors die after a few frames.
+struct FailingBackend {
+    inner: NativeBackend,
+    fail_at: usize,
+}
+
+impl Backend for FailingBackend {
+    fn name(&self) -> String {
+        "failing-native".into()
+    }
+
+    fn prepare(&self, weights: &LstmWeights) -> anyhow::Result<Arc<PreparedWeights>> {
+        self.inner.prepare(weights)
+    }
+
+    fn build_stages(
+        &self,
+        prepared: &Arc<PreparedWeights>,
+        seg: SegmentId,
+    ) -> anyhow::Result<StageSet> {
+        let s = self.inner.build_stages(prepared, seg)?;
+        Ok(StageSet {
+            stage1: s.stage1,
+            stage2: Box::new(FailAfter {
+                inner: s.stage2,
+                calls: 0,
+                fail_at: self.fail_at,
+            }),
+            stage3: s.stage3,
+        })
+    }
+}
+
+/// A lane whose stage executor errors must surface a *named* error —
+/// which segment, which stage, and the underlying cause — through
+/// `serve_all` and `health_report`, not a panic or a silent hang.
+#[test]
+fn lane_death_surfaces_segment_stage_and_cause() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 7);
+    let backend = FailingBackend {
+        inner: NativeBackend::default(),
+        fail_at: 3,
+    };
+    let mut engine =
+        ServeEngine::build(&backend, &w, EngineConfig::default()).expect("engine builds");
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let utts: Vec<QueuedUtterance> = (0..3)
+        .map(|i| QueuedUtterance::new(i, random_frames(&spec, &mut rng, 8)))
+        .collect();
+    let err = engine
+        .serve_all(utts)
+        .expect_err("a dying lane must error out of serve_all");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("segment l0.fwd"), "names the segment: {msg}");
+    assert!(msg.contains("stage2"), "names the failing stage: {msg}");
+    assert!(
+        msg.contains("injected stage-2 fault"),
+        "carries the cause: {msg}"
+    );
+    assert!(!engine.healthy(), "the failure must trip the health check");
+    let report = engine.health_report();
+    assert!(
+        report.contains("stage2") && report.contains("utterances outstanding"),
+        "health report names the failure and the stranded work: {report}"
+    );
+}
+
+/// The same named-failure path through the stack engine: only one segment
+/// of a 4-segment topology faults, and the report says which one.
+#[test]
+fn stack_lane_death_names_the_failing_segment() {
+    let spec = small_shaped();
+    let w = LstmWeights::random(&spec, 11);
+    let backend = FailingBackend {
+        inner: NativeBackend::default(),
+        fail_at: 2,
+    };
+    let mut engine =
+        StackEngine::build(&backend, &w, EngineConfig::default()).expect("engine builds");
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let utts: Vec<QueuedUtterance> = (0..2)
+        .map(|i| QueuedUtterance::new(i, random_frames(&spec, &mut rng, 6)))
+        .collect();
+    let err = engine
+        .serve_all(utts)
+        .expect_err("a dying stack instance must error out of serve_all");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("segment l") && msg.contains("stage2"),
+        "names segment and stage: {msg}"
+    );
+    assert!(msg.contains("injected stage-2 fault"), "cause: {msg}");
+}
+
+// ------------------------------------------------------- degenerate inputs
+
+/// Zero-frame utterances mixed into a stack workload complete immediately
+/// (empty outputs) without wedging the scheduler or leaking load.
+#[test]
+fn zero_frame_utterance_flows_through_stack_serve_all() {
+    let spec = small_shaped();
+    let w = LstmWeights::random(&spec, 3);
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let mut utts = vec![QueuedUtterance::new(0, Vec::new())];
+    for i in 1..4u64 {
+        utts.push(QueuedUtterance::new(i, random_frames(&spec, &mut rng, 5)));
+    }
+    let mut engine =
+        StackEngine::build(&NativeBackend::default(), &w, EngineConfig::default()).unwrap();
+    let completions = engine.serve_all(utts).expect("serve_all");
+    assert_eq!(completions.len(), 4);
+    let empty = completions.iter().find(|c| c.utt.id == 0).unwrap();
+    assert!(empty.outputs.is_empty());
+    assert_eq!(empty.service_us, 0.0);
+    for c in completions.iter().filter(|c| c.utt.id != 0) {
+        assert_eq!(c.outputs.len(), 5);
+    }
+    assert_eq!(engine.pending(), 0);
+    assert_eq!(engine.load(), 0, "no leaked load accounting");
+    assert!(engine.healthy());
+}
+
+/// An overlong frame is rejected at submit with a named error — it never
+/// reaches a lane — and the engine keeps serving afterwards.
+#[test]
+fn overlong_frame_is_rejected_at_submit() {
+    let spec = small_shaped();
+    let w = LstmWeights::random(&spec, 3);
+    let mut engine =
+        StackEngine::build(&NativeBackend::default(), &w, EngineConfig::default()).unwrap();
+    let err = engine
+        .submit(QueuedUtterance::new(7, vec![vec![0.0; 1000]]))
+        .expect_err("a frame wider than the padded input dim must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("longer than the padded input dim"),
+        "submit error names the contract: {msg}"
+    );
+    assert_eq!(engine.pending(), 0, "the rejected utterance is not pending");
+    assert!(engine.healthy(), "rejection must not kill a lane");
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let done = engine
+        .serve_all(vec![QueuedUtterance::new(8, random_frames(&spec, &mut rng, 3))])
+        .expect("engine still serves after a rejected submit");
+    assert_eq!(done[0].outputs.len(), 3);
+}
+
+// ------------------------------------------------------------- autoscaling
+
+/// Sustained saturation grows an elastic engine to its maximum; sustained
+/// idleness drains it back to the minimum; and the engine serves correctly
+/// at every point in between.
+#[test]
+fn elastic_engine_grows_under_load_and_retires_when_idle() {
+    let spec = LstmSpec::tiny(4);
+    let w = LstmWeights::random(&spec, 21);
+    let mut engine = ServeEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig {
+            replicas: 1,
+            max_replicas: 2,
+            streams_per_lane: 1,
+            channel_depth: 2,
+        },
+    )
+    .expect("elastic engine builds");
+    assert_eq!(engine.replicas(), 1, "starts at the minimum");
+
+    let mut rng = Xoshiro256::seed_from_u64(31);
+    let frames = random_frames(&spec, &mut rng, 64);
+    let mut next_id = 0u64;
+    let mut completed = 0usize;
+
+    // Keep the backlog well above one utterance per stream slot; the
+    // occupancy sampler must grow a second lane within a few samples.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while engine.replicas() < 2 {
+        assert!(Instant::now() < deadline, "engine never grew a lane");
+        while engine.pending() < 6 {
+            engine
+                .submit(QueuedUtterance::new(next_id, frames.clone()))
+                .expect("submit");
+            next_id += 1;
+        }
+        engine.autoscale().expect("autoscale");
+        while engine.try_recv().is_some() {
+            completed += 1;
+        }
+        std::thread::sleep(Duration::from_micros(1100));
+    }
+    assert_eq!(engine.replicas(), 2, "grew to the maximum");
+    assert_eq!(engine.scale_events().0, 1, "one lane grown beyond the min");
+
+    // Drain the backlog, then hold the engine idle: the cold-occupancy
+    // streak must drain and retire a lane back to the minimum.
+    while engine.pending() > 0 {
+        if engine.recv().is_some() {
+            completed += 1;
+        } else {
+            panic!("drain stalled: {}", engine.health_report());
+        }
+    }
+    assert_eq!(completed as u64, next_id, "every submitted utterance completed");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while engine.scale_events().1 < 1 {
+        assert!(Instant::now() < deadline, "engine never retired a lane");
+        engine.autoscale().expect("autoscale");
+        std::thread::sleep(Duration::from_micros(1100));
+    }
+    assert_eq!(engine.replicas(), 1, "drained back to the minimum");
+    assert_eq!(engine.scale_events(), (1, 1));
+    assert!(engine.healthy(), "retirement must not look like a death");
+
+    // And the shrunk engine still serves.
+    let done = engine
+        .serve_all(vec![QueuedUtterance::new(next_id, frames.clone())])
+        .expect("serve after scale-down");
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].outputs.len(), frames.len());
+}
+
+/// A fixed-replica engine (`max_replicas` unset) never scales — the
+/// default configuration every bit-identity test runs under.
+#[test]
+fn fixed_replica_engine_never_scales() {
+    let spec = small_shaped();
+    let w = LstmWeights::random(&spec, 13);
+    let mut rng = Xoshiro256::seed_from_u64(6);
+    let mut engine = StackEngine::build(
+        &NativeBackend::default(),
+        &w,
+        EngineConfig {
+            replicas: 2,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let utts: Vec<QueuedUtterance> = (0..8)
+        .map(|i| QueuedUtterance::new(i, random_frames(&spec, &mut rng, 6)))
+        .collect();
+    let completions = engine.serve_all(utts).expect("serve_all");
+    assert_eq!(completions.len(), 8);
+    assert_eq!(engine.replicas(), 2, "lane count is pinned");
+    assert_eq!(engine.scale_events(), (0, 0), "no scaling on fixed engines");
+}
+
+// ------------------------------------------------------ shed determinism
+
+/// The admission controller is a pure function of its call sequence: the
+/// same seeded synthetic process sheds exactly the same utterance set.
+#[test]
+fn shed_decisions_are_deterministic_for_a_seed() {
+    let run = |seed: u64| -> (Vec<u64>, u64, u64) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut adm = AdmissionControl::new(Duration::from_millis(10));
+        let mut shed_ids = Vec::new();
+        let mut backlog = 0usize;
+        for id in 0..200u64 {
+            if adm.admit(backlog, 4) {
+                backlog += 1;
+            } else {
+                shed_ids.push(id);
+            }
+            // Complete queued work at ~half the arrival rate with seeded
+            // service times — a sustained synthetic overload.
+            if backlog > 0 && rng.next_f64() < 0.5 {
+                backlog -= 1;
+                adm.observe_service(500.0 + 4_000.0 * rng.next_f64());
+            }
+        }
+        (shed_ids, adm.offered, adm.shed)
+    };
+    let a = run(0xD15C);
+    let b = run(0xD15C);
+    assert_eq!(a, b, "same seed ⇒ identical shed set and counters");
+    assert!(a.2 > 0, "the synthetic overload must shed something");
+    assert_eq!(a.1, 200, "every arrival was offered");
+    assert_eq!(a.0.len() as u64, a.2, "shed set matches the counter");
+}
