@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd bench-overload serve-fxp serve-stack serve-overload verify-datapath artifacts table1-per
+.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd bench-overload serve-fxp serve-stack serve-overload serve-trace verify-datapath artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -48,12 +48,17 @@ bench-overload:
 	! test -e BENCH_7.json.tmp
 
 # Fixed-point serving smoke test: a few utterances through the 16-bit
-# datapath on 2 lanes; asserts the report prints a nonzero workload PER.
+# datapath on 2 lanes. Assertions read the machine-readable metrics
+# snapshot (stable keys, no prose greps, no jq): right document kind and
+# schema, every utterance served, and a present, nonzero PER.
 serve-fxp:
 	cd rust && cargo run --release -- serve --backend fxp --replicas 2 --utts 4 \
-		| tee /tmp/clstm-serve-fxp.out
-	grep -E "workload PER: [0-9]+\.[0-9]+%" /tmp/clstm-serve-fxp.out
-	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-fxp.out
+		--metrics-json /tmp/clstm-serve-fxp.json | tee /tmp/clstm-serve-fxp.out
+	grep -q '"kind": "clstm-metrics"' /tmp/clstm-serve-fxp.json
+	grep -q '"schema_version": 1' /tmp/clstm-serve-fxp.json
+	grep -q '"utterances": 4' /tmp/clstm-serve-fxp.json
+	grep -Eq '"per_pct": [0-9]+(\.[0-9]+)?,?$$' /tmp/clstm-serve-fxp.json
+	! grep -Eq '"per_pct": 0,?$$' /tmp/clstm-serve-fxp.json
 
 # Stack-topology serving smoke test: the full bidirectional 2-layer Small
 # model (4 chained segments) on the fxp datapath through 2 replicated
@@ -67,15 +72,31 @@ serve-stack:
 	! grep -q "workload PER: 0\.00%" /tmp/clstm-serve-stack.out
 
 # Sustained-overload serving smoke: a Poisson burst far past capacity on an
-# elastic 1..2-lane engine with a queue-wait SLO. Asserts the run exits
-# cleanly with a nonzero shed count AND a served queue-wait p99 inside the
-# SLO — i.e. deadline-aware admission kept the *served* tail healthy
-# instead of letting the backlog blow every utterance's deadline.
+# elastic 1..2-lane engine with a queue-wait SLO. Assertions read the
+# metrics snapshot's stable keys (no prose greps, no jq): a nonzero shed
+# count AND `slo_met: true` — i.e. deadline-aware admission kept the
+# *served* tail healthy instead of letting the backlog blow every
+# utterance's deadline.
 serve-overload:
 	cd rust && cargo run --release -- serve --replicas 1..2 --utts 2000 \
-		--arrival poisson --rate 100000 --slo-ms 50 | tee /tmp/clstm-serve-overload.out
-	grep -q "(met)" /tmp/clstm-serve-overload.out
-	grep -Eq "shed [1-9][0-9]*/[0-9]+" /tmp/clstm-serve-overload.out
+		--arrival poisson --rate 100000 --slo-ms 50 \
+		--metrics-json /tmp/clstm-serve-overload.json | tee /tmp/clstm-serve-overload.out
+	grep -q '"slo_met": true' /tmp/clstm-serve-overload.json
+	grep -Eq '"shed": [1-9][0-9]*,?$$' /tmp/clstm-serve-overload.json
+
+# End-to-end observability smoke: a 2-replica stacked fxp serve recording
+# both artifacts — the Chrome span trace and the metrics snapshot — then
+# `clstm trace-check` re-validating them (balanced spans, strictly
+# monotonic per-track timestamps, snapshot schema, and utterance
+# conservation trace ↔ snapshot).
+serve-trace:
+	cd rust && cargo run --release -- serve --model google --k 8 --backend fxp \
+		--replicas 2 --utts 4 --trace /tmp/clstm-trace.json \
+		--metrics-json /tmp/clstm-metrics.json
+	cd rust && cargo run --release -- trace-check --trace /tmp/clstm-trace.json \
+		--metrics-json /tmp/clstm-metrics.json
+	! test -e /tmp/clstm-trace.json.tmp
+	! test -e /tmp/clstm-metrics.json.tmp
 
 # Static datapath verifier smoke: both paper-scale models through
 # `clstm verify` at the default (range-analysis) format and at one

@@ -330,19 +330,18 @@ fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
         },
     )
     .expect("fxp serve");
+    // One snapshot, one set of numbers: the same struct `clstm serve
+    // --metrics-json` writes, so the BENCH json never recomputes
+    // percentiles on its own.
+    let snap = clstm::obs::snapshot::MetricsSnapshot::from_metrics(&serve.metrics);
     println!(
         "fxp serve (tiny, 2 instances): p99 frame latency {:.0} µs; {}",
-        serve.metrics.latency_p99_us(),
+        snap.latency_us.p99,
         serve.metrics.summary()
     );
 
     let fps = |mean_ns: f64| 1e9 / mean_ns;
-    let stage_us: Vec<f64> = serve
-        .metrics
-        .stage_times
-        .iter()
-        .map(|st| st.mean_us())
-        .collect();
+    let stage_us: Vec<f64> = snap.stages.iter().map(|st| st.mean_us).collect();
     let json = Json::obj(vec![
         ("pr", Json::num(5.0)),
         ("bench", Json::str("fxp fused stage-1 + event-driven stack scheduler")),
@@ -372,14 +371,8 @@ fn fxp_stage1_bench(b: &mut Bench, rng: &mut Xoshiro256) {
                 ("model", Json::str("tiny_fft4")),
                 ("replicas", Json::num(2.0)),
                 ("utts", Json::num(8.0)),
-                (
-                    "p50_frame_latency_us",
-                    Json::num(serve.metrics.latency_p50_us()),
-                ),
-                (
-                    "p99_frame_latency_us",
-                    Json::num(serve.metrics.latency_p99_us()),
-                ),
+                ("p50_frame_latency_us", Json::num(snap.latency_us.p50)),
+                ("p99_frame_latency_us", Json::num(snap.latency_us.p99)),
                 ("stage_mean_us", Json::arr_f64(&stage_us)),
             ]),
         ),
@@ -445,16 +438,18 @@ fn overload_serve_bench() {
         },
     )
     .expect("overload serve");
-    let m = &over.metrics;
+    // The same snapshot struct `clstm serve --metrics-json` writes — the
+    // bench reads its fields instead of recomputing percentiles.
+    let m = clstm::obs::snapshot::MetricsSnapshot::from_metrics(&over.metrics);
     let slo_ms = slo.as_secs_f64() * 1e3;
-    let p99_ms = m.queue_wait_p99_us() / 1e3;
+    let p99_ms = m.queue_wait_us.p99 / 1e3;
     println!(
         "overload serve (tiny, 1..2 lanes, {offered_rate:.0} utts/s offered vs \
          {capacity_ups:.0} capacity): shed {}/{} ({:.1}%), served queue-wait p99 \
          {p99_ms:.1} ms vs SLO {slo_ms:.0} ms ({}); lanes +{}/-{}",
         m.shed,
         m.offered,
-        m.shed_rate() * 100.0,
+        m.shed_rate * 100.0,
         if p99_ms <= slo_ms { "met" } else { "missed" },
         m.lanes_grown,
         m.lanes_retired
@@ -478,9 +473,9 @@ fn overload_serve_bench() {
         ("offered_rate_utts_per_s", Json::num(offered_rate)),
         ("offered", Json::num(m.offered as f64)),
         ("shed", Json::num(m.shed as f64)),
-        ("shed_rate", Json::num(m.shed_rate())),
-        ("served_queue_wait_p50_us", Json::num(m.queue_wait_p50_us())),
-        ("served_queue_wait_p99_us", Json::num(m.queue_wait_p99_us())),
+        ("shed_rate", Json::num(m.shed_rate)),
+        ("served_queue_wait_p50_us", Json::num(m.queue_wait_us.p50)),
+        ("served_queue_wait_p99_us", Json::num(m.queue_wait_us.p99)),
         (
             "slo_p99",
             Json::str(if p99_ms <= slo_ms { "met" } else { "missed" }),

@@ -138,19 +138,17 @@ fn main() {
             ..FxpBackend::default()
         };
         let report = serve_workload(&backend, &tiny, 8, &opts).expect("fxp serve");
+        // The shared snapshot struct (what `--metrics-json` writes) is the
+        // single source of the percentile numbers recorded here.
+        let snap = clstm::obs::snapshot::MetricsSnapshot::from_metrics(&report.metrics);
         println!(
             "fxp serve (tiny, 2 instances, {}): p99 {:.0} us; {}",
             kernel.label(),
-            report.metrics.latency_p99_us(),
+            snap.latency_us.p99,
             report.metrics.summary()
         );
         if matches!(kernel, Kernel::Auto) {
-            stage_us = report
-                .metrics
-                .stage_times
-                .iter()
-                .map(|st| st.mean_us())
-                .collect();
+            stage_us = snap.stages.iter().map(|st| st.mean_us).collect();
         }
         serve_split.push(Json::obj(vec![
             (
@@ -162,14 +160,8 @@ fn main() {
                 }),
             ),
             ("backend_ran", Json::str(kernel.label())),
-            (
-                "p50_frame_latency_us",
-                Json::num(report.metrics.latency_p50_us()),
-            ),
-            (
-                "p99_frame_latency_us",
-                Json::num(report.metrics.latency_p99_us()),
-            ),
+            ("p50_frame_latency_us", Json::num(snap.latency_us.p50)),
+            ("p99_frame_latency_us", Json::num(snap.latency_us.p99)),
         ]));
     }
 

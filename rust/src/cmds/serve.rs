@@ -27,6 +27,18 @@
 //! - `--slo-ms B` — queue-wait SLO: deadline-aware admission sheds load so
 //!   the *served* queue-wait tail stays within B ms under sustained
 //!   overload (the summary reports the shed count and rate).
+//!
+//! Observability (see `DESIGN.md` §observability):
+//!
+//! - `--trace out.json` — record the full utterance lifecycle (arrival →
+//!   admit/shed → dispatch → per-stage frame spans → completion, plus
+//!   occupancy/shed/lane counter tracks) and export a Chrome
+//!   `trace_event` document loadable in Perfetto / `chrome://tracing`;
+//! - `--metrics-json out.json` — write the versioned machine-readable
+//!   metrics snapshot (written atomically; validated by `clstm
+//!   trace-check`);
+//! - `--stats-interval S` — print a rolling `stats:` line (fps, frame
+//!   p99, shed, lanes) every S seconds while serving.
 
 use anyhow::Result;
 use clstm::coordinator::server::{Arrival, ServeOptions, ServeReport};
@@ -34,7 +46,11 @@ use clstm::coordinator::topology::StackTopology;
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
 use clstm::num::fxp::Rounding;
+use clstm::obs::snapshot::{DatapathRow, MetricsSnapshot};
+use clstm::obs::trace::{export_chrome_trace, TraceSink};
+use clstm::obs::ObsOptions;
 use clstm::util::cli::{parse_replicas, Cli};
+use clstm::util::json::{write_atomic, Json};
 use std::time::Duration;
 
 /// Model spec + label for the serve run. Plain `clstm serve` uses the tiny
@@ -106,11 +122,31 @@ fn parse_rounding(cli: &Cli) -> Result<Rounding> {
     }
 }
 
+/// Translate `--trace` / `--stats-interval` into [`ObsOptions`]: an enabled
+/// sink only when a trace path was given, so the default serve stays on the
+/// zero-cost disabled path.
+fn obs_options(cli: &Cli) -> Result<ObsOptions> {
+    let stats_s = cli.get_f64("stats-interval");
+    anyhow::ensure!(
+        stats_s >= 0.0 && stats_s.is_finite(),
+        "--stats-interval must be ≥ 0 seconds"
+    );
+    Ok(ObsOptions {
+        trace: if cli.get_nonempty("trace").is_some() {
+            TraceSink::enabled()
+        } else {
+            TraceSink::disabled()
+        },
+        stats_interval: (stats_s > 0.0).then(|| Duration::from_secs_f64(stats_s)),
+    })
+}
+
 pub fn serve_cmd(cli: &Cli) -> Result<()> {
     let (label, spec) = serve_spec(cli);
     let weights = load_serve_weights(cli, &label, &spec);
     let n_utts = cli.get_usize("utts");
     let opts = serve_options(cli)?;
+    let obs = obs_options(cli)?;
 
     // --q-format/--rounding drive the fxp datapath only; validate them up
     // front so a typo'd or misplaced option errors on every backend
@@ -131,18 +167,18 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     println!("  topology: {}", topo.describe());
 
     let report: ServeReport = match backend_name.as_str() {
-        "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, &opts)?,
+        "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, &opts, &obs)?,
         "native" => {
-            use clstm::coordinator::server::serve_workload;
+            use clstm::coordinator::server::serve_workload_obs;
             use clstm::runtime::native::NativeBackend;
             println!(
                 "serving {label} on the native backend: {n_utts} utterances, \
                  {} replica(s) × {} streams, {:?} arrivals ...",
                 opts.replicas, opts.streams_per_lane, opts.arrival
             );
-            serve_workload(&NativeBackend::default(), &weights, n_utts, &opts)?
+            serve_workload_obs(&NativeBackend::default(), &weights, n_utts, &opts, &obs)?
         }
-        "fxp" => serve_fxp(q_override, rounding, &label, &weights, n_utts, &opts)?,
+        "fxp" => serve_fxp(q_override, rounding, &label, &weights, n_utts, &opts, &obs)?,
         other => anyhow::bail!(
             "unknown --backend {other:?} (expected: {})",
             clstm::runtime::backend::backend_names()
@@ -168,7 +204,59 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
         );
     }
     println!("  workload PER: {:.2}% (full {}-layer stack)", report.per, spec.layers);
+
+    if let Some(path) = cli.get_nonempty("trace") {
+        // Every worker has flushed by now (the engine was dropped inside
+        // the serve loop), so the export sees the complete recording.
+        let meta = vec![
+            ("kind", Json::str("clstm-trace")),
+            ("backend", Json::str(report.config.clone())),
+            ("model", Json::str(label.clone())),
+            ("replicas", Json::num(report.replicas as f64)),
+        ];
+        let doc = export_chrome_trace(&obs.trace, meta)
+            .expect("--trace implies an enabled sink");
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .map_or(0, Vec::len);
+        write_atomic(&path, &doc.to_string())?;
+        println!("  trace: {path} ({events} events)");
+    }
+    if let Some(path) = cli.get_nonempty("metrics-json") {
+        let snap = build_snapshot(&report, &label);
+        snap.write(&path)?;
+        println!("  metrics snapshot: {path}");
+    }
     Ok(())
+}
+
+/// Lift a [`ServeReport`] into the versioned snapshot (identity fields,
+/// SLO verdict, fxp datapath watermarks included).
+fn build_snapshot(report: &ServeReport, label: &str) -> MetricsSnapshot {
+    let mut snap = MetricsSnapshot::from_metrics(&report.metrics);
+    snap.backend = report.config.clone();
+    snap.model = label.to_string();
+    snap.replicas = report.replicas;
+    snap.per_pct = Some(report.per);
+    if let Some(slo) = report.slo {
+        let slo_ms = slo.as_secs_f64() * 1e3;
+        snap.slo_ms = Some(slo_ms);
+        // Same served-tail check the human summary prints.
+        snap.slo_met = Some(report.metrics.queue_wait_p99_us() / 1e3 <= slo_ms);
+    }
+    snap.datapath = report
+        .datapath
+        .iter()
+        .map(|(segment, forward_calls, forward_peak, acc_peak, time_peak)| DatapathRow {
+            segment: segment.clone(),
+            forward_calls: *forward_calls,
+            forward_peak: *forward_peak,
+            acc_peak: *acc_peak,
+            time_peak: *time_peak,
+        })
+        .collect();
+    snap
 }
 
 /// Serve on the 16-bit fixed-point backend, then serve the identical
@@ -181,8 +269,9 @@ fn serve_fxp(
     weights: &LstmWeights,
     n_utts: usize,
     opts: &ServeOptions,
+    obs: &ObsOptions,
 ) -> Result<ServeReport> {
-    use clstm::coordinator::server::serve_workload;
+    use clstm::coordinator::server::{serve_workload, serve_workload_obs};
     use clstm::runtime::fxp::{FxpBackend, FXP_PER_DEGRADATION_BUDGET_PTS};
     use clstm::runtime::native::NativeBackend;
 
@@ -213,7 +302,9 @@ fn serve_fxp(
         opts.streams_per_lane,
         opts.arrival
     );
-    let report = serve_workload(&backend, weights, n_utts, opts)?;
+    // Observability rides on the primary (fxp) run only — the float
+    // comparison below is a plain accuracy reference.
+    let report = serve_workload_obs(&backend, weights, n_utts, opts, obs)?;
 
     // §4.2 comparison: the same seeded workload through the float engine.
     let float = serve_workload(&NativeBackend::default(), weights, n_utts, opts)?;
@@ -233,9 +324,10 @@ fn serve_pjrt(
     weights: &LstmWeights,
     n_utts: usize,
     opts: &ServeOptions,
+    obs: &ObsOptions,
 ) -> Result<ServeReport> {
     use anyhow::Context;
-    use clstm::coordinator::server::serve_workload;
+    use clstm::coordinator::server::serve_workload_obs;
     use clstm::runtime::artifact::ArtifactDir;
     use clstm::runtime::client::Runtime;
     use clstm::runtime::pjrt::PjrtBackend;
@@ -251,7 +343,7 @@ fn serve_pjrt(
         opts.replicas
     );
     let backend = PjrtBackend::new(rt, art, label.to_string());
-    serve_workload(&backend, weights, n_utts, opts)
+    serve_workload_obs(&backend, weights, n_utts, opts, obs)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -261,6 +353,7 @@ fn serve_pjrt(
     _weights: &LstmWeights,
     _n_utts: usize,
     _opts: &ServeOptions,
+    _obs: &ObsOptions,
 ) -> Result<ServeReport> {
     anyhow::bail!(
         "the pjrt backend requires building with `cargo build --features pjrt` \

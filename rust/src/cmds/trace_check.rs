@@ -1,0 +1,88 @@
+//! `clstm trace-check` — validate serve observability artifacts.
+//!
+//! Reads the Chrome trace (`--trace t.json`) and/or the metrics snapshot
+//! (`--metrics-json m.json`) a serve run wrote and re-checks the invariants
+//! the exporters promise:
+//!
+//! - **trace**: `traceEvents` present, every `(pid, tid)` track has
+//!   balanced `B`/`E` pairs at non-negative depth and strictly increasing
+//!   timestamps, every counter track strictly increases
+//!   ([`validate_chrome_trace`]);
+//! - **snapshot**: right `kind`, a supported `schema_version`, and the
+//!   stable keys the CI smokes grep ([`validate_snapshot`]);
+//! - **both**: utterance conservation — the trace's `utt` span count must
+//!   equal the snapshot's served utterance count (every admitted utterance
+//!   produced exactly one span; shed ones produced none).
+//!
+//! Prints the extracted counts and exits non-zero on any violation, which
+//! is what `make serve-trace` runs in CI.
+
+use anyhow::{bail, Context, Result};
+use clstm::obs::snapshot::validate_snapshot;
+use clstm::obs::trace::validate_chrome_trace;
+use clstm::util::cli::Cli;
+use clstm::util::json::Json;
+
+fn load_json(path: &str, what: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {what} {path}"))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {what} {path}: {e}"))
+}
+
+pub fn trace_check_cmd(cli: &Cli) -> Result<()> {
+    let trace_path = cli.get_nonempty("trace");
+    let snap_path = cli.get_nonempty("metrics-json");
+    if trace_path.is_none() && snap_path.is_none() {
+        bail!("trace-check needs --trace <file> and/or --metrics-json <file>");
+    }
+
+    let trace_check = match &trace_path {
+        Some(path) => {
+            let doc = load_json(path, "trace")?;
+            let check = validate_chrome_trace(&doc)
+                .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))?;
+            println!(
+                "trace ok: {path} — {} events, {} tracks, {} spans ({} utt), \
+                 {} instants, {} counter samples",
+                check.events, check.tracks, check.spans, check.utt_spans,
+                check.instants, check.counters
+            );
+            Some(check)
+        }
+        None => None,
+    };
+
+    let snap_check = match &snap_path {
+        Some(path) => {
+            let doc = load_json(path, "snapshot")?;
+            let check = validate_snapshot(&doc)
+                .map_err(|e| anyhow::anyhow!("snapshot {path}: {e}"))?;
+            println!(
+                "snapshot ok: {path} — {} utterances, {} frames, \
+                 latency p50 {:.0}µs p99 {:.0}µs, shed {}",
+                check.utterances, check.frames,
+                check.latency_p50_us, check.latency_p99_us, check.shed
+            );
+            Some(check)
+        }
+        None => None,
+    };
+
+    if let (Some(tc), Some(sc)) = (trace_check, snap_check) {
+        // Conservation across the two artifacts: one `utt` span per served
+        // utterance — shed utterances never reach a lane, so they must not
+        // produce spans either.
+        if tc.utt_spans != sc.utterances {
+            bail!(
+                "utterance conservation violated: trace has {} utt spans, \
+                 snapshot served {} utterances",
+                tc.utt_spans,
+                sc.utterances
+            );
+        }
+        println!(
+            "conservation ok: {} utt spans == {} served utterances",
+            tc.utt_spans, sc.utterances
+        );
+    }
+    Ok(())
+}

@@ -8,6 +8,7 @@
 //! streams — but it is the seam where a production deployment would plug
 //! arrival processes and SLAs (see `server::Arrival`).
 
+use crate::obs::trace::{TraceLocal, TraceSink, PID_DRIVER, TID_ADMISSION};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -49,6 +50,9 @@ pub struct Batcher {
     pub max_streams: usize,
     pub rejected: u64,
     pub admitted: u64,
+    /// Waiting-room trace: `enqueue`/`reject` instants on the driver's
+    /// admission track, reusing the admission stamp `offer` already takes.
+    trace: TraceLocal,
 }
 
 impl Batcher {
@@ -59,17 +63,29 @@ impl Batcher {
             max_streams: max_streams.max(1),
             rejected: 0,
             admitted: 0,
+            trace: TraceLocal::disabled(),
         }
+    }
+
+    /// Attach a span tracer; a disabled sink keeps the batcher free of
+    /// clock reads beyond the admission stamp it already takes.
+    pub fn set_trace(&mut self, sink: &TraceSink) {
+        self.trace = sink.local();
     }
 
     /// Try to enqueue; `false` (backpressure) when full.
     pub fn offer(&mut self, utt: QueuedUtterance) -> bool {
         if self.queue.len() >= self.capacity {
             self.rejected += 1;
+            self.trace
+                .instant_now(PID_DRIVER, TID_ADMISSION, "reject", utt.id);
             return false;
         }
         self.admitted += 1;
-        self.queue.push_back((utt, Instant::now()));
+        let at = Instant::now();
+        self.trace
+            .instant_from(PID_DRIVER, TID_ADMISSION, "enqueue", at, utt.id);
+        self.queue.push_back((utt, at));
         true
     }
 
@@ -280,6 +296,22 @@ mod tests {
         assert_eq!(u.id, 0);
         // The stamp is from offer time, so it is already in the past.
         assert!(at.elapsed().as_secs_f64() >= 0.0);
+    }
+
+    #[test]
+    fn traced_offers_emit_enqueue_and_reject_instants() {
+        use crate::obs::trace::{export_chrome_trace, validate_chrome_trace, TraceSink};
+        let sink = TraceSink::enabled();
+        let mut b = Batcher::new(2, 1);
+        b.set_trace(&sink);
+        assert!(b.offer(utt(0)));
+        assert!(b.offer(utt(1)));
+        assert!(!b.offer(utt(2)), "full");
+        drop(b); // flushes the local into the sink
+        let doc = export_chrome_trace(&sink, Vec::new()).unwrap();
+        let check = validate_chrome_trace(&doc).unwrap();
+        assert_eq!(check.instants, 3, "two enqueues + one reject");
+        assert_eq!(check.spans, 0);
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::coordinator::batcher::QueuedUtterance;
 use crate::coordinator::engine::{CompletedUtterance, Ticket};
 use crate::coordinator::metrics::StageTime;
 use crate::coordinator::pipeline::{ClstmPipeline, StageClock, STAGES};
+use crate::obs::trace::{TraceLocal, TraceSink, NO_UTT, PID_DRIVER, TID_ADMISSION};
 use anyhow::{ensure, Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -227,6 +228,10 @@ pub struct LaneDriver {
     lanes_grown: u64,
     lanes_retired: u64,
     pool_dry: bool,
+    /// Driver-side trace buffer: lane grow/retire lifecycle markers on the
+    /// driver's admission track (disabled by default — see
+    /// [`Self::set_trace`]).
+    trace: TraceLocal,
 }
 
 impl LaneDriver {
@@ -261,6 +266,7 @@ impl LaneDriver {
             lanes_grown: 0,
             lanes_retired: 0,
             pool_dry: false,
+            trace: TraceLocal::disabled(),
         };
         for _ in 0..min_lanes {
             ensure!(
@@ -270,6 +276,17 @@ impl LaneDriver {
             );
         }
         Ok(driver)
+    }
+
+    /// Attach a span tracer: the driver marks elastic lane grow/retire
+    /// events as instants on the `(PID_DRIVER, TID_ADMISSION)` track. A
+    /// disabled sink (the default) records nothing and reads no clocks.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        if sink.is_enabled() {
+            sink.name_process(PID_DRIVER, "serve-driver");
+            sink.name_track(PID_DRIVER, TID_ADMISSION, "admission");
+        }
+        self.trace = sink.local();
     }
 
     /// Spawn one more lane. `Ok(false)` when the spawner's pool is dry.
@@ -296,6 +313,8 @@ impl LaneDriver {
                     state: LaneState::Active,
                 });
                 self.lanes_grown += 1;
+                self.trace
+                    .instant_now(PID_DRIVER, TID_ADMISSION, "lane-grown", NO_UTT);
                 Ok(true)
             }
             None => {
@@ -335,6 +354,8 @@ impl LaneDriver {
                 }
                 lane.state = LaneState::Retired;
                 self.lanes_retired += 1;
+                self.trace
+                    .instant_now(PID_DRIVER, TID_ADMISSION, "lane-retired", NO_UTT);
             }
         }
     }

@@ -32,6 +32,7 @@ use crate::coordinator::drive::{Job, LaneDriver, LaneFailure, LaneSeat, SpawnedL
 use crate::coordinator::metrics::StageTime;
 use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig, STAGES};
 use crate::lstm::weights::LstmWeights;
+use crate::obs::trace::{lane_pid, utt_tid, TraceSink};
 use crate::runtime::backend::{Backend, SegmentId, StageSet};
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
@@ -115,6 +116,21 @@ impl ServeEngine {
     /// [`StackEngine`](crate::coordinator::topology::StackEngine), which
     /// chains one pipeline per `(layer, direction)` segment.
     pub fn build(backend: &dyn Backend, weights: &LstmWeights, cfg: EngineConfig) -> Result<Self> {
+        Self::build_with_trace(backend, weights, cfg, &TraceSink::disabled())
+    }
+
+    /// As [`Self::build`], with a span tracer: every lane's stage threads
+    /// record per-frame spans, each lane worker records one `utt` span per
+    /// utterance it completes (first dispatch → completion, on the
+    /// `(lane_pid, utt_tid(slot))` track), and the driver marks lane
+    /// grow/retire events. A [`TraceSink::disabled`] sink makes this
+    /// identical to [`Self::build`] — no clock reads, nothing recorded.
+    pub fn build_with_trace(
+        backend: &dyn Backend,
+        weights: &LstmWeights,
+        cfg: EngineConfig,
+        trace: &TraceSink,
+    ) -> Result<Self> {
         ensure!(
             weights.spec.layers == 1 && !weights.spec.bidirectional,
             "spec has {} layer(s) × {} direction(s): ServeEngine would truncate the \
@@ -140,28 +156,41 @@ impl ServeEngine {
         let pipe_cfg = PipelineConfig {
             channel_depth: cfg.channel_depth,
         };
+        let sink = trace.clone();
         let spawner = Box::new(move |seat: LaneSeat| -> Result<Option<SpawnedLane>> {
             let Some(stages) = pool.pop_front() else {
                 return Ok(None);
             };
-            let pipe = ClstmPipeline::from_stage_set(
-                spec.clone(),
-                stages,
-                pipe_cfg,
-                SegmentId::LAYER0_FWD,
-                None,
-            )?;
-            let clocks = vec![pipe.stage_clock()];
-            let (tx, rx) = channel::<Job>();
             let LaneSeat {
                 lane,
                 done_tx,
                 status,
                 load,
             } = seat;
+            let pipe = ClstmPipeline::from_stage_set_traced(
+                spec.clone(),
+                stages,
+                pipe_cfg,
+                SegmentId::LAYER0_FWD,
+                None,
+                &sink,
+                lane,
+            )?;
+            if sink.is_enabled() {
+                // `utt_tid(streams)` is the overflow track for zero-frame
+                // utterances that never occupy a stream slot.
+                for slot in 0..=streams {
+                    sink.name_track(lane_pid(lane), utt_tid(slot), format!("utt slot {slot}"));
+                }
+            }
+            let clocks = vec![pipe.stage_clock()];
+            let (tx, rx) = channel::<Job>();
+            let worker_trace = sink.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("clstm-lane{lane}"))
-                .spawn(move || lane_worker(lane, pipe, rx, done_tx, load, streams, status))?;
+                .spawn(move || {
+                    lane_worker(lane, pipe, rx, done_tx, load, streams, status, worker_trace)
+                })?;
             Ok(Some(SpawnedLane {
                 tx,
                 wake: None,
@@ -169,8 +198,10 @@ impl ServeEngine {
                 clocks,
             }))
         });
+        let mut driver = LaneDriver::new(replicas, max, streams, in_pad, spawner)?;
+        driver.set_trace(trace.clone());
         Ok(Self {
-            driver: LaneDriver::new(replicas, max, streams, in_pad, spawner)?,
+            driver,
             backend_name: backend.name(),
         })
     }
@@ -304,6 +335,7 @@ struct ActiveUtt {
 /// A pipeline error is reported to the shared [`StatusBoard`] — with the
 /// failing stage's `(segment, stage, cause)` record when a stage thread
 /// died — and the worker exits instead of panicking.
+#[allow(clippy::too_many_arguments)]
 fn lane_worker(
     lane: usize,
     mut pipe: ClstmPipeline,
@@ -312,7 +344,10 @@ fn lane_worker(
     load: Arc<AtomicUsize>,
     max_streams: usize,
     status: Arc<StatusBoard>,
+    trace: TraceSink,
 ) {
+    let mut tr = trace.local();
+    let pid = lane_pid(lane);
     let out_pad = pipe.out_pad();
     let hidden = pipe.hidden();
     let mut slots: Vec<Option<ActiveUtt>> = (0..max_streams).map(|_| None).collect();
@@ -344,8 +379,14 @@ fn lane_worker(
             if job.utt.frames.is_empty() {
                 // Degenerate zero-frame utterance: completes immediately.
                 load.fetch_sub(1, Ordering::Relaxed);
+                let waited = job.submitted.elapsed();
+                // Zero-frame utterances never occupy a stream slot; their
+                // `utt` span lands on the overflow track past the last slot
+                // so the conservation count still sees one span per served
+                // utterance.
+                tr.span_from(pid, utt_tid(max_streams), "utt", job.submitted, waited, job.utt.id);
                 let _ = done_tx.send(CompletedUtterance {
-                    queue_wait_us: job.submitted.elapsed().as_secs_f64() * 1e6,
+                    queue_wait_us: waited.as_secs_f64() * 1e6,
                     service_us: 0.0,
                     outputs: Vec::new(),
                     frame_latency_us: Vec::new(),
@@ -429,12 +470,16 @@ fn lane_worker(
                 let au = slots[slot].take().expect("finished slot");
                 active -= 1;
                 let first = au.first_dispatch.unwrap_or(au.submitted);
+                let service = first.elapsed();
                 load.fetch_sub(au.utt.frames.len().max(1), Ordering::Relaxed);
+                // One `utt` span per completion (first dispatch → done),
+                // from the instants the accounting above already reads.
+                tr.span_from(pid, utt_tid(slot), "utt", first, service, au.utt.id);
                 // If the engine has been dropped, keep draining so the lane
                 // (and its pipeline threads) still shuts down cleanly.
                 let _ = done_tx.send(CompletedUtterance {
                     queue_wait_us: (first - au.submitted).as_secs_f64() * 1e6,
-                    service_us: first.elapsed().as_secs_f64() * 1e6,
+                    service_us: service.as_secs_f64() * 1e6,
                     outputs: au.outputs,
                     frame_latency_us: au.frame_latency_us,
                     lane,

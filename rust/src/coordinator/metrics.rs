@@ -7,14 +7,26 @@
 //! - **queue wait** — utterance admission → first frame dispatched;
 //! - **service time** — first dispatch → last frame completed.
 //!
-//! Percentiles are computed over sorted snapshots cached per population
-//! (invalidated on write), so repeated `p50/p95/p99` calls — the summary
-//! line alone makes several — sort each vector once instead of per call.
+//! ## Bounded memory by default
+//!
+//! Each population is stored as a mergeable log-bucketed histogram
+//! ([`crate::obs::hist::LogHistogram`]): a few KiB regardless of sample
+//! count, so a million-utterance open-loop run no longer grows a
+//! `Vec<f64>` forever. Histogram percentiles are within one `2^(1/8)`
+//! bucket (≤ ~9.1 % relative) of the exact nearest-rank value, means are
+//! exact, and NaN handling matches the exact path's `total_cmp` ordering
+//! (NaN ranks last; any NaN poisons the mean).
+//!
+//! Tests and benches that pin exact nearest-rank percentiles construct
+//! with [`Metrics::exact`], which keeps the original sorted-`Vec<f64>`
+//! series (with its lazily cached sorted snapshot) instead.
 
+use crate::obs::hist::LogHistogram;
 use std::cell::OnceCell;
 use std::time::Duration;
 
-/// One latency population with a lazily sorted snapshot for percentiles.
+/// One latency population with a lazily sorted snapshot for percentiles
+/// (the exact mode behind [`Metrics::exact`]).
 #[derive(Debug, Clone, Default)]
 struct LatencySeries {
     samples: Vec<f64>,
@@ -67,6 +79,95 @@ impl LatencySeries {
     }
 }
 
+/// One latency population in either storage mode. The histogram is the
+/// default (bounded memory); the exact series survives behind
+/// [`Metrics::exact`] for tests and benches that pin nearest-rank values.
+#[derive(Debug, Clone)]
+enum LatencyBuf {
+    Hist(LogHistogram),
+    Exact(LatencySeries),
+}
+
+impl Default for LatencyBuf {
+    fn default() -> Self {
+        Self::Hist(LogHistogram::default())
+    }
+}
+
+impl LatencyBuf {
+    fn exact() -> Self {
+        Self::Exact(LatencySeries::default())
+    }
+
+    fn push(&mut self, v: f64) {
+        match self {
+            Self::Hist(h) => h.record(v),
+            Self::Exact(s) => s.push(v),
+        }
+    }
+
+    fn extend(&mut self, vs: impl IntoIterator<Item = f64>) {
+        match self {
+            Self::Hist(h) => {
+                for v in vs {
+                    h.record(v);
+                }
+            }
+            Self::Exact(s) => s.extend(vs),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Self::Hist(h) => h.len(),
+            Self::Exact(s) => s.samples.len(),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        match self {
+            Self::Hist(h) => h.percentile(p),
+            Self::Exact(s) => s.percentile(p),
+        }
+    }
+
+    fn mean(&self) -> f64 {
+        match self {
+            Self::Hist(h) => h.mean(),
+            Self::Exact(s) => s.mean(),
+        }
+    }
+
+    /// Fold `other` into `self`, whatever the mode pairing. A histogram's
+    /// samples cannot be reconstructed, so merging one into an exact
+    /// series converts the result to histogram mode (exact mode survives
+    /// only exact + exact — the test/bench case).
+    fn merge(&mut self, other: &Self) {
+        match (&mut *self, other) {
+            (Self::Hist(a), Self::Hist(b)) => a.merge(b),
+            (Self::Hist(a), Self::Exact(b)) => {
+                for &v in &b.samples {
+                    a.record(v);
+                }
+            }
+            (Self::Exact(a), Self::Exact(b)) => a.extend(b.samples.iter().copied()),
+            (Self::Exact(_), Self::Hist(b)) => {
+                let mut h = b.clone();
+                if let Self::Exact(a) = &*self {
+                    for &v in &a.samples {
+                        h.record(v);
+                    }
+                }
+                *self = Self::Hist(h);
+            }
+        }
+    }
+}
+
 /// Cumulative service time of one pipeline stage (stage 1 gate
 /// convolutions / stage 2 element-wise / stage 3 projection), summed
 /// across every pipeline and replica that reported — the serve summary's
@@ -115,11 +216,11 @@ pub struct SegmentOccupancy {
 pub struct Metrics {
     /// Per-frame end-to-end latency (dispatch → stage-3 completion; for a
     /// stack topology, layer-0 dispatch → final concat), µs.
-    frame_latency: LatencySeries,
+    frame_latency: LatencyBuf,
     /// Per-utterance admission → first-dispatch wait, µs.
-    queue_wait: LatencySeries,
+    queue_wait: LatencyBuf,
     /// Per-utterance first-dispatch → completion service time, µs.
-    service: LatencySeries,
+    service: LatencyBuf,
     /// Total wall time of the run.
     pub wall: Duration,
     /// Frames processed.
@@ -146,11 +247,24 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// A metrics record pre-sized for a run (no samples yet).
+    /// A metrics record pre-filled with a run's frame/utterance counts
+    /// (histogram-backed, like [`Metrics::default`]).
     pub fn sized(frames: usize, utterances: usize) -> Self {
         Self {
             frames,
             utterances,
+            ..Self::default()
+        }
+    }
+
+    /// Exact-vector mode: every sample retained, percentiles are the true
+    /// nearest-rank values. **Unbounded memory** — for tests and benches
+    /// that pin exact percentiles, not for long-lived serving.
+    pub fn exact() -> Self {
+        Self {
+            frame_latency: LatencyBuf::exact(),
+            queue_wait: LatencyBuf::exact(),
+            service: LatencyBuf::exact(),
             ..Self::default()
         }
     }
@@ -172,9 +286,14 @@ impl Metrics {
         self.service.push(service_us);
     }
 
-    /// Raw frame-latency samples (µs), insertion order.
+    /// Raw frame-latency samples (µs), insertion order. Only the exact
+    /// mode ([`Metrics::exact`]) retains samples; the default histogram
+    /// mode returns an empty slice.
     pub fn frame_latencies_us(&self) -> &[f64] {
-        &self.frame_latency.samples
+        match &self.frame_latency {
+            LatencyBuf::Exact(s) => &s.samples,
+            LatencyBuf::Hist(_) => &[],
+        }
     }
 
     /// Fold one completed utterance's accounting into this record — the
@@ -203,8 +322,10 @@ impl Metrics {
     /// are **summed**, so this models sequential runs; for concurrent lanes
     /// measure one wall clock around the whole engine instead (as
     /// `serve_workload` does) or `fps()` will understate throughput.
-    /// Segment occupancies merge by label: frame counts add, mean
-    /// in-flight averages weighted by frames.
+    /// Histograms merge by adding bucket counts; merging a histogram into
+    /// an exact record converts the result to histogram mode. Segment
+    /// occupancies merge by label: frame counts add, mean in-flight
+    /// averages weighted by frames.
     pub fn merge(&mut self, other: &Metrics) {
         self.frames += other.frames;
         self.utterances += other.utterances;
@@ -213,11 +334,9 @@ impl Metrics {
         self.shed += other.shed;
         self.lanes_grown += other.lanes_grown;
         self.lanes_retired += other.lanes_retired;
-        self.frame_latency
-            .extend(other.frame_latency.samples.iter().copied());
-        self.queue_wait
-            .extend(other.queue_wait.samples.iter().copied());
-        self.service.extend(other.service.samples.iter().copied());
+        self.frame_latency.merge(&other.frame_latency);
+        self.queue_wait.merge(&other.queue_wait);
+        self.service.merge(&other.service);
         for (mine, theirs) in self.stage_times.iter_mut().zip(&other.stage_times) {
             mine.absorb(theirs);
         }
@@ -273,6 +392,10 @@ impl Metrics {
         self.queue_wait.percentile(0.50)
     }
 
+    pub fn queue_wait_p95_us(&self) -> f64 {
+        self.queue_wait.percentile(0.95)
+    }
+
     pub fn queue_wait_p99_us(&self) -> f64 {
         self.queue_wait.percentile(0.99)
     }
@@ -283,6 +406,10 @@ impl Metrics {
 
     pub fn service_p50_us(&self) -> f64 {
         self.service.percentile(0.50)
+    }
+
+    pub fn service_p95_us(&self) -> f64 {
+        self.service.percentile(0.95)
     }
 
     pub fn service_p99_us(&self) -> f64 {
@@ -305,7 +432,7 @@ impl Metrics {
             self.latency_p95_us(),
             self.latency_p99_us()
         );
-        if !self.queue_wait.samples.is_empty() {
+        if !self.queue_wait.is_empty() {
             s.push_str(&format!(
                 "; queue wait p50 {:.0}µs p99 {:.0}µs, service p50 {:.0}µs p99 {:.0}µs",
                 self.queue_wait_p50_us(),
@@ -356,10 +483,14 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::hist::BUCKET_RATIO;
 
     #[test]
     fn percentiles_and_fps() {
-        let mut m = Metrics::sized(100, 4);
+        // Exact mode pins true nearest-rank values.
+        let mut m = Metrics::exact();
+        m.frames = 100;
+        m.utterances = 4;
         m.wall = Duration::from_secs(2);
         m.extend_frame_latency((1..=100).map(|i| i as f64));
         assert_eq!(m.fps(), 50.0);
@@ -371,17 +502,57 @@ mod tests {
     }
 
     #[test]
+    fn default_histogram_within_one_bucket_of_exact() {
+        // The default (bounded) mode must agree with the exact mode to
+        // within one 2^(1/8) bucket at every reported percentile, with an
+        // exact mean.
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(0x9d7);
+        let mut hist = Metrics::default();
+        let mut exact = Metrics::exact();
+        let mut sum = 0.0;
+        for _ in 0..500 {
+            let v = (rng.next_f64() * 16.0).exp2(); // 1 µs .. 65 ms, log-spread
+            hist.record_frame_latency(v);
+            exact.record_frame_latency(v);
+            hist.record_utterance_split(v * 0.5, v * 2.0);
+            exact.record_utterance_split(v * 0.5, v * 2.0);
+            sum += v;
+        }
+        for (h, e) in [
+            (hist.latency_p50_us(), exact.latency_p50_us()),
+            (hist.latency_p95_us(), exact.latency_p95_us()),
+            (hist.latency_p99_us(), exact.latency_p99_us()),
+            (hist.queue_wait_p50_us(), exact.queue_wait_p50_us()),
+            (hist.queue_wait_p99_us(), exact.queue_wait_p99_us()),
+            (hist.service_p50_us(), exact.service_p50_us()),
+            (hist.service_p95_us(), exact.service_p95_us()),
+            (hist.service_p99_us(), exact.service_p99_us()),
+        ] {
+            assert!(
+                h / e <= BUCKET_RATIO + 1e-12 && e / h <= BUCKET_RATIO + 1e-12,
+                "histogram {h} vs exact {e} differ by more than one bucket"
+            );
+        }
+        assert!((hist.latency_mean_us() - sum / 500.0).abs() < 1e-6, "mean is exact");
+        // Default mode keeps no raw samples (that is the point).
+        assert!(hist.frame_latencies_us().is_empty());
+        assert_eq!(exact.frame_latencies_us().len(), 500);
+    }
+
+    #[test]
     fn empty_is_safe() {
         let m = Metrics::default();
         assert_eq!(m.fps(), 0.0);
         assert_eq!(m.latency_p50_us(), 0.0);
         assert_eq!(m.latency_p99_us(), 0.0);
         assert_eq!(m.queue_wait_p99_us(), 0.0);
+        let m = Metrics::exact();
+        assert_eq!(m.latency_p99_us(), 0.0);
     }
 
     #[test]
     fn sorted_cache_invalidates_on_write() {
-        let mut m = Metrics::default();
+        let mut m = Metrics::exact();
         m.record_frame_latency(10.0);
         assert_eq!(m.latency_p99_us(), 10.0);
         // A later, larger sample must be visible after the cached read.
@@ -393,7 +564,7 @@ mod tests {
 
     #[test]
     fn queue_wait_and_service_split() {
-        let mut m = Metrics::default();
+        let mut m = Metrics::exact();
         for i in 0..10 {
             m.record_utterance_split(i as f64, 100.0 + i as f64);
         }
@@ -402,6 +573,10 @@ mod tests {
         assert!(m.queue_wait_p99_us() <= 9.0 + 1e-9);
         assert!(m.service_p50_us() >= 100.0);
         assert!(m.summary().contains("queue wait"));
+        // The histogram mode gates the same summary line on its own count.
+        let mut h = Metrics::default();
+        h.record_utterance_split(5.0, 50.0);
+        assert!(h.summary().contains("queue wait"));
     }
 
     #[test]
@@ -459,11 +634,20 @@ mod tests {
         // A zero-duration clock edge can produce a NaN sample; the summary
         // (which sorts) must survive it. NaN sorts last under total_cmp,
         // so finite percentiles stay meaningful.
-        let mut m = Metrics::default();
+        let mut m = Metrics::exact();
         m.extend_frame_latency([3.0, f64::NAN, 1.0, 2.0]);
         assert_eq!(m.latency_p50_us(), 2.0);
         assert!(m.summary().contains("FPS"));
-        // An all-NaN and an empty population are both safe.
+        // The histogram mode keeps NaN parity: finite p50 in 2.0's
+        // bucket, NaN-ranked tail percentile, poisoned mean.
+        let mut h = Metrics::default();
+        h.extend_frame_latency([3.0, f64::NAN, 1.0, 2.0]);
+        let p50 = h.latency_p50_us();
+        assert!(p50 / 2.0 <= BUCKET_RATIO && 2.0 / p50 <= BUCKET_RATIO, "{p50}");
+        assert!(h.latency_p99_us().is_nan());
+        assert!(h.latency_mean_us().is_nan());
+        assert!(!h.summary().is_empty());
+        // An all-NaN and an empty population are both safe in both modes.
         let mut all_nan = Metrics::default();
         all_nan.extend_frame_latency([f64::NAN, f64::NAN]);
         assert!(all_nan.latency_p99_us().is_nan());
@@ -473,16 +657,16 @@ mod tests {
 
     #[test]
     fn percentile_is_true_nearest_rank() {
-        let mut m = Metrics::default();
+        let mut m = Metrics::exact();
         m.extend_frame_latency((1..=50).map(|i| i as f64));
         // Nearest rank ⌈p·N⌉: p99 of 50 samples is rank ⌈49.5⌉ = 50 →
         // the maximum (the old (N−1)-linear-index formula said 49).
         assert_eq!(m.latency_p99_us(), 50.0);
         assert_eq!(m.latency_p50_us(), 25.0);
         // p100 clamps to the maximum, p0 to the minimum.
-        let one = Metrics::default();
+        let one = Metrics::exact();
         assert_eq!(one.latency_p50_us(), 0.0);
-        let mut two = Metrics::default();
+        let mut two = Metrics::exact();
         two.extend_frame_latency([10.0, 20.0]);
         assert_eq!(two.latency_p50_us(), 10.0);
         assert_eq!(two.latency_p99_us(), 20.0);
@@ -513,6 +697,7 @@ mod tests {
 
     #[test]
     fn merge_accumulates() {
+        // Default (histogram) mode: counts, wall, and exact means merge.
         let mut a = Metrics::sized(5, 1);
         a.wall = Duration::from_secs(1);
         a.extend_frame_latency([1.0, 2.0, 3.0, 4.0, 5.0]);
@@ -527,5 +712,25 @@ mod tests {
         assert_eq!(a.wall, Duration::from_secs(2));
         assert!((a.latency_mean_us() - 5.5).abs() < 1e-9);
         assert!((a.queue_wait_mean_us() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_across_modes_converts_to_histogram() {
+        let mut exact = Metrics::exact();
+        exact.extend_frame_latency([10.0, 20.0]);
+        let mut hist = Metrics::default();
+        hist.extend_frame_latency([40.0, 80.0]);
+        // exact ← hist: result is histogram-backed with all 4 samples.
+        exact.merge(&hist);
+        assert!(exact.frame_latencies_us().is_empty(), "converted to histogram");
+        let p99 = exact.latency_p99_us();
+        assert!(p99 / 80.0 <= BUCKET_RATIO && 80.0 / p99 <= BUCKET_RATIO);
+        assert!((exact.latency_mean_us() - 37.5).abs() < 1e-9);
+        // hist ← exact: samples fold into the histogram.
+        let mut exact2 = Metrics::exact();
+        exact2.extend_frame_latency([160.0]);
+        hist.merge(&exact2);
+        let p99 = hist.latency_p99_us();
+        assert!(p99 / 160.0 <= BUCKET_RATIO && 160.0 / p99 <= BUCKET_RATIO);
     }
 }

@@ -30,7 +30,9 @@
 //!   split, percentiles, per-segment occupancy).
 //! - [`server`] — the end-to-end ASR serving loop (workload in, PER +
 //!   throughput out), closed-loop or open-loop Poisson arrivals, always
-//!   over the full stack.
+//!   over the full stack. [`serve_workload_obs`](server::serve_workload_obs)
+//!   runs the same loop with a span tracer and streaming stats attached
+//!   (see [`crate::obs`]).
 
 pub mod batcher;
 pub mod drive;
@@ -45,5 +47,5 @@ pub use drive::{LaneDriver, LaneFailure};
 pub use engine::{CompletedUtterance, EngineConfig, ServeEngine, Ticket};
 pub use metrics::Metrics;
 pub use pipeline::{ClstmPipeline, PipelineConfig, StageFailure};
-pub use server::{serve_workload, Arrival, ServeOptions, ServeReport};
+pub use server::{serve_workload, serve_workload_obs, Arrival, ServeOptions, ServeReport};
 pub use topology::{StackEngine, StackTopology};

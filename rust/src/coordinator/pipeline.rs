@@ -27,6 +27,7 @@
 use crate::coordinator::metrics::{Metrics, StageTime};
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
+use crate::obs::trace::{lane_pid, stage_tid, TraceSink, NO_UTT};
 use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor, StageSet};
 use anyhow::{ensure, Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -259,8 +260,34 @@ impl ClstmPipeline {
         seg: SegmentId,
         notify: Option<Sender<()>>,
     ) -> Result<Self> {
+        Self::from_stage_set_traced(spec, stages, cfg, seg, notify, &TraceSink::disabled(), 0)
+    }
+
+    /// As [`Self::from_stage_set`], with a span tracer: each stage thread
+    /// records its per-frame execution as a complete span on the
+    /// `(lane_pid(lane), stage_tid(layer, dir, stage))` track, reusing the
+    /// `Instant`s it already takes for the [`StageClock`] — tracing adds no
+    /// clock reads, and a disabled sink records nothing at all.
+    pub fn from_stage_set_traced(
+        spec: LstmSpec,
+        stages: StageSet,
+        cfg: PipelineConfig,
+        seg: SegmentId,
+        notify: Option<Sender<()>>,
+        trace: &TraceSink,
+        lane: usize,
+    ) -> Result<Self> {
         let depth = cfg.channel_depth.max(1);
         let window = cfg.window();
+
+        let pid = lane_pid(lane);
+        let tids: [u32; STAGES] = std::array::from_fn(|i| stage_tid(seg.layer, seg.dir, i + 1));
+        if trace.is_enabled() {
+            trace.name_process(pid, format!("lane{lane}"));
+            for (i, &tid) in tids.iter().enumerate() {
+                trace.name_track(pid, tid, format!("{seg}/s{}", i + 1));
+            }
+        }
 
         // Buffer sizes come from the executors' declared output lengths, so
         // the pipeline stays backend-agnostic.
@@ -298,6 +325,7 @@ impl ClstmPipeline {
         let mut stage1: Box<dyn StageExecutor> = stages.stage1;
         let clock1 = Arc::clone(&clock);
         let fail1 = Arc::clone(&failure);
+        let mut tr1 = trace.local();
         let h1 = std::thread::Builder::new()
             .name("clstm-stage1".into())
             .spawn(move || {
@@ -313,7 +341,9 @@ impl ClstmPipeline {
                             record_failure(&fail1, 1, e);
                             return;
                         }
-                        clock1.record(0, t0.elapsed());
+                        let el = t0.elapsed();
+                        clock1.record(0, el);
+                        tr1.span_from(pid, tids[0], "s1", t0, el, NO_UTT);
                     }
                     if s1_tx.send(msg).is_err() {
                         break;
@@ -324,6 +354,7 @@ impl ClstmPipeline {
         let mut stage2: Box<dyn StageExecutor> = stages.stage2;
         let clock2 = Arc::clone(&clock);
         let fail2 = Arc::clone(&failure);
+        let mut tr2 = trace.local();
         let h2 = std::thread::Builder::new()
             .name("clstm-stage2".into())
             .spawn(move || {
@@ -339,7 +370,9 @@ impl ClstmPipeline {
                             record_failure(&fail2, 2, e);
                             return;
                         }
-                        clock2.record(1, t0.elapsed());
+                        let el = t0.elapsed();
+                        clock2.record(1, el);
+                        tr2.span_from(pid, tids[1], "s2", t0, el, NO_UTT);
                     }
                     if s2_tx.send(msg).is_err() {
                         break;
@@ -350,6 +383,7 @@ impl ClstmPipeline {
         let mut stage3: Box<dyn StageExecutor> = stages.stage3;
         let clock3 = Arc::clone(&clock);
         let fail3 = Arc::clone(&failure);
+        let mut tr3 = trace.local();
         let h3 = std::thread::Builder::new()
             .name("clstm-stage3".into())
             .spawn(move || {
@@ -362,7 +396,9 @@ impl ClstmPipeline {
                             record_failure(&fail3, 3, e);
                             return;
                         }
-                        clock3.record(2, t0.elapsed());
+                        let el = t0.elapsed();
+                        clock3.record(2, el);
+                        tr3.span_from(pid, tids[2], "s3", t0, el, NO_UTT);
                     }
                     if s3_tx.send(msg).is_err() {
                         break;

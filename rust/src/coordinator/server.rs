@@ -35,6 +35,8 @@ use crate::data::per::phone_error_rate;
 use crate::data::synth::{SynthConfig, SynthTimit};
 use crate::lstm::sequence::argmax;
 use crate::lstm::weights::LstmWeights;
+use crate::obs::trace::{PID_DRIVER, TID_ADMISSION};
+use crate::obs::ObsOptions;
 use crate::runtime::backend::Backend;
 use crate::util::prng::Xoshiro256;
 use anyhow::{ensure, Context, Result};
@@ -97,6 +99,11 @@ pub struct ServeReport {
     pub replicas: usize,
     /// The queue-wait SLO the run shed against, if any.
     pub slo: Option<Duration>,
+    /// `fft-stats` datapath watermarks read off the fxp backend's shared
+    /// preparation after the run — one `(segment, forward_calls,
+    /// forward_peak, acc_peak, time_peak)` row per `(layer, direction)`.
+    /// Empty in default builds and on every other backend.
+    pub datapath: Vec<(String, u64, u64, u64, u64)>,
 }
 
 /// Generate `n_utts` SynthTIMIT utterances sized for `weights.spec`, serve
@@ -107,6 +114,22 @@ pub fn serve_workload(
     weights: &LstmWeights,
     n_utts: usize,
     opts: &ServeOptions,
+) -> Result<ServeReport> {
+    serve_workload_obs(backend, weights, n_utts, opts, &ObsOptions::default())
+}
+
+/// As [`serve_workload`], with observability attached: a span tracer
+/// recording the full utterance lifecycle (arrival → admit/shed → dispatch
+/// → per-stage frame spans → completion, plus occupancy / shed-rate / lane
+/// counter tracks) and an optional rolling `stats:` line. A default
+/// [`ObsOptions`] makes this identical to [`serve_workload`] — the
+/// disabled sink records nothing and reads no clocks.
+pub fn serve_workload_obs(
+    backend: &dyn Backend,
+    weights: &LstmWeights,
+    n_utts: usize,
+    opts: &ServeOptions,
+    obs: &ObsOptions,
 ) -> Result<ServeReport> {
     let spec = &weights.spec;
 
@@ -173,12 +196,20 @@ pub fn serve_workload(
         streams_per_lane: opts.streams_per_lane,
         channel_depth: opts.channel_depth,
     };
-    let mut engine = StackEngine::build(backend, weights, engine_cfg)?;
+    let mut engine = StackEngine::build_with_trace(backend, weights, engine_cfg, &obs.trace)?;
     let replicas = engine.replicas();
+    // Driver-side trace buffer: admission lifecycle instants plus the
+    // throttled counter tracks. All of it is a no-op (no clock reads) when
+    // tracing is off.
+    let mut tr = obs.trace.local();
+    let mut last_ctr_us = f64::NEG_INFINITY;
+    // Minimum spacing between counter-track samples, µs.
+    const COUNTER_EVERY_US: f64 = 1_000.0;
     // The engine takes ~two utterance generations per stream slot; the
     // batcher holds the rest so its occupancy stays a meaningful
     // backpressure signal.
     let mut batcher = Batcher::new(n_utts.max(1), replicas * opts.streams_per_lane.max(1));
+    batcher.set_trace(&obs.trace);
     // Deadline-aware admission when an SLO is set: shed at the front door
     // when the estimated queue wait blows the waiting-room budget, and at
     // pop time when an admitted utterance has already burned it waiting.
@@ -208,6 +239,8 @@ pub fn serve_workload(
     const HEALTH_CHECK_EVERY: Duration = Duration::from_millis(10);
     let mut idle_wait = IDLE_WAIT_MIN;
     let mut last_health_check = t0;
+    // Rolling `stats:` line state (interval, window start, frames at start).
+    let mut stats_timer = obs.stats_interval.map(|iv| (iv, Instant::now(), 0usize));
 
     loop {
         let shed = adm.as_ref().map_or(0, |a| a.shed as usize);
@@ -216,6 +249,33 @@ pub fn serve_workload(
         }
         // Let the engine adapt lane count to occupancy before feeding it.
         engine.autoscale()?;
+        // Throttled counter tracks (one trace clock read per sample batch;
+        // none at all when tracing is off).
+        if let Some(ts) = tr.now_us() {
+            if ts - last_ctr_us >= COUNTER_EVERY_US {
+                last_ctr_us = ts;
+                tr.counter_at(PID_DRIVER, "occupancy", ts, engine.load() as f64);
+                tr.counter_at(PID_DRIVER, "lanes", ts, engine.replicas() as f64);
+                let shed_rate = adm.as_ref().map_or(0.0, AdmissionControl::shed_rate);
+                tr.counter_at(PID_DRIVER, "shed_rate", ts, shed_rate);
+            }
+        }
+        // Rolling stats line, on its own (non-trace) clock.
+        if let Some((iv, window_start, window_frames)) = stats_timer.as_mut() {
+            let dt = window_start.elapsed();
+            if dt >= *iv {
+                let fps = (metrics.frames - *window_frames) as f64 / dt.as_secs_f64();
+                *window_start = Instant::now();
+                *window_frames = metrics.frames;
+                println!(
+                    "stats: {completed}/{n_utts} utts, {fps:.0} fps (rolling), \
+                     frame p99 {:.0}µs, shed {}, lanes {}",
+                    metrics.latency_p99_us(),
+                    adm.as_ref().map_or(0, |a| a.shed),
+                    engine.replicas()
+                );
+            }
+        }
         // Arrived utterances enter the bounded waiting room — unless the
         // admission controller estimates they'd blow the SLO just waiting.
         while workload
@@ -223,10 +283,12 @@ pub fn serve_workload(
             .is_some_and(|(at, _)| *at <= t0.elapsed())
         {
             let (_, utt) = workload.pop_front().expect("front checked");
+            tr.instant_now(PID_DRIVER, TID_ADMISSION, "arrival", utt.id);
             if let Some(a) = adm.as_mut() {
                 let backlog = batcher.len() + engine.pending();
                 let slots = engine.replicas() * opts.streams_per_lane.max(1);
                 if !a.admit(backlog, slots) {
+                    tr.instant_now(PID_DRIVER, TID_ADMISSION, "shed", utt.id);
                     continue; // shed at the front door
                 }
             }
@@ -245,10 +307,13 @@ pub fn serve_workload(
                 // land outside the SLO, so cut the loss.
                 if admitted.elapsed().as_secs_f64() * 1e6 > a.budget_us() {
                     a.shed += 1;
+                    tr.instant_now(PID_DRIVER, TID_ADMISSION, "shed", u.id);
                     continue;
                 }
             }
+            let uid = u.id;
             engine.submit_arrived(u, admitted)?;
+            tr.instant_now(PID_DRIVER, TID_ADMISSION, "dispatch", uid);
         }
         // Drain whatever has finished.
         let mut drained = false;
@@ -312,6 +377,17 @@ pub fn serve_workload(
         metrics.offered = a.offered;
         metrics.shed = a.shed;
     }
+    // Read the fxp datapath watermarks off the shared preparation before
+    // the engine (and its Arc) goes away; a non-fxp payload downcasts to
+    // None and yields an empty table.
+    #[cfg(feature = "fft-stats")]
+    let datapath = engine
+        .prepared()
+        .downcast::<crate::runtime::fxp::FxpPrepared>()
+        .map(crate::runtime::fxp::FxpPrepared::datapath_watermarks)
+        .unwrap_or_default();
+    #[cfg(not(feature = "fft-stats"))]
+    let datapath = Vec::new();
     drop(engine);
 
     let per = phone_error_rate(&hyps, &refs);
@@ -321,5 +397,6 @@ pub fn serve_workload(
         config: backend.name(),
         replicas,
         slo: opts.slo,
+        datapath,
     })
 }

@@ -70,7 +70,8 @@ use crate::coordinator::metrics::{SegmentOccupancy, StageTime};
 use crate::coordinator::pipeline::{ClstmPipeline, DoneFrame, PipelineConfig, STAGES};
 use crate::lstm::config::LstmSpec;
 use crate::lstm::weights::LstmWeights;
-use crate::runtime::backend::{Backend, SegmentId, StageSet};
+use crate::obs::trace::{lane_pid, utt_tid, TraceLocal, TraceSink};
+use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageSet};
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -257,6 +258,10 @@ pub struct StackEngine {
     driver: LaneDriver,
     backend_name: String,
     seg_stats: Arc<Vec<SegStat>>,
+    /// The shared weight preparation every instance reads — retained so
+    /// serve tails can downcast it for backend-specific statistics (e.g.
+    /// the fxp datapath watermarks under `--features fft-stats`).
+    prepared: Arc<PreparedWeights>,
 }
 
 impl StackEngine {
@@ -266,6 +271,22 @@ impl StackEngine {
     /// executors for every instance it may ever grow and scales
     /// elastically between the two bounds.
     pub fn build(backend: &dyn Backend, weights: &LstmWeights, cfg: EngineConfig) -> Result<Self> {
+        Self::build_with_trace(backend, weights, cfg, &TraceSink::disabled())
+    }
+
+    /// As [`Self::build`], with a span tracer: every segment pipeline's
+    /// stage threads record per-frame spans on their
+    /// `(lane_pid, stage_tid(layer, dir, stage))` track, each instance
+    /// scheduler records one `utt` span per utterance it completes, and the
+    /// driver marks instance grow/retire events. A
+    /// [`TraceSink::disabled`] sink makes this identical to
+    /// [`Self::build`] — no clock reads, nothing recorded.
+    pub fn build_with_trace(
+        backend: &dyn Backend,
+        weights: &LstmWeights,
+        cfg: EngineConfig,
+        trace: &TraceSink,
+    ) -> Result<Self> {
         let topo = StackTopology::compile(&weights.spec);
         ensure!(!topo.is_empty(), "spec compiles to an empty topology");
         ensure!(
@@ -323,10 +344,17 @@ impl StackEngine {
         };
         let spawn_topo = topo.clone();
         let spawn_stats = Arc::clone(&seg_stats);
+        let sink = trace.clone();
         let spawner = Box::new(move |seat: LaneSeat| -> Result<Option<SpawnedLane>> {
             let Some(sets) = pool.pop_front() else {
                 return Ok(None);
             };
+            let LaneSeat {
+                lane,
+                done_tx,
+                status,
+                load,
+            } = seat;
             // One wake channel per instance: every segment pipeline's
             // stage-3 thread and the driver's `submit` signal it, so the
             // instance scheduler has a true "any segment done / new work"
@@ -335,25 +363,29 @@ impl StackEngine {
             let mut pipes = Vec::with_capacity(spawn_topo.len());
             let mut clocks = Vec::with_capacity(spawn_topo.len());
             for (seg, stages) in spawn_topo.segments.iter().zip(sets) {
-                let pipe = ClstmPipeline::from_stage_set(
+                let pipe = ClstmPipeline::from_stage_set_traced(
                     spec.clone(),
                     stages,
                     pipe_cfg,
                     seg.id,
                     Some(wake_tx.clone()),
+                    &sink,
+                    lane,
                 )?;
                 clocks.push(pipe.stage_clock());
                 pipes.push(pipe);
             }
-            let LaneSeat {
-                lane,
-                done_tx,
-                status,
-                load,
-            } = seat;
+            if sink.is_enabled() {
+                // `utt_tid(streams)` is the overflow track for zero-frame
+                // utterances that never occupy a stream slot.
+                for slot in 0..=streams {
+                    sink.name_track(lane_pid(lane), utt_tid(slot), format!("utt slot {slot}"));
+                }
+            }
             let (tx, rx) = channel::<Job>();
             let worker_topo = spawn_topo.clone();
             let worker_stats = Arc::clone(&spawn_stats);
+            let worker_trace = sink.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("clstm-stack{lane}"))
                 .spawn(move || {
@@ -368,6 +400,7 @@ impl StackEngine {
                         streams,
                         worker_stats,
                         status,
+                        worker_trace,
                     )
                 })?;
             Ok(Some(SpawnedLane {
@@ -377,12 +410,22 @@ impl StackEngine {
                 clocks,
             }))
         });
+        let mut driver = LaneDriver::new(replicas, max, streams, in_pad, spawner)?;
+        driver.set_trace(trace.clone());
         Ok(Self {
             topo,
-            driver: LaneDriver::new(replicas, max, streams, in_pad, spawner)?,
+            driver,
             backend_name: backend.name(),
             seg_stats,
+            prepared,
         })
+    }
+
+    /// The shared weight preparation every instance reads (for
+    /// backend-specific post-run statistics, e.g.
+    /// `PreparedWeights::downcast` to the fxp bundle).
+    pub fn prepared(&self) -> &Arc<PreparedWeights> {
+        &self.prepared
     }
 
     /// Per-stage service-time split summed across every segment pipeline of
@@ -581,6 +624,7 @@ fn stack_worker(
     max_streams: usize,
     seg_stats: Arc<Vec<SegStat>>,
     status: Arc<StatusBoard>,
+    trace: TraceSink,
 ) {
     /// Safety-net bound on the wake block. Correctness never depends on it
     /// (every completion and submit sends a wake token *after* its payload
@@ -588,6 +632,7 @@ fn stack_worker(
     /// should that invariant ever break.
     const WAKE_FALLBACK: Duration = Duration::from_millis(20);
 
+    let mut tr = trace.local();
     let layers = topo.spec.layers;
     let dirs = topo.spec.directions();
     let nseg = topo.len();
@@ -632,8 +677,21 @@ fn stack_worker(
             if job.utt.frames.is_empty() {
                 // Degenerate zero-frame utterance: completes immediately.
                 load.fetch_sub(1, Ordering::Relaxed);
+                let waited = job.submitted.elapsed();
+                // Zero-frame utterances never occupy a stream slot; their
+                // `utt` span lands on the overflow track past the last slot
+                // so the conservation count still sees one span per served
+                // utterance.
+                tr.span_from(
+                    lane_pid(lane),
+                    utt_tid(max_streams),
+                    "utt",
+                    job.submitted,
+                    waited,
+                    job.utt.id,
+                );
                 let _ = done_tx.send(CompletedUtterance {
-                    queue_wait_us: job.submitted.elapsed().as_secs_f64() * 1e6,
+                    queue_wait_us: waited.as_secs_f64() * 1e6,
                     service_us: 0.0,
                     outputs: Vec::new(),
                     frame_latency_us: Vec::new(),
@@ -738,7 +796,7 @@ fn stack_worker(
                     };
                     complete_frame(
                         seg_idx, d, &mut pipes, &mut slots, &topo, &mut local_stats, &seg_stats,
-                        &done_tx, &load, lane, &mut active,
+                        &done_tx, &load, lane, &mut active, &mut tr,
                     );
                     progress = true;
                 }
@@ -802,6 +860,7 @@ fn complete_frame(
     load: &AtomicUsize,
     lane: usize,
     active: &mut usize,
+    tr: &mut TraceLocal,
 ) {
     let slot = done.stream();
     let t = done.t();
@@ -841,7 +900,11 @@ fn complete_frame(
         let au = slots[slot].take().expect("finished slot");
         *active -= 1;
         let first = au.first_dispatch.unwrap_or(au.submitted);
+        let service = first.elapsed();
         load.fetch_sub(au.frames.max(1), Ordering::Relaxed);
+        // One `utt` span per completion (first dispatch → done), from the
+        // instants the accounting below already reads.
+        tr.span_from(lane_pid(lane), utt_tid(slot), "utt", first, service, au.utt.id);
         // Publish statistics before the completion becomes visible, so a
         // driver that drained everything reads fully-flushed counters.
         flush_stats(local_stats, seg_stats);
@@ -849,7 +912,7 @@ fn complete_frame(
         // (and its pipelines) still shuts down cleanly.
         let _ = done_tx.send(CompletedUtterance {
             queue_wait_us: (first - au.submitted).as_secs_f64() * 1e6,
-            service_us: first.elapsed().as_secs_f64() * 1e6,
+            service_us: service.as_secs_f64() * 1e6,
             outputs: au
                 .outputs
                 .into_iter()

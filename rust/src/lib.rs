@@ -43,6 +43,7 @@ pub mod graph;
 pub mod hlscodegen;
 pub mod lstm;
 pub mod num;
+pub mod obs;
 pub mod perfmodel;
 pub mod quant;
 pub mod report;

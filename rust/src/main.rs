@@ -24,6 +24,11 @@
 //!                         #   (--model, --q-format, --rounding,
 //!                         #    --input-bound; non-zero exit + site-named
 //!                         #    report on any violation)
+//! clstm trace-check       # validate serve observability artifacts
+//!                         #   (--trace t.json and/or --metrics-json
+//!                         #    m.json: balanced/monotonic Chrome trace,
+//!                         #    snapshot schema, utterance conservation;
+//!                         #    non-zero exit on any violation)
 //! ```
 
 use clstm::util::cli::Cli;
@@ -33,6 +38,7 @@ mod cmds {
     pub mod quantize;
     pub mod serve;
     pub mod tables;
+    pub mod trace_check;
     pub mod verify;
 }
 
@@ -73,6 +79,21 @@ fn main() {
     .opt("slo-ms", "0", "queue-wait SLO in ms; > 0 sheds load to keep the served tail inside it")
     .opt("seed", "1234", "random seed")
     .opt("out", "", "optional output file for generated code/reports")
+    .opt(
+        "trace",
+        "",
+        "serve: write a Chrome trace_event JSON of the run; trace-check: the trace to validate",
+    )
+    .opt(
+        "metrics-json",
+        "",
+        "serve: write the versioned metrics snapshot; trace-check: the snapshot to validate",
+    )
+    .opt(
+        "stats-interval",
+        "0",
+        "serve: print a rolling stats line every S seconds (0 = off)",
+    )
     .flag("verbose", "chatty logging")
     .parse_env();
 
@@ -96,9 +117,10 @@ fn main() {
         "serve" => cmds::serve::serve_cmd(&cli),
         "quantize" => cmds::quantize::quantize_cmd(&cli),
         "verify" => cmds::verify::verify_cmd(&cli),
+        "trace-check" => cmds::trace_check::trace_check_cmd(&cli),
         _ => {
             eprintln!(
-                "usage: clstm <table1|table3|fig3|fig4|fig5|fig6|schedule|dse|codegen|simulate|serve|quantize|verify> [options]\n\
+                "usage: clstm <table1|table3|fig3|fig4|fig5|fig6|schedule|dse|codegen|simulate|serve|quantize|verify|trace-check> [options]\n\
                  run `clstm --help` for options"
             );
             Ok(())

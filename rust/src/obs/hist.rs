@@ -1,0 +1,312 @@
+//! Mergeable log-bucketed latency histogram (bounded-memory percentiles).
+//!
+//! `Metrics` used to keep every latency sample in a `Vec<f64>` — unbounded
+//! growth on long open-loop runs. [`LogHistogram`] replaces that with a
+//! fixed array of geometric buckets, ratio `2^(1/8)` (8 buckets per
+//! octave), spanning `MIN_US = 1e-3` µs (1 ns) through 44 octaves
+//! (≈ 4.9 hours in µs) plus an underflow and an overflow bucket — 354
+//! counters total, a few KiB, regardless of sample count.
+//!
+//! ## Error bound
+//!
+//! Bucketing is a monotone map, so the bucket containing the histogram's
+//! rank-`r` sample is exactly the bucket containing the rank-`r` value of
+//! the exact sorted series. The reported percentile is that bucket's
+//! geometric midpoint clamped to the exact `[min, max]` seen — always in
+//! the *same* bucket as the exact nearest-rank value, i.e. within a
+//! factor of `2^(1/8) ≈ 1.0905` (≤ ~9.1 % relative error). Values below
+//! `MIN_US` collapse to the exact minimum; values above the top bucket
+//! report the exact maximum. Pinned against the exact path by a property
+//! test in `tests/obs.rs`.
+//!
+//! ## NaN parity
+//!
+//! The exact path sorts with `f64::total_cmp`, which orders (positive)
+//! NaN after every number. The histogram keeps the same contract: NaN
+//! samples are counted in a tail that ranks after every bucket, so a
+//! percentile whose nearest rank lands in that tail is NaN, an all-NaN
+//! series has NaN percentiles, and any NaN poisons the mean — exactly the
+//! `Vec<f64>` behaviour.
+
+/// Buckets per octave (ratio `2^(1/8)` between bucket edges).
+const BUCKETS_PER_OCTAVE: usize = 8;
+/// Lower edge of the first regular bucket, in µs (1 ns).
+const MIN_US: f64 = 1e-3;
+/// Octaves covered by regular buckets (top edge ≈ 1.76e10 µs ≈ 4.9 h).
+const OCTAVES: usize = 44;
+/// Regular bucket count (index 0 is the underflow bucket, index
+/// `NUM_BUCKETS + 1` the overflow bucket).
+const NUM_BUCKETS: usize = BUCKETS_PER_OCTAVE * OCTAVES;
+
+/// One bucket's worth of relative error: the edge ratio `2^(1/8)`.
+pub const BUCKET_RATIO: f64 = 1.090_507_732_665_257_7;
+
+/// A fixed-memory log-bucketed histogram over non-negative µs samples.
+/// Mergeable by adding counts; see the module docs for the error bound.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// `[0]` = underflow (`v < MIN_US`, including any negative sample),
+    /// `[1..=NUM_BUCKETS]` = regular, `[NUM_BUCKETS + 1]` = overflow.
+    counts: Box<[u64; NUM_BUCKETS + 2]>,
+    /// Non-NaN samples recorded.
+    count: u64,
+    /// NaN samples recorded (the rank tail; see module docs).
+    nan_count: u64,
+    /// Exact running sum over *all* samples (a NaN poisons it, matching
+    /// the exact path's mean).
+    sum: f64,
+    /// Exact min/max over non-NaN samples (clamp rails for the bucket
+    /// representatives and the under/overflow reports).
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self {
+            counts: Box::new([0; NUM_BUCKETS + 2]),
+            count: 0,
+            nan_count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Bucket index for a non-NaN value.
+    fn index(v: f64) -> usize {
+        if v < MIN_US {
+            return 0;
+        }
+        let bucket = ((v / MIN_US).log2() * BUCKETS_PER_OCTAVE as f64).floor();
+        if bucket >= NUM_BUCKETS as f64 {
+            return NUM_BUCKETS + 1;
+        }
+        1 + bucket as usize
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: f64) {
+        self.sum += v;
+        if v.is_nan() {
+            self.nan_count += 1;
+            return;
+        }
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.counts[Self::index(v)] += 1;
+    }
+
+    /// Samples recorded, NaN tail included (the exact series' length).
+    pub fn len(&self) -> usize {
+        (self.count + self.nan_count) as usize
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The reported value for bucket `i`: its geometric midpoint, clamped
+    /// to the exact range seen; the underflow bucket reports the exact
+    /// minimum and the overflow bucket the exact maximum.
+    fn representative(&self, i: usize) -> f64 {
+        let rep = if i == 0 {
+            self.min
+        } else if i == NUM_BUCKETS + 1 {
+            self.max
+        } else {
+            MIN_US * ((i - 1) as f64 + 0.5).exp2().powf(1.0 / BUCKETS_PER_OCTAVE as f64)
+        };
+        rep.clamp(self.min, self.max)
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 1]`): the same
+    /// `⌈p · N⌉`-th-smallest contract as the exact series, with the NaN
+    /// tail ranking last. Empty histogram reports `0.0`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count + self.nan_count;
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        if rank > self.count {
+            return f64::NAN;
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return self.representative(i);
+            }
+        }
+        self.max
+    }
+
+    /// Exact mean over all samples (NaN if any sample was NaN, matching
+    /// the exact path); `0.0` when empty.
+    pub fn mean(&self) -> f64 {
+        let total = self.count + self.nan_count;
+        if total == 0 {
+            return 0.0;
+        }
+        self.sum / total as f64
+    }
+
+    /// Exact minimum non-NaN sample (`0.0` when none).
+    pub fn min_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum non-NaN sample (`0.0` when none).
+    pub fn max_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Fold `other` into `self` by adding counts. The one-bucket error
+    /// bound is preserved: bucket edges are global constants, so merged
+    /// counts are exactly the histogram of the concatenated series.
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.nan_count += other.nan_count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact nearest-rank percentile `Metrics`' exact mode computes.
+    fn exact_percentile(xs: &[f64], p: f64) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = xs.to_vec();
+        s.sort_by(f64::total_cmp);
+        let rank = ((p * s.len() as f64).ceil() as usize).clamp(1, s.len());
+        s[rank - 1]
+    }
+
+    fn within_one_bucket(got: f64, exact: f64) -> bool {
+        if got.is_nan() || exact.is_nan() {
+            return got.is_nan() && exact.is_nan();
+        }
+        if exact < MIN_US {
+            return got <= MIN_US * BUCKET_RATIO;
+        }
+        got / exact <= BUCKET_RATIO + 1e-12 && exact / got <= BUCKET_RATIO + 1e-12
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let h = LogHistogram::default();
+        assert_eq!(h.percentile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min_us(), 0.0);
+        assert_eq!(h.max_us(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn single_and_two_sample_ranks_match_exact() {
+        let mut h = LogHistogram::default();
+        h.record(10.0);
+        assert!(within_one_bucket(h.percentile(0.5), 10.0));
+        h.record(20.0);
+        // Exact nearest rank on [10, 20]: p50 -> 10, p99 -> 20.
+        assert!(within_one_bucket(h.percentile(0.5), 10.0));
+        assert!(within_one_bucket(h.percentile(0.99), 20.0));
+        assert!((h.mean() - 15.0).abs() < 1e-12, "mean is exact");
+        assert_eq!(h.min_us(), 10.0);
+        assert_eq!(h.max_us(), 20.0);
+    }
+
+    #[test]
+    fn nan_parity_with_total_cmp() {
+        // p50 of [3, NaN, 1, 2]: total_cmp sorts NaN last -> rank 2 = 2.0.
+        let mut h = LogHistogram::default();
+        for v in [3.0, f64::NAN, 1.0, 2.0] {
+            h.record(v);
+        }
+        assert!(within_one_bucket(h.percentile(0.5), 2.0));
+        // Rank in the NaN tail -> NaN; any NaN poisons the mean.
+        assert!(h.percentile(0.99).is_nan());
+        assert!(h.mean().is_nan());
+        // All-NaN series: NaN percentiles at every p.
+        let mut h = LogHistogram::default();
+        for _ in 0..4 {
+            h.record(f64::NAN);
+        }
+        assert!(h.percentile(0.5).is_nan() && h.percentile(0.99).is_nan());
+    }
+
+    #[test]
+    fn property_within_one_bucket_of_exact_nearest_rank() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(0x0b5e);
+        for trial in 0..200 {
+            let n = 1 + (rng.next_u64() % 300) as usize;
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| match trial % 4 {
+                    // Uniform µs-scale, heavy-tailed, sub-resolution +
+                    // huge, and exponential-ish mixes.
+                    0 => 0.5 + rng.next_f64() * 5e4,
+                    1 => (rng.next_f64() * 20.0 - 4.0).exp2(),
+                    2 => [0.0, 1e-7, 3.0, 3.0, 1e9][(rng.next_u64() % 5) as usize],
+                    _ => -(1.0 - rng.next_f64()).ln() * 200.0,
+                })
+                .collect();
+            if trial % 5 == 4 {
+                xs.push(f64::NAN);
+            }
+            let mut h = LogHistogram::default();
+            for &v in &xs {
+                h.record(v);
+            }
+            for p in [0.5, 0.95, 0.99] {
+                let e = exact_percentile(&xs, p);
+                let g = h.percentile(p);
+                assert!(
+                    within_one_bucket(g, e),
+                    "trial {trial} p={p}: hist {g} vs exact {e} (n={n})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_the_concatenated_histogram() {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(0x3e46e);
+        let a: Vec<f64> = (0..300).map(|_| (rng.next_f64() * 14.0).exp2()).collect();
+        let b: Vec<f64> = (0..200).map(|_| (rng.next_f64() * 10.0 + 4.0).exp2()).collect();
+        let (mut ha, mut hb) = (LogHistogram::default(), LogHistogram::default());
+        for &v in &a {
+            ha.record(v);
+        }
+        for &v in &b {
+            hb.record(v);
+        }
+        ha.merge(&hb);
+        let all: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(ha.len(), all.len());
+        for p in [0.5, 0.95, 0.99] {
+            assert!(within_one_bucket(ha.percentile(p), exact_percentile(&all, p)));
+        }
+    }
+}

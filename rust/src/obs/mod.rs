@@ -1,0 +1,55 @@
+//! Observability: structured span tracing and streaming metrics.
+//!
+//! The serving engine used to report only end-of-run aggregates — a
+//! `Metrics::summary()` string the CI smokes grepped. This module is the
+//! structured path those numbers now flow through:
+//!
+//! - [`trace`]: a low-overhead span tracer. Stage threads, lane workers,
+//!   the batcher, and the serve loop each hold a per-thread
+//!   [`TraceLocal`](trace::TraceLocal) buffer (lock-free push, flushed
+//!   into the shared sink when the thread finishes) and record the full
+//!   utterance lifecycle — arrival → admission/shed decision → lane
+//!   dispatch → per-(segment, stage) frame enter/exit → completion.
+//!   The run exports as Chrome `trace_event` JSON
+//!   (Perfetto / `chrome://tracing`-loadable) via
+//!   `clstm serve --trace out.json`, with one track per
+//!   (lane, segment, stage) plus counter tracks for occupancy, shed
+//!   rate, and elastic lane count. A disabled sink is provably
+//!   zero-cost: no allocation, no locking, and **no clock reads**
+//!   (pinned by `tests/obs_disabled.rs` via
+//!   [`trace::trace_clock_reads`]).
+//! - [`hist`]: mergeable log-bucketed latency histograms — bounded
+//!   memory for million-utterance runs, with p50/p95/p99 within one
+//!   2^(1/8) bucket (≤ ~9.1 % relative) of the exact nearest-rank
+//!   percentile, and NaN-tail parity with the exact path's `total_cmp`
+//!   ordering. `Metrics` stores these by default; the exact-vector mode
+//!   survives behind `Metrics::exact()` for tests and benches.
+//! - [`snapshot`]: the versioned machine-readable metrics snapshot
+//!   (`clstm serve --metrics-json out.json`, written atomically). The
+//!   benches' `BENCH_*.json` writers and the Makefile CI smokes consume
+//!   these keys instead of re-deriving numbers or grepping prose.
+//!
+//! Layering: [`trace`] and [`hist`] depend only on `util` and `std`;
+//! [`snapshot`] additionally reads `coordinator::metrics::Metrics` (the
+//! struct it serializes). `coordinator` consumes [`trace`] and [`hist`];
+//! the benches and `cmds` consume all three.
+
+pub mod hist;
+pub mod snapshot;
+pub mod trace;
+
+pub use snapshot::MetricsSnapshot;
+pub use trace::{TraceLocal, TraceSink};
+
+/// Observability options a serve run is driven with (all off by default:
+/// a default `ObsOptions` makes `serve_workload_obs` behave exactly like
+/// `serve_workload`).
+#[derive(Debug, Clone, Default)]
+pub struct ObsOptions {
+    /// Span tracer sink; [`TraceSink::disabled`] (the default) records
+    /// nothing and reads no clocks.
+    pub trace: TraceSink,
+    /// Print a rolling `stats:` line (fps / p99 / shed / lanes) every
+    /// interval while serving. `None` (the default) disables it.
+    pub stats_interval: Option<std::time::Duration>,
+}

@@ -1,0 +1,365 @@
+//! The versioned machine-readable metrics snapshot.
+//!
+//! One struct, one schema, three consumers: `clstm serve --metrics-json
+//! out.json` (written atomically via [`crate::util::json::write_atomic`]),
+//! the benches' `BENCH_*.json` writers (which read the struct's fields
+//! instead of recomputing percentiles from raw vectors), and the Makefile
+//! CI smokes (which grep the stable keys instead of summary prose).
+//!
+//! ## Schema version policy
+//!
+//! `schema_version` starts at 1 ([`SNAPSHOT_SCHEMA_VERSION`]) and bumps
+//! **only** on a breaking change — removing or renaming a key, or
+//! changing a key's meaning or unit. Adding keys is non-breaking and does
+//! not bump the version; consumers must tolerate unknown keys. The
+//! `kind` key pins the document type so a snapshot is never confused
+//! with a `BENCH_*.json` or a trace.
+//!
+//! Percentile keys report exactly what `Metrics::summary()` prints — both
+//! read the same accessors — so the snapshot and the human summary agree
+//! by construction (within nothing: they are the same numbers; the
+//! histogram's one-bucket error bound is between those numbers and the
+//! exact nearest-rank percentile).
+
+use crate::coordinator::metrics::Metrics;
+use crate::util::json::{write_atomic, Json};
+
+/// Current snapshot schema version (see the module docs for the policy).
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+/// The `kind` key of every snapshot document.
+pub const SNAPSHOT_KIND: &str = "clstm-metrics";
+
+/// p50/p95/p99/mean of one latency family, µs.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PercentileSummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub mean: f64,
+}
+
+impl PercentileSummary {
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("p50", Json::num(self.p50)),
+            ("p95", Json::num(self.p95)),
+            ("p99", Json::num(self.p99)),
+            ("mean", Json::num(self.mean)),
+        ])
+    }
+}
+
+/// One stage row of the per-stage service split.
+#[derive(Debug, Clone, Copy)]
+pub struct StageRow {
+    /// Stage number, 1-based.
+    pub stage: usize,
+    pub frames: u64,
+    pub mean_us: f64,
+}
+
+/// One segment row of the occupancy split.
+#[derive(Debug, Clone)]
+pub struct SegmentRow {
+    pub label: String,
+    pub frames: u64,
+    pub mean_in_flight: f64,
+}
+
+/// One segment's `fft-stats` datapath watermarks (present only in
+/// `--features fft-stats` builds).
+#[derive(Debug, Clone)]
+pub struct DatapathRow {
+    pub segment: String,
+    pub forward_calls: u64,
+    pub forward_peak: u64,
+    pub acc_peak: u64,
+    pub time_peak: u64,
+}
+
+/// The machine-readable serve metrics snapshot (see module docs).
+#[derive(Debug, Default, Clone)]
+pub struct MetricsSnapshot {
+    pub backend: String,
+    pub model: String,
+    pub replicas: usize,
+    pub utterances: usize,
+    pub frames: usize,
+    pub wall_s: f64,
+    pub fps: f64,
+    /// Workload phone-error-rate in percent (serve runs that decode).
+    pub per_pct: Option<f64>,
+    pub latency_us: PercentileSummary,
+    pub queue_wait_us: PercentileSummary,
+    pub service_us: PercentileSummary,
+    pub stages: Vec<StageRow>,
+    pub segments: Vec<SegmentRow>,
+    pub offered: u64,
+    pub shed: u64,
+    pub shed_rate: f64,
+    /// SLO budget in ms and whether the served queue-wait p99 met it
+    /// (both `None` when no `--slo-ms` was set).
+    pub slo_ms: Option<f64>,
+    pub slo_met: Option<bool>,
+    pub lanes_grown: u64,
+    pub lanes_retired: u64,
+    /// `fft-stats` watermarks; empty in default builds.
+    pub datapath: Vec<DatapathRow>,
+}
+
+impl MetricsSnapshot {
+    /// Lift everything a [`Metrics`] holds; identity fields (backend,
+    /// model, replicas, PER, SLO) are filled by the caller.
+    pub fn from_metrics(m: &Metrics) -> Self {
+        Self {
+            utterances: m.utterances,
+            frames: m.frames,
+            wall_s: m.wall.as_secs_f64(),
+            fps: m.fps(),
+            latency_us: PercentileSummary {
+                p50: m.latency_p50_us(),
+                p95: m.latency_p95_us(),
+                p99: m.latency_p99_us(),
+                mean: m.latency_mean_us(),
+            },
+            queue_wait_us: PercentileSummary {
+                p50: m.queue_wait_p50_us(),
+                p95: m.queue_wait_p95_us(),
+                p99: m.queue_wait_p99_us(),
+                mean: m.queue_wait_mean_us(),
+            },
+            service_us: PercentileSummary {
+                p50: m.service_p50_us(),
+                p95: m.service_p95_us(),
+                p99: m.service_p99_us(),
+                mean: m.service_mean_us(),
+            },
+            stages: m
+                .stage_times
+                .iter()
+                .enumerate()
+                .map(|(i, st)| StageRow {
+                    stage: i + 1,
+                    frames: st.frames,
+                    mean_us: st.mean_us(),
+                })
+                .collect(),
+            segments: m
+                .segments
+                .iter()
+                .map(|s| SegmentRow {
+                    label: s.label.clone(),
+                    frames: s.frames,
+                    mean_in_flight: s.mean_in_flight,
+                })
+                .collect(),
+            offered: m.offered,
+            shed: m.shed,
+            shed_rate: m.shed_rate(),
+            lanes_grown: m.lanes_grown,
+            lanes_retired: m.lanes_retired,
+            ..Self::default()
+        }
+    }
+
+    /// The versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::str(SNAPSHOT_KIND)),
+            ("schema_version", Json::num(SNAPSHOT_SCHEMA_VERSION as f64)),
+            ("backend", Json::str(self.backend.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("utterances", Json::num(self.utterances as f64)),
+            ("frames", Json::num(self.frames as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("fps", Json::num(self.fps)),
+        ];
+        if let Some(per) = self.per_pct {
+            pairs.push(("per_pct", Json::num(per)));
+        }
+        pairs.push(("latency_us", self.latency_us.to_json()));
+        pairs.push(("queue_wait_us", self.queue_wait_us.to_json()));
+        pairs.push(("service_us", self.service_us.to_json()));
+        pairs.push((
+            "stages",
+            Json::Arr(
+                self.stages
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("stage", Json::num(s.stage as f64)),
+                            ("frames", Json::num(s.frames as f64)),
+                            ("mean_us", Json::num(s.mean_us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        pairs.push((
+            "segments",
+            Json::Arr(
+                self.segments
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("label", Json::str(s.label.clone())),
+                            ("frames", Json::num(s.frames as f64)),
+                            ("mean_in_flight", Json::num(s.mean_in_flight)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        pairs.push((
+            "admission",
+            Json::obj(vec![
+                ("offered", Json::num(self.offered as f64)),
+                ("shed", Json::num(self.shed as f64)),
+                ("shed_rate", Json::num(self.shed_rate)),
+            ]),
+        ));
+        if let Some(slo_ms) = self.slo_ms {
+            pairs.push((
+                "slo",
+                Json::obj(vec![
+                    ("slo_ms", Json::num(slo_ms)),
+                    (
+                        "slo_met",
+                        Json::Bool(self.slo_met.unwrap_or(false)),
+                    ),
+                ]),
+            ));
+        }
+        pairs.push((
+            "autoscale",
+            Json::obj(vec![
+                ("lanes_grown", Json::num(self.lanes_grown as f64)),
+                ("lanes_retired", Json::num(self.lanes_retired as f64)),
+            ]),
+        ));
+        if !self.datapath.is_empty() {
+            pairs.push((
+                "datapath",
+                Json::Arr(
+                    self.datapath
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("segment", Json::str(d.segment.clone())),
+                                ("forward_calls", Json::num(d.forward_calls as f64)),
+                                ("forward_peak", Json::num(d.forward_peak as f64)),
+                                ("acc_peak", Json::num(d.acc_peak as f64)),
+                                ("time_peak", Json::num(d.time_peak as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Write the snapshot atomically (temp + rename).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        write_atomic(path, &self.to_json().to_pretty())
+    }
+}
+
+/// What [`validate_snapshot`] extracted (printed by `clstm trace-check`
+/// and cross-checked against the trace's utterance-span count).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SnapshotCheck {
+    pub utterances: usize,
+    pub frames: usize,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub shed: u64,
+}
+
+/// Validate a parsed snapshot document: right `kind`, a schema version
+/// this code understands, and the stable keys present with the right
+/// types. Returns the headline numbers on success.
+pub fn validate_snapshot(doc: &Json) -> Result<SnapshotCheck, String> {
+    if doc.get_str("kind") != Some(SNAPSHOT_KIND) {
+        return Err(format!("snapshot kind is not {SNAPSHOT_KIND:?}"));
+    }
+    match doc.get_f64("schema_version") {
+        Some(v) if v == SNAPSHOT_SCHEMA_VERSION as f64 => {}
+        Some(v) => return Err(format!("unsupported snapshot schema_version {v}")),
+        None => return Err("snapshot has no schema_version".into()),
+    }
+    let utterances = doc
+        .get_usize("utterances")
+        .ok_or("snapshot has no utterances count")?;
+    let frames = doc.get_usize("frames").ok_or("snapshot has no frames count")?;
+    doc.get_f64("fps").ok_or("snapshot has no fps")?;
+    let lat = doc.get("latency_us").ok_or("snapshot has no latency_us")?;
+    let latency_p50_us = lat.get_f64("p50").ok_or("latency_us has no p50")?;
+    let latency_p99_us = lat.get_f64("p99").ok_or("latency_us has no p99")?;
+    let adm = doc.get("admission").ok_or("snapshot has no admission")?;
+    let shed = adm.get_f64("shed").ok_or("admission has no shed")? as u64;
+    adm.get_f64("offered").ok_or("admission has no offered")?;
+    doc.get("stages")
+        .and_then(Json::as_arr)
+        .ok_or("snapshot has no stages array")?;
+    doc.get("segments")
+        .and_then(Json::as_arr)
+        .ok_or("snapshot has no segments array")?;
+    Ok(SnapshotCheck {
+        utterances,
+        frames,
+        latency_p50_us,
+        latency_p99_us,
+        shed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_round_trips_and_validates() {
+        let mut m = Metrics::default();
+        for v in [100.0, 200.0, 300.0, 400.0] {
+            m.record_frame_latency(v);
+        }
+        m.frames = 4;
+        m.utterances = 2;
+        m.wall = std::time::Duration::from_millis(10);
+        m.offered = 3;
+        m.shed = 1;
+        let mut snap = MetricsSnapshot::from_metrics(&m);
+        snap.backend = "native".into();
+        snap.model = "tiny_fft4".into();
+        snap.replicas = 2;
+        snap.per_pct = Some(12.5);
+        snap.slo_ms = Some(50.0);
+        snap.slo_met = Some(true);
+        let doc = Json::parse(&snap.to_json().to_pretty()).unwrap();
+        let check = validate_snapshot(&doc).unwrap();
+        assert_eq!(check.utterances, 2);
+        assert_eq!(check.frames, 4);
+        assert_eq!(check.shed, 1);
+        // The snapshot reports exactly the accessors the summary prints.
+        assert_eq!(check.latency_p50_us, m.latency_p50_us());
+        assert_eq!(check.latency_p99_us, m.latency_p99_us());
+        assert_eq!(doc.get_f64("per_pct"), Some(12.5));
+        assert_eq!(
+            doc.get("slo").and_then(|s| s.get("slo_met")),
+            Some(&Json::Bool(true))
+        );
+    }
+
+    #[test]
+    fn validator_names_missing_keys() {
+        let doc = Json::parse(r#"{"kind": "clstm-metrics", "schema_version": 1}"#).unwrap();
+        assert!(validate_snapshot(&doc).unwrap_err().contains("utterances"));
+        let doc = Json::parse(r#"{"kind": "other"}"#).unwrap();
+        assert!(validate_snapshot(&doc).unwrap_err().contains("kind"));
+        let doc = Json::parse(r#"{"kind": "clstm-metrics", "schema_version": 99}"#).unwrap();
+        assert!(validate_snapshot(&doc).unwrap_err().contains("schema_version 99"));
+    }
+}

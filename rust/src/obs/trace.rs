@@ -1,0 +1,646 @@
+//! Structured span tracer with Chrome `trace_event` export.
+//!
+//! ## Sink contract
+//!
+//! A [`TraceSink`] is a cheap-to-clone handle over one shared recording
+//! epoch. Each recording thread takes a [`TraceLocal`] once at startup
+//! (`sink.local()`) and pushes complete events into its own bounded
+//! buffer — no locks, no allocation past the buffer, no contention. The
+//! buffer is flushed into the shared sink when the local is dropped
+//! (worker threads flush as they join) or explicitly. After every worker
+//! has finished, [`export_chrome_trace`] drains the sink into one
+//! Perfetto / `chrome://tracing`-loadable JSON document.
+//!
+//! **Disabled is free.** `TraceSink::disabled()` carries no allocation,
+//! and every recording call on a disabled sink or local returns before
+//! touching a clock: the process-wide [`trace_clock_reads`] counter is
+//! incremented *only* on the enabled paths that call `Instant::now` /
+//! `elapsed`, so `tests/obs_disabled.rs` can pin that a whole serve run
+//! with tracing off performs zero trace clock reads. Span recording does
+//! not read clocks even when enabled — callers pass the `Instant`s and
+//! durations they already measured for the stage clocks, and the local
+//! converts them to epoch-relative µs arithmetically.
+//!
+//! ## Track mapping (pid/tid)
+//!
+//! | track | pid | tid |
+//! |-------|-----|-----|
+//! | serve driver: arrival/admit/shed instants | 0 | 0 |
+//! | counter tracks (occupancy, shed, lanes, queue depth) | 0 | per-name |
+//! | lane `l`, segment `(layer, dir)`, stage `s ∈ 1..=3` | `l + 1` | `(layer·2 + dir)·4 + s` |
+//! | lane `l`, stream slot `k` utterance spans | `l + 1` | `1000 + k` |
+//!
+//! Internally every span is recorded *complete* (start + duration), so
+//! begin/end balance is true by construction; the exporter emits the
+//! balanced `B`/`E` pair, sorts each track, and nudges exact ties by
+//! +0.001 µs so per-track timestamps are strictly monotonic (pinned by
+//! `tests/obs.rs` and checked again by `clstm trace-check`).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// pid of the serve-driver row (admission instants + counter tracks).
+pub const PID_DRIVER: u32 = 0;
+/// tid of the driver's admission/lifecycle instant track.
+pub const TID_ADMISSION: u32 = 0;
+/// Base tid of the per-stream utterance-span tracks (`1000 + slot`).
+pub const TID_UTT_BASE: u32 = 1000;
+/// `utt` argument value meaning "no utterance attached".
+pub const NO_UTT: u64 = u64::MAX;
+
+/// Export pid of lane `lane`.
+pub fn lane_pid(lane: usize) -> u32 {
+    lane as u32 + 1
+}
+
+/// Export tid of stage `stage` (1..=3) of segment `(layer, dir)`.
+pub fn stage_tid(layer: usize, dir: usize, stage: usize) -> u32 {
+    ((layer * 2 + dir) * 4 + stage) as u32
+}
+
+/// Export tid of the utterance-span track of stream slot `slot`.
+pub fn utt_tid(slot: usize) -> u32 {
+    TID_UTT_BASE + slot as u32
+}
+
+/// Process-wide count of clock reads performed by tracing code. Only the
+/// *enabled* paths increment it; `tests/obs_disabled.rs` pins that a
+/// disabled-sink serve leaves it untouched.
+static TRACE_CLOCK_READS: AtomicU64 = AtomicU64::new(0);
+
+/// Clock reads the tracer has performed so far in this process.
+pub fn trace_clock_reads() -> u64 {
+    TRACE_CLOCK_READS.load(Ordering::Relaxed)
+}
+
+/// What one recorded event is.
+#[derive(Debug, Clone, Copy)]
+pub enum EventKind {
+    /// A complete span starting at the event's `ts_us` — exported as a
+    /// balanced `B`/`E` pair.
+    Span { dur_us: f64 },
+    /// A zero-duration lifecycle marker (`ph: "i"`).
+    Instant,
+    /// A sample on the `(pid, name)` counter track (`ph: "C"`).
+    Counter { value: f64 },
+}
+
+/// One recorded event (epoch-relative µs timestamps).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub pid: u32,
+    pub tid: u32,
+    pub name: &'static str,
+    pub ts_us: f64,
+    /// Utterance id this event belongs to ([`NO_UTT`] when none).
+    pub utt: u64,
+    pub kind: EventKind,
+}
+
+/// Per-thread buffer capacity; pushes past it are counted as dropped
+/// rather than growing without bound.
+const LOCAL_CAP: usize = 65_536;
+
+#[derive(Debug)]
+struct TraceShared {
+    epoch: Instant,
+    done: Mutex<Vec<TraceEvent>>,
+    /// `(pid, tid) -> label` thread-name metadata.
+    tracks: Mutex<BTreeMap<(u32, u32), String>>,
+    /// `pid -> label` process-name metadata.
+    procs: Mutex<BTreeMap<u32, String>>,
+    dropped: AtomicU64,
+}
+
+/// Cheap-clone handle to one trace recording (or to nothing, when
+/// disabled). See the module docs for the contract.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    shared: Option<Arc<TraceShared>>,
+}
+
+impl TraceSink {
+    /// The no-op sink: records nothing, reads no clocks.
+    pub fn disabled() -> Self {
+        Self { shared: None }
+    }
+
+    /// Start a recording; the epoch (one clock read) is now.
+    pub fn enabled() -> Self {
+        TRACE_CLOCK_READS.fetch_add(1, Ordering::Relaxed);
+        Self {
+            shared: Some(Arc::new(TraceShared {
+                epoch: Instant::now(),
+                done: Mutex::new(Vec::new()),
+                tracks: Mutex::new(BTreeMap::new()),
+                procs: Mutex::new(BTreeMap::new()),
+                dropped: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// Whether this sink records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Take this thread's recording buffer (a no-op local when disabled).
+    pub fn local(&self) -> TraceLocal {
+        TraceLocal {
+            inner: self.shared.as_ref().map(|sh| LocalInner {
+                epoch: sh.epoch,
+                shared: Arc::clone(sh),
+                buf: Vec::with_capacity(256),
+            }),
+        }
+    }
+
+    /// Register a process-name label for `pid` (export metadata).
+    pub fn name_process(&self, pid: u32, label: impl Into<String>) {
+        if let Some(sh) = &self.shared {
+            if let Ok(mut m) = sh.procs.lock() {
+                m.entry(pid).or_insert_with(|| label.into());
+            }
+        }
+    }
+
+    /// Register a thread-name label for `(pid, tid)` (export metadata).
+    pub fn name_track(&self, pid: u32, tid: u32, label: impl Into<String>) {
+        if let Some(sh) = &self.shared {
+            if let Ok(mut m) = sh.tracks.lock() {
+                m.entry((pid, tid)).or_insert_with(|| label.into());
+            }
+        }
+    }
+
+    /// Epoch-relative "now" in µs — `None` (and **no clock read**) when
+    /// disabled.
+    pub fn now_us(&self) -> Option<f64> {
+        let sh = self.shared.as_ref()?;
+        TRACE_CLOCK_READS.fetch_add(1, Ordering::Relaxed);
+        Some(sh.epoch.elapsed().as_secs_f64() * 1e6)
+    }
+}
+
+#[derive(Debug)]
+struct LocalInner {
+    epoch: Instant,
+    shared: Arc<TraceShared>,
+    buf: Vec<TraceEvent>,
+}
+
+impl LocalInner {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < LOCAL_CAP {
+            self.buf.push(ev);
+        } else {
+            self.shared.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn stamp(&self, at: Instant) -> f64 {
+        // Pure arithmetic on two stored instants — not a clock read.
+        at.saturating_duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+}
+
+/// One thread's recording buffer. Dropping it flushes into the shared
+/// sink; every method on a disabled local returns immediately without
+/// touching a clock.
+#[derive(Debug, Default)]
+pub struct TraceLocal {
+    inner: Option<LocalInner>,
+}
+
+impl TraceLocal {
+    /// A local that records nothing (what a disabled sink hands out).
+    pub fn disabled() -> Self {
+        Self { inner: None }
+    }
+
+    /// Whether this local records anything.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Record a complete span from instants the caller already holds
+    /// (e.g. the stage clock's `t0` / `elapsed`) — no clock read.
+    pub fn span_from(
+        &mut self,
+        pid: u32,
+        tid: u32,
+        name: &'static str,
+        start: Instant,
+        dur: Duration,
+        utt: u64,
+    ) {
+        let Some(inner) = &mut self.inner else { return };
+        let ts_us = inner.stamp(start);
+        inner.push(TraceEvent {
+            pid,
+            tid,
+            name,
+            ts_us,
+            utt,
+            kind: EventKind::Span {
+                dur_us: dur.as_secs_f64() * 1e6,
+            },
+        });
+    }
+
+    /// Record an instant marker at an instant the caller already holds —
+    /// no clock read.
+    pub fn instant_from(&mut self, pid: u32, tid: u32, name: &'static str, at: Instant, utt: u64) {
+        let Some(inner) = &mut self.inner else { return };
+        let ts_us = inner.stamp(at);
+        inner.push(TraceEvent {
+            pid,
+            tid,
+            name,
+            ts_us,
+            utt,
+            kind: EventKind::Instant,
+        });
+    }
+
+    /// Record an instant marker stamped now (one clock read when
+    /// enabled; none when disabled).
+    pub fn instant_now(&mut self, pid: u32, tid: u32, name: &'static str, utt: u64) {
+        let Some(inner) = &mut self.inner else { return };
+        TRACE_CLOCK_READS.fetch_add(1, Ordering::Relaxed);
+        let ts_us = inner.epoch.elapsed().as_secs_f64() * 1e6;
+        inner.push(TraceEvent {
+            pid,
+            tid,
+            name,
+            ts_us,
+            utt,
+            kind: EventKind::Instant,
+        });
+    }
+
+    /// Epoch-relative "now" in µs — `None` (and no clock read) when
+    /// disabled. Lets a caller stamp several counters with one read.
+    pub fn now_us(&self) -> Option<f64> {
+        let inner = self.inner.as_ref()?;
+        TRACE_CLOCK_READS.fetch_add(1, Ordering::Relaxed);
+        Some(inner.epoch.elapsed().as_secs_f64() * 1e6)
+    }
+
+    /// Record a counter sample at a timestamp from [`Self::now_us`].
+    pub fn counter_at(&mut self, pid: u32, name: &'static str, ts_us: f64, value: f64) {
+        let Some(inner) = &mut self.inner else { return };
+        inner.push(TraceEvent {
+            pid,
+            tid: 0,
+            name,
+            ts_us,
+            utt: NO_UTT,
+            kind: EventKind::Counter { value },
+        });
+    }
+
+    /// Move everything recorded so far into the shared sink.
+    pub fn flush(&mut self) {
+        let Some(inner) = &mut self.inner else { return };
+        if inner.buf.is_empty() {
+            return;
+        }
+        if let Ok(mut done) = inner.shared.done.lock() {
+            done.append(&mut inner.buf);
+        } else {
+            inner.buf.clear();
+        }
+    }
+}
+
+impl Drop for TraceLocal {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Export everything recorded into one Chrome `trace_event` JSON
+/// document (`None` when the sink is disabled). Call after every worker
+/// holding a [`TraceLocal`] has finished (dropping an engine joins its
+/// workers, which flushes their locals). `meta` lands under the
+/// top-level `"clstm"` object next to `schema_version` and the dropped
+/// count.
+pub fn export_chrome_trace(sink: &TraceSink, meta: Vec<(&str, Json)>) -> Option<Json> {
+    let sh = sink.shared.as_ref()?;
+    let events: Vec<TraceEvent> = sh.done.lock().map(|mut g| std::mem::take(&mut *g)).unwrap_or_default();
+
+    // Group span/instant events per (pid, tid) track and counters per
+    // (pid, name) track, preserving record order within each group (the
+    // stable-sort tiebreak that keeps a B before its own zero-width E).
+    let mut tracks: BTreeMap<(u32, u32), Vec<(f64, Json)>> = BTreeMap::new();
+    let mut counters: BTreeMap<(u32, &'static str), Vec<(f64, f64)>> = BTreeMap::new();
+    for ev in &events {
+        match ev.kind {
+            EventKind::Span { dur_us } => {
+                let tr = tracks.entry((ev.pid, ev.tid)).or_default();
+                tr.push((ev.ts_us, event_obj("B", ev.pid, ev.tid, ev.name, Some(ev.utt))));
+                tr.push((
+                    ev.ts_us + dur_us.max(0.0),
+                    event_obj("E", ev.pid, ev.tid, ev.name, None),
+                ));
+            }
+            EventKind::Instant => {
+                tracks
+                    .entry((ev.pid, ev.tid))
+                    .or_default()
+                    .push((ev.ts_us, event_obj("i", ev.pid, ev.tid, ev.name, Some(ev.utt))));
+            }
+            EventKind::Counter { value } => {
+                counters.entry((ev.pid, ev.name)).or_default().push((ev.ts_us, value));
+            }
+        }
+    }
+
+    let mut out: Vec<Json> = Vec::new();
+    // Metadata rows first: process and thread names.
+    if let Ok(procs) = sh.procs.lock() {
+        for (&pid, label) in procs.iter() {
+            out.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                ("name", Json::str("process_name")),
+                ("args", Json::obj(vec![("name", Json::str(label.clone()))])),
+            ]));
+        }
+    }
+    if let Ok(names) = sh.tracks.lock() {
+        for (&(pid, tid), label) in names.iter() {
+            out.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(tid as f64)),
+                ("name", Json::str("thread_name")),
+                ("args", Json::obj(vec![("name", Json::str(label.clone()))])),
+            ]));
+        }
+    }
+
+    // Per-track: stable sort by timestamp, then nudge exact ties forward
+    // by 0.001 µs so every track's timestamps are strictly monotonic.
+    for (_, mut evs) in tracks {
+        evs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut prev = f64::NEG_INFINITY;
+        for (ts, mut obj) in evs {
+            let ts = if ts <= prev { prev + 0.001 } else { ts };
+            prev = ts;
+            if let Json::Obj(m) = &mut obj {
+                m.insert("ts".to_string(), Json::Num(ts));
+            }
+            out.push(obj);
+        }
+    }
+    for ((pid, name), mut samples) in counters {
+        samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut prev = f64::NEG_INFINITY;
+        for (ts, value) in samples {
+            let ts = if ts <= prev { prev + 0.001 } else { ts };
+            prev = ts;
+            out.push(Json::obj(vec![
+                ("ph", Json::str("C")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(ts)),
+                ("name", Json::str(name)),
+                ("args", Json::obj(vec![("value", Json::num(value))])),
+            ]));
+        }
+    }
+
+    let mut clstm = vec![
+        ("schema_version", Json::num(1.0)),
+        (
+            "dropped_events",
+            Json::num(sh.dropped.load(Ordering::Relaxed) as f64),
+        ),
+    ];
+    clstm.extend(meta);
+    Some(Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("clstm", Json::obj(clstm)),
+    ]))
+}
+
+fn event_obj(ph: &str, pid: u32, tid: u32, name: &'static str, utt: Option<u64>) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::str(ph)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("name", Json::str(name)),
+    ];
+    if ph == "i" {
+        // Chrome instant events need a scope; "t" = thread.
+        pairs.push(("s", Json::str("t")));
+    }
+    match utt {
+        Some(u) if u != NO_UTT => {
+            pairs.push(("args", Json::obj(vec![("utt", Json::num(u as f64))])));
+        }
+        _ => {}
+    }
+    Json::obj(pairs)
+}
+
+/// What [`validate_chrome_trace`] found (the numbers `clstm trace-check`
+/// prints and the tests assert on).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct TraceCheck {
+    /// Total `traceEvents` entries.
+    pub events: usize,
+    /// Distinct `(pid, tid)` span/instant tracks.
+    pub tracks: usize,
+    /// Balanced `B`/`E` span pairs.
+    pub spans: usize,
+    /// Spans named `utt` (one per served utterance — the conservation
+    /// check `utt_spans == submitted − shed`).
+    pub utt_spans: usize,
+    /// Instant markers.
+    pub instants: usize,
+    /// Counter samples.
+    pub counters: usize,
+}
+
+/// Validate an exported Chrome trace document: `traceEvents` exists,
+/// every `(pid, tid)` track has balanced, non-negative-depth `B`/`E`
+/// pairs and strictly increasing timestamps (instants included), and
+/// every counter track's timestamps strictly increase. Returns the
+/// counts on success, a named violation on failure.
+pub fn validate_chrome_trace(doc: &Json) -> Result<TraceCheck, String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("trace has no traceEvents array")?;
+    let mut check = TraceCheck {
+        events: events.len(),
+        ..TraceCheck::default()
+    };
+    // (pid, tid) -> (last ts, open span depth); counters keyed by name.
+    let mut tracks: BTreeMap<(u64, u64), (f64, i64)> = BTreeMap::new();
+    let mut ctr_tracks: BTreeMap<(u64, String), f64> = BTreeMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev.get_str("ph").ok_or_else(|| format!("event {i}: no ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = ev.get_f64("pid").ok_or_else(|| format!("event {i}: no pid"))? as u64;
+        let ts = ev.get_f64("ts").ok_or_else(|| format!("event {i}: no ts"))?;
+        match ph {
+            "C" => {
+                let name = ev
+                    .get_str("name")
+                    .ok_or_else(|| format!("event {i}: counter without name"))?;
+                check.counters += 1;
+                if let Some(prev) = ctr_tracks.get(&(pid, name.to_string())) {
+                    if ts <= *prev {
+                        return Err(format!(
+                            "counter track (pid {pid}, {name}): ts {ts} not after {prev}"
+                        ));
+                    }
+                }
+                ctr_tracks.insert((pid, name.to_string()), ts);
+            }
+            "B" | "E" | "i" => {
+                let tid = ev.get_f64("tid").ok_or_else(|| format!("event {i}: no tid"))? as u64;
+                let entry = tracks.entry((pid, tid)).or_insert((f64::NEG_INFINITY, 0));
+                if ts <= entry.0 {
+                    return Err(format!(
+                        "track (pid {pid}, tid {tid}): ts {ts} not after {}",
+                        entry.0
+                    ));
+                }
+                entry.0 = ts;
+                match ph {
+                    "B" => {
+                        entry.1 += 1;
+                        check.spans += 1;
+                        if ev.get_str("name") == Some("utt") {
+                            check.utt_spans += 1;
+                        }
+                    }
+                    "E" => {
+                        entry.1 -= 1;
+                        if entry.1 < 0 {
+                            return Err(format!(
+                                "track (pid {pid}, tid {tid}): E without matching B at ts {ts}"
+                            ));
+                        }
+                    }
+                    _ => check.instants += 1,
+                }
+            }
+            other => return Err(format!("event {i}: unknown ph {other:?}")),
+        }
+    }
+    for ((pid, tid), (_, depth)) in tracks.iter() {
+        if *depth != 0 {
+            return Err(format!(
+                "track (pid {pid}, tid {tid}): {depth} unbalanced span(s)"
+            ));
+        }
+    }
+    check.tracks = tracks.len();
+    Ok(check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing_and_reads_no_clock() {
+        let before = trace_clock_reads();
+        let sink = TraceSink::disabled();
+        assert!(!sink.is_enabled());
+        assert_eq!(sink.now_us(), None);
+        let mut local = sink.local();
+        assert!(!local.is_enabled());
+        // These would need clock math when enabled; disabled they must
+        // return before touching anything.
+        let t = Instant::now(); // the test's own read, not the tracer's
+        local.span_from(1, 2, "s1", t, Duration::from_micros(5), 7);
+        local.instant_now(0, 0, "arrival", 7);
+        local.counter_at(0, "occupancy", 1.0, 3.0);
+        assert_eq!(local.now_us(), None);
+        local.flush();
+        assert_eq!(trace_clock_reads(), before);
+        assert!(export_chrome_trace(&sink, Vec::new()).is_none());
+    }
+
+    #[test]
+    fn export_balances_sorts_and_nudges_ties() {
+        let sink = TraceSink::enabled();
+        sink.name_process(1, "lane0");
+        sink.name_track(1, 5, "l0.fwd/s1");
+        let mut local = sink.local();
+        let t0 = Instant::now();
+        // Two back-to-back spans sharing a boundary, plus a zero-width
+        // span: the tie-nudge must keep each track strictly monotonic.
+        local.span_from(1, 5, "s1", t0, Duration::from_micros(10), 1);
+        local.span_from(1, 5, "s1", t0 + Duration::from_micros(10), Duration::from_micros(4), 2);
+        local.span_from(1, 5, "s1", t0 + Duration::from_micros(20), Duration::ZERO, 3);
+        local.instant_from(0, 0, "arrival", t0, 1);
+        let ts = sink.now_us().unwrap();
+        local.counter_at(0, "occupancy", ts, 2.0);
+        local.counter_at(0, "occupancy", ts, 3.0); // tie on the counter track
+        local.flush();
+        let doc = export_chrome_trace(&sink, vec![("kind", Json::str("test"))]).unwrap();
+        let check = validate_chrome_trace(&doc).unwrap();
+        assert_eq!(check.spans, 3);
+        assert_eq!(check.instants, 1);
+        assert_eq!(check.counters, 2);
+        assert_eq!(check.tracks, 2);
+        assert_eq!(check.utt_spans, 0);
+        // Round-trip: the serialized document re-parses and re-validates.
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(validate_chrome_trace(&reparsed).unwrap(), check);
+        assert_eq!(reparsed.get("clstm").and_then(|c| c.get_f64("schema_version")), Some(1.0));
+        assert_eq!(reparsed.get("clstm").and_then(|c| c.get_str("kind")), Some("test"));
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_and_nonmonotonic() {
+        let unbalanced = Json::parse(
+            r#"{"traceEvents":[{"ph":"B","pid":1,"tid":1,"ts":1.0,"name":"s1"}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&unbalanced).unwrap_err().contains("unbalanced"));
+        let backwards = Json::parse(
+            r#"{"traceEvents":[
+                {"ph":"B","pid":1,"tid":1,"ts":2.0,"name":"s1"},
+                {"ph":"E","pid":1,"tid":1,"ts":1.0,"name":"s1"}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&backwards).unwrap_err().contains("not after"));
+        let orphan_end = Json::parse(
+            r#"{"traceEvents":[{"ph":"E","pid":1,"tid":1,"ts":1.0,"name":"s1"}]}"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&orphan_end).unwrap_err().contains("without matching B"));
+    }
+
+    #[test]
+    fn local_buffer_bound_counts_drops() {
+        let sink = TraceSink::enabled();
+        let mut local = sink.local();
+        let t0 = Instant::now();
+        for i in 0..(LOCAL_CAP + 10) {
+            local.span_from(1, 1, "s1", t0 + Duration::from_micros(i as u64), Duration::ZERO, NO_UTT);
+        }
+        local.flush();
+        let doc = export_chrome_trace(&sink, Vec::new()).unwrap();
+        let dropped = doc.get("clstm").and_then(|c| c.get_f64("dropped_events")).unwrap();
+        assert_eq!(dropped, 10.0);
+        let check = validate_chrome_trace(&doc).unwrap();
+        assert_eq!(check.spans, LOCAL_CAP);
+    }
+}

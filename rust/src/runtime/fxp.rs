@@ -266,6 +266,32 @@ pub struct FxpPrepared {
     segs: Vec<Vec<Arc<FxpSegment>>>,
 }
 
+#[cfg(feature = "fft-stats")]
+impl FxpPrepared {
+    /// Per-segment datapath watermarks, one `(segment, forward_calls,
+    /// forward_peak, acc_peak, time_peak)` row per `(layer, direction)`.
+    /// Peaks are |component| in LSBs at the instrumented narrowing sites
+    /// (see [`crate::fft::fxp::DatapathStats`]); the serve tail folds
+    /// these into the `--metrics-json` snapshot's `datapath` array.
+    pub fn datapath_watermarks(&self) -> Vec<(String, u64, u64, u64, u64)> {
+        use std::sync::atomic::Ordering;
+        let mut rows = Vec::new();
+        for dirs in &self.segs {
+            for s in dirs {
+                let st = &s.gates.fft.stats;
+                rows.push((
+                    s.seg.to_string(),
+                    st.forward_calls.load(Ordering::Relaxed),
+                    st.forward_peak.load(Ordering::Relaxed),
+                    st.acc_peak.load(Ordering::Relaxed),
+                    st.time_peak.load(Ordering::Relaxed),
+                ));
+            }
+        }
+        rows
+    }
+}
+
 impl FxpBackend {
     /// Quantise one segment, mirroring `CellFx::with_rounding`
     /// operation-for-operation: per-matrix spectra quantised with their own

@@ -240,6 +240,13 @@ impl Cli {
             .unwrap_or_else(|_| panic!("--{name} expects a number"))
     }
 
+    /// The option's value when it is present *and* non-empty — the accessor
+    /// for optional output paths (`--trace`, `--metrics-json`), where an
+    /// empty value means "off" just like an absent one.
+    pub fn get_nonempty(&self, name: &str) -> Option<String> {
+        self.get(name).filter(|v| !v.trim().is_empty())
+    }
+
     pub fn get_flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
@@ -336,6 +343,22 @@ mod tests {
         assert!(parse_replicas("nope").is_err());
         assert!(parse_replicas("1..").is_err());
         assert!(parse_replicas("..4").is_err());
+    }
+
+    #[test]
+    fn nonempty_accessor_treats_blank_as_absent() {
+        let cli = Cli::new("t", "t")
+            .opt_req("trace", "h")
+            .parse(&argv("--trace out.json"))
+            .unwrap();
+        assert_eq!(cli.get_nonempty("trace").as_deref(), Some("out.json"));
+        let cli = Cli::new("t", "t").opt_req("trace", "h").parse(&[]).unwrap();
+        assert_eq!(cli.get_nonempty("trace"), None);
+        let cli = Cli::new("t", "t")
+            .opt_req("trace", "h")
+            .parse(&argv("--trace="))
+            .unwrap();
+        assert_eq!(cli.get_nonempty("trace"), None, "empty value means off");
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! Observability integration: a real serve run with the span tracer
+//! attached must export a valid Chrome trace — balanced spans, strictly
+//! monotonic per-track timestamps, utterance-count conservation — and the
+//! metrics snapshot must agree with the summary accessors.
+
+use clstm::coordinator::server::{serve_workload_obs, Arrival, ServeOptions};
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::obs::snapshot::{validate_snapshot, MetricsSnapshot};
+use clstm::obs::trace::{export_chrome_trace, validate_chrome_trace, TraceSink};
+use clstm::obs::ObsOptions;
+use clstm::runtime::native::NativeBackend;
+use clstm::util::json::Json;
+
+fn traced(opts: &ServeOptions, n_utts: usize) -> (clstm::coordinator::server::ServeReport, Json) {
+    let w = LstmWeights::random(&LstmSpec::tiny(4), 77);
+    let obs = ObsOptions {
+        trace: TraceSink::enabled(),
+        stats_interval: None,
+    };
+    let report = serve_workload_obs(&NativeBackend::default(), &w, n_utts, opts, &obs)
+        .expect("traced serve");
+    let doc = export_chrome_trace(&obs.trace, vec![("kind", Json::str("clstm-trace"))])
+        .expect("enabled sink exports");
+    (report, doc)
+}
+
+/// Closed-loop serve, 2 lanes: the exported trace validates (balance +
+/// per-track monotonicity are what `validate_chrome_trace` enforces), the
+/// utterance spans conserve the served count, the stage tracks exist, and
+/// the document round-trips through its own JSON serialization.
+#[test]
+fn traced_serve_exports_valid_conserving_trace() {
+    let n_utts = 6;
+    let opts = ServeOptions {
+        replicas: 2,
+        streams_per_lane: 3,
+        ..ServeOptions::default()
+    };
+    let (report, doc) = traced(&opts, n_utts);
+
+    let check = validate_chrome_trace(&doc).expect("trace validates");
+    // Conservation: exactly one `utt` span per served utterance.
+    assert_eq!(check.utt_spans, report.metrics.utterances);
+    assert_eq!(report.metrics.utterances, n_utts, "closed loop serves all");
+    // Frame spans on the stage tracks: 3 stages saw every frame.
+    assert!(
+        check.spans >= check.utt_spans + 3 * report.metrics.frames,
+        "spans {} must cover {} utts + 3 × {} frames",
+        check.spans,
+        check.utt_spans,
+        report.metrics.frames
+    );
+    // Admission lifecycle: enqueue + arrival + dispatch per utterance.
+    assert!(check.instants >= 3 * n_utts, "instants {}", check.instants);
+    // The first drive-loop iteration always samples the counter tracks.
+    assert!(check.counters >= 3, "counters {}", check.counters);
+    assert!(check.tracks > 2, "tracks {}", check.tracks);
+
+    // Round-trip: serialize → parse → re-validate to the same counts.
+    let reparsed = Json::parse(&doc.to_string()).expect("trace is valid JSON");
+    assert_eq!(validate_chrome_trace(&reparsed).expect("reparsed validates"), check);
+    assert_eq!(
+        reparsed.get("clstm").and_then(|c| c.get_f64("schema_version")),
+        Some(1.0)
+    );
+    assert_eq!(
+        reparsed.get("clstm").and_then(|c| c.get_f64("dropped_events")),
+        Some(0.0),
+        "a tiny run must not hit the local buffer bound"
+    );
+}
+
+/// Open-loop overload with an SLO: conservation must hold through
+/// shedding — served spans equal `submitted − shed`, shed utterances
+/// produce no `utt` span, and the snapshot cross-checks the same counts.
+#[test]
+fn traced_overload_serve_conserves_through_shedding() {
+    let n_utts = 10;
+    let opts = ServeOptions {
+        replicas: 1,
+        streams_per_lane: 2,
+        arrival: Arrival::Poisson { rate: 500.0 },
+        slo: Some(std::time::Duration::from_millis(40)),
+        ..ServeOptions::default()
+    };
+    let (report, doc) = traced(&opts, n_utts);
+
+    let check = validate_chrome_trace(&doc).expect("trace validates");
+    let served = report.metrics.utterances;
+    let shed = report.metrics.shed as usize;
+    assert_eq!(served + shed, n_utts, "every utterance served or shed");
+    assert_eq!(check.utt_spans, served, "one span per served utterance only");
+
+    // Snapshot cross-check: the same conservation through the snapshot
+    // document `clstm trace-check` compares against the trace.
+    let mut snap = MetricsSnapshot::from_metrics(&report.metrics);
+    snap.backend = report.config.clone();
+    snap.model = "tiny_fft4".into();
+    snap.replicas = report.replicas;
+    let parsed = Json::parse(&snap.to_json().to_pretty()).expect("snapshot JSON");
+    let sc = validate_snapshot(&parsed).expect("snapshot validates");
+    assert_eq!(sc.utterances, check.utt_spans);
+    assert_eq!(sc.shed as usize, shed);
+}
+
+/// The snapshot reports exactly the numbers the summary accessors return —
+/// same histogram, same nearest-rank rule — so snapshot and summary agree
+/// by construction (the one-bucket error bound is against the *exact*
+/// percentile, pinned in the metrics unit tests).
+#[test]
+fn snapshot_percentiles_match_summary_accessors() {
+    let opts = ServeOptions::default();
+    let (report, _) = traced(&opts, 4);
+    let snap = MetricsSnapshot::from_metrics(&report.metrics);
+    assert_eq!(snap.latency_us.p50, report.metrics.latency_p50_us());
+    assert_eq!(snap.latency_us.p99, report.metrics.latency_p99_us());
+    assert_eq!(snap.queue_wait_us.p99, report.metrics.queue_wait_p99_us());
+    assert_eq!(snap.service_us.p99, report.metrics.service_p99_us());
+    assert_eq!(snap.fps, report.metrics.fps());
+    assert!(snap.latency_us.p99 >= snap.latency_us.p50);
+}

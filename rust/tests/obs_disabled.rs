@@ -1,0 +1,44 @@
+//! Disabled tracing is provably zero-cost: a complete serve run with the
+//! default (disabled) sink must perform **zero** trace clock reads.
+//!
+//! This lives in its own integration-test binary (own process) because
+//! [`clstm::obs::trace::trace_clock_reads`] is a process-wide counter —
+//! any test that enables a sink would perturb it. Keep this file to this
+//! single test.
+
+use clstm::coordinator::server::{serve_workload, serve_workload_obs, ServeOptions};
+use clstm::lstm::config::LstmSpec;
+use clstm::lstm::weights::LstmWeights;
+use clstm::obs::trace::trace_clock_reads;
+use clstm::obs::ObsOptions;
+use clstm::runtime::native::NativeBackend;
+
+#[test]
+fn disabled_trace_performs_no_clock_reads_across_a_serve() {
+    let w = LstmWeights::random(&LstmSpec::tiny(4), 77);
+    let opts = ServeOptions {
+        replicas: 2,
+        streams_per_lane: 2,
+        ..ServeOptions::default()
+    };
+
+    let before = trace_clock_reads();
+    // Both entry points: the plain wrapper and an explicit default
+    // ObsOptions (disabled sink, no stats interval).
+    let r1 = serve_workload(&NativeBackend::default(), &w, 4, &opts).expect("serve");
+    let r2 = serve_workload_obs(
+        &NativeBackend::default(),
+        &w,
+        4,
+        &opts,
+        &ObsOptions::default(),
+    )
+    .expect("serve obs-default");
+    assert_eq!(r1.metrics.utterances, 4);
+    assert_eq!(r2.metrics.utterances, 4);
+    assert_eq!(
+        trace_clock_reads(),
+        before,
+        "disabled tracing must not read any clock anywhere in the serve path"
+    );
+}
