@@ -2,7 +2,7 @@
 # serving backend); the artifact targets need the layer-1/2 Python
 # environment (jax, numpy) and are optional.
 
-.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd bench-overload serve-fxp serve-stack serve-overload serve-trace verify-datapath artifacts table1-per
+.PHONY: build test bench serve-bench bench-fxp-stage1 bench-simd bench-overload serve-fxp serve-stack serve-overload serve-chaos serve-trace verify-datapath artifacts table1-per
 
 build:
 	cd rust && cargo build --release
@@ -83,6 +83,24 @@ serve-overload:
 		--metrics-json /tmp/clstm-serve-overload.json | tee /tmp/clstm-serve-overload.out
 	grep -q '"slo_met": true' /tmp/clstm-serve-overload.json
 	grep -Eq '"shed": [1-9][0-9]*,?$$' /tmp/clstm-serve-overload.json
+
+# Fault-tolerance smoke: the overload scenario with seeded chaos on top.
+# Seed 53 at rate 0.15 puts a single persistent fault on pool slot 0 —
+# the initial lane's stage-3 executor — with every replacement slot
+# clean, so the run must quarantine + respawn exactly that lane and retry
+# its in-flight utterances. Assertions read the snapshot's `faults` block
+# (nonzero restarts AND retries) and re-validate admission conservation
+# (`served + shed == offered` with retries active) via `clstm trace-check`.
+serve-chaos:
+	cd rust && cargo run --release -- serve --replicas 1..2 --utts 2000 \
+		--arrival poisson --rate 100000 --slo-ms 50 \
+		--fault-inject 53:0.15:persistent \
+		--metrics-json /tmp/clstm-serve-chaos.json | tee /tmp/clstm-serve-chaos.out
+	grep -Eq '"restarts": [1-9][0-9]*,?$$' /tmp/clstm-serve-chaos.json
+	grep -Eq '"retries": [1-9][0-9]*,?$$' /tmp/clstm-serve-chaos.json
+	cd rust && cargo run --release -- trace-check \
+		--metrics-json /tmp/clstm-serve-chaos.json | tee /tmp/clstm-serve-chaos-check.out
+	grep -q "admission conservation ok" /tmp/clstm-serve-chaos-check.out
 
 # End-to-end observability smoke: a 2-replica stacked fxp serve recording
 # both artifacts — the Chrome span trace and the metrics snapshot — then

@@ -39,9 +39,24 @@
 //!   trace-check`);
 //! - `--stats-interval S` — print a rolling `stats:` line (fps, frame
 //!   p99, shed, lanes) every S seconds while serving.
+//!
+//! Fault tolerance (see `DESIGN.md` §fault-tolerance):
+//!
+//! - `--fault-inject seed:rate[:once|persistent]` — wrap the serving
+//!   backend in the deterministic chaos harness ([`ChaosBackend`]): each
+//!   built stage executor is faulty with probability `rate`, all draws
+//!   seeded, so a chaos run is reproducible from its seed. Native and fxp
+//!   backends only (the fxp float comparison run stays fault-free);
+//! - `--restart-budget N` (default 2) — respawns allowed per dead lane
+//!   before it is permanently retired (capacity degrades and the SLO
+//!   shedder absorbs the overflow instead of the run erroring);
+//! - `--retry-cap N` (default 2) — re-queues allowed per utterance
+//!   reclaimed from a dead lane before it is counted as shed. With both
+//!   budgets 0 serving is fail-stop: a dead lane aborts the run, the
+//!   pre-fault-tolerance behavior.
 
 use anyhow::Result;
-use clstm::coordinator::server::{Arrival, ServeOptions, ServeReport};
+use clstm::coordinator::server::{serve_workload_obs, Arrival, ServeOptions, ServeReport};
 use clstm::coordinator::topology::StackTopology;
 use clstm::lstm::config::LstmSpec;
 use clstm::lstm::weights::LstmWeights;
@@ -49,9 +64,14 @@ use clstm::num::fxp::Rounding;
 use clstm::obs::snapshot::{DatapathRow, MetricsSnapshot};
 use clstm::obs::trace::{export_chrome_trace, TraceSink};
 use clstm::obs::ObsOptions;
-use clstm::util::cli::{parse_replicas, Cli};
+use clstm::runtime::backend::Backend;
+use clstm::runtime::chaos::{ChaosBackend, ChaosMode};
+use clstm::util::cli::{parse_fault_inject, parse_replicas, Cli};
 use clstm::util::json::{write_atomic, Json};
 use std::time::Duration;
+
+/// `--fault-inject` resolved: chaos seed, per-executor fault rate, mode.
+type ChaosParams = (u64, f64, ChaosMode);
 
 /// Model spec + label for the serve run. Plain `clstm serve` uses the tiny
 /// model; an explicit `--model google|small --k <k>` serves the paper-scale
@@ -109,6 +129,8 @@ fn serve_options(cli: &Cli) -> Result<ServeOptions> {
         arrival,
         seed: cli.get_u64("seed"),
         slo: (slo_ms > 0.0).then(|| Duration::from_secs_f64(slo_ms / 1e3)),
+        restart_budget: cli.get_usize("restart-budget").min(u32::MAX as usize) as u32,
+        retry_cap: cli.get_usize("retry-cap").min(u32::MAX as usize) as u32,
         ..ServeOptions::default()
     })
 }
@@ -160,6 +182,20 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     if rounding != Rounding::Nearest && backend_name != "fxp" {
         anyhow::bail!("--rounding applies to --backend fxp only (got --backend {backend_name})");
     }
+    // Resolve --fault-inject up front so a malformed spec errors before any
+    // weights are prepared, whatever the backend.
+    let chaos_params: Option<ChaosParams> = match cli.get_nonempty("fault-inject") {
+        Some(s) => {
+            let (seed, rate, persistent) = parse_fault_inject(&s).map_err(anyhow::Error::msg)?;
+            let mode = if persistent { ChaosMode::Persistent } else { ChaosMode::Once };
+            anyhow::ensure!(
+                backend_name == "native" || backend_name == "fxp",
+                "--fault-inject supports --backend native | fxp (got --backend {backend_name})"
+            );
+            Some((seed, rate, mode))
+        }
+        None => None,
+    };
 
     // Every serve path runs the complete stack topology — print the DAG so
     // multi-layer / bidirectional runs say exactly what is being chained.
@@ -169,16 +205,24 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     let report: ServeReport = match backend_name.as_str() {
         "pjrt" => serve_pjrt(cli, &label, &weights, n_utts, &opts, &obs)?,
         "native" => {
-            use clstm::coordinator::server::serve_workload_obs;
             use clstm::runtime::native::NativeBackend;
             println!(
                 "serving {label} on the native backend: {n_utts} utterances, \
                  {} replica(s) × {} streams, {:?} arrivals ...",
                 opts.replicas, opts.streams_per_lane, opts.arrival
             );
-            serve_workload_obs(&NativeBackend::default(), &weights, n_utts, &opts, &obs)?
+            serve_maybe_chaos(NativeBackend::default(), chaos_params, &weights, n_utts, &opts, &obs)?
         }
-        "fxp" => serve_fxp(q_override, rounding, &label, &weights, n_utts, &opts, &obs)?,
+        "fxp" => serve_fxp(
+            q_override,
+            rounding,
+            chaos_params,
+            &label,
+            &weights,
+            n_utts,
+            &opts,
+            &obs,
+        )?,
         other => anyhow::bail!(
             "unknown --backend {other:?} (expected: {})",
             clstm::runtime::backend::backend_names()
@@ -231,6 +275,33 @@ pub fn serve_cmd(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Serve on `backend`, wrapped in the seeded chaos harness when
+/// `--fault-inject` was given. The chaos wrapper's fired-fault count is
+/// lifted into the report's metrics (so the summary line and the snapshot
+/// `faults` block carry it) and the planned-site count is printed — a
+/// vacuous chaos run (zero sites drawn) is visible at a glance.
+fn serve_maybe_chaos(
+    backend: impl Backend,
+    chaos_params: Option<ChaosParams>,
+    weights: &LstmWeights,
+    n_utts: usize,
+    opts: &ServeOptions,
+    obs: &ObsOptions,
+) -> Result<ServeReport> {
+    let Some((seed, rate, mode)) = chaos_params else {
+        return serve_workload_obs(&backend, weights, n_utts, opts, obs);
+    };
+    let chaos = ChaosBackend::new(backend, seed, rate, mode);
+    let mut report = serve_workload_obs(&chaos, weights, n_utts, opts, obs)?;
+    report.metrics.faults_injected = chaos.injected();
+    println!(
+        "  chaos: seed {seed:#x}, rate {rate}, {mode:?} — {} fault sites planned, {} fired",
+        chaos.plan().len(),
+        chaos.injected()
+    );
+    Ok(report)
+}
+
 /// Lift a [`ServeReport`] into the versioned snapshot (identity fields,
 /// SLO verdict, fxp datapath watermarks included).
 fn build_snapshot(report: &ServeReport, label: &str) -> MetricsSnapshot {
@@ -262,16 +333,18 @@ fn build_snapshot(report: &ServeReport, label: &str) -> MetricsSnapshot {
 /// Serve on the 16-bit fixed-point backend, then serve the identical
 /// workload (same seed) on the float engine — the §4.2 float-vs-fixed
 /// accuracy comparison in one command.
+#[allow(clippy::too_many_arguments)]
 fn serve_fxp(
     q_override: Option<clstm::num::fxp::Q>,
     rounding: Rounding,
+    chaos_params: Option<ChaosParams>,
     label: &str,
     weights: &LstmWeights,
     n_utts: usize,
     opts: &ServeOptions,
     obs: &ObsOptions,
 ) -> Result<ServeReport> {
-    use clstm::coordinator::server::{serve_workload, serve_workload_obs};
+    use clstm::coordinator::server::serve_workload;
     use clstm::runtime::fxp::{FxpBackend, FXP_PER_DEGRADATION_BUDGET_PTS};
     use clstm::runtime::native::NativeBackend;
 
@@ -302,9 +375,10 @@ fn serve_fxp(
         opts.streams_per_lane,
         opts.arrival
     );
-    // Observability rides on the primary (fxp) run only — the float
-    // comparison below is a plain accuracy reference.
-    let report = serve_workload_obs(&backend, weights, n_utts, opts, obs)?;
+    // Observability (and, under --fault-inject, the chaos harness) rides
+    // on the primary (fxp) run only — the float comparison below is a
+    // plain, fault-free accuracy reference.
+    let report = serve_maybe_chaos(backend, chaos_params, weights, n_utts, opts, obs)?;
 
     // §4.2 comparison: the same seeded workload through the float engine.
     let float = serve_workload(&NativeBackend::default(), weights, n_utts, opts)?;

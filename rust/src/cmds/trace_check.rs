@@ -10,9 +10,16 @@
 //!   ([`validate_chrome_trace`]);
 //! - **snapshot**: right `kind`, a supported `schema_version`, and the
 //!   stable keys the CI smokes grep ([`validate_snapshot`]);
+//! - **snapshot** (with admission active, `offered > 0`): admission
+//!   conservation — `served + shed == offered`. This holds with retries in
+//!   play too: a reclaimed-and-retried utterance was offered once, and ends
+//!   up served once or (past its retry cap) shed once;
 //! - **both**: utterance conservation — the trace's `utt` span count must
 //!   equal the snapshot's served utterance count (every admitted utterance
-//!   produced exactly one span; shed ones produced none).
+//!   produced exactly one span; shed ones produced none). Retried
+//!   utterances still count once: an attempt aborted by a lane fault never
+//!   reaches completion, so it emits no `utt` span — only the attempt that
+//!   finishes does.
 //!
 //! Prints the extracted counts and exits non-zero on any violation, which
 //! is what `make serve-trace` runs in CI.
@@ -66,6 +73,26 @@ pub fn trace_check_cmd(cli: &Cli) -> Result<()> {
         }
         None => None,
     };
+
+    if let Some(sc) = &snap_check {
+        // Admission conservation, checked whenever admission control was
+        // active. Retries do not break it: each utterance is offered once
+        // and resolves to exactly one of served or shed.
+        if sc.offered > 0 {
+            if sc.utterances as u64 + sc.shed != sc.offered {
+                bail!(
+                    "admission conservation violated: {} served + {} shed != {} offered",
+                    sc.utterances,
+                    sc.shed,
+                    sc.offered
+                );
+            }
+            println!(
+                "admission conservation ok: {} served + {} shed == {} offered",
+                sc.utterances, sc.shed, sc.offered
+            );
+        }
+    }
 
     if let (Some(tc), Some(sc)) = (trace_check, snap_check) {
         // Conservation across the two artifacts: one `utt` span per served

@@ -21,6 +21,10 @@ pub struct QueuedUtterance {
     /// Reference phone sequence for PER scoring; empty when the caller has
     /// no labels (e.g. throughput-only runs).
     pub phone_seq: Vec<usize>,
+    /// Times this utterance has been reclaimed from a dead lane and
+    /// resubmitted (`0` on first submission; bounded by the fault policy's
+    /// retry cap).
+    pub attempts: u32,
 }
 
 impl QueuedUtterance {
@@ -30,6 +34,7 @@ impl QueuedUtterance {
             id,
             frames,
             phone_seq: Vec::new(),
+            attempts: 0,
         }
     }
 
@@ -87,6 +92,17 @@ impl Batcher {
             .instant_from(PID_DRIVER, TID_ADMISSION, "enqueue", at, utt.id);
         self.queue.push_back((utt, at));
         true
+    }
+
+    /// Re-enqueue a reclaimed utterance at the *front* of the line with its
+    /// original admission instant. Used by the retry path: the utterance
+    /// was already admitted (and counted) once, so this touches neither
+    /// `admitted` nor the capacity check — retries must not be double
+    /// counted or shed at the door they already passed. Keeping the
+    /// original instant keeps queue-wait metrics and any SLO deadline
+    /// honest across the retry.
+    pub fn push_front(&mut self, utt: QueuedUtterance, admitted_at: Instant) {
+        self.queue.push_front((utt, admitted_at));
     }
 
     pub fn len(&self) -> usize {
@@ -286,6 +302,22 @@ mod tests {
         assert_eq!(served, vec![0, 1, 2, 3, 4, 5], "FIFO across backfills");
         assert_eq!(b.admitted, 6);
         assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn push_front_requeues_at_head_without_recounting() {
+        let mut b = Batcher::new(2, 1);
+        assert!(b.offer(utt(0)));
+        assert!(b.offer(utt(1)));
+        let (u0, at0) = b.pop_admitted().unwrap();
+        assert_eq!(u0.id, 0);
+        assert_eq!(b.admitted, 2);
+        b.push_front(u0, at0);
+        assert_eq!(b.admitted, 2, "a retry re-entry is not a new admission");
+        assert_eq!(b.len(), 2, "front re-entry ignores the capacity check");
+        let (back, at) = b.pop_admitted().unwrap();
+        assert_eq!(back.id, 0, "retries re-enter at the front of the line");
+        assert_eq!(at, at0, "original admission instant rides along");
     }
 
     #[test]

@@ -28,7 +28,9 @@
 //! driver may ever grow.
 
 use crate::coordinator::batcher::QueuedUtterance;
-use crate::coordinator::drive::{Job, LaneDriver, LaneFailure, LaneSeat, SpawnedLane, StatusBoard};
+use crate::coordinator::drive::{
+    FaultPolicy, FaultStats, Job, LaneDriver, LaneFailure, LaneSeat, SpawnedLane, StatusBoard,
+};
 use crate::coordinator::metrics::StageTime;
 use crate::coordinator::pipeline::{ClstmPipeline, PipelineConfig, STAGES};
 use crate::lstm::weights::LstmWeights;
@@ -58,6 +60,14 @@ pub struct EngineConfig {
     /// saturation and drains them under sustained low occupancy only when
     /// this exceeds `replicas`.
     pub max_replicas: usize,
+    /// Respawns allowed per lane after a failure before the slot is
+    /// permanently retired (see [`FaultPolicy::restart_budget`]).
+    /// With this *and* `retry_cap` at `0` (the default) the engine keeps
+    /// its historical fail-stop behavior.
+    pub restart_budget: u32,
+    /// Reclaim-and-resubmit attempts allowed per utterance whose lane died
+    /// (see [`FaultPolicy::retry_cap`]).
+    pub retry_cap: u32,
 }
 
 impl Default for EngineConfig {
@@ -67,7 +77,20 @@ impl Default for EngineConfig {
             streams_per_lane: 4,
             channel_depth: 2,
             max_replicas: 0,
+            restart_budget: 0,
+            retry_cap: 0,
         }
+    }
+}
+
+impl EngineConfig {
+    /// The fault policy these knobs describe: `None` (fail-stop) unless at
+    /// least one of `restart_budget` / `retry_cap` is nonzero.
+    pub fn fault_policy(&self) -> Option<FaultPolicy> {
+        (self.restart_budget > 0 || self.retry_cap > 0).then_some(FaultPolicy {
+            restart_budget: self.restart_budget,
+            retry_cap: self.retry_cap,
+        })
     }
 }
 
@@ -145,9 +168,10 @@ impl ServeEngine {
         let streams = cfg.streams_per_lane.max(1);
         // Pre-build the stage-executor pool while the backend borrow is
         // live: one entry per lane the driver may ever spawn — the initial
-        // max plus one regrow per possible retirement. A dry pool just
-        // stops growth.
-        let pool_size = max + (max - replicas);
+        // max plus one regrow per possible retirement, plus one respawn
+        // per lane per unit of restart budget. A dry pool just stops
+        // growth (and respawns).
+        let pool_size = max + (max - replicas) + max * cfg.restart_budget as usize;
         let mut pool: VecDeque<StageSet> = VecDeque::with_capacity(pool_size);
         for _ in 0..pool_size {
             pool.push_back(backend.build_stages(&prepared, SegmentId::LAYER0_FWD)?);
@@ -200,6 +224,9 @@ impl ServeEngine {
         });
         let mut driver = LaneDriver::new(replicas, max, streams, in_pad, spawner)?;
         driver.set_trace(trace.clone());
+        if let Some(policy) = cfg.fault_policy() {
+            driver.set_fault_policy(policy);
+        }
         Ok(Self {
             driver,
             backend_name: backend.name(),
@@ -263,6 +290,30 @@ impl ServeEngine {
     /// [`Self::serve_all`] already does.
     pub fn autoscale(&mut self) -> Result<()> {
         self.driver.autoscale()
+    }
+
+    /// Quarantine/respawn dead lanes and reclaim their in-flight
+    /// utterances; a no-op without a fault policy (see
+    /// [`LaneDriver::recover`]).
+    pub fn recover(&mut self) -> Result<()> {
+        self.driver.recover()
+    }
+
+    /// Pop one reclaimed utterance awaiting resubmission (see
+    /// [`LaneDriver::take_retry`]).
+    pub fn take_retry(&mut self) -> Option<(QueuedUtterance, Instant)> {
+        self.driver.take_retry()
+    }
+
+    /// Drain ids of utterances abandoned past their retry cap (see
+    /// [`LaneDriver::take_abandoned`]).
+    pub fn take_abandoned(&mut self) -> Vec<u64> {
+        self.driver.take_abandoned()
+    }
+
+    /// Lifetime fault-recovery counters.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.driver.fault_stats()
     }
 
     /// Non-blocking submit: route `utt` to the least-loaded lane. The lane

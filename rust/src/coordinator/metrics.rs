@@ -244,6 +244,16 @@ pub struct Metrics {
     pub lanes_grown: u64,
     /// Lanes drained and retired by the elastic engine.
     pub lanes_retired: u64,
+    /// Faults fired by the chaos backend (`--fault-inject`); 0 outside
+    /// chaos runs. With all four fault counters zero the faults line is
+    /// omitted from [`Self::summary`].
+    pub faults_injected: u64,
+    /// Dead lanes respawned from the stage pool within the restart budget.
+    pub fault_restarts: u64,
+    /// Lanes permanently retired after exhausting the restart budget.
+    pub fault_retires: u64,
+    /// Utterances reclaimed from dead lanes and re-queued for retry.
+    pub fault_retries: u64,
 }
 
 impl Metrics {
@@ -334,6 +344,10 @@ impl Metrics {
         self.shed += other.shed;
         self.lanes_grown += other.lanes_grown;
         self.lanes_retired += other.lanes_retired;
+        self.faults_injected += other.faults_injected;
+        self.fault_restarts += other.fault_restarts;
+        self.fault_retires += other.fault_retires;
+        self.fault_retries += other.fault_retries;
         self.frame_latency.merge(&other.frame_latency);
         self.queue_wait.merge(&other.queue_wait);
         self.service.merge(&other.service);
@@ -461,6 +475,16 @@ impl Metrics {
             s.push_str(&format!(
                 "; autoscale: +{} grown / -{} retired",
                 self.lanes_grown, self.lanes_retired
+            ));
+        }
+        if self.faults_injected > 0
+            || self.fault_restarts > 0
+            || self.fault_retires > 0
+            || self.fault_retries > 0
+        {
+            s.push_str(&format!(
+                "; faults: {} injected, {} restarts, {} retires, {} retries",
+                self.faults_injected, self.fault_restarts, self.fault_retires, self.fault_retries
             ));
         }
         if !self.segments.is_empty() {
@@ -693,6 +717,31 @@ mod tests {
         assert_eq!(m.offered, 50);
         assert_eq!(m.shed, 15);
         assert_eq!(m.lanes_grown, 2);
+    }
+
+    #[test]
+    fn fault_counters_in_summary_and_merge() {
+        let mut m = Metrics::default();
+        // No faults → no faults line.
+        assert!(!m.summary().contains("faults"));
+        m.faults_injected = 3;
+        m.fault_restarts = 2;
+        m.fault_retires = 1;
+        m.fault_retries = 4;
+        let s = m.summary();
+        assert!(s.contains("faults: 3 injected, 2 restarts, 1 retires, 4 retries"), "{s}");
+        let mut other = Metrics::default();
+        other.fault_restarts = 1;
+        other.fault_retries = 2;
+        m.merge(&other);
+        assert_eq!(m.faults_injected, 3);
+        assert_eq!(m.fault_restarts, 3);
+        assert_eq!(m.fault_retires, 1);
+        assert_eq!(m.fault_retries, 6);
+        // A lone restart still surfaces the line.
+        let mut only = Metrics::default();
+        only.fault_restarts = 1;
+        assert!(only.summary().contains("faults: 0 injected, 1 restarts"));
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //! with ≥3 streams admitted the pipeline is always full — the software
 //! realisation of the paper's frame-interleaving argument (§6.2).
 //!
+//! **Retry idempotency.** Every stage executor is a pure function of
+//! `(prepared weights, input frames)` — executors carry scratch buffers
+//! but no state that survives a frame, and the recycled [`FrameMsg`]
+//! buffers are fully overwritten by each stage's `run_into` before anyone
+//! reads them. So replaying an utterance's frames through a *different*
+//! replica (built over the same shared preparation) produces bit-identical
+//! outputs — the property the serving layer's fault-retry path relies on,
+//! pinned by `tests/chaos.rs`.
+//!
 //! Which hardware/library executes each stage is a [`Backend`] concern: the
 //! default [`NativeBackend`](crate::runtime::native::NativeBackend) needs
 //! nothing beyond this crate; [`FxpBackend`](crate::runtime::fxp::FxpBackend)

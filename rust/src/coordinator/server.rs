@@ -26,6 +26,17 @@
 //! the *served* tail stays within the SLO under sustained overload, and
 //! with `max_replicas > replicas` the engine grows/retires lanes from
 //! occupancy as the offered load swings.
+//!
+//! With a fault policy armed ([`ServeOptions::restart_budget`] /
+//! [`ServeOptions::retry_cap`] nonzero) the loop is **fail-operational**:
+//! each iteration runs the engine's recovery sweep (quarantine dead lanes,
+//! respawn replacements within the restart budget), re-queues reclaimed
+//! utterances at the *front* of the batcher under their original admission
+//! instant — so the queue-wait clock and any SLO deadline keep running
+//! across a retry — and counts retry-budget-exhausted utterances as shed,
+//! keeping `served + shed == offered` an invariant. Retries bypass the
+//! admission front door entirely (they were already admitted once), so
+//! offered/shed never double-count an utterance across its attempts.
 
 use crate::coordinator::batcher::{AdmissionControl, Batcher, QueuedUtterance};
 use crate::coordinator::engine::{CompletedUtterance, EngineConfig};
@@ -70,6 +81,13 @@ pub struct ServeOptions {
     /// Queue-wait SLO for served utterances; enables deadline-aware
     /// admission (load shedding) when set.
     pub slo: Option<Duration>,
+    /// Times a dead lane may be respawned from the stage pool before it is
+    /// permanently retired. With `retry_cap` both zero, lane failures are
+    /// fail-stop (the historical behavior).
+    pub restart_budget: u32,
+    /// Times one utterance may be reclaimed from a dead lane and re-queued
+    /// before it is abandoned (counted as shed).
+    pub retry_cap: u32,
 }
 
 impl Default for ServeOptions {
@@ -82,6 +100,8 @@ impl Default for ServeOptions {
             arrival: Arrival::Closed,
             seed: 0x17c5,
             slo: None,
+            restart_budget: 0,
+            retry_cap: 0,
         }
     }
 }
@@ -195,7 +215,10 @@ pub fn serve_workload_obs(
         max_replicas: opts.max_replicas,
         streams_per_lane: opts.streams_per_lane,
         channel_depth: opts.channel_depth,
+        restart_budget: opts.restart_budget,
+        retry_cap: opts.retry_cap,
     };
+    let fault_tolerant = engine_cfg.fault_policy().is_some();
     let mut engine = StackEngine::build_with_trace(backend, weights, engine_cfg, &obs.trace)?;
     let replicas = engine.replicas();
     // Driver-side trace buffer: admission lifecycle instants plus the
@@ -219,6 +242,10 @@ pub fn serve_workload_obs(
     let mut hyps: Vec<Vec<usize>> = Vec::with_capacity(n_utts);
     let mut refs: Vec<Vec<usize>> = Vec::with_capacity(n_utts);
     let mut completed = 0usize;
+    // Utterances lost to faults past their retry cap. Folded into the shed
+    // count (via the admission controller when one is armed) so the loop
+    // still terminates and `served + shed == offered` holds.
+    let mut abandoned = 0usize;
     let t0 = Instant::now();
 
     let mut handle = |c: CompletedUtterance, metrics: &mut Metrics| {
@@ -243,12 +270,42 @@ pub fn serve_workload_obs(
     let mut stats_timer = obs.stats_interval.map(|iv| (iv, Instant::now(), 0usize));
 
     loop {
-        let shed = adm.as_ref().map_or(0, |a| a.shed as usize);
+        let shed = adm.as_ref().map_or(abandoned, |a| a.shed as usize);
         if completed + shed >= n_utts {
             break;
         }
         // Let the engine adapt lane count to occupancy before feeding it.
         engine.autoscale()?;
+        if fault_tolerant {
+            // Quarantine dead lanes, respawn replacements within budget,
+            // and reclaim their in-flight utterances before feeding more.
+            engine.recover()?;
+            while let Some((u, admitted)) = engine.take_retry() {
+                // Front of the queue, original admission instant: the
+                // queue-wait clock (and any SLO deadline) keeps running
+                // across the retry, and offered is not re-counted.
+                batcher.push_front(u, admitted);
+            }
+            for id in engine.take_abandoned() {
+                abandoned += 1;
+                if let Some(a) = adm.as_mut() {
+                    a.shed += 1;
+                }
+                tr.instant_now(PID_DRIVER, TID_ADMISSION, "shed", id);
+            }
+            if engine.replicas() == 0 {
+                // Every lane has exhausted its restart budget. If all
+                // utterances are already accounted for the top of the loop
+                // exits cleanly; otherwise the run cannot finish.
+                let shed = adm.as_ref().map_or(abandoned, |a| a.shed as usize);
+                ensure!(
+                    completed + shed >= n_utts,
+                    "all lanes permanently retired with work outstanding: {}",
+                    engine.health_report()
+                );
+                continue;
+            }
+        }
         // Throttled counter tracks (one trace clock read per sample batch;
         // none at all when tracing is off).
         if let Some(ts) = tr.now_us() {
@@ -330,7 +387,7 @@ pub fn serve_workload_obs(
             continue;
         }
         {
-            let shed = adm.as_ref().map_or(0, |a| a.shed as usize);
+            let shed = adm.as_ref().map_or(abandoned, |a| a.shed as usize);
             if completed + shed >= n_utts {
                 break;
             }
@@ -354,7 +411,10 @@ pub fn serve_workload_obs(
                 idle_wait = IDLE_WAIT_MIN;
             } else {
                 idle_wait = (idle_wait * 2).min(IDLE_WAIT_MAX);
-                if last_health_check.elapsed() >= HEALTH_CHECK_EVERY {
+                if !fault_tolerant && last_health_check.elapsed() >= HEALTH_CHECK_EVERY {
+                    // Fail-stop (no fault policy): a dead lane aborts the
+                    // run. Under a fault policy the recovery sweep at the
+                    // top of the loop handles it instead.
                     last_health_check = Instant::now();
                     ensure!(engine.healthy(), "{}", engine.health_report());
                 }
@@ -376,7 +436,13 @@ pub fn serve_workload_obs(
     if let Some(a) = &adm {
         metrics.offered = a.offered;
         metrics.shed = a.shed;
+    } else {
+        metrics.shed = abandoned as u64;
     }
+    let fs = engine.fault_stats();
+    metrics.fault_restarts = fs.restarts;
+    metrics.fault_retires = fs.retires;
+    metrics.fault_retries = fs.retries;
     // Read the fxp datapath watermarks off the shared preparation before
     // the engine (and its Arc) goes away; a non-fxp payload downcasts to
     // None and yields an empty table.

@@ -63,7 +63,7 @@
 use crate::analysis::{SchedGraph, SchedNodeKind};
 use crate::coordinator::batcher::QueuedUtterance;
 use crate::coordinator::drive::{
-    Job, LaneDriver, LaneFailure, LaneSeat, SpawnedLane, StatusBoard,
+    FaultStats, Job, LaneDriver, LaneFailure, LaneSeat, SpawnedLane, StatusBoard,
 };
 use crate::coordinator::engine::{CompletedUtterance, EngineConfig, Ticket};
 use crate::coordinator::metrics::{SegmentOccupancy, StageTime};
@@ -328,8 +328,10 @@ impl StackEngine {
         // Pre-build the stage-executor pool while the backend borrow is
         // live: one Vec<StageSet> (all segments, topology order) per
         // instance the driver may ever spawn — the initial max plus one
-        // regrow per possible retirement. A dry pool just stops growth.
-        let pool_size = max + (max - replicas);
+        // regrow per possible retirement, plus one respawn per instance
+        // per unit of restart budget. A dry pool just stops growth (and
+        // respawns).
+        let pool_size = max + (max - replicas) + max * cfg.restart_budget as usize;
         let mut pool: VecDeque<Vec<StageSet>> = VecDeque::with_capacity(pool_size);
         for _ in 0..pool_size {
             let mut sets = Vec::with_capacity(topo.len());
@@ -412,6 +414,9 @@ impl StackEngine {
         });
         let mut driver = LaneDriver::new(replicas, max, streams, in_pad, spawner)?;
         driver.set_trace(trace.clone());
+        if let Some(policy) = cfg.fault_policy() {
+            driver.set_fault_policy(policy);
+        }
         Ok(Self {
             topo,
             driver,
@@ -490,6 +495,30 @@ impl StackEngine {
     /// [`Self::serve_all`] already does.
     pub fn autoscale(&mut self) -> Result<()> {
         self.driver.autoscale()
+    }
+
+    /// Quarantine/respawn dead instances and reclaim their in-flight
+    /// utterances; a no-op without a fault policy (see
+    /// [`LaneDriver::recover`]).
+    pub fn recover(&mut self) -> Result<()> {
+        self.driver.recover()
+    }
+
+    /// Pop one reclaimed utterance awaiting resubmission (see
+    /// [`LaneDriver::take_retry`]).
+    pub fn take_retry(&mut self) -> Option<(QueuedUtterance, Instant)> {
+        self.driver.take_retry()
+    }
+
+    /// Drain ids of utterances abandoned past their retry cap (see
+    /// [`LaneDriver::take_abandoned`]).
+    pub fn take_abandoned(&mut self) -> Vec<u64> {
+        self.driver.take_abandoned()
+    }
+
+    /// Lifetime fault-recovery counters.
+    pub fn fault_stats(&self) -> FaultStats {
+        self.driver.fault_stats()
     }
 
     /// Per-segment serving statistics across all replicas: frames

@@ -18,7 +18,11 @@
 //!                         #    --arrival closed|poisson --rate R;
 //!                         #    fxp runs the §4.2 16-bit datapath, prints
 //!                         #    the float-vs-fixed PER comparison, and takes
-//!                         #    --rounding nearest|truncate)
+//!                         #    --rounding nearest|truncate;
+//!                         #    --fault-inject seed:rate[:once|persistent]
+//!                         #    runs the seeded chaos harness, with lane
+//!                         #    respawn bounded by --restart-budget and
+//!                         #    utterance re-queues by --retry-cap)
 //! clstm quantize          # range analysis + fxp-vs-float accuracy report
 //! clstm verify            # static fxp datapath + scheduler verification
 //!                         #   (--model, --q-format, --rounding,
@@ -93,6 +97,21 @@ fn main() {
         "stats-interval",
         "0",
         "serve: print a rolling stats line every S seconds (0 = off)",
+    )
+    .opt(
+        "fault-inject",
+        "",
+        "serve: inject deterministic stage faults, seed:rate[:once|persistent]",
+    )
+    .opt(
+        "restart-budget",
+        "2",
+        "serve: respawns allowed per dead lane before permanent retire (with --retry-cap 0 too: fail-stop)",
+    )
+    .opt(
+        "retry-cap",
+        "2",
+        "serve: re-queues allowed per utterance reclaimed from a dead lane before it is shed",
     )
     .flag("verbose", "chatty logging")
     .parse_env();

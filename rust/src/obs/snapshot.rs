@@ -104,6 +104,13 @@ pub struct MetricsSnapshot {
     pub slo_met: Option<bool>,
     pub lanes_grown: u64,
     pub lanes_retired: u64,
+    /// Fault-tolerance counters (chaos injections, lane restarts/retires,
+    /// utterance retries); the `faults` block is emitted only when any is
+    /// nonzero, so fault-free snapshots are unchanged.
+    pub faults_injected: u64,
+    pub fault_restarts: u64,
+    pub fault_retires: u64,
+    pub fault_retries: u64,
     /// `fft-stats` watermarks; empty in default builds.
     pub datapath: Vec<DatapathRow>,
 }
@@ -159,6 +166,10 @@ impl MetricsSnapshot {
             shed_rate: m.shed_rate(),
             lanes_grown: m.lanes_grown,
             lanes_retired: m.lanes_retired,
+            faults_injected: m.faults_injected,
+            fault_restarts: m.fault_restarts,
+            fault_retires: m.fault_retires,
+            fault_retries: m.fault_retries,
             ..Self::default()
         }
     }
@@ -239,6 +250,21 @@ impl MetricsSnapshot {
                 ("lanes_retired", Json::num(self.lanes_retired as f64)),
             ]),
         ));
+        if self.faults_injected > 0
+            || self.fault_restarts > 0
+            || self.fault_retires > 0
+            || self.fault_retries > 0
+        {
+            pairs.push((
+                "faults",
+                Json::obj(vec![
+                    ("injected", Json::num(self.faults_injected as f64)),
+                    ("restarts", Json::num(self.fault_restarts as f64)),
+                    ("retires", Json::num(self.fault_retires as f64)),
+                    ("retries", Json::num(self.fault_retries as f64)),
+                ]),
+            ));
+        }
         if !self.datapath.is_empty() {
             pairs.push((
                 "datapath",
@@ -276,6 +302,9 @@ pub struct SnapshotCheck {
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
     pub shed: u64,
+    /// Utterances offered to admission control; 0 when no SLO was set,
+    /// which disables the `served + shed == offered` conservation check.
+    pub offered: u64,
 }
 
 /// Validate a parsed snapshot document: right `kind`, a schema version
@@ -300,7 +329,7 @@ pub fn validate_snapshot(doc: &Json) -> Result<SnapshotCheck, String> {
     let latency_p99_us = lat.get_f64("p99").ok_or("latency_us has no p99")?;
     let adm = doc.get("admission").ok_or("snapshot has no admission")?;
     let shed = adm.get_f64("shed").ok_or("admission has no shed")? as u64;
-    adm.get_f64("offered").ok_or("admission has no offered")?;
+    let offered = adm.get_f64("offered").ok_or("admission has no offered")? as u64;
     doc.get("stages")
         .and_then(Json::as_arr)
         .ok_or("snapshot has no stages array")?;
@@ -313,6 +342,7 @@ pub fn validate_snapshot(doc: &Json) -> Result<SnapshotCheck, String> {
         latency_p50_us,
         latency_p99_us,
         shed,
+        offered,
     })
 }
 
@@ -343,6 +373,9 @@ mod tests {
         assert_eq!(check.utterances, 2);
         assert_eq!(check.frames, 4);
         assert_eq!(check.shed, 1);
+        assert_eq!(check.offered, 3);
+        // No faults → no faults block.
+        assert!(doc.get("faults").is_none());
         // The snapshot reports exactly the accessors the summary prints.
         assert_eq!(check.latency_p50_us, m.latency_p50_us());
         assert_eq!(check.latency_p99_us, m.latency_p99_us());
@@ -351,6 +384,24 @@ mod tests {
             doc.get("slo").and_then(|s| s.get("slo_met")),
             Some(&Json::Bool(true))
         );
+    }
+
+    #[test]
+    fn faults_block_emitted_when_any_counter_nonzero() {
+        let mut m = Metrics::default();
+        m.utterances = 1;
+        m.frames = 1;
+        m.fault_restarts = 2;
+        m.fault_retries = 3;
+        let snap = MetricsSnapshot::from_metrics(&m);
+        let doc = Json::parse(&snap.to_json().to_pretty()).unwrap();
+        let faults = doc.get("faults").expect("faults block present");
+        assert_eq!(faults.get_f64("injected"), Some(0.0));
+        assert_eq!(faults.get_f64("restarts"), Some(2.0));
+        assert_eq!(faults.get_f64("retires"), Some(0.0));
+        assert_eq!(faults.get_f64("retries"), Some(3.0));
+        // Adding the block is non-breaking: the validator still passes.
+        validate_snapshot(&doc).unwrap();
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! | track | pid | tid |
 //! |-------|-----|-----|
 //! | serve driver: arrival/admit/shed instants | 0 | 0 |
+//! | fault lifecycle (same track): `fault`, `quarantine`, `respawn`, `retry` instants | 0 | 0 |
 //! | counter tracks (occupancy, shed, lanes, queue depth) | 0 | per-name |
 //! | lane `l`, segment `(layer, dir)`, stage `s ∈ 1..=3` | `l + 1` | `(layer·2 + dir)·4 + s` |
 //! | lane `l`, stream slot `k` utterance spans | `l + 1` | `1000 + k` |

@@ -1,0 +1,315 @@
+//! Deterministic fault injection: a [`Backend`] wrapper that fails named
+//! `(build, segment, stage)` sites on a seeded schedule.
+//!
+//! [`ChaosBackend`] delegates preparation and stage building to any inner
+//! backend, then wraps each built [`StageExecutor`] with a thin shim that
+//! may fail on a scheduled call. All randomness is drawn **at build time**
+//! from one seeded [`Xoshiro256`] stream, in build order — the engines
+//! pre-build their stage pools sequentially, so the whole fault plan is a
+//! pure function of `(seed, rate, mode, build sequence)` and every chaos
+//! run is reproducible from its seed. Nothing about *when* a fault fires
+//! depends on wall-clock time or thread interleaving: a faulty executor
+//! counts its own calls and fails at the planned call index.
+//!
+//! An injected fault is an ordinary executor error: the stage thread
+//! records it as a [`StageFailure`](crate::coordinator::pipeline::StageFailure)
+//! naming the site and exits, the lane worker reports the
+//! [`LaneFailure`](crate::coordinator::drive::LaneFailure), and the
+//! driver's recovery path (quarantine → reclaim → respawn) takes over —
+//! chaos runs exercise exactly the production failure path, with zero
+//! special-casing anywhere downstream.
+//!
+//! The "lane" coordinate of a site is the **pool-build ordinal**: the n-th
+//! `build_stages` call on the wrapper. For a [`ServeEngine`] pool that is
+//! one ordinal per lane slot; for a [`StackEngine`] one per
+//! `(instance, segment)` in topology order. Respawned lanes draw fresh
+//! pool entries, so under [`ChaosMode::Once`] a replacement usually
+//! survives, while [`ChaosMode::Persistent`] makes every faulty
+//! replacement dead on arrival — the restart-budget-exhaustion scenario.
+//!
+//! [`ServeEngine`]: crate::coordinator::engine::ServeEngine
+//! [`StackEngine`]: crate::coordinator::topology::StackEngine
+
+use crate::lstm::weights::LstmWeights;
+use crate::runtime::backend::{Backend, PreparedWeights, SegmentId, StageExecutor, StageSet};
+use crate::util::prng::Xoshiro256;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// When a planned fault fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// Each faulty executor fails exactly once, at its scheduled call,
+    /// then runs clean — the lane dies and a respawned replacement
+    /// (with its own schedule) usually survives.
+    Once,
+    /// A faulty executor fails on its very first call and every call
+    /// after — faulty respawns are dead on arrival, which is how the
+    /// restart-budget-exhaustion path is exercised.
+    Persistent,
+}
+
+/// Calls within which a [`ChaosMode::Once`] fault fires. Small relative to
+/// any real workload's per-stage call count, so a planned fault on an
+/// active lane fires almost immediately.
+const FAULT_HORIZON: u64 = 48;
+
+/// One planned fault site (see [`ChaosBackend::plan`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosSite {
+    /// Pool-build ordinal of the stage set holding this site (the n-th
+    /// `build_stages` call on the wrapper).
+    pub build: usize,
+    /// Segment label (`l0.fwd`, …).
+    pub seg: String,
+    /// 1-based stage index.
+    pub stage: usize,
+    /// Call index at which the fault fires (always 0 under
+    /// [`ChaosMode::Persistent`]).
+    pub at: u64,
+}
+
+impl std::fmt::Display for ChaosSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "b{}/{}/s{}@{}", self.build, self.seg, self.stage, self.at)
+    }
+}
+
+/// Build-time randomness + the accumulated plan, behind one lock so the
+/// draw order is the build order even if a caller ever built concurrently.
+struct ChaosState {
+    rng: Xoshiro256,
+    builds: usize,
+    plan: Vec<ChaosSite>,
+}
+
+/// A [`Backend`] that delegates to `inner` but injects deterministic,
+/// seeded faults into the stage executors it builds.
+pub struct ChaosBackend<B> {
+    inner: B,
+    seed: u64,
+    rate: f64,
+    mode: ChaosMode,
+    state: Mutex<ChaosState>,
+    injected: Arc<AtomicU64>,
+}
+
+impl<B: Backend> ChaosBackend<B> {
+    /// Wrap `inner`: each built executor is independently faulty with
+    /// probability `rate`, with all draws taken from the `seed`ed stream
+    /// in build order.
+    pub fn new(inner: B, seed: u64, rate: f64, mode: ChaosMode) -> Self {
+        Self {
+            inner,
+            seed,
+            rate,
+            mode,
+            state: Mutex::new(ChaosState {
+                rng: Xoshiro256::seed_from_u64(seed),
+                builds: 0,
+                plan: Vec::new(),
+            }),
+            injected: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The fault plan drawn so far (one entry per faulty executor built).
+    /// Fully populated once the engine's pool pre-build finishes.
+    pub fn plan(&self) -> Vec<ChaosSite> {
+        self.state
+            .lock()
+            .map(|s| s.plan.clone())
+            .unwrap_or_default()
+    }
+
+    /// Faults actually fired so far (a planned site on a never-used pool
+    /// entry, or past the calls its lane ever made, never fires).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+impl<B: Backend> Backend for ChaosBackend<B> {
+    fn name(&self) -> String {
+        format!("{}+chaos", self.inner.name())
+    }
+
+    fn prepare(&self, weights: &LstmWeights) -> Result<Arc<PreparedWeights>> {
+        // Pass-through: the prepared bundle stays the inner backend's, so
+        // its own `ensure_backend` guards keep working unchanged.
+        self.inner.prepare(weights)
+    }
+
+    fn build_stages(&self, prepared: &Arc<PreparedWeights>, seg: SegmentId) -> Result<StageSet> {
+        let stages = self.inner.build_stages(prepared, seg)?;
+        let mut st = self.state.lock().expect("chaos state lock poisoned");
+        let build = st.builds;
+        st.builds += 1;
+        let mut wrap = |stage: usize, exec: Box<dyn StageExecutor>| -> Box<dyn StageExecutor> {
+            // Two draws per executor, unconditionally, so the stream stays
+            // aligned whatever the outcomes (and a simulator can replay
+            // the plan from the seed alone).
+            let faulty = st.rng.next_f64() < self.rate;
+            let drawn_at = st.rng.below(FAULT_HORIZON);
+            if !faulty {
+                return exec;
+            }
+            let at = match self.mode {
+                ChaosMode::Once => drawn_at,
+                ChaosMode::Persistent => 0,
+            };
+            let site = ChaosSite {
+                build,
+                seg: seg.to_string(),
+                stage,
+                at,
+            };
+            let label = format!("chaos[{:#x}] site {site}", self.seed);
+            st.plan.push(site);
+            Box::new(ChaosStage {
+                inner: exec,
+                label,
+                mode: self.mode,
+                at,
+                calls: 0,
+                fired: false,
+                injected: Arc::clone(&self.injected),
+            })
+        };
+        let stage1 = wrap(1, stages.stage1);
+        let stage2 = wrap(2, stages.stage2);
+        let stage3 = wrap(3, stages.stage3);
+        Ok(StageSet {
+            stage1,
+            stage2,
+            stage3,
+        })
+    }
+}
+
+/// Shim around one faulty executor: counts its own calls and fails at the
+/// planned index; otherwise a transparent delegate.
+struct ChaosStage {
+    inner: Box<dyn StageExecutor>,
+    label: String,
+    mode: ChaosMode,
+    at: u64,
+    calls: u64,
+    fired: bool,
+    injected: Arc<AtomicU64>,
+}
+
+impl StageExecutor for ChaosStage {
+    fn run_into(&mut self, inputs: &[&[f32]], outputs: &mut [&mut [f32]]) -> Result<()> {
+        let call = self.calls;
+        self.calls += 1;
+        let fire = match self.mode {
+            ChaosMode::Once => !self.fired && call >= self.at,
+            ChaosMode::Persistent => true,
+        };
+        if fire {
+            self.fired = true;
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            bail!("injected fault at {}", self.label);
+        }
+        self.inner.run_into(inputs, outputs)
+    }
+
+    fn out_lens(&self) -> Vec<usize> {
+        self.inner.out_lens()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lstm::config::LstmSpec;
+    use crate::runtime::native::NativeBackend;
+
+    fn built_plan(seed: u64, rate: f64, mode: ChaosMode, builds: usize) -> Vec<ChaosSite> {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 7);
+        let chaos = ChaosBackend::new(NativeBackend::default(), seed, rate, mode);
+        let prepared = chaos.prepare(&w).expect("prepare");
+        for _ in 0..builds {
+            chaos
+                .build_stages(&prepared, SegmentId::LAYER0_FWD)
+                .expect("build");
+        }
+        chaos.plan()
+    }
+
+    #[test]
+    fn same_seed_same_plan() {
+        let a = built_plan(0xC0FFEE, 0.5, ChaosMode::Once, 6);
+        let b = built_plan(0xC0FFEE, 0.5, ChaosMode::Once, 6);
+        assert_eq!(a, b, "the plan is a pure function of the seed");
+        let c = built_plan(0xC0FFED, 0.5, ChaosMode::Once, 6);
+        assert_ne!(a, c, "a different seed draws a different plan");
+    }
+
+    #[test]
+    fn zero_rate_is_a_transparent_delegate() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 7);
+        let chaos = ChaosBackend::new(NativeBackend::default(), 1, 0.0, ChaosMode::Once);
+        assert_eq!(chaos.name(), "native+chaos");
+        let prepared = chaos.prepare(&w).expect("prepare");
+        let mut stages = chaos
+            .build_stages(&prepared, SegmentId::LAYER0_FWD)
+            .expect("build");
+        assert!(chaos.plan().is_empty(), "rate 0 plans no faults");
+        // And the executors still compute: same output as the bare inner.
+        let fused = vec![0.5f32; spec.fused_in_dim(0)];
+        let a = stages.stage1.run(&[&fused]).expect("chaos-wrapped run");
+        let mut bare = NativeBackend::default().build_single(&w).expect("bare");
+        let b = bare.stage1.run(&[&fused]).expect("bare run");
+        assert_eq!(a, b, "pass-through executors are bit-identical");
+        assert_eq!(chaos.injected(), 0);
+    }
+
+    #[test]
+    fn persistent_faults_fire_immediately_and_name_the_site() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 7);
+        let chaos = ChaosBackend::new(NativeBackend::default(), 9, 1.0, ChaosMode::Persistent);
+        let prepared = chaos.prepare(&w).expect("prepare");
+        let mut stages = chaos
+            .build_stages(&prepared, SegmentId::LAYER0_FWD)
+            .expect("build");
+        let plan = chaos.plan();
+        assert_eq!(plan.len(), 3, "rate 1 makes every stage faulty");
+        assert!(plan.iter().all(|s| s.at == 0), "persistent fires at call 0");
+        let fused = vec![0.5f32; spec.fused_in_dim(0)];
+        let err = stages.stage1.run(&[&fused]).expect_err("must fire");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("injected fault") && msg.contains("l0.fwd") && msg.contains("s1"),
+            "fault names its site: {msg}"
+        );
+        assert_eq!(chaos.injected(), 1);
+        // Persistent means every later call fires too.
+        assert!(stages.stage1.run(&[&fused]).is_err());
+        assert_eq!(chaos.injected(), 2);
+    }
+
+    #[test]
+    fn once_faults_fire_at_the_scheduled_call_then_run_clean() {
+        let spec = LstmSpec::tiny(4);
+        let w = LstmWeights::random(&spec, 7);
+        let chaos = ChaosBackend::new(NativeBackend::default(), 42, 1.0, ChaosMode::Once);
+        let prepared = chaos.prepare(&w).expect("prepare");
+        let mut stages = chaos
+            .build_stages(&prepared, SegmentId::LAYER0_FWD)
+            .expect("build");
+        let at = chaos.plan()[0].at;
+        let fused = vec![0.5f32; spec.fused_in_dim(0)];
+        for _ in 0..at {
+            stages.stage1.run(&[&fused]).expect("clean before schedule");
+        }
+        assert!(stages.stage1.run(&[&fused]).is_err(), "fires at call {at}");
+        stages.stage1.run(&[&fused]).expect("clean after firing once");
+        assert_eq!(chaos.injected(), 1);
+    }
+}

@@ -10,6 +10,9 @@
 //! for the traits and the per-stage I/O contract):
 //!
 //! - [`backend`] — the pluggable [`Backend`] / [`StageExecutor`] layer.
+//! - [`chaos`] — deterministic fault injection: wraps any backend and
+//!   fails named `(build, segment, stage)` sites on a seeded schedule
+//!   (the `clstm serve --fault-inject` harness).
 //! - [`native`] — the default backend: pure-Rust execution through the
 //!   crate's own engines (Eq 6 spectral convolution + Eq 1 gate math), no
 //!   artifacts or external libraries required.
@@ -30,6 +33,7 @@
 
 pub mod artifact;
 pub mod backend;
+pub mod chaos;
 pub mod fxp;
 pub mod native;
 
@@ -40,6 +44,7 @@ pub mod pjrt;
 
 pub use artifact::{ArtifactDir, ConfigArtifacts, SpectralBundle};
 pub use backend::{Backend, PreparedWeights, SegmentId, StageExecutor, StageSet};
+pub use chaos::{ChaosBackend, ChaosMode, ChaosSite};
 pub use fxp::FxpBackend;
 pub use native::NativeBackend;
 

@@ -65,6 +65,37 @@ pub fn parse_replicas(s: &str) -> Result<(usize, usize), String> {
     Ok((min, max))
 }
 
+/// Parse a `--fault-inject` style value: `seed:rate[:once|persistent]` —
+/// a PRNG seed, a per-executor fault probability in `[0, 1]`, and an
+/// optional mode (`once` by default: each faulty executor fails exactly
+/// once; `persistent`: it fails on every call). Returns
+/// `(seed, rate, persistent)`; the caller maps the bool onto the runtime's
+/// chaos mode so this module stays free of runtime dependencies.
+pub fn parse_fault_inject(s: &str) -> Result<(u64, f64, bool), String> {
+    let s = s.trim();
+    let bad = || {
+        format!(
+            "bad fault spec {s:?} (expected: seed:rate[:once|persistent], e.g. 7:0.35 or 7:0.35:persistent)"
+        )
+    };
+    let mut parts = s.split(':');
+    let seed: u64 = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
+    let rate: f64 = parts.next().ok_or_else(bad)?.trim().parse().map_err(|_| bad())?;
+    let persistent = match parts.next().map(|m| m.trim().to_ascii_lowercase()) {
+        None => false,
+        Some(m) if m == "once" => false,
+        Some(m) if m == "persistent" => true,
+        Some(m) => return Err(format!("bad fault mode {m:?} (expected: once | persistent)")),
+    };
+    if parts.next().is_some() {
+        return Err(bad());
+    }
+    if !rate.is_finite() || !(0.0..=1.0).contains(&rate) {
+        return Err(format!("fault rate in {s:?} must be within [0, 1]"));
+    }
+    Ok((seed, rate, persistent))
+}
+
 /// Specification of one option.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -343,6 +374,26 @@ mod tests {
         assert!(parse_replicas("nope").is_err());
         assert!(parse_replicas("1..").is_err());
         assert!(parse_replicas("..4").is_err());
+    }
+
+    #[test]
+    fn fault_inject_parses_seed_rate_and_mode() {
+        assert_eq!(parse_fault_inject("7:0.35").unwrap(), (7, 0.35, false));
+        assert_eq!(parse_fault_inject("7:0.35:once").unwrap(), (7, 0.35, false));
+        assert_eq!(parse_fault_inject("7:1:persistent").unwrap(), (7, 1.0, true));
+        assert_eq!(parse_fault_inject(" 0:0 ").unwrap(), (0, 0.0, false));
+        assert_eq!(
+            parse_fault_inject("9:0.5:PERSISTENT").unwrap(),
+            (9, 0.5, true),
+            "mode is case-insensitive"
+        );
+        assert!(parse_fault_inject("7").is_err(), "rate is required");
+        assert!(parse_fault_inject("7:1.5").unwrap_err().contains("[0, 1]"));
+        assert!(parse_fault_inject("7:-0.1").unwrap_err().contains("[0, 1]"));
+        assert!(parse_fault_inject("7:nan").unwrap_err().contains("[0, 1]"));
+        assert!(parse_fault_inject("7:0.5:wat").unwrap_err().contains("once | persistent"));
+        assert!(parse_fault_inject("7:0.5:once:extra").is_err());
+        assert!(parse_fault_inject("nope:0.5").is_err());
     }
 
     #[test]

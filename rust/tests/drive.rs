@@ -235,6 +235,7 @@ fn elastic_engine_grows_under_load_and_retires_when_idle() {
             max_replicas: 2,
             streams_per_lane: 1,
             channel_depth: 2,
+            ..EngineConfig::default()
         },
     )
     .expect("elastic engine builds");
